@@ -1,0 +1,155 @@
+//! Design-space exploration: given an application SNR_T requirement
+//! (Fig. 2 band), find the minimum-energy IMC configuration across all
+//! three architectures, knobs and technology nodes — the workflow the
+//! paper's conclusions prescribe for IMC designers.
+//!
+//!   cargo run --release --example design_space [-- --snr-t 25]
+
+use imclim::arch::{AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
+use imclim::cli::args::Args;
+use imclim::compute::{qr::QrModel, qs::QsModel};
+use imclim::quant::SignalStats;
+use imclim::tech::TechNode;
+use imclim::util::table::{fmt_energy, Table};
+
+struct Candidate {
+    arch: String,
+    node: u32,
+    knob: String,
+    snr_t_db: f64,
+    b_adc: u32,
+    energy: f64,
+    delay: f64,
+}
+
+fn main() {
+    let args = Args::from_env();
+    let target_db = args.opt_parse("snr-t", 25.0f64);
+    let n = args.opt_parse("n", 128usize);
+    let w = SignalStats::uniform_signed(1.0);
+    let x = SignalStats::uniform_unsigned(1.0);
+
+    // precision assignment per Sec. III-B for the target
+    let assign = imclim::snr::assign_precisions(target_db + 1.0, 9.0, &w, &x);
+    println!(
+        "target SNR_T >= {target_db} dB -> Bx = {}, Bw = {} (input quantization 9 dB below)",
+        assign.bx, assign.bw
+    );
+
+    let mut candidates: Vec<Candidate> = Vec::new();
+    for node in TechNode::all() {
+        // QS-Arch over V_WL
+        for i in 0..12 {
+            let v_wl = node.v_t + 0.12 + (node.v_dd - node.v_t - 0.12) * i as f64 / 11.0;
+            let arch = QsArch::new(QsModel::new(node, v_wl));
+            push_if_meets(
+                &mut candidates,
+                &arch,
+                "QS-Arch",
+                node.node_nm,
+                format!("V_WL={v_wl:.2}"),
+                n,
+                assign.bx,
+                assign.bw,
+                target_db,
+                &w,
+                &x,
+            );
+        }
+        // QR-Arch over C_o
+        for c_ff in [0.5, 1.0, 2.0, 3.0, 4.5, 6.0, 9.0, 12.0, 16.0] {
+            let arch = QrArch::new(QrModel::new(node, c_ff));
+            push_if_meets(
+                &mut candidates,
+                &arch,
+                "QR-Arch",
+                node.node_nm,
+                format!("C_o={c_ff}fF"),
+                n,
+                assign.bx,
+                assign.bw,
+                target_db,
+                &w,
+                &x,
+            );
+        }
+        // CM over V_WL
+        for i in 0..8 {
+            let v_wl = node.v_t + 0.15 + (node.v_dd - node.v_t - 0.15) * i as f64 / 7.0;
+            let arch = CmArch::new(QsModel::new(node, v_wl), QrModel::new(node, 3.0));
+            push_if_meets(
+                &mut candidates,
+                &arch,
+                "CM",
+                node.node_nm,
+                format!("V_WL={v_wl:.2}"),
+                n,
+                assign.bx,
+                assign.bw,
+                target_db,
+                &w,
+                &x,
+            );
+        }
+    }
+
+    candidates.sort_by(|a, b| a.energy.partial_cmp(&b.energy).unwrap());
+    let mut t = Table::new(&[
+        "rank", "arch", "node", "knob", "SNR_T dB", "B_ADC", "E/DP", "delay ns", "EDP fJ*ns",
+    ])
+    .with_title(&format!(
+        "Minimum-energy designs meeting SNR_T >= {target_db} dB at N = {n} ({} candidates)",
+        candidates.len()
+    ));
+    for (i, c) in candidates.iter().take(12).enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            c.arch.clone(),
+            format!("{}nm", c.node),
+            c.knob.clone(),
+            format!("{:.1}", c.snr_t_db),
+            c.b_adc.to_string(),
+            fmt_energy(c.energy),
+            format!("{:.2}", c.delay * 1e9),
+            format!("{:.0}", c.energy * 1e15 * c.delay * 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    if candidates.is_empty() {
+        println!("no architecture meets the target — the paper's point: SNR_T is capped by SNR_a.");
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_if_meets(
+    out: &mut Vec<Candidate>,
+    arch: &dyn ImcArch,
+    name: &str,
+    node: u32,
+    knob: String,
+    n: usize,
+    bx: u32,
+    bw: u32,
+    target_db: f64,
+    w: &SignalStats,
+    x: &SignalStats,
+) {
+    let op0 = OpPoint::new(n, bx, bw, 8);
+    let nb = arch.noise(&op0, w, x);
+    let b_adc = arch.b_adc_min(&op0, w, x);
+    let sqnr_qy = imclim::quant::criteria::mpc_sqnr_db(b_adc, 4.0);
+    let snr_t = imclim::snr::snr_t_db(nb.snr_a_total_db(), sqnr_qy);
+    if snr_t >= target_db {
+        let op = OpPoint::new(n, bx, bw, b_adc);
+        let e = arch.energy(&op, AdcCriterion::Mpc, w, x);
+        out.push(Candidate {
+            arch: name.into(),
+            node,
+            knob,
+            snr_t_db: snr_t,
+            b_adc,
+            energy: e.total(),
+            delay: arch.delay(&op),
+        });
+    }
+}

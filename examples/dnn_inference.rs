@@ -1,0 +1,123 @@
+//! End-to-end IMC inference demo (the Fig. 2 workload, full pipeline).
+//!
+//!   cargo run --release --example dnn_inference
+//!
+//! 1. Generates a synthetic 10-class dataset and trains a 64-128-64-10
+//!    MLP from scratch (logging the loss curve — EXPERIMENTS.md records
+//!    a run).
+//! 2. Derives each layer's SNR_T when its DPs execute on a QS-Arch IMC
+//!    (closed-form Table III at the layer's fan-in), and evaluates the
+//!    resulting inference accuracy by per-layer noise injection.
+//! 3. If artifacts are built, runs the noisy batched forward through the
+//!    AOT `mlp_fwd` executable on PJRT — Python never runs.
+
+use imclim::arch::{ImcArch, OpPoint, QsArch};
+use imclim::compute::qs::QsModel;
+use imclim::coordinator::{MlpRequest, MlpWeights, PjrtService};
+use imclim::dnn::*;
+use imclim::quant::SignalStats;
+use imclim::tech::TechNode;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Train.
+    let ds = Dataset::generate(&DatasetConfig::default());
+    let mut mlp = Mlp::new(&[64, 128, 64, 10], 7);
+    println!(
+        "training {} params on {} samples...",
+        mlp.n_params(),
+        ds.train_len()
+    );
+    let curve = mlp.train(&ds, &TrainConfig::default());
+    for (e, (loss, acc)) in curve.iter().enumerate() {
+        if e % 5 == 0 || e + 1 == curve.len() {
+            println!("  epoch {e:>3}: loss {loss:.4}  test-acc {acc:.3}");
+        }
+    }
+    let clean = mlp.accuracy(&ds, true);
+    println!("clean FL accuracy: {clean:.3}");
+
+    // 2. Deploy each layer on QS-Arch: per-layer SNR_T from the closed
+    //    forms at the layer's DP dimension (fan-in).
+    let w_stats = SignalStats::uniform_signed(1.0);
+    let x_stats = SignalStats::uniform_unsigned(1.0);
+    for v_wl in [0.8, 0.7, 0.6] {
+        let arch = QsArch::new(QsModel::new(TechNode::n65(), v_wl));
+        let snrs: Vec<f64> = mlp
+            .dims
+            .windows(2)
+            .map(|win| {
+                let op = OpPoint::new(win[0], 6, 6, 8);
+                let nb = arch.noise(&op, &w_stats, &x_stats);
+                let b = arch.b_adc_min(&op, &w_stats, &x_stats);
+                let sqnr_qy = imclim::quant::criteria::mpc_sqnr_db(b, 4.0);
+                imclim::snr::snr_t_db(nb.snr_a_total_db(), sqnr_qy)
+            })
+            .collect();
+        let acc = noisy_accuracy(&mlp, &ds, &snrs, &NoisyEvalConfig::default());
+        println!(
+            "QS-Arch V_WL={v_wl}: per-layer SNR_T = {:?} dB -> accuracy {acc:.3} (drop {:.1}%)",
+            snrs.iter().map(|s| (s * 10.0).round() / 10.0).collect::<Vec<_>>(),
+            (clean - acc) * 100.0
+        );
+    }
+
+    // 3. The same batched noisy forward through the AOT PJRT executable.
+    let artifacts = imclim::runtime::default_artifacts_dir();
+    if artifacts.join("manifest.json").exists() {
+        let service = PjrtService::spawn(artifacts, 2);
+        let handle = service.handle();
+        let weights = MlpWeights {
+            w1: mlp.w[0].clone(),
+            b1: mlp.b[0].clone(),
+            w2: mlp.w[1].clone(),
+            b2: mlp.b[1].clone(),
+            w3: mlp.w[2].clone(),
+            b3: mlp.b[2].clone(),
+        };
+        let stds = layer_signal_stds(&mlp, &ds, 256);
+        let snr_db = 20.0; // a mid-band operating point
+        let sigmas: [f32; 3] = core::array::from_fn(|l| {
+            (stds[l] / 10f64.powf(snr_db / 20.0)) as f32
+        });
+        let batch = 256;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let t0 = std::time::Instant::now();
+        for start in (0..ds.test_len()).step_by(batch) {
+            let mut x = vec![0f32; batch * 64];
+            let count = batch.min(ds.test_len() - start);
+            for i in 0..count {
+                let (xs, _) = ds.test_sample(start + i);
+                x[i * 64..(i + 1) * 64].copy_from_slice(xs);
+            }
+            let logits = handle.run_mlp(MlpRequest {
+                x,
+                weights: weights.clone(),
+                seed: [start as f32, 17.0],
+                sigmas,
+            })?;
+            for i in 0..count {
+                let row = &logits[i * 10..(i + 1) * 10];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == ds.test_sample(start + i).1 as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let dt = t0.elapsed();
+        println!(
+            "PJRT mlp_fwd @ SNR_T = {snr_db} dB/layer: accuracy {:.3} over {total} samples in {dt:?} ({:.0} inf/s)",
+            correct as f64 / total as f64,
+            total as f64 / dt.as_secs_f64()
+        );
+    } else {
+        println!("(run `make artifacts` to exercise the PJRT forward)");
+    }
+    Ok(())
+}

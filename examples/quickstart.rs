@@ -1,0 +1,88 @@
+//! Quickstart: characterize one IMC operating point three ways.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Builds a QS-Arch instance from Table II physics, evaluates the
+//! closed-form Table III models, runs the native sample-accurate
+//! Monte-Carlo simulator, and (if `make artifacts` has run) the AOT
+//! JAX/Pallas simulator through PJRT — and shows all three agree.
+
+use imclim::arch::{AdcCriterion, ImcArch, OpPoint, QsArch};
+use imclim::compute::qs::QsModel;
+use imclim::coordinator::{run_point, Backend, PjrtService, SweepPoint};
+use imclim::mc::ArchKind;
+use imclim::quant::SignalStats;
+use imclim::tech::TechNode;
+use imclim::util::table::{fmt_db, fmt_energy, Table};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 512-row 65 nm SRAM array read at V_WL = 0.8 V (Table II).
+    let arch = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+    let op = OpPoint::new(128, 6, 6, 8); // N=128, Bx=Bw=6, 8-b column ADC
+    let w = SignalStats::uniform_signed(1.0);
+    let x = SignalStats::uniform_unsigned(1.0);
+
+    // 2. Closed forms (Table III).
+    let nb = arch.noise(&op, &w, &x);
+    let e = arch.energy(&op, AdcCriterion::Mpc, &w, &x);
+    println!("closed form: SNR_a = {}, SNR_A = {}, B_ADC(min,MPC) = {}, E/DP = {}, delay = {:.1} ns",
+        fmt_db(nb.snr_a_db()),
+        fmt_db(nb.snr_a_total_db()),
+        arch.b_adc_min(&op, &w, &x),
+        fmt_energy(e.total()),
+        arch.delay(&op) * 1e9,
+    );
+
+    // 3. Native sample-accurate Monte-Carlo (eq. 17 physics).
+    let point = SweepPoint::new("quickstart", ArchKind::Qs, arch.pjrt_params(&op, &w, &x))
+        .with_trials(4096)
+        .with_seed(1);
+    let native = run_point(&point, &Backend::Native)?;
+
+    // 4. The same trial stream through the AOT JAX/Pallas artifact.
+    let artifacts = imclim::runtime::default_artifacts_dir();
+    let pjrt = if artifacts.join("manifest.json").exists() {
+        let service = PjrtService::spawn(artifacts, 4);
+        Some(run_point(
+            &point,
+            &Backend::Pjrt {
+                handle: service.handle(),
+                suffix: "",
+            },
+        )?)
+    } else {
+        eprintln!("(artifacts not built; run `make artifacts` to exercise PJRT)");
+        None
+    };
+
+    let mut t = Table::new(&["metric", "closed form", "native MC", "pallas/PJRT"])
+        .with_title("QS-Arch @ N=128, Bx=Bw=6, B_ADC=8, V_WL=0.8V");
+    let pj = |f: fn(&imclim::mc::MeasuredSnr) -> f64| {
+        pjrt.as_ref().map(|m| fmt_db(f(m))).unwrap_or_else(|| "-".into())
+    };
+    t.row(vec![
+        "SQNR_qiy (dB)".into(),
+        fmt_db(nb.sqnr_qiy_db()),
+        fmt_db(native.sqnr_qiy_db),
+        pj(|m| m.sqnr_qiy_db),
+    ]);
+    t.row(vec![
+        "SNR_A (dB)".into(),
+        fmt_db(nb.snr_a_total_db()),
+        fmt_db(native.snr_a_total_db),
+        pj(|m| m.snr_a_total_db),
+    ]);
+    t.row(vec![
+        "SNR_T (dB)".into(),
+        "-".into(),
+        fmt_db(native.snr_t_db),
+        pj(|m| m.snr_t_db),
+    ]);
+    println!("{}", t.render());
+
+    if let Some(p) = &pjrt {
+        let gap = (p.snr_a_total_db - native.snr_a_total_db).abs();
+        println!("native vs pallas SNR_A gap: {gap:.2} dB (MC ensemble error)");
+    }
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Taxonomy explorer: place every published design of Table I on the
+//! paper's analytical landscape — compute the SNR_T its precision
+//! choices (B_x, B_w, B_ADC) can support and whether its ADC precision
+//! is MPC-efficient or BGC-conservative.
+//!
+//!   cargo run --release --example taxonomy_explorer
+
+use imclim::quant::criteria::{bgc_bits, mpc_sqnr_db};
+use imclim::quant::{sqnr_qiy_db, SignalStats};
+use imclim::snr::snr_t_db;
+use imclim::taxonomy::{table1, AdcPrecision, WeightPrecision};
+use imclim::util::table::Table;
+
+fn bits_of(w: &WeightPrecision) -> u32 {
+    match w {
+        WeightPrecision::Bits(b) => *b,
+        WeightPrecision::Ternary => 2,
+        WeightPrecision::Analog => 8,
+    }
+}
+
+fn main() {
+    let n = 128usize; // a representative DP dimension
+    let ws = SignalStats::uniform_signed(1.0);
+    let xs = SignalStats::uniform_unsigned(1.0);
+    let mut t = Table::new(&[
+        "design",
+        "models",
+        "SQNR_qiy dB",
+        "B_ADC",
+        "B_y(BGC)",
+        "SQNR_qy dB",
+        "SNR_T cap dB",
+        "ADC style",
+    ])
+    .with_title(&format!("Table I designs on the analytical landscape (N = {n})"));
+
+    let mut binarized = 0usize;
+    for d in table1() {
+        let bx = bits_of(&d.bx);
+        let bw = bits_of(&d.bw);
+        if bx <= 2 && bw <= 2 {
+            binarized += 1;
+        }
+        let b_adc = match d.b_adc {
+            AdcPrecision::Bits(b) => b,
+            AdcPrecision::Analog => 8,
+            AdcPrecision::Effective10x(b10) => (b10 as f64 / 10.0).round() as u32,
+        };
+        let qiy = sqnr_qiy_db(n, bw, bx, &ws, &xs);
+        let qy = mpc_sqnr_db(b_adc, 4.0);
+        let cap = snr_t_db(qiy, qy);
+        let bgc = bgc_bits(bx, bw, n);
+        let style = if b_adc >= bgc {
+            "BGC"
+        } else if b_adc as f64 >= (cap + 16.3) / 6.0 {
+            "MPC-ish"
+        } else {
+            "sub-MPC"
+        };
+        let mut models = String::new();
+        if d.qs {
+            models.push_str("QS ");
+        }
+        if d.is {
+            models.push_str("IS ");
+        }
+        if d.qr {
+            models.push_str("QR");
+        }
+        t.row(vec![
+            d.name.into(),
+            models.trim().into(),
+            format!("{qiy:.1}"),
+            b_adc.to_string(),
+            bgc.to_string(),
+            format!("{qy:.1}"),
+            format!("{cap:.1}"),
+            style.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{binarized}/23 designs binarize (B <= 2) — the paper's Sec. IV-B2 point that \
+limited SNR_a forces binarization; none assign B_ADC by BGC (it would need {}+ bits).",
+        bgc_bits(1, 1, n)
+    );
+}

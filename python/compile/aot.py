@@ -1,0 +1,135 @@
+"""AOT compile path: lower every L2 model to HLO *text* artifacts.
+
+Runs ONCE at build time (`make artifacts`); the Rust coordinator loads the
+emitted `artifacts/*.hlo.txt` through the PJRT C API and Python never runs
+again. HLO text (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Also writes `artifacts/manifest.json` describing each artifact's I/O
+signature, consumed by rust/src/runtime/registry.rs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from . import params as pp
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _arch_entry(fn, m, n, **kw):
+    """(callable, input specs, output names) for one architecture model."""
+    if kw:
+        import functools
+
+        fn = functools.partial(fn, **kw)
+    args = (_spec((m, n)), _spec((m, n)), _spec((2,)), _spec((pp.P,)))
+    inputs = [
+        {"name": "x", "shape": [m, n]},
+        {"name": "w", "shape": [m, n]},
+        {"name": "seed", "shape": [2]},
+        {"name": "params", "shape": [pp.P]},
+    ]
+    outputs = ["y_ideal", "y_fx", "y_a", "y_hat"]
+    return fn, args, inputs, outputs
+
+
+def _mlp_entry():
+    d0, d1, d2, d3 = pp.MLP_DIMS
+    mb = pp.MLP_BATCH
+    args = (
+        _spec((mb, d0)),
+        _spec((d1, d0)), _spec((d1,)),
+        _spec((d2, d1)), _spec((d2,)),
+        _spec((d3, d2)), _spec((d3,)),
+        _spec((2,)), _spec((3,)),
+    )
+    inputs = [
+        {"name": "x", "shape": [mb, d0]},
+        {"name": "w1", "shape": [d1, d0]}, {"name": "b1", "shape": [d1]},
+        {"name": "w2", "shape": [d2, d1]}, {"name": "b2", "shape": [d2]},
+        {"name": "w3", "shape": [d3, d2]}, {"name": "b3", "shape": [d3]},
+        {"name": "seed", "shape": [2]},
+        {"name": "sigmas", "shape": [3]},
+    ]
+    return model.mlp_fwd, args, inputs, ["logits"]
+
+
+def _smoke():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    args = (_spec((2, 2)), _spec((2, 2)))
+    inputs = [{"name": "x", "shape": [2, 2]}, {"name": "y", "shape": [2, 2]}]
+    return fn, args, inputs, ["out"]
+
+
+def entries():
+    """name -> (fn, example args, input descs, output names)."""
+    m, n = pp.M_TRIALS, pp.N_MAX
+    ms, ns = 16, 64  # small variants for fast Rust integration tests
+    return {
+        "qs_arch": _arch_entry(model.qs_arch, m, n),
+        "qs_arch_corr": _arch_entry(model.qs_arch, m, n, correlated=True),
+        "qr_arch": _arch_entry(model.qr_arch, m, n),
+        "cm_arch": _arch_entry(model.cm_arch, m, n),
+        "qs_arch_small": _arch_entry(model.qs_arch, ms, ns),
+        "qs_arch_corr_small": _arch_entry(model.qs_arch, ms, ns, correlated=True),
+        "qr_arch_small": _arch_entry(model.qr_arch, ms, ns),
+        "cm_arch_small": _arch_entry(model.cm_arch, ms, ns),
+        "mlp_fwd": _mlp_entry(),
+        "smoke": _smoke(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"m_trials": pp.M_TRIALS, "n_max": pp.N_MAX,
+                "b_max": pp.B_MAX, "p": pp.P, "artifacts": {}}
+    for name, (fn, ex_args, inputs, outputs) in entries().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

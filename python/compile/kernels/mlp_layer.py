@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: one noisy fully-connected layer.
+
+Used by the Fig. 2 workload (per-layer SNR_T requirements of a DNN): a
+fixed-point MLP whose every layer output is perturbed by output-referred
+Gaussian noise — exactly the paper's noise-injection methodology where the
+DP output carries `q_iy + eta_a + q_y` (eq. 6) lumped into one
+output-referred term whose variance the coordinator sets per target SNR_T.
+
+Grid walks (batch tile, output tile); the full reduction dimension D is
+held in VMEM (layer widths here are <= 256, i.e. a (64,256)x(256,64) tile
+of 128 KiB — trivially VMEM-resident; see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 64
+DEFAULT_BLOCK_O = 64
+
+
+def _mlp_layer_kernel(x_ref, w_ref, b_ref, n_ref, o_ref, *, relu: bool):
+    x = x_ref[...]  # (bm, D)
+    w = w_ref[...]  # (bo, D)
+    y = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y = y + b_ref[...][None, :] + n_ref[...]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "block_m", "block_o", "interpret")
+)
+def mlp_layer(
+    x,
+    w,
+    bias,
+    noise,
+    *,
+    relu: bool,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_o: int = DEFAULT_BLOCK_O,
+    interpret: bool = True,
+):
+    """y = [relu](x @ W^T + bias + noise).
+
+    Args:
+      x: f32[M, D] activations, w: f32[O, D] weights, bias: f32[O],
+      noise: f32[M, O] output-referred analog+quantization noise sample.
+    Returns: f32[M, O].
+    """
+    m, d = x.shape
+    o = w.shape[0]
+    if w.shape[1] != d or bias.shape != (o,) or noise.shape != (m, o):
+        raise ValueError(
+            f"shape mismatch: x={x.shape} w={w.shape} b={bias.shape} n={noise.shape}"
+        )
+    bm = min(block_m, m)
+    bo = min(block_o, o)
+    if m % bm != 0 or o % bo != 0:
+        raise ValueError(f"M={m}/O={o} not divisible by blocks ({bm},{bo})")
+    grid = (m // bm, o // bo)
+    return pl.pallas_call(
+        functools.partial(_mlp_layer_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bo, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bo,), lambda i, j: (j,)),
+            pl.BlockSpec((bm, bo), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=interpret,
+    )(x, w, bias, noise)

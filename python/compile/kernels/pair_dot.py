@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: the analog-core hot spot shared by all three IMC models.
+
+``pair_dot(A, B, C, D) -> (A @ B^T, C @ D^T)`` batched over Monte-Carlo
+trials, reducing over the bit-cell (row) dimension N.
+
+Every in-memory compute model in the paper reduces, per MC trial, to one or
+two inner products over the N bit-cells attached to a bit-line / capacitor
+bank (Sec. IV):
+
+* QS-Arch (charge summing, Fig. 7(a)): the bit-plane matmul
+  ``y_BL[i, j] = sum_k wb[i,k] * xb[j,k] * (1 + dI[i,k] + dT[j,k])``
+  expands into exactly two matmuls:
+  ``(wb*(1+dI)) @ xb^T  +  wb @ (xb*dT)^T`` — the two operands of pair_dot
+  (the L2 model adds the two outputs).
+* QR-Arch (charge redistribution, Fig. 7(b)): the charge-share numerator
+  ``sum_k (C+c_k) V_k`` and denominator ``sum_k (C+c_k)`` — the two
+  *separate* outputs of pair_dot.
+* CM (compute memory, Fig. 7(c)): same numerator/denominator structure with
+  a multi-bit effective weight per column.
+
+Hardware adaptation (DESIGN.md §5): the per-trial work is a (P,N)x(N,Q)
+matmul — MXU-shaped. The kernel tiles the reduction dimension N into
+``block_n`` chunks held in VMEM and walks the (trial, chunk) grid; BlockSpec
+expresses the HBM<->VMEM schedule a CUDA design would express with
+threadblocks. ``interpret=True`` everywhere: the CPU PJRT client cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default reduction-tile width. At f32 with P=Q=8 and block_n=128 the VMEM
+# working set is 4 operand tiles of 8*128*4 B = 16 KiB plus two 8x8 outputs:
+# far below the ~16 MiB VMEM budget, leaving room for the compiler to
+# double-buffer the HBM->VMEM streams of all four operands.
+DEFAULT_BLOCK_N = 128
+
+
+def _pair_dot_kernel(a_ref, b_ref, c_ref, d_ref, o1_ref, o2_ref):
+    """One (trial, n-chunk) grid step: accumulate both partial products."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o1_ref[...] = jnp.zeros_like(o1_ref)
+        o2_ref[...] = jnp.zeros_like(o2_ref)
+
+    a = a_ref[0]  # (P, block_n)
+    b = b_ref[0]  # (Q, block_n)
+    c = c_ref[0]  # (P2, block_n)
+    d = d_ref[0]  # (Q2, block_n)
+    # MXU-shaped contractions; accumulate in f32 regardless of input dtype.
+    o1_ref[0] += jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o2_ref[0] += jax.lax.dot_general(
+        c, d, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pair_dot(a, b, c, d, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """Batched pair of contractions over the bit-cell dimension.
+
+    Args:
+      a: f32[M, P, N]   b: f32[M, Q, N]   c: f32[M, P2, N]   d: f32[M, Q2, N]
+      block_n: reduction tile width (N must be divisible by it).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (f32[M, P, Q], f32[M, P2, Q2]) = (A @ B^T, C @ D^T) per trial.
+    """
+    m, p, n = a.shape
+    q = b.shape[1]
+    p2, q2 = c.shape[1], d.shape[1]
+    if n % block_n != 0:
+        # Small-N variants (test artifacts) fall back to a single tile.
+        block_n = n
+    if b.shape != (m, q, n) or c.shape != (m, p2, n) or d.shape != (m, q2, n):
+        raise ValueError(
+            f"shape mismatch: a={a.shape} b={b.shape} c={c.shape} d={d.shape}"
+        )
+    grid = (m, n // block_n)
+    return pl.pallas_call(
+        _pair_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, p, block_n), lambda i, k: (i, 0, k)),
+            pl.BlockSpec((1, q, block_n), lambda i, k: (i, 0, k)),
+            pl.BlockSpec((1, p2, block_n), lambda i, k: (i, 0, k)),
+            pl.BlockSpec((1, q2, block_n), lambda i, k: (i, 0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, p, q), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1, p2, q2), lambda i, k: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, p, q), jnp.float32),
+            jax.ShapeDtypeStruct((m, p2, q2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, c, d)

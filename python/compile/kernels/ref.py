@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness reference: pytest asserts the Pallas kernels
+match these to float tolerance across hypothesis-generated shapes/dtypes
+(python/tests/test_kernels.py). They contain no Pallas, no tiling — just
+the mathematical definition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pair_dot_ref(a, b, c, d):
+    """(A @ B^T, C @ D^T) per trial: the pair_dot definition."""
+    o1 = jnp.einsum("mpn,mqn->mpq", a, b, preferred_element_type=jnp.float32)
+    o2 = jnp.einsum("mpn,mqn->mpq", c, d, preferred_element_type=jnp.float32)
+    return o1.astype(jnp.float32), o2.astype(jnp.float32)
+
+
+def mlp_layer_ref(x, w, bias, noise, *, relu: bool):
+    """Noisy fixed-point-style layer: relu(x @ W^T + b + noise)."""
+    y = jnp.einsum("md,od->mo", x, w, preferred_element_type=jnp.float32)
+    y = y + bias[None, :] + noise
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(jnp.float32)

@@ -1,0 +1,369 @@
+"""L2: JAX forward models of the paper's three IMC architectures.
+
+Sample-accurate Monte-Carlo simulation of fixed-point dot products on
+QS-Arch, QR-Arch and CM (Sec. IV, Fig. 7), in normalized units, calling the
+L1 Pallas kernel (`kernels.pair_dot`) for the analog-core contractions.
+
+Each model maps M trials of (x, w) through the full signal chain
+
+    quantize -> bit-slice -> analog core (+mismatch/thermal/injection)
+             -> headroom clip -> column ADC -> digital recombination
+
+and returns the four signals needed to measure every SNR metric of eq. (7):
+
+    y_ideal  — FL dot product y_o                       (eq. 2)
+    y_fx     — quantized-input DP, no analog noise      (y_o + q_iy)
+    y_a      — analog output before the ADC             (y_o + q_iy + eta_a)
+    y_hat    — final digitized output                   (eq. 6, all terms)
+
+so the Rust coordinator can estimate SQNR_qiy, SNR_a, SNR_A and SNR_T from
+ensemble statistics. Build-time only: `aot.py` lowers these once to HLO
+text; Python never runs on the experiment path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import params as pp
+from .kernels.pair_dot import pair_dot
+from .kernels.mlp_layer import mlp_layer
+
+
+# ---------------------------------------------------------------------------
+# Quantization and bit-slicing (Sec. II-B/C), dynamic in B via masking.
+# ---------------------------------------------------------------------------
+
+def _plane_iota():
+    """Plane indices i = 1..B_MAX as f32[B_MAX]."""
+    return jnp.arange(1, pp.B_MAX + 1, dtype=jnp.float32)
+
+
+def unsigned_bits(x, bx):
+    """Bit-slice unsigned activations x in [0,1) to B_x planes.
+
+    Returns (xb, pxw, xq): xb f32[..., B_MAX, N] bit planes (plane j holds
+    bit of weight 2^-j), pxw f32[B_MAX] recombination weights (masked by
+    j <= bx), and xq the quantized value sum_j xb_j 2^-j.
+    """
+    j = _plane_iota()  # [B]
+    active = (j <= bx).astype(jnp.float32)  # [B]
+    # Round-to-nearest (paper's additive model assumes zero-mean q noise),
+    # clipped to the top code; then extract planes from the integer code.
+    t = jnp.clip(jnp.floor(x * jnp.exp2(bx) + 0.5), 0.0, jnp.exp2(bx) - 1.0)
+    shift = jnp.exp2(jnp.maximum(bx - j, 0.0))  # [B]
+    bits = jnp.floor(t[..., None, :] / shift[:, None]) % 2.0
+    xb = bits * active[:, None]  # plane j <-> integer bit (bx - j)
+    pxw = jnp.exp2(-j) * active
+    xq = jnp.einsum("...bn,b->...n", xb, pxw)
+    return xb, pxw, xq
+
+
+def signed_bits(w, bw):
+    """Bit-slice signed weights w in [-1,1) into two's-complement planes.
+
+    w_q = -b_1 + sum_{i=2..bw} b_i 2^{1-i}  (Q1.(bw-1) two's complement,
+    truncation quantizer). Plane 1 stores the *complemented* MSB so that
+    plane recombination weights are pw = [-1, 2^-1, ..., 2^{2-bw}, 0, ...].
+
+    Returns (wb, pw, wq): wb f32[..., B_MAX, N], pw f32[B_MAX], wq value.
+    """
+    i = _plane_iota()
+    active = (i <= bw).astype(jnp.float32)
+    # integer code t in [0, 2^bw), round-to-nearest (zero-mean q noise)
+    t = jnp.floor((w + 1.0) * jnp.exp2(bw - 1.0) + 0.5)
+    t = jnp.clip(t, 0.0, jnp.exp2(bw) - 1.0)
+    shift = jnp.exp2(jnp.maximum(bw - i, 0.0))  # [B]
+    raw = jnp.floor(t[..., None, :] / shift[:, None]) % 2.0  # [..., B, N]
+    sign_plane = (i == 1.0).astype(jnp.float32)[:, None]
+    bits = raw * (1.0 - sign_plane) + (1.0 - raw) * sign_plane
+    wb = bits * active[:, None]
+    pw = (jnp.where(i == 1.0, -1.0, jnp.exp2(1.0 - i))) * active
+    wq = jnp.einsum("...bn,b->...n", wb, pw)
+    return wb, pw, wq
+
+
+def quantize_unsigned(x, bx):
+    """Round-to-nearest quantizer for unsigned x in [0,1) to bx bits."""
+    s = jnp.exp2(bx)
+    return jnp.clip(jnp.floor(x * s + 0.5), 0.0, s - 1.0) / s
+
+
+def signed_mag_bits(w, bw):
+    """Sign-magnitude bit-slicing used by CM (Sec. IV-D, appendix B).
+
+    |w_q| = sum_{i=1..bw-1} b_i 2^{-i} (quantization step Delta_w =
+    2^{1-bw}); the sign routes the discharge to BL vs BL-bar. Returns
+    (mb, pm, sgn, wq): magnitude planes f32[..., B_MAX, N] (plane i holds
+    the 2^{-i} bit, planes bw..B_MAX zero), recombination weights
+    pm f32[B_MAX], sign f32[..., N] in {-1, +1}, and the quantized value
+    wq = sgn * sum_i pm_i mb_i.
+    """
+    i = _plane_iota()
+    active = (i <= bw - 1.0).astype(jnp.float32)
+    sgn = jnp.where(w < 0.0, -1.0, 1.0)
+    t = jnp.floor(jnp.abs(w) * jnp.exp2(bw - 1.0) + 0.5)  # round-to-nearest
+    t = jnp.minimum(t, jnp.exp2(bw - 1.0) - 1.0)  # integer in [0, 2^{bw-1})
+    shift = jnp.exp2(jnp.maximum(bw - 1.0 - i, 0.0))
+    mb = (jnp.floor(t[..., None, :] / shift[:, None]) % 2.0) * active[:, None]
+    pm = jnp.exp2(-i) * active
+    wq = sgn * jnp.einsum("...bn,b->...n", mb, pm)
+    return mb, pm, sgn, wq
+
+
+def _adc_unsigned(v, v_c, b_adc):
+    """Mid-tread uniform ADC over [0, v_c] with 2^b_adc levels."""
+    delta = v_c / jnp.exp2(b_adc)
+    code = jnp.clip(jnp.round(v / delta), 0.0, jnp.exp2(b_adc) - 1.0)
+    return code * delta
+
+
+def _adc_signed(v, v_c, b_adc):
+    """Mid-tread uniform ADC over [-v_c, v_c] with 2^b_adc levels."""
+    delta = 2.0 * v_c / jnp.exp2(b_adc)
+    half = jnp.exp2(b_adc - 1.0)
+    code = jnp.clip(jnp.round(v / delta), -half, half - 1.0)
+    return code * delta
+
+
+def _key_from_seed(seed):
+    """Derive a PRNG key from a f32[2] seed vector (Rust-supplied)."""
+    k = jax.random.PRNGKey(0)
+    k = jax.random.fold_in(k, seed[0].astype(jnp.uint32))
+    k = jax.random.fold_in(k, seed[1].astype(jnp.uint32))
+    return k
+
+
+def _n_mask(n_active, n_max):
+    return (jnp.arange(n_max, dtype=jnp.float32) < n_active).astype(
+        jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# QS-Arch: bit-serial binarized DPs on the bit-lines (Sec. IV-B2).
+# ---------------------------------------------------------------------------
+
+def qs_arch(x, w, seed, params, *, correlated=False):
+    """Charge-summing architecture, sample-accurate per eq. (17).
+
+    Args:
+      x: f32[M, N_MAX] raw activations in [0, 1).
+      w: f32[M, N_MAX] raw weights in [-1, 1).
+      seed: f32[2] PRNG seed counters.
+      params: f32[P] per `params.py` QS layout. Voltages normalized to
+        Delta-V_BL,unit *counts* (one count = one full cell discharge).
+
+    Returns (y_ideal, y_fx, y_a, y_hat), each f32[M].
+    """
+    n_active = params[pp.IDX_N_ACTIVE]
+    bx = params[pp.IDX_BX]
+    bw = params[pp.IDX_BW]
+    b_adc = params[pp.IDX_B_ADC]
+    sigma_d = params[pp.QS_IDX_SIGMA_D]
+    sigma_t = params[pp.QS_IDX_SIGMA_T]
+    t_rf = params[pp.QS_IDX_T_RF]
+    sigma_theta = params[pp.QS_IDX_SIGMA_THETA]
+    k_h = params[pp.QS_IDX_K_H]
+    v_c = params[pp.QS_IDX_V_C]
+    # Noise-correlation mode is *static* (separate artifacts): the
+    # independent path needs no per-cell draws at all, so baking the
+    # branch at lowering time removes ~0.5M threefry draws and two of the
+    # three contractions per batch (EXPERIMENTS.md §Perf P1).
+
+    mask = _n_mask(n_active, x.shape[1])[None, :]  # [1, N]
+    x = x * mask
+    w = w * mask
+    y_ideal = jnp.sum(w * x, axis=-1)
+
+    xb, pxw, xq = unsigned_bits(x, bx)  # [M, B, N]
+    wb, pw, wq = signed_bits(w, bw)
+    y_fx = jnp.sum(wq * xq, axis=-1)
+
+    key = _key_from_seed(seed)
+    kw, kx, kt, kb = jax.random.split(key, 4)
+    g_th = jax.random.normal(kt, (x.shape[0], pp.B_MAX, pp.B_MAX), jnp.float32)
+    g_bl = jax.random.normal(kb, (x.shape[0], pp.B_MAX, pp.B_MAX), jnp.float32)
+
+    # Per-cell discharge (counts): wb*xb*(1 + sigma_d*g_cell)(1 + sigma_t*g_pulse)
+    # ~= wb*xb*(1 + sigma_d*g + sigma_t*g') (eq. 17). Two noise modes:
+    #
+    #  independent (paper, appendix B): mismatch independent across the
+    #   (i, j) bit-plane pairs. Conditioned on the active-cell count
+    #   c_ij = sum_k wb_ik xb_jk, the summed cell noise is *exactly*
+    #   N(0, c_ij (sigma_d^2 + sigma_t^2)) — sampled as sqrt(c)*sigma*g.
+    #
+    #  correlated (physical ablation): spatial V_t mismatch static across
+    #   the B_x bit-serial cycles, WL-pulse jitter shared across the B_w
+    #   columns => ~3 dB lower SNR_a. Needs per-cell draws and the full
+    #   dual contraction.
+    sigma_eff = jnp.sqrt(sigma_d * sigma_d + sigma_t * sigma_t)
+    if correlated:
+        g_cell = jax.random.normal(kw, wb.shape, jnp.float32)
+        g_pulse = jax.random.normal(kx, xb.shape, jnp.float32)
+        a_op = wb * (1.0 + sigma_d * g_cell)
+        d_op = xb * (sigma_t * g_pulse)
+        o1, o2 = pair_dot(a_op, xb, wb, d_op)
+        counts, _ = pair_dot(
+            wb, xb, jnp.zeros_like(wb[:, :1]), jnp.zeros_like(xb[:, :1])
+        )
+        y_bl = o1 + o2
+    else:
+        counts, _ = pair_dot(
+            wb, xb, jnp.zeros_like(wb[:, :1]), jnp.zeros_like(xb[:, :1])
+        )
+        y_bl = counts + jnp.sqrt(jnp.maximum(counts, 0.0)) * sigma_eff * g_bl
+    y_bl = y_bl - t_rf * counts  # deterministic rise/fall deficit (eq. 19)
+
+    # Headroom clipping on the bit-line (eta_h), then integrated thermal.
+    y_cl = jnp.clip(y_bl, 0.0, k_h)
+    y_a_bl = y_cl + sigma_theta * g_th
+
+    # Per-BL column ADC (one conversion per binarized DP).
+    y_hat_bl = _adc_unsigned(y_a_bl, v_c, b_adc)
+
+    # Digital recombination: y = sum_ij pw_i * pxw_j * y_BL[i, j].
+    y_a = jnp.einsum("mij,i,j->m", y_a_bl, pw, pxw)
+    y_hat = jnp.einsum("mij,i,j->m", y_hat_bl, pw, pxw)
+    return y_ideal, y_fx, y_a, y_hat
+
+
+# ---------------------------------------------------------------------------
+# QR-Arch: binary-weighted rows + charge redistribution (Sec. IV-C2).
+# ---------------------------------------------------------------------------
+
+def qr_arch(x, w, seed, params):
+    """Charge-redistribution architecture, sample-accurate per eq. (23).
+
+    Voltages normalized to V_dd = 1. Each weight-bit row i computes
+    V_i = sum_k (C+c_k)(x_k w_ik + noise) / sum_k (C+c_k) over the active
+    cells, digitized per row, then POT-summed digitally.
+    """
+    n_active = params[pp.IDX_N_ACTIVE]
+    bx = params[pp.IDX_BX]
+    bw = params[pp.IDX_BW]
+    b_adc = params[pp.IDX_B_ADC]
+    sigma_c = params[pp.QR_IDX_SIGMA_C]
+    inj_a = params[pp.QR_IDX_INJ_A]
+    inj_b = params[pp.QR_IDX_INJ_B]
+    sigma_theta = params[pp.QR_IDX_SIGMA_THETA]
+    v_c = params[pp.QR_IDX_V_C]
+    v_lo = params[pp.QR_IDX_V_LO]
+
+    m = x.shape[0]
+    mask = _n_mask(n_active, x.shape[1])[None, :]
+    x = x * mask
+    w = w * mask
+    y_ideal = jnp.sum(w * x, axis=-1)
+
+    xq = quantize_unsigned(x, bx) * mask
+    wb, pw, wq = signed_bits(w, bw)
+    y_fx = jnp.sum(wq * xq, axis=-1)
+
+    key = _key_from_seed(seed)
+    kc, kt = jax.random.split(key, 2)
+    g_cap = jax.random.normal(kc, (m, pp.B_MAX, x.shape[1]), jnp.float32)
+    g_th = jax.random.normal(kt, (m, pp.B_MAX, x.shape[1]), jnp.float32)
+
+    v = wb * xq[:, None, :]  # per-cell product voltage (V_dd units)
+    v_inj = inj_a - inj_b * v  # charge injection, eq. (24)
+    cap = 1.0 + sigma_c * g_cap
+    num_op = cap * (v + v_inj + sigma_theta * g_th) * mask[:, None, :]
+    den_op = cap * mask[:, None, :]
+    ones_row = jnp.broadcast_to(mask[:, None, :], (m, 1, x.shape[1]))
+    num, den = pair_dot(num_op, ones_row, den_op, ones_row)
+    v_row = num[:, :, 0] / jnp.maximum(den[:, :, 0], 1e-6)  # [M, B]
+
+    # The row mean is positive (unsigned x, binary w), so the ADC range is
+    # offset: [v_lo, v_lo + v_c] per the MPC mean +- 4 sigma rule.
+    v_row_hat = v_lo + _adc_unsigned(v_row - v_lo, v_c, b_adc)
+
+    # y = n * sum_i pw_i V_i  (charge share divides by n; eq. 22).
+    y_a = n_active * jnp.einsum("mi,i->m", v_row, pw)
+    y_hat = n_active * jnp.einsum("mi,i->m", v_row_hat, pw)
+    return y_ideal, y_fx, y_a, y_hat
+
+
+# ---------------------------------------------------------------------------
+# CM: multi-bit analog DP via QS (POT pulse widths) + QR aggregation
+# (Sec. IV-D).
+# ---------------------------------------------------------------------------
+
+def cm_arch(x, w, seed, params):
+    """Compute-memory architecture: multi-bit DP in one compute cycle.
+
+    The per-column BL discharge realizes a noisy multi-bit weight
+    w_eff = sum_i pw_i wb_i (1 + sigma_D g_i) clipped to +-w_h (headroom),
+    multiplied by xq in charge domain, then QR-aggregated over columns.
+    """
+    n_active = params[pp.IDX_N_ACTIVE]
+    bx = params[pp.IDX_BX]
+    bw = params[pp.IDX_BW]
+    b_adc = params[pp.IDX_B_ADC]
+    sigma_d = params[pp.CM_IDX_SIGMA_D]
+    w_h = params[pp.CM_IDX_W_H]
+    sigma_c = params[pp.CM_IDX_SIGMA_C]
+    inj_a = params[pp.CM_IDX_INJ_A]
+    inj_b = params[pp.CM_IDX_INJ_B]
+    sigma_theta = params[pp.CM_IDX_SIGMA_THETA]
+    v_c = params[pp.CM_IDX_V_C]
+
+    m = x.shape[0]
+    mask = _n_mask(n_active, x.shape[1])[None, :]
+    x = x * mask
+    w = w * mask
+    y_ideal = jnp.sum(w * x, axis=-1)
+
+    xq = quantize_unsigned(x, bx) * mask
+    # CM stores weights sign-magnitude: magnitude POT pulse widths on the
+    # BL, sign via differential BL/BL-bar discharge (Sec. IV-D).
+    mb, pm, sgn, wq = signed_mag_bits(w, bw)
+    y_fx = jnp.sum(wq * xq, axis=-1)
+
+    key = _key_from_seed(seed)
+    kd, kc, kt = jax.random.split(key, 3)
+    g_cell = jax.random.normal(kd, (m, pp.B_MAX, x.shape[1]), jnp.float32)
+    g_cap = jax.random.normal(kc, (m, x.shape[1]), jnp.float32)
+    g_th = jax.random.normal(kt, (m, x.shape[1]), jnp.float32)
+
+    # Analog multi-bit weight on the BL (eq. 45-46): POT pulse widths with
+    # per-cell current mismatch, headroom-clipped at +-w_h (eq. 41).
+    w_eff = sgn * jnp.einsum("mbn,b->mn", mb * (1.0 + sigma_d * g_cell), pm)
+    w_cl = jnp.clip(w_eff, -w_h, w_h)
+
+    u = w_cl * xq  # mixed-signal multiplier output
+    v_inj = inj_a - inj_b * jnp.abs(u)
+    cap = 1.0 + sigma_c * g_cap
+    num_op = (cap * (u + v_inj + sigma_theta * g_th) * mask)[:, None, :]
+    den_op = (cap * mask)[:, None, :]
+    ones_row = jnp.broadcast_to(mask[:, None, :], (m, 1, x.shape[1]))
+    num, den = pair_dot(num_op, ones_row, den_op, ones_row)
+    v_out = num[:, 0, 0] / jnp.maximum(den[:, 0, 0], 1e-6)  # [M]
+
+    v_hat = _adc_signed(v_out, v_c, b_adc)
+
+    y_a = n_active * v_out
+    y_hat = n_active * v_hat
+    return y_ideal, y_fx, y_a, y_hat
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2 workload: fixed-point MLP with per-layer output-referred noise.
+# ---------------------------------------------------------------------------
+
+def mlp_fwd(x, w1, b1, w2, b2, w3, b3, seed, sigmas):
+    """3-layer MLP forward with per-layer output-referred Gaussian noise.
+
+    sigmas: f32[3] — per-layer noise std (absolute, output-referred),
+    lumping q_iy + eta_a + q_y of eq. (6); the coordinator sets them from a
+    target per-layer SNR_T. Returns logits f32[MLP_BATCH, 10].
+    """
+    key = _key_from_seed(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n1 = sigmas[0] * jax.random.normal(k1, (x.shape[0], w1.shape[0]), jnp.float32)
+    n2 = sigmas[1] * jax.random.normal(k2, (x.shape[0], w2.shape[0]), jnp.float32)
+    n3 = sigmas[2] * jax.random.normal(k3, (x.shape[0], w3.shape[0]), jnp.float32)
+    h1 = mlp_layer(x, w1, b1, n1, relu=True)
+    h2 = mlp_layer(h1, w2, b2, n2, relu=True)
+    return mlp_layer(h2, w3, b3, n3, relu=False)

@@ -1,0 +1,61 @@
+"""Runtime-parameter vector layouts shared between L2 (JAX) and L3 (Rust).
+
+One compiled artifact per architecture covers every sweep point in the
+paper's evaluation: shapes are static at (M trials, N_MAX cells, B_MAX bit
+planes) and all sweep knobs arrive as entries of a f32[P] parameter vector.
+Rust owns the *circuit* domain (Table II constants, V_WL, C_o, technology
+node) and converts to the normalized noise magnitudes consumed here; the
+JAX side is a pure sample-accurate simulator in normalized units.
+
+Mirrored by rust/src/runtime/params.rs — keep the two in sync (pinned by
+tests on both sides).
+"""
+
+# Static artifact shapes.
+M_TRIALS = 64  # Monte-Carlo trials per executable invocation
+N_MAX = 512  # bit-cell rows (paper: 512-row SRAM array)
+B_MAX = 8  # maximum bit planes for weights/activations
+P = 16  # parameter-vector length (fixed for all architectures)
+
+# Common slots (all architectures).
+IDX_N_ACTIVE = 0  # DP dimension N <= N_MAX (inactive cells masked)
+IDX_BX = 1  # activation precision B_x <= B_MAX
+IDX_BW = 2  # weight precision B_w <= B_MAX
+IDX_B_ADC = 3  # column ADC precision B_y
+
+# QS-Arch (charge-summing, Fig. 7(a)); normalized to Delta-V_BL,unit counts.
+QS_IDX_SIGMA_D = 4  # cell-current mismatch sigma_I/I, eq. (18)
+QS_IDX_SIGMA_T = 5  # pulse-width mismatch sigma_Tj/T_max, eq. (20)
+QS_IDX_T_RF = 6  # rise/fall-time discharge deficit t_rf/T_max, eq. (19)
+QS_IDX_SIGMA_THETA = 7  # integrated thermal noise in unit counts, eq. (20)
+QS_IDX_K_H = 8  # headroom clip level k_h = dV_BL,max/dV_BL,unit (counts)
+QS_IDX_V_C = 9  # ADC full-scale range in unit counts (Table III V_c)
+# Noise-correlation mode: 0 = paper assumption (noise independent across
+# bit-plane pairs, appendix B — matches the Table III closed forms);
+# 1 = physically-correlated spatial V_t mismatch, static across the B_x
+# bit-serial cycles (ablation; ~3 dB lower SNR_a — see EXPERIMENTS.md).
+# In the JAX path the mode is *static* (qs_arch vs qs_arch_corr
+# artifacts; the param slot routes artifact selection in the Rust
+# coordinator and the branch in the native Rust simulator).
+QS_IDX_MODE = 10
+
+# QR-Arch (charge-redistribution, Fig. 7(b)); voltages normalized to V_dd.
+QR_IDX_SIGMA_C = 4  # capacitor mismatch sigma_C/C_o = kappa/sqrt(C_o)
+QR_IDX_INJ_A = 5  # charge injection p*WL*Cox*(V_dd - V_t)/(C_o*V_dd)
+QR_IDX_INJ_B = 6  # charge injection slope p*WL*Cox/C_o (times V_j)
+QR_IDX_SIGMA_THETA = 7  # per-cap thermal sqrt(kT/C_o)/V_dd
+QR_IDX_V_C = 8  # per-row ADC full-scale *width* (fraction of V_dd)
+QR_IDX_V_LO = 9  # per-row ADC range low end (the row mean is > 0)
+
+# CM (compute memory, Fig. 7(c)); weight domain normalized to w_m = 1.
+CM_IDX_SIGMA_D = 4  # cell-current mismatch (QS stage), eq. (18)
+CM_IDX_W_H = 5  # weight-domain headroom clip w_h = k_h * Delta_w
+CM_IDX_SIGMA_C = 6  # capacitor mismatch (QR aggregation stage)
+CM_IDX_INJ_A = 7  # charge injection intercept (normalized)
+CM_IDX_INJ_B = 8  # charge injection slope
+CM_IDX_SIGMA_THETA = 9  # per-cap thermal (QR stage)
+CM_IDX_V_C = 10  # ADC range in normalized DP-mean units (Table III V_c)
+
+# MLP (Fig. 2 workload) static shapes.
+MLP_BATCH = 256
+MLP_DIMS = (64, 128, 64, 10)  # D0 -> D1 -> D2 -> D3

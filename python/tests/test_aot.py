@@ -1,0 +1,63 @@
+"""AOT lowering sanity: every artifact lowers to parseable HLO text with
+the expected entry signature, and the manifest is coherent."""
+
+import json
+
+import jax
+import pytest
+
+from compile import aot
+from compile import params as pp
+
+
+@pytest.fixture(scope="module")
+def lowered_smoke():
+    fn, args, inputs, outputs = aot.entries()["smoke"]
+    return aot.to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def test_entries_cover_all_architectures():
+    names = set(aot.entries())
+    assert {"qs_arch", "qr_arch", "cm_arch", "mlp_fwd", "smoke"} <= names
+    assert {"qs_arch_small", "qr_arch_small", "cm_arch_small"} <= names
+
+
+def test_smoke_hlo_text_structure(lowered_smoke):
+    text = lowered_smoke
+    assert "ENTRY" in text and "f32[2,2]" in text
+    # return_tuple=True: the root is a tuple (rust unwraps with to_tuple)
+    assert "(f32[2,2]" in text
+
+
+@pytest.mark.parametrize("name", ["qs_arch_small", "qr_arch_small", "cm_arch_small"])
+def test_arch_models_lower(name):
+    fn, args, inputs, outputs = aot.entries()[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "ENTRY" in text
+    assert len(outputs) == 4
+    # 4 inputs: x, w, seed, params
+    assert [i["name"] for i in inputs] == ["x", "w", "seed", "params"]
+    assert inputs[3]["shape"] == [pp.P]
+
+
+def test_mlp_entry_shapes():
+    fn, args, inputs, outputs = aot.entries()["mlp_fwd"]
+    d0, d1, d2, d3 = pp.MLP_DIMS
+    assert inputs[0]["shape"] == [pp.MLP_BATCH, d0]
+    assert inputs[1]["shape"] == [d1, d0]
+    assert inputs[5]["shape"] == [d3, d2]
+    assert outputs == ["logits"]
+
+
+def test_manifest_roundtrip(tmp_path):
+    import subprocess, sys, os
+    out = tmp_path / "arts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--only", "smoke"],
+        check=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["p"] == pp.P and man["m_trials"] == pp.M_TRIALS
+    assert "smoke" in man["artifacts"]
+    assert (out / "smoke.hlo.txt").exists()

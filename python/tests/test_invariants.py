@@ -1,0 +1,97 @@
+"""Hypothesis sweeps over the parameter space: structural invariants that
+must hold for ANY operating point of the L2 architecture models."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import params as pp
+from compile.model import cm_arch, qr_arch, qs_arch
+
+M, N = 16, 64  # small-variant shapes for speed
+
+
+def run(model, p, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, (M, N)).astype(np.float32)
+    w = rng.uniform(-1, 1, (M, N)).astype(np.float32)
+    s = np.array([seed % 1000, 7], dtype=np.float32)
+    return [np.asarray(v) for v in model(x, w, s, p)]
+
+
+def base(n, bx, bw, b_adc):
+    p = np.zeros(pp.P, np.float32)
+    p[pp.IDX_N_ACTIVE] = n
+    p[pp.IDX_BX] = bx
+    p[pp.IDX_BW] = bw
+    p[pp.IDX_B_ADC] = b_adc
+    return p
+
+
+arch_params = dict(
+    n=st.integers(4, N),
+    bx=st.integers(1, 8),
+    bw=st.integers(2, 8),
+    b_adc=st.integers(2, 14),
+    seed=st.integers(0, 2**20),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(**arch_params, sigma_d=st.floats(0.0, 0.3), k_h=st.floats(4.0, 200.0))
+def test_qs_outputs_finite_and_bounded(n, bx, bw, b_adc, seed, sigma_d, k_h):
+    p = base(n, bx, bw, b_adc)
+    p[pp.QS_IDX_SIGMA_D] = sigma_d
+    p[pp.QS_IDX_K_H] = k_h
+    p[pp.QS_IDX_V_C] = min(4 * np.sqrt(3 * n), k_h, n)
+    yi, yfx, ya, yh = run(qs_arch, p, seed)
+    for v in (yi, yfx, ya, yh):
+        assert np.all(np.isfinite(v))
+    # fixed-point DP bounded by N (|w|,|x| <= 1)
+    assert np.all(np.abs(yfx) <= n + 1e-3)
+    # ideal DP bounded by sum |x| <= n
+    assert np.all(np.abs(yi) <= n + 1e-3)
+    # ADC output on a clipped range can't exceed the recombined range
+    assert np.all(np.abs(yh) <= 2 * n + 1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(**arch_params, sigma_c=st.floats(0.0, 0.15))
+def test_qr_rows_within_rails(n, bx, bw, b_adc, seed, sigma_c):
+    p = base(n, bx, bw, b_adc)
+    p[pp.QR_IDX_SIGMA_C] = sigma_c
+    p[pp.QR_IDX_V_C] = 1.0
+    yi, yfx, ya, yh = run(qr_arch, p, seed)
+    for v in (yi, yfx, ya, yh):
+        assert np.all(np.isfinite(v))
+    # charge redistribution cannot clip: noiseless case equals FX exactly
+    if sigma_c == 0.0:
+        np.testing.assert_allclose(ya, yfx, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(**arch_params, sigma_d=st.floats(0.0, 0.3), w_h=st.floats(0.1, 2.0))
+def test_cm_clipping_monotone(n, bx, bw, b_adc, seed, sigma_d, w_h):
+    p = base(n, bx, bw, b_adc)
+    p[pp.CM_IDX_SIGMA_D] = sigma_d
+    p[pp.CM_IDX_W_H] = w_h
+    p[pp.CM_IDX_V_C] = 1.0
+    yi, yfx, ya, yh = run(cm_arch, p, seed)
+    for v in (yi, yfx, ya, yh):
+        assert np.all(np.isfinite(v))
+    # per-column |analog product| <= w_h: aggregated |y_a| <= n * w_h
+    assert np.all(np.abs(ya) <= n * min(w_h, 1.0) + 1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20), b_lo=st.integers(2, 5))
+def test_more_adc_bits_never_hurt(seed, b_lo):
+    """SNR_T is non-decreasing in B_ADC (statistically, same noise draw)."""
+    errs = []
+    for b in (b_lo, b_lo + 4):
+        p = base(48, 6, 6, b)
+        p[pp.QS_IDX_SIGMA_D] = 0.1
+        p[pp.QS_IDX_K_H] = 44.0
+        p[pp.QS_IDX_V_C] = 44.0
+        yi, yfx, ya, yh = run(qs_arch, p, seed)
+        errs.append(np.var(yh - ya))
+    assert errs[1] <= errs[0] * 1.05  # quantization error shrinks

@@ -1,0 +1,109 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and dtypes; fixed cases pin the block/grid edge
+cases (single tile, many tiles, non-default block_n).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pair_dot import pair_dot
+from compile.kernels.mlp_layer import mlp_layer
+from compile.kernels.ref import pair_dot_ref, mlp_layer_ref
+
+
+def _rand(rng, shape, dtype):
+    return rng.uniform(-2.0, 2.0, shape).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    p=st.integers(1, 9),
+    q=st.integers(1, 9),
+    p2=st.integers(1, 4),
+    q2=st.integers(1, 4),
+    nblk=st.integers(1, 4),
+    dtype=st.sampled_from([np.float32, np.float16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pair_dot_matches_ref(m, p, q, p2, q2, nblk, dtype, seed):
+    rng = np.random.default_rng(seed)
+    n = 128 * nblk
+    a = _rand(rng, (m, p, n), dtype)
+    b = _rand(rng, (m, q, n), dtype)
+    c = _rand(rng, (m, p2, n), dtype)
+    d = _rand(rng, (m, q2, n), dtype)
+    o1, o2 = pair_dot(a, b, c, d)
+    r1, r2 = pair_dot_ref(a, b, c, d)
+    tol = 1e-4 * n if dtype == np.float16 else 1e-5 * n
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(r1), atol=tol, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(r2), atol=tol, rtol=1e-4)
+
+
+@pytest.mark.parametrize("block_n", [32, 64, 128, 256])
+def test_pair_dot_block_sizes(block_n):
+    rng = np.random.default_rng(0)
+    m, p, q, n = 3, 8, 8, 256
+    a = _rand(rng, (m, p, n), np.float32)
+    b = _rand(rng, (m, q, n), np.float32)
+    c = _rand(rng, (m, 1, n), np.float32)
+    d = _rand(rng, (m, 1, n), np.float32)
+    o1, o2 = pair_dot(a, b, c, d, block_n=block_n)
+    r1, r2 = pair_dot_ref(a, b, c, d)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(r1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(r2), atol=1e-3)
+
+
+def test_pair_dot_non_divisible_falls_back_to_single_tile():
+    rng = np.random.default_rng(1)
+    m, n = 2, 96  # 96 % 128 != 0
+    a = _rand(rng, (m, 8, n), np.float32)
+    b = _rand(rng, (m, 8, n), np.float32)
+    o1, o2 = pair_dot(a, b, a, b)
+    r1, _ = pair_dot_ref(a, b, a, b)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(r1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(r1), atol=1e-3)
+
+
+def test_pair_dot_shape_mismatch_raises():
+    a = np.zeros((2, 8, 128), np.float32)
+    bad = np.zeros((3, 8, 128), np.float32)
+    with pytest.raises(ValueError):
+        pair_dot(a, bad, a, a)
+
+
+def test_pair_dot_zeros():
+    z = np.zeros((2, 4, 128), np.float32)
+    o1, o2 = pair_dot(z, z, z, z)
+    assert np.all(np.asarray(o1) == 0) and np.all(np.asarray(o2) == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mblk=st.integers(1, 4),
+    d=st.sampled_from([32, 64, 128]),
+    o=st.sampled_from([10, 64, 128]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_layer_matches_ref(mblk, d, o, relu, seed):
+    rng = np.random.default_rng(seed)
+    m = 64 * mblk
+    x = _rand(rng, (m, d), np.float32)
+    w = _rand(rng, (o, d), np.float32)
+    b = _rand(rng, (o,), np.float32)
+    nz = _rand(rng, (m, o), np.float32)
+    y = mlp_layer(x, w, b, nz, relu=relu)
+    r = mlp_layer_ref(x, w, b, nz, relu=relu)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), atol=1e-4, rtol=1e-4)
+
+
+def test_mlp_layer_relu_clamps():
+    x = -np.ones((64, 32), np.float32)
+    w = np.ones((64, 32), np.float32)
+    b = np.zeros((64,), np.float32)
+    nz = np.zeros((64, 64), np.float32)
+    y = mlp_layer(x, w, b, nz, relu=True)
+    assert np.all(np.asarray(y) == 0.0)

@@ -1,0 +1,268 @@
+"""L2 architecture-model physics tests.
+
+Validates the sample-accurate simulators against the paper's closed-form
+expressions (Table III) at a grid of operating points, plus structural
+invariants (noiseless equivalence, clipping monotonicity, ADC behaviour).
+"""
+
+import numpy as np
+import pytest
+
+from compile import params as pp
+from compile.model import cm_arch, qr_arch, qs_arch
+
+M = pp.M_TRIALS
+
+
+def run_ensemble(model, p, trials=16, n=pp.N_MAX, seed0=0):
+    rng = np.random.default_rng(42 + seed0)
+    correlated = bool(p[pp.QS_IDX_MODE] >= 0.5) and model is qs_arch
+    yi, yfx, ya, yh = [], [], [], []
+    for t in range(trials):
+        x = rng.uniform(0, 1, (M, n)).astype(np.float32)
+        w = rng.uniform(-1, 1, (M, n)).astype(np.float32)
+        seed = np.array([seed0 + t, 99], dtype=np.float32)
+        o = model(x, w, seed, p, correlated=correlated) if correlated else model(x, w, seed, p)
+        for acc, v in zip((yi, yfx, ya, yh), o):
+            acc.append(np.asarray(v))
+    return tuple(np.concatenate(v) for v in (yi, yfx, ya, yh))
+
+
+def snr_db(sig, noise):
+    return 10 * np.log10(np.var(sig) / np.var(noise))
+
+
+def qs_params(n=100, bx=6, bw=6, b_adc=14, sigma_d=0.0, sigma_t=0.0,
+              t_rf=0.0, sigma_theta=0.0, k_h=1e9, v_c=300.0, mode=0.0):
+    p = np.zeros(pp.P, np.float32)
+    p[pp.IDX_N_ACTIVE] = n
+    p[pp.IDX_BX] = bx
+    p[pp.IDX_BW] = bw
+    p[pp.IDX_B_ADC] = b_adc
+    p[pp.QS_IDX_SIGMA_D] = sigma_d
+    p[pp.QS_IDX_SIGMA_T] = sigma_t
+    p[pp.QS_IDX_T_RF] = t_rf
+    p[pp.QS_IDX_SIGMA_THETA] = sigma_theta
+    p[pp.QS_IDX_K_H] = k_h
+    p[pp.QS_IDX_V_C] = v_c
+    p[pp.QS_IDX_MODE] = mode
+    return p
+
+
+def qr_params(n=128, bx=6, bw=7, b_adc=14, sigma_c=0.0, inj_a=0.0,
+              inj_b=0.0, sigma_theta=0.0, v_c=1.0, v_lo=0.0):
+    p = np.zeros(pp.P, np.float32)
+    p[pp.IDX_N_ACTIVE] = n
+    p[pp.IDX_BX] = bx
+    p[pp.IDX_BW] = bw
+    p[pp.IDX_B_ADC] = b_adc
+    p[pp.QR_IDX_SIGMA_C] = sigma_c
+    p[pp.QR_IDX_INJ_A] = inj_a
+    p[pp.QR_IDX_INJ_B] = inj_b
+    p[pp.QR_IDX_SIGMA_THETA] = sigma_theta
+    p[pp.QR_IDX_V_C] = v_c
+    p[pp.QR_IDX_V_LO] = v_lo
+    return p
+
+
+def cm_params(n=64, bx=6, bw=6, b_adc=14, sigma_d=0.0, w_h=1e9,
+              sigma_c=0.0, inj_a=0.0, inj_b=0.0, sigma_theta=0.0, v_c=1.0):
+    p = np.zeros(pp.P, np.float32)
+    p[pp.IDX_N_ACTIVE] = n
+    p[pp.IDX_BX] = bx
+    p[pp.IDX_BW] = bw
+    p[pp.IDX_B_ADC] = b_adc
+    p[pp.CM_IDX_SIGMA_D] = sigma_d
+    p[pp.CM_IDX_W_H] = w_h
+    p[pp.CM_IDX_SIGMA_C] = sigma_c
+    p[pp.CM_IDX_INJ_A] = inj_a
+    p[pp.CM_IDX_INJ_B] = inj_b
+    p[pp.CM_IDX_SIGMA_THETA] = sigma_theta
+    p[pp.CM_IDX_V_C] = v_c
+    return p
+
+
+# --------------------------------------------------------------------------
+# Noiseless structural equivalence: analog path == fixed-point arithmetic.
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model,params", [
+    (qs_arch, qs_params()),
+    (qr_arch, qr_params()),
+    (cm_arch, cm_params()),
+])
+def test_noiseless_analog_equals_fixed_point(model, params):
+    yi, yfx, ya, yh = run_ensemble(model, params, trials=2)
+    np.testing.assert_allclose(ya, yfx, atol=2e-3)
+    # 14-b ADC with wide range: digitization error tiny vs signal
+    assert snr_db(yi, yh - ya + 1e-12) > 35.0
+
+
+@pytest.mark.parametrize("bx,bw", [(4, 4), (6, 6), (7, 7), (8, 8)])
+def test_sqnr_qiy_matches_eq8(bx, bw):
+    """Input-quantization SQNR vs eq. (8) for uniform x, w."""
+    p = qs_params(n=256, bx=bx, bw=bw)
+    yi, yfx, _, _ = run_ensemble(qs_arch, p, trials=8, seed0=100)
+    meas = snr_db(yi, yfx - yi)
+    # eq. (8) with zeta_x = x_m^2/(4 E[x^2]) = 3/4, zeta_w = w_m^2/sigma_w^2 = 3
+    sqnr = 6 * (bx + bw) + 4.8 - (10 * np.log10(0.75) + 10 * np.log10(3.0)) \
+        - 10 * np.log10(4.0**bx / 0.75 + 4.0**bw / 3.0)
+    assert abs(meas - sqnr) < 1.5, (meas, sqnr)
+
+
+# --------------------------------------------------------------------------
+# QS-Arch: electrical noise, clipping, correlation modes (Table III col 1).
+# --------------------------------------------------------------------------
+
+def test_qs_electrical_noise_matches_table3():
+    n, sd = 100, 0.107
+    p = qs_params(n=n, sigma_d=sd)
+    yi, yfx, ya, _ = run_ensemble(qs_arch, p, seed0=200)
+    see = n * sd * sd * (1 - 4.0**-6) ** 2 / 9  # Table III sigma_eta_e^2
+    meas = np.var(ya - yfx)
+    assert abs(10 * np.log10(meas / see)) < 1.0, (meas, see)
+
+
+def test_qs_correlated_mode_loses_snr():
+    p0 = qs_params(sigma_d=0.107, mode=0.0)
+    p1 = qs_params(sigma_d=0.107, mode=1.0)
+    yi0, _, ya0, _ = run_ensemble(qs_arch, p0, seed0=300)
+    yi1, _, ya1, _ = run_ensemble(qs_arch, p1, seed0=300)
+    drop = snr_db(yi0, ya0 - yi0) - snr_db(yi1, ya1 - yi1)
+    assert 1.5 < drop < 5.0, drop  # ~3 dB predicted
+
+
+def test_qs_headroom_clipping_collapses_snr():
+    """Beyond N_max the BL saturates and SNR_A drops sharply (Fig. 9a)."""
+    high = snr_db(*_qs_clip_probe(n=96, k_h=40.0))
+    low = snr_db(*_qs_clip_probe(n=400, k_h=40.0))
+    assert high - low > 10.0, (high, low)
+
+
+def _qs_clip_probe(n, k_h):
+    p = qs_params(n=n, sigma_d=0.05, k_h=k_h, v_c=min(4 * np.sqrt(3 * n), k_h))
+    yi, _, ya, _ = run_ensemble(qs_arch, p, trials=8, seed0=400)
+    return yi, ya - yi
+
+
+def test_qs_pulse_noise_adds():
+    p = qs_params(sigma_d=0.0, sigma_t=0.1)
+    yi, yfx, ya, _ = run_ensemble(qs_arch, p, seed0=500)
+    n, st_ = 100, 0.1
+    see = n * st_ * st_ * (1 - 4.0**-6) ** 2 / 9
+    meas = np.var(ya - yfx)
+    assert abs(10 * np.log10(meas / see)) < 1.2
+
+
+def test_qs_t_rf_is_deterministic_gain_loss():
+    """t_rf (eq. 19) shrinks every cell discharge by a fixed fraction, so
+    the noiseless analog output is exactly (1 - t_rf) * reference."""
+    p = qs_params(t_rf=0.05)
+    _, _, ya, _ = run_ensemble(qs_arch, p, trials=2, seed0=600)
+    p_ref = qs_params(t_rf=0.0)
+    _, _, ya2, _ = run_ensemble(qs_arch, p_ref, trials=2, seed0=600)
+    np.testing.assert_allclose(ya, 0.95 * ya2, atol=2e-3)
+
+
+def test_qs_thermal_noise_floor():
+    p = qs_params(sigma_theta=0.5)
+    _, yfx, ya, _ = run_ensemble(qs_arch, p, seed0=700)
+    # recombined thermal variance = sum_ij (pw_i pxw_j)^2 * sigma^2
+    sw = 4 / 3 * (1 - 4.0**-6)
+    sx = 1 / 3 * (1 - 4.0**-6)
+    expect = 0.25 * sw * sx
+    meas = np.var(ya - yfx)
+    assert abs(10 * np.log10(meas / expect)) < 1.0
+
+
+# --------------------------------------------------------------------------
+# QR-Arch (Table III col 2).
+# --------------------------------------------------------------------------
+
+def test_qr_cap_mismatch_within_table3_band():
+    """Exact charge-share sim sits between the centered (refined) estimate
+    and the paper's (conservative) Table III expression."""
+    n, bw, sc = 128, 7, 0.08
+    p = qr_params(n=n, bw=bw, sigma_c=sc)
+    yi, yfx, ya, _ = run_ensemble(qr_arch, p, seed0=800)
+    meas = np.var(ya - yfx)
+    ex2 = 1 / 3
+    mu_v = 1 / 4
+    table3 = (2 / 3) * (1 - 4.0**-bw) * n * ex2 * sc * sc
+    refined = (4 / 3) * (1 - 4.0**-bw) * n * sc * sc * (ex2 / 2 - mu_v**2)
+    assert meas < table3 * 1.3
+    assert abs(10 * np.log10(meas / refined)) < 1.0, (meas, refined, table3)
+
+
+def test_qr_thermal_and_injection():
+    p = qr_params(sigma_theta=0.01, inj_a=0.02, inj_b=0.03)
+    yi, yfx, ya, _ = run_ensemble(qr_arch, p, seed0=900)
+    resid = ya - yfx
+    # injection has a systematic (mean) component; thermal adds variance
+    assert np.var(resid) > 0
+    p0 = qr_params()
+    _, yfx0, ya0, _ = run_ensemble(qr_arch, p0, seed0=900)
+    assert np.var(ya0 - yfx0) < 1e-9
+
+
+def test_qr_no_headroom_clipping():
+    """QR rows stay within [0, Vdd]: no clipping even at N=512 (Sec. IV-C)."""
+    p = qr_params(n=512, sigma_c=0.05)
+    yi, yfx, ya, _ = run_ensemble(qr_arch, p, trials=8, seed0=1000)
+    snr = snr_db(yi, ya - yi)
+    p2 = qr_params(n=128, sigma_c=0.05)
+    yi2, _, ya2, _ = run_ensemble(qr_arch, p2, trials=8, seed0=1001)
+    snr2 = snr_db(yi2, ya2 - yi2)
+    assert abs(snr - snr2) < 3.0  # no catastrophic drop with N
+
+
+# --------------------------------------------------------------------------
+# CM (Table III col 3).
+# --------------------------------------------------------------------------
+
+def test_cm_current_mismatch_matches_table3():
+    n, bw, sd = 64, 6, 0.107
+    p = cm_params(n=n, bw=bw, sigma_d=sd)
+    yi, yfx, ya, _ = run_ensemble(cm_arch, p, seed0=1100)
+    meas = np.var(ya - yfx)
+    expect = (2 / 3) * n * (1 / 3) * (0.25 - 4.0**-bw) * sd * sd
+    assert abs(10 * np.log10(meas / expect)) < 1.0, (meas, expect)
+
+
+def test_cm_weight_clipping_hurts_large_weights():
+    p_clip = cm_params(w_h=0.25)
+    p_free = cm_params(w_h=1e9)
+    yi_c, _, ya_c, _ = run_ensemble(cm_arch, p_clip, trials=4, seed0=1200)
+    yi_f, _, ya_f, _ = run_ensemble(cm_arch, p_free, trials=4, seed0=1200)
+    assert snr_db(yi_c, ya_c - yi_c) < snr_db(yi_f, ya_f - yi_f) - 3.0
+
+
+def test_cm_optimal_bw_exists():
+    """Fig. 11(a): SNR_a peaks at an intermediate B_w when headroom-limited."""
+    snrs = {}
+    for bw in (2, 4, 6, 8):
+        k_h = 16.0  # fixed headroom in Delta_w units => w_h = k_h * 2^{1-bw}
+        w_h = k_h * 2.0 ** (1 - bw)
+        p = cm_params(bw=bw, sigma_d=0.05, w_h=w_h)
+        yi, _, ya, _ = run_ensemble(cm_arch, p, trials=6, seed0=1300 + bw)
+        snrs[bw] = snr_db(yi, ya - yi)
+    best = max(snrs, key=snrs.get)
+    assert best in (4, 6), snrs  # interior optimum, not an endpoint
+
+
+# --------------------------------------------------------------------------
+# ADC / MPC behaviour.
+# --------------------------------------------------------------------------
+
+def test_adc_precision_sweep_saturates_at_snr_a():
+    """SNR_T -> SNR_A as B_ADC grows (Fig. 9b): 3-b is quantization-limited,
+    8-b is analog-noise-limited."""
+    base = dict(n=128, sigma_d=0.107, k_h=60.0, v_c=4 * np.sqrt(3 * 128))
+    out = {}
+    for b_adc in (3, 6, 8, 10):
+        p = qs_params(b_adc=b_adc, **base)
+        yi, _, ya, yh = run_ensemble(qs_arch, p, trials=8, seed0=1400)
+        out[b_adc] = (snr_db(yi, yh - yi), snr_db(yi, ya - yi))
+    assert out[3][0] < out[6][0] <= out[8][0] + 0.5
+    assert abs(out[8][0] - out[8][1]) < 1.0  # SNR_T within 1 dB of SNR_A
+    assert abs(out[10][0] - out[10][1]) < 0.6

@@ -1,0 +1,78 @@
+"""Quantization / bit-slicing invariants (Sec. II of the paper)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    quantize_unsigned,
+    signed_bits,
+    signed_mag_bits,
+    unsigned_bits,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bx=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_unsigned_bits_reconstruct(bx, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, (4, 32)).astype(np.float32)
+    xb, pxw, xq = unsigned_bits(x, float(bx))
+    expect = np.clip(np.floor(x * 2.0**bx + 0.5), 0, 2.0**bx - 1) / 2.0**bx
+    np.testing.assert_allclose(np.asarray(xq), expect, atol=1e-7)
+    bits = np.asarray(xb)
+    assert set(np.unique(bits)).issubset({0.0, 1.0})
+    assert np.all(bits[:, bx:, :] == 0.0)  # inactive planes masked
+
+
+@settings(max_examples=30, deadline=None)
+@given(bw=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_signed_bits_reconstruct(bw, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-1, 1, (4, 32)).astype(np.float32)
+    wb, pw, wq = signed_bits(w, float(bw))
+    t = np.clip(np.floor((w + 1.0) * 2.0 ** (bw - 1) + 0.5), 0, 2.0**bw - 1)
+    expect = t * 2.0 ** (1 - bw) - 1.0
+    np.testing.assert_allclose(np.asarray(wq), expect, atol=1e-7)
+    # round-to-nearest: |error| <= step/2 except at the clipped top code
+    err = w - np.asarray(wq)
+    assert np.all(np.abs(err) <= 2.0 ** (1 - bw) + 1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bw=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_signed_mag_bits_reconstruct(bw, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-1, 1, (4, 32)).astype(np.float32)
+    mb, pm, sgn, wq = signed_mag_bits(w, float(bw))
+    wq = np.asarray(wq)
+    # |error| < step, sign preserved, magnitude clipped below 1
+    assert np.all(np.abs(wq) <= 1.0 - 2.0 ** (1 - bw) + 1e-7)
+    assert np.all(np.abs(w - wq) <= 2.0 ** (1 - bw) + 1e-7)
+    nz = np.abs(wq) > 0
+    assert np.all(np.sign(wq[nz]) == np.sign(w[nz]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(bx=st.integers(1, 10), seed=st.integers(0, 2**31 - 1))
+def test_quantize_unsigned_step(bx, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, (256,)).astype(np.float32)
+    xq = np.asarray(quantize_unsigned(x, float(bx)))
+    err = x - xq
+    # round-to-nearest: |err| <= step/2, except up to a step at the top code
+    assert np.all(np.abs(err) <= 2.0**-bx + 1e-7)
+    interior = x < 1.0 - 2.0**-bx
+    assert np.all(np.abs(err[interior]) <= 2.0 ** -(bx + 1) + 1e-7)
+
+
+def test_sqnr_six_db_per_bit():
+    """Eq. (1): each extra bit buys ~6 dB of SQNR."""
+    rng = np.random.default_rng(7)
+    x = rng.uniform(0, 1, (200000,)).astype(np.float64)
+    prev = None
+    for bx in range(4, 9):
+        xq = np.asarray(quantize_unsigned(x.astype(np.float32), float(bx)), np.float64)
+        sqnr = 10 * np.log10(np.var(x) / np.mean((x - xq) ** 2))
+        if prev is not None:
+            assert 5.0 < sqnr - prev < 7.0
+        prev = sqnr

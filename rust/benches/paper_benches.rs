@@ -1,0 +1,203 @@
+//! `cargo bench` — throughput/latency benchmarks for every paper
+//! table/figure regeneration plus the hot paths under them.
+//!
+//! Filter by substring: `cargo bench -- fig9` or `cargo bench -- mc_`.
+//! Uses the in-repo harness (rust/src/bench). PJRT benches require
+//! `make artifacts` and are skipped otherwise.
+
+use std::time::Duration;
+
+use imclim::arch::{pvec, ImcArch, OpPoint, QsArch};
+use imclim::bench::{black_box, BenchConfig, Suite};
+use imclim::compute::qs::QsModel;
+use imclim::coordinator::{run_sweep, Backend, PjrtService, SweepOptions, SweepPoint};
+use imclim::figures::{self, FigCtx};
+use imclim::mc::{simulate, ArchKind, InputDist};
+use imclim::tech::TechNode;
+
+fn qs_params(n: f64, sigma_d: f64) -> [f64; pvec::P] {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n;
+    p[pvec::IDX_BX] = 6.0;
+    p[pvec::IDX_BW] = 6.0;
+    p[pvec::IDX_B_ADC] = 8.0;
+    p[pvec::QS_IDX_SIGMA_D] = sigma_d;
+    p[pvec::QS_IDX_K_H] = 55.0;
+    p[pvec::QS_IDX_V_C] = 55.0;
+    p
+}
+
+fn main() {
+    let mut suite = Suite::from_args(BenchConfig {
+        warmup: Duration::from_millis(300),
+        budget: Duration::from_secs(3),
+        min_iters: 3,
+        max_iters: 10_000,
+    });
+
+    // ---- L3 hot paths: native Monte-Carlo trial throughput ------------
+    for (name, kind) in [
+        ("mc_qs_n512", ArchKind::Qs),
+        ("mc_qr_n512", ArchKind::Qr),
+        ("mc_cm_n512", ArchKind::Cm),
+    ] {
+        let mut p = qs_params(512.0, 0.107);
+        if kind == ArchKind::Qr {
+            p[pvec::QR_IDX_SIGMA_C] = 0.08;
+            p[pvec::QR_IDX_V_C] = 1.0;
+        }
+        if kind == ArchKind::Cm {
+            p[pvec::CM_IDX_SIGMA_D] = 0.107;
+            p[pvec::CM_IDX_W_H] = 1.0;
+            p[pvec::CM_IDX_V_C] = 0.2;
+        }
+        let trials = 256;
+        let mut seed = 0u64;
+        suite.bench(name, trials as f64, || {
+            seed += 1;
+            black_box(simulate(kind, &p, trials, seed, InputDist::Uniform));
+        });
+    }
+
+    // correlated-mismatch ablation path
+    {
+        let mut p = qs_params(512.0, 0.107);
+        p[pvec::QS_IDX_MODE] = 1.0;
+        suite.bench("mc_qs_n512_correlated", 256.0, || {
+            black_box(simulate(ArchKind::Qs, &p, 256, 7, InputDist::Uniform));
+        });
+    }
+
+    // ---- coordinator sweep throughput (Fig. 9a-shaped workload) -------
+    {
+        let points: Vec<SweepPoint> = (0..16)
+            .map(|i| {
+                SweepPoint::new(format!("b{i}"), ArchKind::Qs, qs_params(128.0, 0.1))
+                    .with_trials(512)
+                    .with_seed(i)
+            })
+            .collect();
+        suite.bench("sweep_16pts_512trials_native", 16.0, || {
+            black_box(run_sweep(
+                points.clone(),
+                Backend::Native,
+                SweepOptions {
+                    workers: 8,
+                    verbose: false,
+                },
+            ));
+        });
+    }
+
+    // ---- figure/table regeneration (one bench per paper exhibit) ------
+    let ctx = || {
+        let mut c = FigCtx::native(std::env::temp_dir().join("imclim-bench"));
+        c.trials = 512;
+        c.verbose = false;
+        c
+    };
+    for name in [
+        "fig2", "fig4a", "fig4b", "fig9a", "fig9b", "fig10a", "fig10b",
+        "fig11a", "fig11b", "fig12", "fig13", "table1", "table2", "table3",
+    ] {
+        let c = ctx();
+        suite.bench(&format!("figure_{name}"), 1.0, || {
+            // silence the driver's stdout noise by discarding summaries
+            let s = figures::run(name, &c).unwrap();
+            black_box(s);
+        });
+    }
+
+    // ---- DNN substrate -------------------------------------------------
+    {
+        use imclim::dnn::*;
+        let ds = Dataset::generate(&DatasetConfig {
+            train: 512,
+            test: 256,
+            ..Default::default()
+        });
+        let mut mlp = Mlp::new(&[64, 128, 64, 10], 7);
+        mlp.train(
+            &ds,
+            &TrainConfig {
+                epochs: 2,
+                ..Default::default()
+            },
+        );
+        let mut rng = imclim::util::rng::Pcg64::new(3);
+        suite.bench("dnn_noisy_forward_256", 256.0, || {
+            for i in 0..256 {
+                let (x, _) = ds.test_sample(i);
+                black_box(mlp.forward_noisy(x, &[0.5, 0.5, 0.5], &mut rng));
+            }
+        });
+        suite.bench("dnn_train_epoch", ds.train_len() as f64, || {
+            let mut m = mlp.clone();
+            black_box(m.train(
+                &ds,
+                &TrainConfig {
+                    epochs: 1,
+                    ..Default::default()
+                },
+            ));
+        });
+    }
+
+    // ---- PJRT path (end-to-end executor throughput) --------------------
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let service = PjrtService::spawn(artifacts, 4);
+        let handle = service.handle();
+        // warm the compile caches
+        let _ = handle.arch_shape("qs_arch");
+        let _ = handle.arch_shape("qs_arch_small");
+
+        for (bench, artifact, trials) in [
+            ("pjrt_qs_small_batch", "_small", 16usize),
+            ("pjrt_qs_full_batch", "", 64usize),
+        ] {
+            let h = handle.clone();
+            let arch = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+            let (w, x) = figures::uniform_stats();
+            let op = OpPoint::new(48, 6, 6, 8);
+            let point = SweepPoint::new("bench", ArchKind::Qs, arch.pjrt_params(&op, &w, &x))
+                .with_trials(trials)
+                .with_seed(5);
+            let backend = Backend::Pjrt {
+                handle: h,
+                suffix: artifact,
+            };
+            suite.bench(bench, trials as f64, || {
+                black_box(imclim::coordinator::run_point(&point, &backend).unwrap());
+            });
+        }
+
+        // a full sweep through PJRT: 4 points x 128 trials on the small
+        // artifact — the end-to-end coordinator+executor pipeline.
+        let points: Vec<SweepPoint> = (0..4)
+            .map(|i| {
+                SweepPoint::new(format!("p{i}"), ArchKind::Qs, qs_params(48.0, 0.1))
+                    .with_trials(128)
+                    .with_seed(i)
+            })
+            .collect();
+        let backend = Backend::Pjrt {
+            handle: handle.clone(),
+            suffix: "_small",
+        };
+        suite.bench("pjrt_sweep_4pts_128trials", 512.0, || {
+            black_box(run_sweep(
+                points.clone(),
+                backend.clone(),
+                SweepOptions {
+                    workers: 4,
+                    verbose: false,
+                },
+            ));
+        });
+    } else {
+        eprintln!("(pjrt benches skipped: run `make artifacts`)");
+    }
+
+    println!("\n{} benches complete", suite.reports.len());
+}

@@ -1,0 +1,195 @@
+//! Multi-bank IMC (the paper's conclusion bullet 4): a high-dimensional
+//! DP split across `banks` arrays of N/banks rows each, partial DPs
+//! digitized per bank and summed digitally.
+//!
+//! Banking restores SNR for N > N_max: each bank stays inside its
+//! headroom (clipping noise vanishes), electrical noise still grows with
+//! total N but the *signal* does too, and the energy cost is `banks`
+//! ADC conversions plus the same total analog work.
+
+use super::{AdcCriterion, EnergyBreakdown, ImcArch, NoiseBreakdown, OpPoint};
+use crate::quant::SignalStats;
+
+/// An architecture partitioned over equally-sized banks.
+pub struct Banked<'a> {
+    pub inner: &'a dyn ImcArch,
+    pub banks: usize,
+}
+
+impl<'a> Banked<'a> {
+    pub fn new(inner: &'a dyn ImcArch, banks: usize) -> Self {
+        assert!(banks >= 1);
+        Self { inner, banks }
+    }
+
+    fn bank_op(&self, op: &OpPoint) -> OpPoint {
+        OpPoint {
+            n: op.n.div_ceil(self.banks),
+            ..*op
+        }
+    }
+
+    /// Noise of the banked DP: per-bank noise variances add (independent
+    /// banks), signal variances add too.
+    pub fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown {
+        let sub = self.inner.noise(&self.bank_op(op), w, x);
+        NoiseBreakdown {
+            sigma_yo2: sub.sigma_yo2 * self.banks as f64,
+            sigma_qiy2: sub.sigma_qiy2 * self.banks as f64,
+            sigma_eta_h2: sub.sigma_eta_h2 * self.banks as f64,
+            sigma_eta_e2: sub.sigma_eta_e2 * self.banks as f64,
+        }
+    }
+
+    /// Energy: `banks` x the per-bank cost (analog + ADC), one shared
+    /// digital recombination.
+    pub fn energy(
+        &self,
+        op: &OpPoint,
+        crit: AdcCriterion,
+        w: &SignalStats,
+        x: &SignalStats,
+    ) -> EnergyBreakdown {
+        let sub = self.inner.energy(&self.bank_op(op), crit, w, x);
+        EnergyBreakdown {
+            analog: sub.analog * self.banks as f64,
+            adc: sub.adc * self.banks as f64,
+            misc: sub.misc + 5e-15 * self.banks as f64, // bank adder tree
+        }
+    }
+
+    /// Delay: banks operate in parallel; the adder tree adds log2(banks)
+    /// stages.
+    pub fn delay(&self, op: &OpPoint) -> f64 {
+        self.inner.delay(&self.bank_op(op))
+            + (self.banks as f64).log2().ceil() * 50e-12
+    }
+
+    /// Smallest bank count that keeps each bank's clipping noise below
+    /// its electrical noise (the Fig. 9(a) plateau condition).
+    pub fn min_banks_for_plateau(
+        inner: &dyn ImcArch,
+        op: &OpPoint,
+        w: &SignalStats,
+        x: &SignalStats,
+    ) -> usize {
+        for banks in 1..=op.n {
+            let b = Banked::new(inner, banks);
+            let nb = b.noise(op, w, x);
+            if nb.sigma_eta_h2 <= nb.sigma_eta_e2 {
+                return banks;
+            }
+        }
+        op.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::QsArch;
+    use crate::compute::qs::QsModel;
+    use crate::tech::TechNode;
+
+    fn setup() -> (QsArch, SignalStats, SignalStats) {
+        (
+            QsArch::new(QsModel::new(TechNode::n65(), 0.8)),
+            SignalStats::uniform_signed(1.0),
+            SignalStats::uniform_unsigned(1.0),
+        )
+    }
+
+    #[test]
+    fn banking_restores_snr_beyond_n_max() {
+        let (arch, w, x) = setup();
+        let op = OpPoint::new(512, 6, 6, 8);
+        let single = Banked::new(&arch, 1).noise(&op, &w, &x).snr_a_total_db();
+        let banked = Banked::new(&arch, 8).noise(&op, &w, &x).snr_a_total_db();
+        assert!(single < 5.0, "N=512 single-bank collapses: {single}");
+        assert!(banked > 15.0, "8 banks restore the plateau: {banked}");
+    }
+
+    #[test]
+    fn banking_below_n_max_changes_little() {
+        let (arch, w, x) = setup();
+        let op = OpPoint::new(64, 6, 6, 8);
+        let single = Banked::new(&arch, 1).noise(&op, &w, &x).snr_a_total_db();
+        let banked = Banked::new(&arch, 2).noise(&op, &w, &x).snr_a_total_db();
+        assert!((single - banked).abs() < 1.5, "{single} {banked}");
+    }
+
+    #[test]
+    fn banking_costs_adc_energy() {
+        let (arch, w, x) = setup();
+        let op = OpPoint::new(512, 6, 6, 8);
+        let e1 = Banked::new(&arch, 1).energy(&op, AdcCriterion::Mpc, &w, &x);
+        let e8 = Banked::new(&arch, 8).energy(&op, AdcCriterion::Mpc, &w, &x);
+        assert!(e8.adc > e1.adc, "{} {}", e8.adc, e1.adc);
+    }
+
+    #[test]
+    fn min_banks_matches_n_max_scaling() {
+        let (arch, w, x) = setup();
+        // roughly N/N_max banks needed; N_max(0.8 V) ~ 128
+        let b512 = Banked::min_banks_for_plateau(&arch, &OpPoint::new(512, 6, 6, 8), &w, &x);
+        let b128 = Banked::min_banks_for_plateau(&arch, &OpPoint::new(128, 6, 6, 8), &w, &x);
+        assert!(b128 <= 2, "{b128}");
+        assert!((3..=10).contains(&b512), "{b512}");
+        assert!(b512 > b128);
+    }
+
+    #[test]
+    fn delay_adds_adder_tree() {
+        let (arch, _, _) = setup();
+        let op = OpPoint::new(512, 6, 6, 8);
+        let d1 = Banked::new(&arch, 1).delay(&op);
+        let d8 = Banked::new(&arch, 8).delay(&op);
+        // per-bank compute is the same cycle count; only the tree adds
+        assert!(d8 - d1 < 1e-9);
+        assert!(d8 > d1);
+    }
+
+    /// Monte-Carlo cross-check: simulate 8 banks natively and verify the
+    /// closed-form banked SNR.
+    #[test]
+    fn banked_mc_matches_closed_form() {
+        let (arch, w, x) = setup();
+        let op = OpPoint::new(512, 6, 6, 14);
+        let banks = 8;
+        let bank_op = OpPoint::new(64, 6, 6, 14);
+        let params = arch.pjrt_params(&bank_op, &w, &x);
+        // sum of 8 independent bank DPs == banked DP of N=512
+        let mut acc = crate::mc::SnrAccumulator::new();
+        let mut outs = Vec::new();
+        for b in 0..banks {
+            outs.push(crate::mc::simulate(
+                crate::mc::ArchKind::Qs,
+                &params,
+                2000,
+                100 + b as u64,
+                crate::mc::InputDist::Uniform,
+            ));
+        }
+        let mut combined = crate::mc::McOutput::default();
+        for i in 0..2000 {
+            let sum = |f: fn(&crate::mc::McOutput) -> &Vec<f64>| -> f64 {
+                outs.iter().map(|o| f(o)[i]).sum()
+            };
+            combined.push(
+                sum(|o| &o.y_ideal),
+                sum(|o| &o.y_fx),
+                sum(|o| &o.y_a),
+                sum(|o| &o.y_hat),
+            );
+        }
+        acc.push_chunk(&combined);
+        let measured = acc.finalize();
+        let closed = Banked::new(&arch, banks).noise(&op, &w, &x);
+        assert!(
+            (measured.snr_a_total_db - closed.snr_a_total_db()).abs() < 1.0,
+            "mc {} vs closed {}",
+            measured.snr_a_total_db,
+            closed.snr_a_total_db()
+        );
+    }
+}

@@ -1,0 +1,312 @@
+//! Compute Memory (Sec. IV-D, Fig. 7(c), Table III column 3): multi-bit
+//! DP in a single compute cycle — POT-weighted WL pulse widths realize a
+//! multi-bit analog weight on each column's BL (QS model), a per-column
+//! mixed-signal multiplier forms w_j * x_j, and a QR stage aggregates the
+//! N columns; one ADC conversion per DP.
+
+use super::{pvec, AdcCriterion, EnergyBreakdown, ImcArch, NoiseBreakdown, OpPoint};
+use crate::compute::qr::QrModel;
+use crate::compute::qs::QsModel;
+use crate::energy::adc::AdcEnergyModel;
+use crate::quant::SignalStats;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CmArch {
+    pub qs: QsModel,
+    pub qr: QrModel,
+    pub adc: AdcEnergyModel,
+    pub e_misc: f64,
+    pub t_comp: f64,
+    /// Use the exact uniform-weight clipping moment instead of the
+    /// Chebyshev-bounded Table III estimate (DESIGN.md §6).
+    pub exact_clip: bool,
+}
+
+impl CmArch {
+    pub fn new(qs: QsModel, qr: QrModel) -> Self {
+        let adc = AdcEnergyModel::paper(qs.tech.v_dd);
+        Self {
+            qs,
+            qr,
+            adc,
+            e_misc: 25e-15,
+            t_comp: 100e-12,
+            exact_clip: true,
+        }
+    }
+
+    pub fn with_exact_clip(mut self, exact: bool) -> Self {
+        self.exact_clip = exact;
+        self
+    }
+
+    /// Weight-domain headroom clip w_h = k_h * Delta_w (appendix B), with
+    /// k_h = dV_BL,max / dV_BL,unit and Delta_w = 2^{1-Bw} (w_m = 1).
+    pub fn w_h(&self, bw: u32) -> f64 {
+        let k_h = self.qs.k_h();
+        (k_h * 2f64.powi(1 - bw as i32)).min(1.0)
+    }
+
+    /// T_max for a B_w-bit POT pulse train: 2^{Bw-1} T_0.
+    pub fn t_max(&self, bw: u32) -> f64 {
+        2f64.powi(bw as i32 - 1) * self.qs.tech.t0
+    }
+}
+
+impl ImcArch for CmArch {
+    fn name(&self) -> &'static str {
+        "CM"
+    }
+
+    fn artifact_name(&self) -> &'static str {
+        "cm_arch"
+    }
+
+    fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown {
+        let n = op.n as f64;
+        let sigma_yo2 = crate::quant::dp_signal_variance(op.n, w, x);
+        let sigma_qiy2 = crate::quant::qiy_variance(op.n, op.bw, op.bx, w, x);
+
+        let ex2 = x.second_moment / (x.peak * x.peak);
+        let w_h = self.w_h(op.bw);
+        let sigma_eta_h2 = if self.exact_clip {
+            // Exact for w ~ U[-1, 1): E[lambda^2] = (1 - w_h)_+^3 / 3.
+            let t = (1.0 - w_h).max(0.0);
+            n * ex2 * t * t * t / 3.0
+        } else {
+            // Table III (Chebyshev-bounded) estimate.
+            let k_h = self.qs.k_h();
+            let t = (1.0 - 2.0 * k_h * 2f64.powi(-(op.bw as i32))).max(0.0);
+            n * ex2 / 12.0
+                * w.variance
+                * k_h.powi(-2)
+                * 4f64.powi(op.bw as i32)
+                * t
+                * t
+        };
+
+        // sigma_eta_e^2 (Table III): (2/3) N E[x^2] (1/4 - 4^-Bw) sigma_D^2
+        // — current mismatch on the sign-magnitude POT planes — plus the
+        // (small) QR aggregation-stage terms.
+        let sd2 = self.qs.sigma_d().powi(2);
+        let mismatch =
+            2.0 / 3.0 * n * ex2 * (0.25 - 4f64.powi(-(op.bw as i32))) * sd2;
+        let var_v = ex2 * w.variance / (x.peak * x.peak).max(1e-30); // Var(w x)
+        let qr_stage = n
+            * (self.qr.sigma_c_rel().powi(2) * var_v
+                + self.qr.sigma_theta_rel().powi(2));
+        let sigma_eta_e2 = mismatch + qr_stage;
+
+        NoiseBreakdown {
+            sigma_yo2,
+            sigma_qiy2,
+            sigma_eta_h2,
+            sigma_eta_e2,
+        }
+    }
+
+    fn v_c_volts(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> f64 {
+        // Table III: V_c = 8 sigma_w 2^Bw dV_unit sqrt(E[x^2]) / sqrt(N)
+        // (half-range 4 sigma_y of the aggregated output voltage).
+        let n = op.n as f64;
+        let ex2 = x.second_moment / (x.peak * x.peak);
+        4.0 * w.variance.sqrt()
+            * 2f64.powi(op.bw as i32 - 1)
+            * self.qs.delta_v_unit()
+            * ex2.sqrt()
+            / n.sqrt()
+            * 2.0
+    }
+
+    fn b_adc_bgc(&self, op: &OpPoint) -> u32 {
+        // single conversion of the full multi-bit DP (eq. 12)
+        crate::quant::criteria::bgc_bits(op.bx, op.bw, op.n)
+    }
+
+    fn v_c_full_volts(&self, op: &OpPoint, _w: &SignalStats, _x: &SignalStats) -> f64 {
+        // worst case |y/n| <= w_h: full-scale aggregated voltage
+        self.w_h(op.bw).min(1.0)
+            * 2f64.powi(op.bw as i32 - 1)
+            * self.qs.delta_v_unit()
+    }
+
+    fn b_adc_min(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> u32 {
+        let snr_a_db = self.noise(op, w, x).snr_a_total_db();
+        ((snr_a_db + 16.2) / 6.0).ceil().max(1.0) as u32
+    }
+
+    fn energy(
+        &self,
+        op: &OpPoint,
+        crit: AdcCriterion,
+        w: &SignalStats,
+        x: &SignalStats,
+    ) -> EnergyBreakdown {
+        // Table III: E_CM = 2N E_QS + E_QR + E_mult + E_ADC + E_misc.
+        let b_adc = self.b_adc_for(op, crit, w, x);
+        // Per-column BL discharge: expected |w| * 2^{Bw-1} counts on both
+        // BL and BLB (factor 2), at the CM pulse train length.
+        let mut qs = self.qs;
+        qs.t_max = self.t_max(op.bw);
+        let e_w = 0.5 * 2f64.powi(op.bw as i32 - 1); // E[|w|] 2^{Bw-1} counts
+        let e_qs_col = qs.energy_per_bl_op(e_w);
+        let mu_x = (x.second_moment - x.variance).max(0.0).sqrt();
+        let e_qr = self.qr.energy_share(op.n, self.qr.tech.v_dd * mu_x / 2.0);
+        let e_mult = op.n as f64 * self.qr.energy_mult(mu_x / x.peak / 2.0);
+        let v_c = self.v_c_for(op, crit, w, x);
+        let e_adc = self.adc.energy(b_adc, v_c);
+        EnergyBreakdown {
+            analog: 2.0 * op.n as f64 * e_qs_col + e_qr + e_mult,
+            adc: e_adc,
+            misc: self.e_misc,
+        }
+    }
+
+    fn delay(&self, op: &OpPoint) -> f64 {
+        self.t_max(op.bw) + self.qs.t_su + self.qr.delay()
+            + self.adc.delay(op.b_adc, self.t_comp)
+    }
+
+    fn pjrt_params(
+        &self,
+        op: &OpPoint,
+        w: &SignalStats,
+        x: &SignalStats,
+    ) -> [f64; pvec::P] {
+        let mut p = [0.0; pvec::P];
+        p[pvec::IDX_N_ACTIVE] = op.n as f64;
+        p[pvec::IDX_BX] = op.bx as f64;
+        p[pvec::IDX_BW] = op.bw as f64;
+        p[pvec::IDX_B_ADC] = op.b_adc as f64;
+        p[pvec::CM_IDX_SIGMA_D] = self.qs.sigma_d();
+        p[pvec::CM_IDX_W_H] = self.w_h(op.bw);
+        p[pvec::CM_IDX_SIGMA_C] = self.qr.sigma_c_rel();
+        p[pvec::CM_IDX_INJ_A] = self.qr.inj_a_rel();
+        p[pvec::CM_IDX_INJ_B] = self.qr.inj_b_rel();
+        p[pvec::CM_IDX_SIGMA_THETA] = self.qr.sigma_theta_rel();
+        // ADC range in normalized per-column mean units: V = y/n, 4 sigma.
+        let n = op.n as f64;
+        let ex2 = x.second_moment / (x.peak * x.peak);
+        p[pvec::CM_IDX_V_C] = 4.0 * (w.variance * ex2).sqrt() / n.sqrt();
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::TechNode;
+
+    fn arch(v_wl: f64) -> CmArch {
+        CmArch::new(
+            QsModel::new(TechNode::n65(), v_wl),
+            QrModel::new(TechNode::n65(), 3.0),
+        )
+    }
+
+    fn uni() -> (SignalStats, SignalStats) {
+        (
+            SignalStats::uniform_signed(1.0),
+            SignalStats::uniform_unsigned(1.0),
+        )
+    }
+
+    #[test]
+    fn optimal_bw_exists() {
+        // Fig. 11(a): SNR_A has an interior optimum in B_w.
+        let (w, x) = uni();
+        let a = arch(0.8);
+        let snr = |bw: u32| {
+            a.noise(&OpPoint::new(64, 6, bw, 8), &w, &x).snr_a_total_db()
+        };
+        let snrs: Vec<(u32, f64)> = (2..=8).map(|b| (b, snr(b))).collect();
+        let best = snrs
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((4..=7).contains(&best), "{snrs:?}");
+    }
+
+    #[test]
+    fn lower_v_wl_shifts_optimum_right() {
+        // Fig. 11(a): optimum B_w is ~6 at 0.8 V, ~7 at 0.7 V.
+        let (w, x) = uni();
+        let best_bw = |v: f64| {
+            let a = arch(v);
+            (2..=8)
+                .max_by(|&p, &q| {
+                    let sp = a.noise(&OpPoint::new(64, 6, p, 8), &w, &x).snr_a_db();
+                    let sq = a.noise(&OpPoint::new(64, 6, q, 8), &w, &x).snr_a_db();
+                    sp.partial_cmp(&sq).unwrap()
+                })
+                .unwrap()
+        };
+        assert!(best_bw(0.7) >= best_bw(0.8), "{} {}", best_bw(0.7), best_bw(0.8));
+    }
+
+    #[test]
+    fn clipping_vs_electrical_balance_near_07v() {
+        // Fig. 11(a): at B_w = 7 eta_e dominates at 0.6 V, eta_h at 0.8 V.
+        let (w, x) = uni();
+        let op = OpPoint::new(64, 6, 7, 8);
+        let lo = arch(0.6).noise(&op, &w, &x);
+        let hi = arch(0.8).noise(&op, &w, &x);
+        assert!(lo.sigma_eta_e2 > lo.sigma_eta_h2, "0.6 V: eta_e dominates");
+        assert!(hi.sigma_eta_h2 > hi.sigma_eta_e2, "0.8 V: eta_h dominates");
+    }
+
+    #[test]
+    fn w_h_halves_per_weight_bit() {
+        let a = arch(0.8);
+        let w4 = a.w_h(4);
+        let w5 = a.w_h(5);
+        if w4 < 1.0 {
+            assert!((w4 / w5 - 2.0).abs() < 1e-9);
+        }
+        assert!(a.w_h(2) >= a.w_h(8));
+    }
+
+    #[test]
+    fn single_adc_conversion_per_dp() {
+        // CM avoids per-plane ADC cost: at the same op point its ADC
+        // energy is below QS-Arch's Bw*Bx conversions.
+        let (w, x) = uni();
+        let op = OpPoint::new(64, 6, 6, 8);
+        let cm = arch(0.8).energy(&op, AdcCriterion::Mpc, &w, &x);
+        let qs = crate::arch::QsArch::new(QsModel::new(TechNode::n65(), 0.8))
+            .energy(&op, AdcCriterion::Mpc, &w, &x);
+        assert!(cm.adc < qs.adc, "{} {}", cm.adc, qs.adc);
+    }
+
+    #[test]
+    fn adc_energy_grows_with_n_under_mpc() {
+        // Fig. 12(c): V_c ~ 1/sqrt(N).
+        let (w, x) = uni();
+        let a = arch(0.8);
+        let e64 = a.energy(&OpPoint::new(64, 6, 6, 8), AdcCriterion::Mpc, &w, &x).adc;
+        let e512 =
+            a.energy(&OpPoint::new(512, 6, 6, 8), AdcCriterion::Mpc, &w, &x).adc;
+        assert!(e512 > e64, "{e64} {e512}");
+    }
+
+    #[test]
+    fn exact_clip_below_chebyshev_bound() {
+        let (w, x) = uni();
+        let op = OpPoint::new(64, 6, 7, 8);
+        let exact = arch(0.8).noise(&op, &w, &x).sigma_eta_h2;
+        let bound = arch(0.8).with_exact_clip(false).noise(&op, &w, &x).sigma_eta_h2;
+        if bound > 0.0 {
+            assert!(exact <= bound * 1.5, "{exact} {bound}");
+        }
+    }
+
+    #[test]
+    fn params_vector_layout() {
+        let (w, x) = uni();
+        let p = arch(0.8).pjrt_params(&OpPoint::new(64, 6, 6, 8), &w, &x);
+        assert_eq!(p[pvec::IDX_N_ACTIVE], 64.0);
+        assert!(p[pvec::CM_IDX_W_H] > 0.0 && p[pvec::CM_IDX_W_H] <= 1.0);
+        assert!(p[pvec::CM_IDX_V_C] > 0.0);
+    }
+}

@@ -1,0 +1,313 @@
+//! IMC architectures (Sec. IV, Fig. 7, Table III): QS-Arch, QR-Arch and
+//! CM, each composing the compute models of `crate::compute` into a full
+//! multi-bit dot-product engine with closed-form noise, precision, energy
+//! and delay models, plus the normalized parameter vector consumed by the
+//! PJRT simulation artifacts and the native Monte-Carlo simulator.
+
+pub mod banked;
+pub mod cm;
+pub mod qr_arch;
+pub mod qs_arch;
+
+pub use banked::Banked;
+pub use cm::CmArch;
+pub use qr_arch::QrArch;
+pub use qs_arch::QsArch;
+
+use crate::quant::SignalStats;
+use crate::util::stats::db;
+
+/// Shared runtime parameter-vector layout (mirror of python/compile/params.py;
+/// pinned by tests on both sides).
+pub mod pvec {
+    pub const P: usize = 16;
+    pub const IDX_N_ACTIVE: usize = 0;
+    pub const IDX_BX: usize = 1;
+    pub const IDX_BW: usize = 2;
+    pub const IDX_B_ADC: usize = 3;
+
+    pub const QS_IDX_SIGMA_D: usize = 4;
+    pub const QS_IDX_SIGMA_T: usize = 5;
+    pub const QS_IDX_T_RF: usize = 6;
+    pub const QS_IDX_SIGMA_THETA: usize = 7;
+    pub const QS_IDX_K_H: usize = 8;
+    pub const QS_IDX_V_C: usize = 9;
+    pub const QS_IDX_MODE: usize = 10;
+
+    pub const QR_IDX_SIGMA_C: usize = 4;
+    pub const QR_IDX_INJ_A: usize = 5;
+    pub const QR_IDX_INJ_B: usize = 6;
+    pub const QR_IDX_SIGMA_THETA: usize = 7;
+    pub const QR_IDX_V_C: usize = 8;
+    pub const QR_IDX_V_LO: usize = 9;
+
+    pub const CM_IDX_SIGMA_D: usize = 4;
+    pub const CM_IDX_W_H: usize = 5;
+    pub const CM_IDX_SIGMA_C: usize = 6;
+    pub const CM_IDX_INJ_A: usize = 7;
+    pub const CM_IDX_INJ_B: usize = 8;
+    pub const CM_IDX_SIGMA_THETA: usize = 9;
+    pub const CM_IDX_V_C: usize = 10;
+}
+
+/// One operating point of a DP engine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpPoint {
+    /// DP dimension N.
+    pub n: usize,
+    /// Activation precision B_x.
+    pub bx: u32,
+    /// Weight precision B_w.
+    pub bw: u32,
+    /// Column-ADC precision B_ADC.
+    pub b_adc: u32,
+}
+
+impl OpPoint {
+    pub fn new(n: usize, bx: u32, bw: u32, b_adc: u32) -> Self {
+        Self { n, bx, bw, b_adc }
+    }
+}
+
+/// ADC-precision assignment criterion (Sec. III-C/D).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdcCriterion {
+    /// Minimum precision criterion, clipping at 4 sigma (eq. 15).
+    Mpc,
+    /// Bit growth criterion (eq. 12).
+    Bgc,
+    /// Truncated BGC at a fixed B_y.
+    TBgc(u32),
+}
+
+/// Closed-form noise decomposition at one operating point (Table III).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoiseBreakdown {
+    /// Signal power sigma_yo^2 (eq. 5).
+    pub sigma_yo2: f64,
+    /// Input quantization sigma_qiy^2 (eq. 5).
+    pub sigma_qiy2: f64,
+    /// Headroom clipping sigma_eta_h^2.
+    pub sigma_eta_h2: f64,
+    /// Circuit/electrical sigma_eta_e2.
+    pub sigma_eta_e2: f64,
+}
+
+impl NoiseBreakdown {
+    pub fn sigma_eta_a2(&self) -> f64 {
+        self.sigma_eta_h2 + self.sigma_eta_e2
+    }
+
+    /// SNR_a (analog-only, eq. 7).
+    pub fn snr_a_db(&self) -> f64 {
+        db(self.sigma_yo2 / self.sigma_eta_a2())
+    }
+
+    /// Pre-ADC SNR_A (eq. 10).
+    pub fn snr_a_total_db(&self) -> f64 {
+        db(self.sigma_yo2 / (self.sigma_qiy2 + self.sigma_eta_a2()))
+    }
+
+    pub fn sqnr_qiy_db(&self) -> f64 {
+        db(self.sigma_yo2 / self.sigma_qiy2)
+    }
+
+    /// SNR_T given an additional output-quantization variance.
+    pub fn snr_t_db(&self, sigma_qy2: f64) -> f64 {
+        db(self.sigma_yo2 / (self.sigma_qiy2 + self.sigma_eta_a2() + sigma_qy2))
+    }
+}
+
+/// Per-DP energy decomposition (Table III "Energy cost per DP").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    /// Analog core (BL discharge / charge share / multipliers) [J].
+    pub analog: f64,
+    /// Column ADC conversions [J].
+    pub adc: f64,
+    /// Digital recombination, DAC amortization, misc [J].
+    pub misc: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.analog + self.adc + self.misc
+    }
+}
+
+/// A full IMC architecture: Table III closed forms + runtime param vector.
+pub trait ImcArch {
+    fn name(&self) -> &'static str;
+
+    /// Closed-form noise decomposition (Table III).
+    fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown;
+
+    /// ADC input range V_c [V at the ADC] (Table III — the MPC
+    /// statistical 4-sigma range).
+    fn v_c_volts(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> f64;
+
+    /// Worst-case (full-scale) ADC range used by BGC/tBGC, which cover
+    /// the entire arithmetic range instead of clipping.
+    fn v_c_full_volts(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> f64;
+
+    /// ADC range under a criterion.
+    fn v_c_for(
+        &self,
+        op: &OpPoint,
+        crit: AdcCriterion,
+        w: &SignalStats,
+        x: &SignalStats,
+    ) -> f64 {
+        match crit {
+            AdcCriterion::Mpc => self.v_c_volts(op, w, x),
+            _ => self.v_c_full_volts(op, w, x),
+        }
+    }
+
+    /// Minimum ADC precision (Table III row B_ADC) for SNR_T within
+    /// 0.5 dB of SNR_A.
+    fn b_adc_min(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> u32;
+
+    /// Per-DP energy decomposition under an ADC criterion.
+    fn energy(
+        &self,
+        op: &OpPoint,
+        crit: AdcCriterion,
+        w: &SignalStats,
+        x: &SignalStats,
+    ) -> EnergyBreakdown;
+
+    /// Per-DP latency [s].
+    fn delay(&self, op: &OpPoint) -> f64;
+
+    /// Normalized parameter vector for the PJRT artifact / native MC.
+    fn pjrt_params(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats)
+        -> [f64; pvec::P];
+
+    /// Which artifact family simulates this architecture.
+    fn artifact_name(&self) -> &'static str;
+
+    /// Column-ADC precision under BGC (eq. 12 applied to what the ADC
+    /// actually digitizes): QS-Arch digitizes a *binarized* BL DP
+    /// (log2 N bits), QR-Arch a binary-weighted row (B_x + log2 N), CM
+    /// the full multi-bit DP (B_x + B_w + log2 N).
+    fn b_adc_bgc(&self, op: &OpPoint) -> u32;
+
+    /// Effective ADC bits under a criterion (MPC bound vs BGC growth).
+    fn b_adc_for(
+        &self,
+        op: &OpPoint,
+        crit: AdcCriterion,
+        w: &SignalStats,
+        x: &SignalStats,
+    ) -> u32 {
+        match crit {
+            AdcCriterion::Mpc => self.b_adc_min(op, w, x),
+            AdcCriterion::Bgc => self.b_adc_bgc(op),
+            AdcCriterion::TBgc(b) => b,
+        }
+    }
+}
+
+/// Binomial upper-tail clipping moment used by QS-Arch (appendix B):
+/// E[(K - k_h)^2 ; K >= k_h] for K ~ Bin(n, p), computed by a stable pmf
+/// recurrence with a Gaussian-tail fallback when the pmf underflows.
+pub fn binomial_clip_moment(n: usize, p: f64, k_h: f64) -> f64 {
+    if k_h >= n as f64 {
+        return 0.0;
+    }
+    let ln_p0 = n as f64 * (1.0 - p).ln();
+    if ln_p0 < -700.0 {
+        // Gaussian approximation for very large n.
+        let mu = n as f64 * p;
+        let sd = (n as f64 * p * (1.0 - p)).sqrt();
+        let z = (k_h - mu) / sd;
+        let q = crate::quant::criteria::q_func(z);
+        let phi = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+        // E[(X-c)^2; X>c] for X~N(mu, sd^2): sd^2[(1+z^2)Q(z) - z phi(z)]
+        return sd * sd * ((1.0 + z * z) * q - z * phi);
+    }
+    let mut pmf = ln_p0.exp();
+    let ratio = p / (1.0 - p);
+    let mut acc = 0.0;
+    for k in 0..=n {
+        let kf = k as f64;
+        if kf > k_h {
+            let d = kf - k_h;
+            acc += d * d * pmf;
+        }
+        pmf *= ratio * (n - k) as f64 / (k as f64 + 1.0);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_clip_moment_zero_beyond_n() {
+        assert_eq!(binomial_clip_moment(100, 0.25, 100.0), 0.0);
+    }
+
+    #[test]
+    fn binomial_clip_moment_monotone_in_kh() {
+        let a = binomial_clip_moment(512, 0.25, 100.0);
+        let b = binomial_clip_moment(512, 0.25, 140.0);
+        assert!(a > b && b >= 0.0, "{a} {b}");
+    }
+
+    #[test]
+    fn binomial_clip_moment_matches_mc() {
+        let (n, kh) = (256usize, 72.0);
+        let pred = binomial_clip_moment(n, 0.25, kh);
+        let mut rng = crate::util::rng::Pcg64::new(21);
+        let mut acc = 0.0;
+        let trials = 200_000;
+        for _ in 0..trials {
+            let mut k = 0u32;
+            for _ in 0..n {
+                if rng.uniform() < 0.25 {
+                    k += 1;
+                }
+            }
+            let d = k as f64 - kh;
+            if d > 0.0 {
+                acc += d * d;
+            }
+        }
+        let mc = acc / trials as f64;
+        assert!(
+            (mc - pred).abs() / pred.max(1e-12) < 0.15,
+            "mc={mc} pred={pred}"
+        );
+    }
+
+    #[test]
+    fn gaussian_fallback_continuous() {
+        // near the underflow switch the two methods should agree
+        let a = binomial_clip_moment(2000, 0.25, 560.0);
+        let mu = 500.0;
+        let sd = (2000.0f64 * 0.25 * 0.75).sqrt();
+        let z: f64 = (560.0 - mu) / sd;
+        let q = crate::quant::criteria::q_func(z);
+        let phi = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+        let g = sd * sd * ((1.0 + z * z) * q - z * phi);
+        // binomial tails are skewed; the Gaussian fallback is a ~20%
+        // approximation near the switch point
+        assert!((a - g).abs() / g < 0.3, "{a} {g}");
+    }
+
+    #[test]
+    fn noise_breakdown_composition() {
+        let nb = NoiseBreakdown {
+            sigma_yo2: 10.0,
+            sigma_qiy2: 0.01,
+            sigma_eta_h2: 0.04,
+            sigma_eta_e2: 0.05,
+        };
+        assert!(nb.snr_a_total_db() < nb.snr_a_db());
+        assert!(nb.snr_t_db(0.01) < nb.snr_a_total_db());
+        assert!((nb.snr_a_db() - db(10.0 / 0.09)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,166 @@
+//! Micro/throughput benchmark harness (offline build: no criterion).
+//!
+//! `cargo bench` runs `rust/benches/paper_benches.rs` (harness = false),
+//! which uses this module: warmup, adaptive iteration count targeting a
+//! wall-clock budget, median / MAD reporting, and a simple name filter
+//! from the command line.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{median_abs_dev, quantile};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mad: Duration,
+    pub mean: Duration,
+    /// Optional caller-supplied throughput denominator (items/iter).
+    pub items_per_iter: f64,
+}
+
+impl BenchReport {
+    pub fn items_per_sec(&self) -> f64 {
+        self.items_per_iter / self.median.as_secs_f64()
+    }
+
+    pub fn line(&self) -> String {
+        let thr = if self.items_per_iter > 0.0 {
+            format!("  {:>12.1} items/s", self.items_per_sec())
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<48} {:>10} iters  median {:>12?}  mad {:>10?}{}",
+            self.name, self.iters, self.median, self.mad, thr
+        )
+    }
+}
+
+/// A bench suite with a name filter (argv[1..] substrings).
+pub struct Suite {
+    cfg: BenchConfig,
+    filters: Vec<String>,
+    pub reports: Vec<BenchReport>,
+}
+
+impl Suite {
+    pub fn from_args(cfg: BenchConfig) -> Self {
+        let filters: Vec<String> = std::env::args()
+            .skip(1)
+            .filter(|a| !a.starts_with('-'))
+            .collect();
+        Self {
+            cfg,
+            filters,
+            reports: Vec::new(),
+        }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filters.is_empty() || self.filters.iter().any(|f| name.contains(f))
+    }
+
+    /// Benchmark `f`, which performs one logical iteration covering
+    /// `items` items (for throughput reporting; 0 to omit).
+    pub fn bench(&mut self, name: &str, items: f64, mut f: impl FnMut()) {
+        if !self.enabled(name) {
+            return;
+        }
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.cfg.warmup {
+            f();
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.cfg.budget || samples.len() < self.cfg.min_iters)
+            && samples.len() < self.cfg.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let median = quantile(&samples, 0.5);
+        let mad = median_abs_dev(&samples);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let report = BenchReport {
+            name: name.to_string(),
+            iters: samples.len(),
+            median: Duration::from_secs_f64(median),
+            mad: Duration::from_secs_f64(mad),
+            mean: Duration::from_secs_f64(mean),
+            items_per_iter: items,
+        };
+        println!("{}", report.line());
+        self.reports.push(report);
+    }
+}
+
+/// Opaque value sink preventing dead-code elimination of benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut suite = Suite {
+            cfg: BenchConfig {
+                warmup: Duration::from_millis(1),
+                budget: Duration::from_millis(20),
+                min_iters: 3,
+                max_iters: 1000,
+            },
+            filters: Vec::new(),
+            reports: Vec::new(),
+        };
+        let mut acc = 0u64;
+        suite.bench("spin", 1000.0, || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert_eq!(suite.reports.len(), 1);
+        let r = &suite.reports[0];
+        assert!(r.iters >= 3);
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut suite = Suite {
+            cfg: BenchConfig::default(),
+            filters: vec!["only-this".into()],
+            reports: Vec::new(),
+        };
+        suite.bench("something-else", 0.0, || {});
+        assert!(suite.reports.is_empty());
+    }
+}

@@ -1,0 +1,102 @@
+//! Hand-rolled argument parser (offline build: no clap): positional
+//! arguments plus `--flag value` / `--switch` options.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv-style input. A token `--name` followed by a non-flag
+    /// token is an option; a trailing or flag-followed `--name` is a
+    /// switch.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("figure fig9a --out-dir results --trials 500 --verbose");
+        assert_eq!(a.pos(0), Some("figure"));
+        assert_eq!(a.pos(1), Some("fig9a"));
+        assert_eq!(a.opt("out-dir"), Some("results"));
+        assert_eq!(a.opt_parse("trials", 0usize), 500);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("sweep --arch=qs --n=128");
+        assert_eq!(a.opt("arch"), Some("qs"));
+        assert_eq!(a.opt_parse("n", 0usize), 128);
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("--verbose --trials 10");
+        assert!(a.has("verbose"));
+        assert_eq!(a.opt_parse("trials", 0usize), 10);
+    }
+
+    #[test]
+    fn default_on_missing_or_garbage() {
+        let a = parse("--trials abc");
+        assert_eq!(a.opt_parse("trials", 7usize), 7);
+        assert_eq!(a.opt_parse("missing", 3.5f64), 3.5);
+    }
+}

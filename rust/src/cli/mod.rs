@@ -1,0 +1,366 @@
+//! The `imclim` command-line interface.
+//!
+//! Subcommands:
+//!   figure <name|all>    regenerate a paper figure/table (CSV + stdout)
+//!   table <t1|t2|t3>     aliases for table1/table2/table3
+//!   sweep                ad-hoc operating-point sweep on one arch
+//!   dnn                  train the Fig. 2 MLP and report accuracy/SNR
+//!   smoke                PJRT round-trip smoke test
+//!   assign               precision assignment for a target SNR (Sec. III-B)
+//!   info                 architecture/design-space summary
+
+pub mod args;
+
+use std::path::PathBuf;
+
+use crate::arch::{pvec, AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
+use crate::compute::{qr::QrModel, qs::QsModel};
+use crate::coordinator::{Backend, PjrtService};
+use crate::figures::FigCtx;
+use crate::mc::ArchKind;
+use crate::tech::TechNode;
+use crate::util::table::{fmt_db, fmt_energy, Table};
+use args::Args;
+
+const USAGE: &str = "\
+imclim — fundamental limits of in-memory computing architectures
+
+USAGE: imclim <command> [options]
+
+COMMANDS:
+  figure <name|all>   regenerate a figure/table (fig2 fig4a fig4b fig9a
+                      fig9b fig10a fig10b fig11a fig11b fig12 fig13
+                      table1 table2 table3)
+  table <1|2|3>       shorthand for table1/table2/table3
+  sweep               custom sweep: --arch qs|qr|cm --n N --bx B --bw B
+                      --b-adc B [--vwl V] [--co FF] [--node 65|45|...]
+  assign              precision assignment: --snr-a DB [--margin DB]
+  dnn                 train the Fig. 2 MLP: [--epochs E]
+  smoke               PJRT artifact round-trip check
+  info                design-space summary
+
+COMMON OPTIONS:
+  --out-dir DIR       output directory for CSVs (default: results)
+  --backend B         native | pjrt (default: native)
+  --artifacts DIR     artifact directory for pjrt (default: artifacts)
+  --trials N          MC trials per point (default: 2048)
+  --workers N         worker threads (default: all cores, max 16)
+  --verbose           progress output
+";
+
+pub fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    match args.pos(0) {
+        Some("figure") => cmd_figure(args),
+        Some("table") => cmd_table(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("assign") => cmd_assign(args),
+        Some("dnn") => cmd_dnn(args),
+        Some("smoke") => cmd_smoke(args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+/// Build the figure context (and keep the PJRT service alive with it).
+fn make_ctx(args: &Args) -> anyhow::Result<(FigCtx, Option<PjrtService>)> {
+    let out_dir: PathBuf = args.opt("out-dir").unwrap_or("results").into();
+    let trials = args.opt_parse("trials", 2048usize);
+    let workers = args.opt_parse(
+        "workers",
+        crate::coordinator::SweepOptions::default().workers,
+    );
+    let verbose = args.has("verbose");
+    let (backend, service) = match args.opt("backend").unwrap_or("native") {
+        "native" => (Backend::Native, None),
+        "pjrt" => {
+            let dir: PathBuf = args
+                .opt("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(crate::runtime::default_artifacts_dir);
+            let service = PjrtService::spawn(dir, 4);
+            (
+                Backend::Pjrt {
+                    handle: service.handle(),
+                    suffix: "",
+                },
+                Some(service),
+            )
+        }
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    Ok((
+        FigCtx {
+            backend,
+            out_dir,
+            trials,
+            workers,
+            verbose,
+        },
+        service,
+    ))
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let name = args.pos(1).unwrap_or("all");
+    let (ctx, _service) = make_ctx(args)?;
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let summaries = crate::figures::run(name, &ctx)?;
+    for s in &summaries {
+        println!(
+            "[{}] {} rows -> {}",
+            s.name,
+            s.rows,
+            ctx.csv_path(&s.name).display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> anyhow::Result<()> {
+    let t = match args.pos(1) {
+        Some("1") | Some("taxonomy") => "table1",
+        Some("2") | Some("params") => "table2",
+        Some("3") | Some("table3-check") => "table3",
+        other => anyhow::bail!("unknown table {other:?} (1, 2 or 3)"),
+    };
+    let (ctx, _service) = make_ctx(args)?;
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    crate::figures::run(t, &ctx)?;
+    Ok(())
+}
+
+fn parse_arch(args: &Args) -> anyhow::Result<(Box<dyn ImcArch>, ArchKind)> {
+    let node = TechNode::by_name(args.opt("node").unwrap_or("65"))
+        .ok_or_else(|| anyhow::anyhow!("unknown node"))?;
+    let v_wl = args.opt_parse("vwl", 0.8f64);
+    let c_ff = args.opt_parse("co", 3.0f64);
+    Ok(match args.opt("arch").unwrap_or("qs") {
+        "qs" => (
+            Box::new(QsArch::new(QsModel::new(node, v_wl))),
+            ArchKind::Qs,
+        ),
+        "qr" => (
+            Box::new(QrArch::new(QrModel::new(node, c_ff))),
+            ArchKind::Qr,
+        ),
+        "cm" => (
+            Box::new(CmArch::new(
+                QsModel::new(node, v_wl),
+                QrModel::new(node, c_ff),
+            )),
+            ArchKind::Cm,
+        ),
+        other => anyhow::bail!("unknown arch '{other}'"),
+    })
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let (arch, kind) = parse_arch(args)?;
+    let (ctx, _service) = make_ctx(args)?;
+    let op = OpPoint::new(
+        args.opt_parse("n", 128usize),
+        args.opt_parse("bx", 6u32),
+        args.opt_parse("bw", 6u32),
+        args.opt_parse("b-adc", 8u32),
+    );
+    let (w, x) = crate::figures::uniform_stats();
+
+    let nb = arch.noise(&op, &w, &x);
+    let e_mpc = arch.energy(&op, AdcCriterion::Mpc, &w, &x);
+    let point = crate::figures::sweep_point(
+        arch.as_ref(),
+        kind,
+        format!("sweep/{}", arch.name()),
+        &op,
+        ctx.trials,
+        args.opt_parse("seed", 7u64),
+    );
+    let measured = crate::coordinator::run_point(&point, &ctx.backend)?;
+
+    let mut t = Table::new(&["metric", "closed form", "simulated"])
+        .with_title(&format!("{} at N={} Bx={} Bw={} B_ADC={}",
+            arch.name(), op.n, op.bx, op.bw, op.b_adc));
+    t.row(vec![
+        "SQNR_qiy (dB)".into(),
+        fmt_db(nb.sqnr_qiy_db()),
+        fmt_db(measured.sqnr_qiy_db),
+    ]);
+    t.row(vec![
+        "SNR_a (dB)".into(),
+        fmt_db(nb.snr_a_db()),
+        fmt_db(measured.snr_a_db),
+    ]);
+    t.row(vec![
+        "SNR_A (dB)".into(),
+        fmt_db(nb.snr_a_total_db()),
+        fmt_db(measured.snr_a_total_db),
+    ]);
+    t.row(vec![
+        "SNR_T (dB)".into(),
+        "-".into(),
+        fmt_db(measured.snr_t_db),
+    ]);
+    t.row(vec![
+        "B_ADC min (MPC)".into(),
+        arch.b_adc_min(&op, &w, &x).to_string(),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "energy/DP (MPC)".into(),
+        fmt_energy(e_mpc.total()),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "delay/DP".into(),
+        format!("{:.2} ns", arch.delay(&op) * 1e9),
+        "-".into(),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_assign(args: &Args) -> anyhow::Result<()> {
+    let snr_a = args.opt_parse("snr-a", 30.0f64);
+    let margin = args.opt_parse("margin", 9.0f64);
+    let (w, x) = crate::figures::uniform_stats();
+    let a = crate::snr::assign_precisions(snr_a, margin, &w, &x);
+    println!(
+        "SNR_a = {snr_a} dB, margin = {margin} dB -> Bx = {}, Bw = {}, By(MPC) = {}; predicted SNR_T = {:.2} dB",
+        a.bx, a.bw, a.by, a.predicted_snr_t_db
+    );
+    Ok(())
+}
+
+fn cmd_dnn(args: &Args) -> anyhow::Result<()> {
+    use crate::dnn::*;
+    let epochs = args.opt_parse("epochs", 30usize);
+    let ds = Dataset::generate(&DatasetConfig::default());
+    let mut mlp = Mlp::new(&[64, 128, 64, 10], 7);
+    println!(
+        "training {}-param MLP on {} samples for {} epochs...",
+        mlp.n_params(),
+        ds.train_len(),
+        epochs
+    );
+    let curve = mlp.train(
+        &ds,
+        &TrainConfig {
+            epochs,
+            ..Default::default()
+        },
+    );
+    for (e, (loss, acc)) in curve.iter().enumerate() {
+        if e % 5 == 0 || e + 1 == curve.len() {
+            println!("epoch {e:>3}: loss {loss:.4}  test-acc {acc:.3}");
+        }
+    }
+    let grid: Vec<f64> = (-4..=48).step_by(4).map(|v| v as f64).collect();
+    let reqs = layer_snr_requirements(&mlp, &ds, &grid, 0.01, &NoisyEvalConfig::default());
+    println!("per-layer SNR_T requirements (dB): {reqs:?}");
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> anyhow::Result<()> {
+    let dir: PathBuf = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(crate::runtime::default_artifacts_dir);
+    let service = PjrtService::spawn(dir, 2);
+    let out = service.handle().smoke()?;
+    anyhow::ensure!(
+        out == vec![5.0, 5.0, 9.0, 9.0],
+        "smoke mismatch: {out:?}"
+    );
+    println!("PJRT smoke OK: {out:?}");
+
+    // one qs_arch batch through the full pipeline
+    let handle = service.handle();
+    let (m, n_max) = handle.arch_shape("qs_arch")?;
+    let mut p = [0.0f64; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = 64.0;
+    p[pvec::IDX_BX] = 6.0;
+    p[pvec::IDX_BW] = 6.0;
+    p[pvec::IDX_B_ADC] = 8.0;
+    p[pvec::QS_IDX_SIGMA_D] = 0.107;
+    p[pvec::QS_IDX_K_H] = 57.0;
+    p[pvec::QS_IDX_V_C] = 55.0;
+    let point = crate::coordinator::SweepPoint::new("smoke/qs", ArchKind::Qs, p)
+        .with_trials(m);
+    let measured = crate::coordinator::run_point(
+        &point,
+        &Backend::Pjrt {
+            handle,
+            suffix: "",
+        },
+    )?;
+    println!(
+        "qs_arch artifact ({m}x{n_max}): SNR_T = {:.2} dB over {} trials",
+        measured.snr_t_db, measured.trials
+    );
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let (w, x) = crate::figures::uniform_stats();
+    let mut t = Table::new(&[
+        "arch", "knob", "SNR_a (dB)", "B_ADC", "energy/DP", "delay",
+    ])
+    .with_title("Design space at N=128, Bx=Bw=6 (65 nm)");
+    let op = OpPoint::new(128, 6, 6, 8);
+    let archs: Vec<(Box<dyn ImcArch>, String)> = vec![
+        (
+            Box::new(QsArch::new(QsModel::new(TechNode::n65(), 0.8))),
+            "V_WL=0.8".into(),
+        ),
+        (
+            Box::new(QsArch::new(QsModel::new(TechNode::n65(), 0.6))),
+            "V_WL=0.6".into(),
+        ),
+        (
+            Box::new(QrArch::new(QrModel::new(TechNode::n65(), 1.0))),
+            "C_o=1fF".into(),
+        ),
+        (
+            Box::new(QrArch::new(QrModel::new(TechNode::n65(), 9.0))),
+            "C_o=9fF".into(),
+        ),
+        (
+            Box::new(CmArch::new(
+                QsModel::new(TechNode::n65(), 0.8),
+                QrModel::new(TechNode::n65(), 3.0),
+            )),
+            "V_WL=0.8".into(),
+        ),
+    ];
+    for (a, knob) in &archs {
+        let nb = a.noise(&op, &w, &x);
+        let e = a.energy(&op, AdcCriterion::Mpc, &w, &x);
+        t.row(vec![
+            a.name().into(),
+            knob.clone(),
+            fmt_db(nb.snr_a_db()),
+            a.b_adc_min(&op, &w, &x).to_string(),
+            fmt_energy(e.total()),
+            format!("{:.1} ns", a.delay(&op) * 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    let (qs, is, qr) = crate::taxonomy::model_counts(&crate::taxonomy::table1());
+    println!("Table I designs: {} (QS {qs}, IS {is}, QR {qr})", crate::taxonomy::table1().len());
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! The current-summing (IS) in-memory compute model (Sec. IV-A, Fig. 5(b)).
+//!
+//! IS maps w_j to cell current and sums currents on the BL, sensing the
+//! aggregate over a fixed window (XNOR-SRAM-style designs [7], [11],
+//! [13]). The paper develops QS/QR in detail and treats IS as the third
+//! member of the compute-model set; we model its dominant noise (current
+//! mismatch, identical sigma_D physics to QS) and its headroom limit
+//! (sense-amp input range), enough to place IS designs in the taxonomy
+//! and ablation studies.
+
+use crate::tech::TechNode;
+
+#[derive(Clone, Copy, Debug)]
+pub struct IsModel {
+    pub tech: TechNode,
+    pub v_wl: f64,
+    /// Sense window [s].
+    pub t_sense: f64,
+    /// Sense capacitance [F].
+    pub c_sense: f64,
+    /// Sense-amp max input swing [V].
+    pub v_swing_max: f64,
+}
+
+impl IsModel {
+    pub fn new(tech: TechNode, v_wl: f64) -> Self {
+        Self {
+            tech,
+            v_wl,
+            t_sense: 50e-12,
+            c_sense: 50e-15,
+            v_swing_max: 0.4 * tech.v_dd,
+        }
+    }
+
+    /// Normalized current mismatch (same eq. 18 physics as QS).
+    pub fn sigma_d(&self) -> f64 {
+        self.tech.sigma_d(self.v_wl)
+    }
+
+    /// Unit swing per active cell [V].
+    pub fn delta_v_unit(&self) -> f64 {
+        self.tech.cell_current(self.v_wl, 1.0) * self.t_sense / self.c_sense
+    }
+
+    /// Headroom in unit counts.
+    pub fn k_h(&self) -> f64 {
+        self.v_swing_max / self.delta_v_unit()
+    }
+
+    /// Energy per sum: full-rail sensing of n cells.
+    pub fn energy_per_op(&self, expected_counts: f64) -> f64 {
+        let ev = (expected_counts * self.delta_v_unit()).min(self.v_swing_max);
+        ev * self.tech.v_dd * self.c_sense
+    }
+
+    pub fn delay(&self) -> f64 {
+        self.t_sense
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_has_less_headroom_than_qs() {
+        // IS senses on a small cap within the sense-amp swing: its k_h is
+        // below the QS bit-line's, which is why IS designs are binary
+        // (Table I: IS rows have B_x = B_w = 1).
+        let is = IsModel::new(TechNode::n65(), 0.8);
+        let qs = crate::compute::qs::QsModel::new(TechNode::n65(), 0.8);
+        assert!(is.k_h() < qs.k_h());
+        assert!(is.k_h() > 1.0);
+    }
+
+    #[test]
+    fn shares_mismatch_physics_with_qs() {
+        let is = IsModel::new(TechNode::n65(), 0.7);
+        assert_eq!(is.sigma_d(), TechNode::n65().sigma_d(0.7));
+    }
+
+    #[test]
+    fn is_is_fast() {
+        let is = IsModel::new(TechNode::n65(), 0.8);
+        assert!(is.delay() < 100e-12);
+    }
+}

@@ -1,0 +1,7 @@
+//! The three in-memory compute models of Sec. IV-A (Fig. 5): charge
+//! summing (QS), current summing (IS) and charge redistribution (QR).
+//! Architectures in `crate::arch` compose these into full DP engines.
+
+pub mod is_model;
+pub mod qr;
+pub mod qs;

@@ -1,0 +1,143 @@
+//! The charge-redistribution (QR) in-memory compute model (Sec. IV-C):
+//! eq. (22) mapping, noise sources (eq. 24: capacitor mismatch, charge
+//! injection, thermal), energy (eq. 25) and delay models.
+
+use crate::tech::{TechNode, K_BOLTZMANN, TEMPERATURE};
+
+#[derive(Clone, Copy, Debug)]
+pub struct QrModel {
+    pub tech: TechNode,
+    /// Per-cell MOM capacitor C_o [F] (1-10 fF typical).
+    pub c_o: f64,
+    /// Switch setup energy per charge-share op [J].
+    pub e_su: f64,
+    /// Charge-share settling time [s].
+    pub t_share: f64,
+    /// Precharge time [s].
+    pub t_su: f64,
+}
+
+impl QrModel {
+    pub fn new(tech: TechNode, c_o_ff: f64) -> Self {
+        Self {
+            tech,
+            c_o: c_o_ff * 1e-15,
+            e_su: 0.2e-15,
+            t_share: 200e-12,
+            t_su: 300e-12,
+        }
+    }
+
+    pub fn c_o_ff(&self) -> f64 {
+        self.c_o * 1e15
+    }
+
+    /// Eq. (24): relative capacitor mismatch sigma_C/C = kappa / sqrt(C).
+    /// (Pelgrom law for MOM fringe caps, kappa in fF^0.5.)
+    pub fn sigma_c_rel(&self) -> f64 {
+        self.tech.kappa_ff / self.c_o_ff().sqrt()
+    }
+
+    /// Eq. (24): per-cap thermal noise sqrt(kT/C) [V].
+    pub fn sigma_theta_volts(&self) -> f64 {
+        (K_BOLTZMANN * TEMPERATURE / self.c_o).sqrt()
+    }
+
+    /// Normalized to V_dd.
+    pub fn sigma_theta_rel(&self) -> f64 {
+        self.sigma_theta_volts() / self.tech.v_dd
+    }
+
+    /// Eq. (24) charge injection v = p WL Cox (V_dd - V_t - V_j) / C_j,
+    /// linear in V_j: v = inj_a - inj_b * V_j, both normalized to V_dd.
+    pub fn inj_a_rel(&self) -> f64 {
+        self.tech.p_inj * self.tech.wl_cox * (self.tech.v_dd - self.tech.v_t)
+            / self.c_o
+            / self.tech.v_dd
+    }
+
+    pub fn inj_b_rel(&self) -> f64 {
+        self.tech.p_inj * self.tech.wl_cox / self.c_o
+    }
+
+    /// Charge-injection variance used in the Table III closed form. The
+    /// paper's footnote reads sigma_inj^2 = E[x^2] WL Cox / C_o, which is
+    /// dimensionally a first power of the cap ratio; we read it as
+    /// (p WL Cox / C_o)^2 E[x^2] — the variance of the data-dependent
+    /// injection term v_j = p WL Cox (V_dd - V_t - V_j)/C_o, whose
+    /// constant part is a calibratable offset (see EXPERIMENTS.md
+    /// §Deviations).
+    pub fn sigma_inj2(&self, ex2: f64) -> f64 {
+        let r = self.inj_b_rel();
+        r * r * ex2
+    }
+
+    /// Eq. (25): average charge-share energy over `n` caps at mean cell
+    /// voltage `mean_v` [V]: sum_j E[(V_dd - V_j)] V_dd C_j + E_su.
+    pub fn energy_share(&self, n: usize, mean_v: f64) -> f64 {
+        n as f64 * (self.tech.v_dd - mean_v).max(0.0) * self.tech.v_dd * self.c_o
+            + self.e_su
+    }
+
+    /// Table III: per-cell multiply energy E_mult = E[x(1-w)] C_o V_dd.
+    pub fn energy_mult(&self, e_x_one_minus_w: f64) -> f64 {
+        e_x_one_minus_w * self.c_o * self.tech.v_dd * self.tech.v_dd
+    }
+
+    /// Delay T_QR = T_share + T_su.
+    pub fn delay(&self) -> f64 {
+        self.t_share + self.t_su
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qr(c_ff: f64) -> QrModel {
+        QrModel::new(TechNode::n65(), c_ff)
+    }
+
+    #[test]
+    fn mismatch_follows_pelgrom() {
+        // kappa = 0.08 fF^0.5: 1 fF -> 8%, 4 fF -> 4%, 9 fF -> 2.67%.
+        assert!((qr(1.0).sigma_c_rel() - 0.08).abs() < 1e-9);
+        assert!((qr(4.0).sigma_c_rel() - 0.04).abs() < 1e-9);
+        assert!((qr(9.0).sigma_c_rel() - 0.08 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn thermal_ktc_magnitude() {
+        // kT/C at 1 fF: sqrt(4.14e-21/1e-15) ~ 2 mV.
+        let s = qr(1.0).sigma_theta_volts();
+        assert!((s - 2.03e-3).abs() < 0.1e-3, "{s}");
+        // halves for 4x the cap
+        assert!((qr(4.0).sigma_theta_volts() - s / 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn injection_shrinks_with_cap() {
+        assert!(qr(1.0).inj_a_rel() > qr(9.0).inj_a_rel());
+        let a = qr(1.0).inj_a_rel();
+        // p*WLCox*(Vdd-Vt)/Co/Vdd = 0.5*0.31*0.6 = 0.093
+        assert!((a - 0.093).abs() < 1e-3, "{a}");
+    }
+
+    #[test]
+    fn energy_scales_with_cap_and_n() {
+        let e1 = qr(1.0).energy_share(128, 0.2);
+        let e3 = qr(3.0).energy_share(128, 0.2);
+        assert!((e3 - qr(3.0).e_su) / (e1 - qr(1.0).e_su) > 2.9);
+        assert!(qr(1.0).energy_share(256, 0.2) > e1);
+    }
+
+    #[test]
+    fn noise_energy_tradeoff() {
+        // Sec. IV-C: bigger caps -> less noise, more energy.
+        let small = qr(1.0);
+        let big = qr(9.0);
+        assert!(big.sigma_c_rel() < small.sigma_c_rel());
+        assert!(big.sigma_theta_rel() < small.sigma_theta_rel());
+        assert!(big.energy_share(128, 0.2) > small.energy_share(128, 0.2));
+    }
+}

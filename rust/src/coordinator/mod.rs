@@ -1,0 +1,16 @@
+//! The L3 coordinator: experiment orchestration over the analog-core
+//! simulators.
+//!
+//! * `service` — the PJRT executor service (single-owner thread for the
+//!   !Send XLA objects, bounded-queue backpressure).
+//! * `scheduler` — sweep scheduling: job queue -> worker pool -> trial
+//!   batching -> order-independent statistical aggregation.
+//!
+//! Python never appears here: the executor consumes AOT-compiled HLO
+//! artifacts; the native Monte-Carlo backend needs nothing at all.
+
+pub mod scheduler;
+pub mod service;
+
+pub use scheduler::{run_point, run_sweep, Backend, SweepOptions, SweepPoint, SweepResult};
+pub use service::{ArchRequest, MlpRequest, MlpWeights, PjrtHandle, PjrtService};

@@ -1,0 +1,300 @@
+//! Sweep scheduler: turns a list of operating points into Monte-Carlo
+//! jobs, fans them out over a worker pool, batches trials into
+//! fixed-shape executor invocations, and aggregates ensemble statistics.
+//!
+//! Invariants (enforced by tests in rust/tests/prop_coordinator.rs):
+//!  * every submitted point produces exactly one result;
+//!  * per-point trial counts are met or exceeded (batch round-up);
+//!  * results are deterministic given (point id, seed), independent of
+//!    worker count and completion order;
+//!  * a failing point never stalls the pool (fail-fast per point).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::pvec;
+use crate::mc::{ArchKind, InputDist, McOutput, MeasuredSnr, SnrAccumulator};
+use crate::util::rng::Pcg64;
+
+use super::service::{ArchRequest, PjrtHandle};
+
+/// One sweep point: an architecture operating point to characterize with
+/// `trials` Monte-Carlo trials.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Caller-meaningful identifier (e.g. "fig9a/vwl=0.8/n=128").
+    pub id: String,
+    pub kind: ArchKind,
+    pub params: [f64; pvec::P],
+    pub trials: usize,
+    pub seed: u64,
+    pub dist: InputDist,
+}
+
+impl SweepPoint {
+    pub fn new(id: impl Into<String>, kind: ArchKind, params: [f64; pvec::P]) -> Self {
+        Self {
+            id: id.into(),
+            kind,
+            params,
+            trials: 1024,
+            seed: 0xC0FFEE,
+            dist: InputDist::Uniform,
+        }
+    }
+
+    pub fn with_trials(mut self, trials: usize) -> Self {
+        self.trials = trials;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub id: String,
+    pub index: usize,
+    pub measured: MeasuredSnr,
+    pub error: Option<String>,
+}
+
+/// Execution backend for the analog-core simulation.
+#[derive(Clone)]
+pub enum Backend {
+    /// Native Rust Monte-Carlo (always available).
+    Native,
+    /// AOT JAX/Pallas artifacts through the PJRT executor service. The
+    /// artifact name is derived from the point's `ArchKind`, with an
+    /// optional suffix (e.g. "_small" for test artifacts).
+    Pjrt {
+        handle: PjrtHandle,
+        suffix: &'static str,
+    },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    pub workers: usize,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        Self {
+            workers,
+            verbose: false,
+        }
+    }
+}
+
+/// Run all points; the returned vector is ordered like the input.
+pub fn run_sweep(
+    points: Vec<SweepPoint>,
+    backend: Backend,
+    opts: SweepOptions,
+) -> Vec<SweepResult> {
+    let n_points = points.len();
+    let queue: Arc<Mutex<VecDeque<(usize, SweepPoint)>>> =
+        Arc::new(Mutex::new(points.into_iter().enumerate().collect()));
+    let results: Arc<Mutex<Vec<Option<SweepResult>>>> =
+        Arc::new(Mutex::new(vec![None; n_points]));
+    let done = Arc::new(AtomicUsize::new(0));
+
+    let workers = opts.workers.max(1).min(n_points.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = queue.clone();
+            let results = results.clone();
+            let backend = backend.clone();
+            let done = done.clone();
+            scope.spawn(move || loop {
+                let job = queue.lock().unwrap().pop_front();
+                let Some((index, point)) = job else { break };
+                let res = run_point(&point, &backend);
+                let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if opts.verbose {
+                    eprintln!(
+                        "[{finished}/{n_points}] {} snr_t={:.2} dB",
+                        point.id,
+                        res.as_ref().map(|m| m.snr_t_db).unwrap_or(f64::NAN)
+                    );
+                }
+                let result = match res {
+                    Ok(measured) => SweepResult {
+                        id: point.id.clone(),
+                        index,
+                        measured,
+                        error: None,
+                    },
+                    Err(e) => SweepResult {
+                        id: point.id.clone(),
+                        index,
+                        measured: MeasuredSnr::default(),
+                        error: Some(e.to_string()),
+                    },
+                };
+                results.lock().unwrap()[index] = Some(result);
+            });
+        }
+    });
+
+    Arc::try_unwrap(results)
+        .expect("workers joined")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every point produces a result"))
+        .collect()
+}
+
+/// Execute one point to completion on the chosen backend.
+pub fn run_point(point: &SweepPoint, backend: &Backend) -> anyhow::Result<MeasuredSnr> {
+    match backend {
+        Backend::Native => {
+            let out = crate::mc::simulate(
+                point.kind,
+                &point.params,
+                point.trials,
+                point.seed,
+                point.dist,
+            );
+            Ok(crate::mc::measure(&out))
+        }
+        Backend::Pjrt { handle, suffix } => {
+            // QS correlated-mismatch mode is a separate (heavier) artifact
+            let corr = point.kind == ArchKind::Qs
+                && point.params[pvec::QS_IDX_MODE] >= 0.5;
+            let artifact = if corr {
+                format!("{}_corr{}", point.kind.artifact_name(), suffix)
+            } else {
+                format!("{}{}", point.kind.artifact_name(), suffix)
+            };
+            let (m, n_max) = handle.arch_shape(&artifact)?;
+            let n = point.params[pvec::IDX_N_ACTIVE] as usize;
+            anyhow::ensure!(
+                n <= n_max,
+                "point {} wants N={n} > artifact n_max={n_max}",
+                point.id
+            );
+            let batches = point.trials.div_ceil(m);
+            let mut acc = SnrAccumulator::new();
+            let mut rng = Pcg64::new(point.seed);
+            let mut x = vec![0f32; m * n_max];
+            let mut w = vec![0f32; m * n_max];
+            for b in 0..batches {
+                fill_inputs(&mut x, &mut w, n, n_max, &point.dist, &mut rng);
+                let seed = [(point.seed % 0x7fff_ffff) as f32, b as f32];
+                let out: McOutput = handle.run_arch(ArchRequest {
+                    artifact: artifact.clone(),
+                    x: x.clone(),
+                    w: w.clone(),
+                    seed,
+                    params: point.params,
+                })?;
+                acc.push_chunk(&out);
+            }
+            Ok(acc.finalize())
+        }
+    }
+}
+
+/// Fill the fixed-shape input buffers: active lanes get fresh draws,
+/// inactive lanes are zeroed (the artifact masks them anyway).
+fn fill_inputs(
+    x: &mut [f32],
+    w: &mut [f32],
+    n: usize,
+    n_max: usize,
+    dist: &InputDist,
+    rng: &mut Pcg64,
+) {
+    let m = x.len() / n_max;
+    for t in 0..m {
+        let row = t * n_max;
+        for k in 0..n_max {
+            if k < n {
+                x[row + k] = draw_x(dist, rng) as f32;
+                w[row + k] = draw_w(dist, rng) as f32;
+            } else {
+                x[row + k] = 0.0;
+                w[row + k] = 0.0;
+            }
+        }
+    }
+}
+
+fn draw_x(dist: &InputDist, rng: &mut Pcg64) -> f64 {
+    match dist {
+        InputDist::Uniform => rng.uniform(),
+        InputDist::ClippedGaussian { sx, .. } => (rng.normal().abs() * sx).min(0.999_999),
+    }
+}
+
+fn draw_w(dist: &InputDist, rng: &mut Pcg64) -> f64 {
+    match dist {
+        InputDist::Uniform => rng.uniform_in(-1.0, 1.0),
+        InputDist::ClippedGaussian { sw, .. } => {
+            (rng.normal() * sw).clamp(-0.999_999, 0.999_999)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::pvec;
+
+    fn qs_point(id: &str, n: usize, seed: u64) -> SweepPoint {
+        let mut p = [0.0; pvec::P];
+        p[pvec::IDX_N_ACTIVE] = n as f64;
+        p[pvec::IDX_BX] = 6.0;
+        p[pvec::IDX_BW] = 6.0;
+        p[pvec::IDX_B_ADC] = 8.0;
+        p[pvec::QS_IDX_SIGMA_D] = 0.1;
+        p[pvec::QS_IDX_K_H] = 60.0;
+        p[pvec::QS_IDX_V_C] = 60.0;
+        SweepPoint::new(id, ArchKind::Qs, p)
+            .with_trials(256)
+            .with_seed(seed)
+    }
+
+    #[test]
+    fn native_sweep_returns_every_point_in_order() {
+        let points: Vec<SweepPoint> =
+            (0..10).map(|i| qs_point(&format!("p{i}"), 32 + i, i as u64)).collect();
+        let res = run_sweep(points, Backend::Native, SweepOptions { workers: 4, verbose: false });
+        assert_eq!(res.len(), 10);
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.id, format!("p{i}"));
+            assert!(r.error.is_none());
+            assert_eq!(r.measured.trials, 256);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let mk = || (0..6).map(|i| qs_point(&format!("p{i}"), 64, 7)).collect::<Vec<_>>();
+        let a = run_sweep(mk(), Backend::Native, SweepOptions { workers: 1, verbose: false });
+        let b = run_sweep(mk(), Backend::Native, SweepOptions { workers: 8, verbose: false });
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.measured.snr_t_db, y.measured.snr_t_db);
+        }
+    }
+
+    #[test]
+    fn empty_sweep_is_fine() {
+        let res = run_sweep(Vec::new(), Backend::Native, SweepOptions::default());
+        assert!(res.is_empty());
+    }
+}

@@ -1,0 +1,173 @@
+//! The PJRT executor service: one dedicated thread owning the (!Send)
+//! PJRT client and compiled executables, fed by a bounded request channel
+//! (backpressure: producers block when the executor falls behind).
+//!
+//! This is the serving-style split the three-layer architecture calls
+//! for: worker threads generate workloads and aggregate statistics; all
+//! XLA execution funnels through this single-owner service.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::pvec;
+use crate::mc::McOutput;
+use crate::runtime::Runtime;
+
+pub struct ArchRequest {
+    pub artifact: String,
+    pub x: Vec<f32>,
+    pub w: Vec<f32>,
+    pub seed: [f32; 2],
+    pub params: [f64; pvec::P],
+}
+
+#[allow(clippy::large_enum_variant)]
+pub struct MlpRequest {
+    pub x: Vec<f32>,
+    pub weights: MlpWeights,
+    pub seed: [f32; 2],
+    pub sigmas: [f32; 3],
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MlpWeights {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub b3: Vec<f32>,
+}
+
+enum Msg {
+    Arch(ArchRequest, SyncSender<Result<McOutput>>),
+    Mlp(MlpRequest, SyncSender<Result<Vec<f32>>>),
+    Smoke(SyncSender<Result<Vec<f32>>>),
+    /// (artifact) -> (m, n_max)
+    Shape(String, SyncSender<Result<(usize, usize)>>),
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the executor thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: SyncSender<Msg>,
+}
+
+impl PjrtHandle {
+    pub fn run_arch(&self, req: ArchRequest) -> Result<McOutput> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Msg::Arch(req, rtx))
+            .map_err(|_| anyhow!("PJRT service stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+
+    pub fn run_mlp(&self, req: MlpRequest) -> Result<Vec<f32>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Msg::Mlp(req, rtx))
+            .map_err(|_| anyhow!("PJRT service stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+
+    pub fn smoke(&self) -> Result<Vec<f32>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Msg::Smoke(rtx))
+            .map_err(|_| anyhow!("PJRT service stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+
+    /// Static (m_trials, n_max) shape of an arch artifact.
+    pub fn arch_shape(&self, artifact: &str) -> Result<(usize, usize)> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Msg::Shape(artifact.to_string(), rtx))
+            .map_err(|_| anyhow!("PJRT service stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+}
+
+/// The running service; dropping it shuts the executor thread down.
+pub struct PjrtService {
+    handle: Option<JoinHandle<()>>,
+    tx: SyncSender<Msg>,
+}
+
+impl PjrtService {
+    /// Spawn the executor thread. `queue_depth` bounds in-flight requests
+    /// (backpressure); startup errors (missing artifacts) surface on the
+    /// first request.
+    pub fn spawn(artifacts_dir: PathBuf, queue_depth: usize) -> Self {
+        let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(queue_depth);
+        let handle = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_loop(artifacts_dir, rx))
+            .expect("spawn pjrt executor");
+        Self {
+            handle: Some(handle),
+            tx,
+        }
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        PjrtHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(dir: PathBuf, rx: Receiver<Msg>) {
+    let runtime = Runtime::new(&dir);
+    for msg in rx {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Arch(req, reply) => {
+                let res = runtime.as_ref().map_err(clone_err).and_then(|rt| {
+                    let exe = rt.arch(&req.artifact)?;
+                    exe.run(&req.x, &req.w, req.seed, &req.params)
+                });
+                let _ = reply.send(res);
+            }
+            Msg::Mlp(req, reply) => {
+                let res = runtime.as_ref().map_err(clone_err).and_then(|rt| {
+                    let exe = rt.mlp()?;
+                    let w = &req.weights;
+                    exe.run(
+                        &req.x, &w.w1, &w.b1, &w.w2, &w.b2, &w.w3, &w.b3, req.seed,
+                        req.sigmas,
+                    )
+                });
+                let _ = reply.send(res);
+            }
+            Msg::Smoke(reply) => {
+                let res = runtime.as_ref().map_err(clone_err).and_then(|rt| rt.smoke());
+                let _ = reply.send(res);
+            }
+            Msg::Shape(name, reply) => {
+                let res = runtime.as_ref().map_err(clone_err).and_then(|rt| {
+                    let exe = rt.arch(&name)?;
+                    Ok((exe.m, exe.n_max))
+                });
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn clone_err(e: &anyhow::Error) -> anyhow::Error {
+    anyhow!("PJRT runtime init failed: {e}")
+}

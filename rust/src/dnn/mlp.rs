@@ -1,0 +1,310 @@
+//! Minimal MLP with softmax-cross-entropy SGD training, built from
+//! scratch (offline build: no ML crates). Layer shapes match the AOT
+//! `mlp_fwd` artifact: 64 -> 128 -> 64 -> 10 by default.
+
+use crate::util::rng::Pcg64;
+
+use super::Dataset;
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// [d0, d1, d2, d3]
+    pub dims: Vec<usize>,
+    /// Row-major [out, in] per layer.
+    pub w: Vec<Vec<f32>>,
+    pub b: Vec<Vec<f32>>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 30,
+            batch: 64,
+            lr: 0.08,
+            momentum: 0.9,
+            seed: 7,
+        }
+    }
+}
+
+impl Mlp {
+    pub fn new(dims: &[usize], seed: u64) -> Self {
+        assert!(dims.len() >= 2);
+        let mut rng = Pcg64::new(seed);
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        for l in 0..dims.len() - 1 {
+            let (fan_in, fan_out) = (dims[l], dims[l + 1]);
+            let scale = (2.0 / fan_in as f64).sqrt();
+            w.push(
+                (0..fan_in * fan_out)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect(),
+            );
+            b.push(vec![0.0; fan_out]);
+        }
+        Self {
+            dims: dims.to_vec(),
+            w,
+            b,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.iter().map(Vec::len).sum::<usize>() + self.b.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Forward one sample; returns all layer activations (post-ReLU,
+    /// logits last). `noise[l]` (if given) is added to layer l's
+    /// pre-activation DP outputs — the eq. (6) output-referred injection.
+    pub fn forward_noisy(
+        &self,
+        x: &[f32],
+        noise_sigma: &[f32],
+        rng: &mut Pcg64,
+    ) -> Vec<Vec<f32>> {
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        for l in 0..self.n_layers() {
+            let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
+            let inp = &acts[l];
+            let mut out = vec![0.0f32; fan_out];
+            let sigma = noise_sigma.get(l).copied().unwrap_or(0.0);
+            for o in 0..fan_out {
+                let row = &self.w[l][o * fan_in..(o + 1) * fan_in];
+                let mut acc = self.b[l][o];
+                for (wi, xi) in row.iter().zip(inp.iter()) {
+                    acc += wi * xi;
+                }
+                if sigma > 0.0 {
+                    acc += sigma * rng.normal() as f32;
+                }
+                if l + 1 < self.n_layers() + 1 && l != self.n_layers() - 1 {
+                    acc = acc.max(0.0); // ReLU on hidden layers
+                }
+                out[o] = acc;
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut rng = Pcg64::new(0);
+        self.forward_noisy(x, &[], &mut rng).pop().unwrap()
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        argmax(&self.forward(x))
+    }
+
+    pub fn accuracy(&self, ds: &Dataset, test: bool) -> f64 {
+        let count = if test { ds.test_len() } else { ds.train_len() };
+        let mut correct = 0usize;
+        for i in 0..count {
+            let (x, y) = if test {
+                ds.test_sample(i)
+            } else {
+                ds.train_sample(i)
+            };
+            if self.predict(x) == y as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / count as f64
+    }
+
+    /// SGD with momentum on softmax cross-entropy. Returns per-epoch
+    /// (train-loss, test-accuracy) pairs — the logged learning curve.
+    pub fn train(&mut self, ds: &Dataset, cfg: &TrainConfig) -> Vec<(f64, f64)> {
+        let mut rng = Pcg64::new(cfg.seed);
+        let mut vel_w: Vec<Vec<f32>> = self.w.iter().map(|w| vec![0.0; w.len()]).collect();
+        let mut vel_b: Vec<Vec<f32>> = self.b.iter().map(|b| vec![0.0; b.len()]).collect();
+        let n = ds.train_len();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut curve = Vec::new();
+
+        for _epoch in 0..cfg.epochs {
+            // Fisher-Yates shuffle
+            for i in (1..n).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                order.swap(i, j);
+            }
+            let mut loss_sum = 0.0f64;
+            for chunk in order.chunks(cfg.batch) {
+                let mut gw: Vec<Vec<f32>> =
+                    self.w.iter().map(|w| vec![0.0; w.len()]).collect();
+                let mut gb: Vec<Vec<f32>> =
+                    self.b.iter().map(|b| vec![0.0; b.len()]).collect();
+                for &idx in chunk {
+                    let (x, y) = ds.train_sample(idx);
+                    loss_sum += self.backprop(x, y as usize, &mut gw, &mut gb);
+                }
+                let scale = cfg.lr / chunk.len() as f32;
+                for l in 0..self.n_layers() {
+                    for (v, g) in vel_w[l].iter_mut().zip(&gw[l]) {
+                        *v = cfg.momentum * *v - scale * g;
+                    }
+                    for (wv, v) in self.w[l].iter_mut().zip(&vel_w[l]) {
+                        *wv += v;
+                    }
+                    for (v, g) in vel_b[l].iter_mut().zip(&gb[l]) {
+                        *v = cfg.momentum * *v - scale * g;
+                    }
+                    for (bv, v) in self.b[l].iter_mut().zip(&vel_b[l]) {
+                        *bv += v;
+                    }
+                }
+            }
+            curve.push((loss_sum / n as f64, self.accuracy(ds, true)));
+        }
+        curve
+    }
+
+    /// Accumulate gradients for one sample; returns its CE loss.
+    fn backprop(
+        &self,
+        x: &[f32],
+        y: usize,
+        gw: &mut [Vec<f32>],
+        gb: &mut [Vec<f32>],
+    ) -> f64 {
+        let mut rng = Pcg64::new(0);
+        let acts = self.forward_noisy(x, &[], &mut rng);
+        let logits = acts.last().unwrap();
+        let probs = softmax(logits);
+        let loss = -(probs[y].max(1e-12) as f64).ln();
+
+        // delta at output
+        let mut delta: Vec<f32> = probs.clone();
+        delta[y] -= 1.0;
+
+        for l in (0..self.n_layers()).rev() {
+            let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
+            let inp = &acts[l];
+            for o in 0..fan_out {
+                let d = delta[o];
+                gb[l][o] += d;
+                let row = &mut gw[l][o * fan_in..(o + 1) * fan_in];
+                for (g, xi) in row.iter_mut().zip(inp.iter()) {
+                    *g += d * xi;
+                }
+            }
+            if l > 0 {
+                let mut prev = vec![0.0f32; fan_in];
+                for o in 0..fan_out {
+                    let d = delta[o];
+                    let row = &self.w[l][o * fan_in..(o + 1) * fan_in];
+                    for (p, wi) in prev.iter_mut().zip(row.iter()) {
+                        *p += d * wi;
+                    }
+                }
+                // ReLU gradient
+                for (p, a) in prev.iter_mut().zip(acts[l].iter()) {
+                    if *a <= 0.0 {
+                        *p = 0.0;
+                    }
+                }
+                delta = prev;
+            }
+        }
+        loss
+    }
+}
+
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::DatasetConfig;
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn training_learns_the_task() {
+        let ds = Dataset::generate(&DatasetConfig {
+            train: 1500,
+            test: 500,
+            ..Default::default()
+        });
+        let mut mlp = Mlp::new(&[64, 64, 10], 3);
+        let before = mlp.accuracy(&ds, true);
+        let curve = mlp.train(
+            &ds,
+            &TrainConfig {
+                epochs: 25,
+                lr: 0.15,
+                ..Default::default()
+            },
+        );
+        let after = mlp.accuracy(&ds, true);
+        assert!(after > 0.80, "accuracy {before} -> {after}, curve {curve:?}");
+        // loss decreases
+        assert!(curve.last().unwrap().0 < curve[0].0);
+    }
+
+    #[test]
+    fn param_count() {
+        let mlp = Mlp::new(&[64, 128, 64, 10], 1);
+        assert_eq!(
+            mlp.n_params(),
+            64 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10
+        );
+    }
+
+    #[test]
+    fn noise_degrades_predictions() {
+        let ds = Dataset::generate(&DatasetConfig {
+            train: 800,
+            test: 300,
+            ..Default::default()
+        });
+        let mut mlp = Mlp::new(&[64, 32, 10], 3);
+        mlp.train(
+            &ds,
+            &TrainConfig {
+                epochs: 6,
+                ..Default::default()
+            },
+        );
+        let mut rng = Pcg64::new(11);
+        let (x, _) = ds.test_sample(0);
+        let clean = mlp.forward(x);
+        let noisy = mlp
+            .forward_noisy(x, &[50.0, 50.0], &mut rng)
+            .pop()
+            .unwrap();
+        assert_ne!(clean, noisy);
+    }
+}

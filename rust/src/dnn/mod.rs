@@ -1,0 +1,19 @@
+//! Fixed-point DNN substrate for the Fig. 2 experiment: per-layer SNR_T
+//! requirements of DP computations in a network deployed on an IMC.
+//!
+//! Substitution (DESIGN.md §1): the paper measures VGG-16 on ImageNet; we
+//! train a small MLP on a synthetic multi-class dataset and apply the
+//! identical mechanism — output-referred Gaussian noise injected at each
+//! layer's DP outputs (lumping q_iy + eta_a + q_y of eq. 6), sweeping the
+//! per-layer SNR_T and reporting the level at which accuracy stays within
+//! 1% of the floating-point baseline.
+
+pub mod dataset;
+pub mod mlp;
+pub mod noisy;
+
+pub use dataset::{Dataset, DatasetConfig};
+pub use mlp::{Mlp, TrainConfig};
+pub use noisy::{
+    layer_signal_stds, layer_snr_requirements, noisy_accuracy, NoisyEvalConfig,
+};

@@ -1,0 +1,163 @@
+//! Per-layer noise injection and the Fig. 2 measurement: the minimum
+//! per-layer SNR_T at which fixed-point/IMC inference stays within 1% of
+//! the floating-point baseline.
+
+use crate::util::rng::Pcg64;
+use crate::util::stats::Welford;
+
+use super::{Dataset, Mlp};
+
+#[derive(Clone, Copy, Debug)]
+pub struct NoisyEvalConfig {
+    /// Monte-Carlo repeats over the test set per SNR point.
+    pub repeats: usize,
+    pub seed: u64,
+}
+
+impl Default for NoisyEvalConfig {
+    fn default() -> Self {
+        Self {
+            repeats: 3,
+            seed: 99,
+        }
+    }
+}
+
+/// Per-layer DP-output standard deviations on clean data — the signal
+/// power against which an SNR_T target is converted into a noise sigma.
+pub fn layer_signal_stds(mlp: &Mlp, ds: &Dataset, samples: usize) -> Vec<f64> {
+    let mut stats: Vec<Welford> = (0..mlp.n_layers()).map(|_| Welford::new()).collect();
+    let mut rng = Pcg64::new(1);
+    let count = samples.min(ds.test_len());
+    for i in 0..count {
+        let (x, _) = ds.test_sample(i);
+        let acts = mlp.forward_noisy(x, &[], &mut rng);
+        for l in 0..mlp.n_layers() {
+            for &a in &acts[l + 1] {
+                stats[l].push(a as f64);
+            }
+        }
+    }
+    stats.iter().map(|w| w.std().max(1e-9)).collect()
+}
+
+/// Test accuracy with per-layer noise at the given SNR_T targets (dB);
+/// `f64::INFINITY` means a clean layer.
+pub fn noisy_accuracy(
+    mlp: &Mlp,
+    ds: &Dataset,
+    snr_t_db: &[f64],
+    cfg: &NoisyEvalConfig,
+) -> f64 {
+    let stds = layer_signal_stds(mlp, ds, 256);
+    let sigmas: Vec<f32> = snr_t_db
+        .iter()
+        .zip(&stds)
+        .map(|(&snr, &sd)| {
+            if snr.is_infinite() {
+                0.0
+            } else {
+                (sd / 10f64.powf(snr / 20.0)) as f32
+            }
+        })
+        .collect();
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut correct = 0usize;
+    let total = ds.test_len() * cfg.repeats;
+    for _ in 0..cfg.repeats {
+        for i in 0..ds.test_len() {
+            let (x, y) = ds.test_sample(i);
+            let logits = mlp.forward_noisy(x, &sigmas, &mut rng).pop().unwrap();
+            if super::mlp::argmax(&logits) == y as usize {
+                correct += 1;
+            }
+        }
+    }
+    correct as f64 / total as f64
+}
+
+/// Fig. 2: for each layer, the minimum SNR_T (dB) at which accuracy is
+/// within `tolerance` (absolute, e.g. 0.01) of the clean baseline, other
+/// layers kept clean. Swept over `grid` (ascending dB).
+pub fn layer_snr_requirements(
+    mlp: &Mlp,
+    ds: &Dataset,
+    grid: &[f64],
+    tolerance: f64,
+    cfg: &NoisyEvalConfig,
+) -> Vec<f64> {
+    let clean = mlp.accuracy(ds, true);
+    (0..mlp.n_layers())
+        .map(|l| {
+            for &snr in grid {
+                let mut targets = vec![f64::INFINITY; mlp.n_layers()];
+                targets[l] = snr;
+                let acc = noisy_accuracy(mlp, ds, &targets, cfg);
+                if clean - acc <= tolerance {
+                    return snr;
+                }
+            }
+            *grid.last().unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{DatasetConfig, TrainConfig};
+
+    fn trained() -> (Mlp, Dataset) {
+        let ds = Dataset::generate(&DatasetConfig {
+            train: 1200,
+            test: 400,
+            ..Default::default()
+        });
+        let mut mlp = Mlp::new(&[64, 32, 10], 5);
+        mlp.train(
+            &ds,
+            &TrainConfig {
+                epochs: 6,
+                ..Default::default()
+            },
+        );
+        (mlp, ds)
+    }
+
+    #[test]
+    fn high_snr_preserves_accuracy_low_snr_destroys_it() {
+        let (mlp, ds) = trained();
+        let clean = mlp.accuracy(&ds, true);
+        let cfg = NoisyEvalConfig::default();
+        let hi = noisy_accuracy(&mlp, &ds, &[40.0, 40.0], &cfg);
+        let lo = noisy_accuracy(&mlp, &ds, &[-5.0, -5.0], &cfg);
+        assert!(clean - hi < 0.02, "clean={clean} hi={hi}");
+        assert!(clean - lo > 0.15, "clean={clean} lo={lo}");
+    }
+
+    #[test]
+    fn requirements_fall_in_papers_band() {
+        // Fig. 2: SNR_T* in the ~10-40 dB band.
+        let (mlp, ds) = trained();
+        let grid: Vec<f64> = (0..=40).step_by(4).map(|v| v as f64).collect();
+        let reqs = layer_snr_requirements(
+            &mlp,
+            &ds,
+            &grid,
+            0.01,
+            &NoisyEvalConfig::default(),
+        );
+        assert_eq!(reqs.len(), 2);
+        for r in &reqs {
+            assert!((0.0..=40.0).contains(r), "{reqs:?}");
+        }
+    }
+
+    #[test]
+    fn signal_stds_positive() {
+        let (mlp, ds) = trained();
+        for s in layer_signal_stds(&mlp, &ds, 64) {
+            assert!(s > 0.0);
+        }
+    }
+}

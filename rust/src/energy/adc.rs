@@ -1,0 +1,72 @@
+//! Column-ADC energy model (Sec. V-C, eq. 26), after Murmann [48]:
+//!
+//!   E_ADC = k1 (B + log2(V_dd/V_c)) + k2 (V_dd/V_c)^2 4^B
+//!
+//! with k1 = 100 fJ (logic/offset term) and k2 = 1 aJ (noise-limited
+//! term); V_c is the quantized voltage range at the ADC input.
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdcEnergyModel {
+    pub k1: f64,
+    pub k2: f64,
+    pub v_dd: f64,
+}
+
+impl AdcEnergyModel {
+    pub fn paper(v_dd: f64) -> Self {
+        Self {
+            k1: 100e-15,
+            k2: 1e-18,
+            v_dd,
+        }
+    }
+
+    /// Eq. (26). `v_c` is clamped to V_dd (a range above the rail is
+    /// realized by attenuation, not by a wider ADC).
+    pub fn energy(&self, b_adc: u32, v_c: f64) -> f64 {
+        let ratio = self.v_dd / v_c.min(self.v_dd).max(1e-6);
+        self.k1 * (b_adc as f64 + ratio.log2().max(0.0))
+            + self.k2 * ratio * ratio * 4f64.powi(b_adc as i32)
+    }
+
+    /// SAR-style conversion latency: one comparison per bit.
+    pub fn delay(&self, b_adc: u32, t_comp: f64) -> f64 {
+        b_adc as f64 * t_comp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> AdcEnergyModel {
+        AdcEnergyModel::paper(1.0)
+    }
+
+    #[test]
+    fn magnitude_sub_pj_at_8b() {
+        let e = m().energy(8, 1.0);
+        assert!(e > 0.5e-12 && e < 2e-12, "{e}");
+    }
+
+    #[test]
+    fn exponential_term_dominates_at_high_bits() {
+        // 4^B term: +2 bits multiplies the noise-limited part by 16.
+        let e12 = m().energy(12, 1.0);
+        let e14 = m().energy(14, 1.0);
+        assert!(e14 / e12 > 8.0, "{}", e14 / e12);
+    }
+
+    #[test]
+    fn small_range_costs_energy() {
+        // Quantizing a smaller V_c at fixed B needs a lower noise floor.
+        assert!(m().energy(8, 0.1) > m().energy(8, 0.9));
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        for b in 1..15 {
+            assert!(m().energy(b + 1, 0.5) > m().energy(b, 0.5));
+        }
+    }
+}

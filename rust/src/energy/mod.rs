@@ -1,0 +1,25 @@
+//! Energy models: the ADC model of eq. (26) plus shared helpers. The
+//! per-architecture DP energy expressions (Table III row "Energy cost per
+//! DP") live with their architectures in `crate::arch`.
+
+pub mod adc;
+
+/// Energy-delay product helper.
+pub fn edp(energy_j: f64, delay_s: f64) -> f64 {
+    energy_j * delay_s
+}
+
+/// Energy efficiency in TOPS/W for `ops` operations at `energy_j` joules.
+pub fn tops_per_watt(ops: f64, energy_j: f64) -> f64 {
+    ops / energy_j / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tops_per_watt_sane() {
+        // 2N ops per DP, N=512, at 5 pJ -> ~0.2 TOPS/W per... sanity only.
+        let t = super::tops_per_watt(1024.0, 5e-12);
+        assert!(t > 100.0 && t < 1000.0, "{t}");
+    }
+}

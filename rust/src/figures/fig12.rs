@@ -1,0 +1,79 @@
+//! Fig. 12: column-ADC energy vs N under MPC vs BGC for the three
+//! architectures (Bx = Bw = 6; V_WL = 0.7 V for QS-Arch, 0.8 V for CM,
+//! C_o = 3 fF for QR-Arch).
+//!
+//! Expected shapes (Sec. V-C): QS-Arch E_ADC constant (BGC) / falling
+//! (MPC) with N; QR-Arch and CM E_ADC ~ N^2 under BGC vs ~ N under MPC.
+
+use super::{uniform_stats, FigCtx, FigSummary};
+use crate::arch::{AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
+use crate::compute::{qr::QrModel, qs::QsModel};
+use crate::tech::TechNode;
+use crate::util::csv::CsvWriter;
+
+pub const NS: [usize; 6] = [16, 32, 64, 128, 256, 512];
+
+pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
+    let (w, x) = uniform_stats();
+    let archs: Vec<(&str, Box<dyn ImcArch>)> = vec![
+        (
+            "qs",
+            Box::new(QsArch::new(QsModel::new(TechNode::n65(), 0.7))),
+        ),
+        (
+            "qr",
+            Box::new(QrArch::new(QrModel::new(TechNode::n65(), 3.0))),
+        ),
+        (
+            "cm",
+            Box::new(CmArch::new(
+                QsModel::new(TechNode::n65(), 0.8),
+                QrModel::new(TechNode::n65(), 3.0),
+            )),
+        ),
+    ];
+
+    let mut csv = CsvWriter::new(&[
+        "arch", "n", "crit", "b_adc", "e_adc_j", "e_total_j",
+    ]);
+    let mut checks = Vec::new();
+    for (name, arch) in &archs {
+        let mut ratios = Vec::new();
+        for &n in &NS {
+            let op = OpPoint::new(n, 6, 6, 8);
+            for (crit, label) in [(AdcCriterion::Mpc, "mpc"), (AdcCriterion::Bgc, "bgc")] {
+                let b = arch.b_adc_for(&op, crit, &w, &x);
+                let e = arch.energy(&op, crit, &w, &x);
+                csv.row(&[
+                    name.to_string(),
+                    n.to_string(),
+                    label.to_string(),
+                    b.to_string(),
+                    format!("{:.6e}", e.adc),
+                    format!("{:.6e}", e.total()),
+                ]);
+                if label == "mpc" {
+                    ratios.push(e.adc);
+                }
+            }
+        }
+        // growth of MPC ADC energy from smallest to largest N
+        let growth = ratios.last().unwrap() / ratios.first().unwrap();
+        checks.push((format!("{name}_mpc_growth"), growth));
+        // BGC/MPC energy ratio at the largest N
+        let op = OpPoint::new(*NS.last().unwrap(), 6, 6, 8);
+        let bgc = arch.energy(&op, AdcCriterion::Bgc, &w, &x).adc;
+        let mpc = arch.energy(&op, AdcCriterion::Mpc, &w, &x).adc;
+        checks.push((format!("{name}_bgc_over_mpc"), bgc / mpc));
+        println!(
+            "Fig. 12 [{name}]: MPC E_ADC growth (N 16->512) = {growth:.2}x; BGC/MPC at N=512 = {:.1}x",
+            bgc / mpc
+        );
+    }
+    csv.write_to(&ctx.csv_path("fig12"))?;
+    Ok(FigSummary {
+        name: "fig12".into(),
+        rows: NS.len() * archs.len() * 2,
+        checks,
+    })
+}

@@ -1,0 +1,96 @@
+//! Fig. 13: impact of technology scaling on the compute-SNR vs energy
+//! trade-off (Bx = 3, Bw = 4, N = 100), nodes 65 nm -> 7 nm.
+//! Swept knob: V_WL for QS-Arch and CM, C_o for QR-Arch.
+//!
+//! Expected shapes (Sec. V-D): per node, energy drops ~2x (QS/CM) or ~4x
+//! (QR) per 6 dB of SNR_A given up; the maximum achievable SNR_A of
+//! QS-Arch/CM *decreases* with scaling, while QR-Arch approaches the
+//! input-quantization limit at every node.
+
+use super::{uniform_stats, FigCtx, FigSummary};
+use crate::arch::{AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
+use crate::compute::{qr::QrModel, qs::QsModel};
+use crate::tech::TechNode;
+use crate::util::csv::CsvWriter;
+
+pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
+    let (w, x) = uniform_stats();
+    let op = OpPoint::new(100, 3, 4, 8);
+    let nodes = TechNode::scaling_set();
+
+    let mut csv = CsvWriter::new(&[
+        "arch", "node_nm", "knob", "snr_a_db", "energy_j",
+    ]);
+    let mut checks = Vec::new();
+
+    for node in &nodes {
+        // QS-Arch and CM: sweep V_WL across the usable overdrive range.
+        let v_min = node.v_t + 0.12;
+        let v_max = node.v_dd;
+        let v_steps: Vec<f64> = (0..10)
+            .map(|i| v_min + (v_max - v_min) * i as f64 / 9.0)
+            .collect();
+
+        let mut qs_max_snr: f64 = f64::MIN;
+        for &v in &v_steps {
+            let mut qs_model = QsModel::new(*node, v);
+            qs_model.c_bl = node.c_bl_512;
+            let arch = QsArch::new(qs_model);
+            let nb = arch.noise(&op, &w, &x);
+            let e = arch.energy(&op, AdcCriterion::Mpc, &w, &x).total();
+            qs_max_snr = qs_max_snr.max(nb.snr_a_total_db());
+            csv.row(&[
+                "qs".into(),
+                node.node_nm.to_string(),
+                format!("{v:.3}"),
+                format!("{:.3}", nb.snr_a_total_db()),
+                format!("{:.6e}", e),
+            ]);
+
+            let cm = CmArch::new(qs_model, QrModel::new(*node, 3.0));
+            let nb = cm.noise(&op, &w, &x);
+            let e = cm.energy(&op, AdcCriterion::Mpc, &w, &x).total();
+            csv.row(&[
+                "cm".into(),
+                node.node_nm.to_string(),
+                format!("{v:.3}"),
+                format!("{:.3}", nb.snr_a_total_db()),
+                format!("{:.6e}", e),
+            ]);
+        }
+        checks.push((format!("qs_max_snr_{}", node.node_nm), qs_max_snr));
+
+        // QR-Arch: sweep C_o.
+        let mut qr_max_snr: f64 = f64::MIN;
+        for c_ff in [0.5, 1.0, 2.0, 3.0, 6.0, 9.0] {
+            let arch = QrArch::new(QrModel::new(*node, c_ff));
+            let nb = arch.noise(&op, &w, &x);
+            let e = arch.energy(&op, AdcCriterion::Mpc, &w, &x).total();
+            qr_max_snr = qr_max_snr.max(nb.snr_a_total_db());
+            csv.row(&[
+                "qr".into(),
+                node.node_nm.to_string(),
+                format!("{c_ff:.1}"),
+                format!("{:.3}", nb.snr_a_total_db()),
+                format!("{:.6e}", e),
+            ]);
+        }
+        checks.push((format!("qr_max_snr_{}", node.node_nm), qr_max_snr));
+    }
+    csv.write_to(&ctx.csv_path("fig13"))?;
+
+    let get = |k: &str| checks.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap();
+    println!(
+        "Fig. 13: QS-Arch max SNR_A 65nm={:.1} dB -> 7nm={:.1} dB (scaling hurts); QR-Arch 65nm={:.1} -> 7nm={:.1} dB (quantization-limited: SQNR_qiy={:.1} dB)",
+        get("qs_max_snr_65"),
+        get("qs_max_snr_7"),
+        get("qr_max_snr_65"),
+        get("qr_max_snr_7"),
+        crate::quant::sqnr_qiy_db(100, 4, 3, &w, &x),
+    );
+    Ok(FigSummary {
+        name: "fig13".into(),
+        rows: checks.len(),
+        checks,
+    })
+}

@@ -1,0 +1,52 @@
+//! Fig. 2: per-layer SNR_T requirements of DP computations in a DNN.
+//! (Substituted workload: 3-layer MLP on the synthetic dataset; see
+//! DESIGN.md §1.)
+
+use super::{FigCtx, FigSummary};
+use crate::dnn::{
+    layer_snr_requirements, Dataset, DatasetConfig, Mlp, NoisyEvalConfig, TrainConfig,
+};
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+
+pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
+    let ds = Dataset::generate(&DatasetConfig::default());
+    let mut mlp = Mlp::new(&[64, 128, 64, 10], 7);
+    let curve = mlp.train(&ds, &TrainConfig::default());
+    let clean = mlp.accuracy(&ds, true);
+
+    let grid: Vec<f64> = (-4..=48).step_by(2).map(|v| v as f64).collect();
+    let reqs = layer_snr_requirements(&mlp, &ds, &grid, 0.01, &NoisyEvalConfig::default());
+
+    let mut csv = CsvWriter::new(&["layer", "snr_t_req_db", "clean_acc"]);
+    let mut tbl = Table::new(&["layer", "SNR_T* (dB)"])
+        .with_title("Fig. 2 — per-layer SNR_T requirement (<=1% accuracy loss)");
+    for (l, r) in reqs.iter().enumerate() {
+        csv.row_f64(&[l as f64 + 1.0, *r, clean]);
+        tbl.row(vec![format!("{}", l + 1), format!("{r:.1}")]);
+    }
+    csv.write_to(&ctx.csv_path("fig2"))?;
+    println!("{}", tbl.render());
+    println!(
+        "clean test accuracy {:.3} after {} epochs (final loss {:.4})",
+        clean,
+        curve.len(),
+        curve.last().map(|c| c.0).unwrap_or(f64::NAN)
+    );
+
+    let mut checks = vec![
+        ("clean_acc".to_string(), clean),
+        ("max_req_db".to_string(), reqs.iter().cloned().fold(f64::MIN, f64::max)),
+        ("min_req_db".to_string(), reqs.iter().cloned().fold(f64::MAX, f64::min)),
+    ];
+    checks.extend(
+        reqs.iter()
+            .enumerate()
+            .map(|(l, r)| (format!("layer{}_req_db", l + 1), *r)),
+    );
+    Ok(FigSummary {
+        name: "fig2".into(),
+        rows: reqs.len(),
+        checks,
+    })
+}

@@ -1,0 +1,140 @@
+//! Fig. 9: SNR trade-offs in QS-Arch (Bx = Bw = 6).
+//! (a) SNR_A vs N for V_WL in {0.5..0.8 V}: plateau then collapse at
+//!     N_max, higher V_WL -> higher plateau but earlier collapse;
+//! (b) SNR_T vs B_ADC: saturates at SNR_A once B_ADC clears the Table III
+//!     lower bound (circled value).
+//! E (closed form) and S (sample-accurate simulation) on every point.
+
+use super::{sweep_point, uniform_stats, FigCtx, FigSummary};
+use crate::arch::{ImcArch, OpPoint, QsArch};
+use crate::compute::qs::QsModel;
+use crate::coordinator::run_sweep;
+use crate::mc::ArchKind;
+use crate::tech::TechNode;
+use crate::util::csv::CsvWriter;
+
+pub const V_WLS: [f64; 4] = [0.5, 0.6, 0.7, 0.8];
+pub const NS: [usize; 9] = [16, 32, 48, 64, 96, 128, 192, 320, 512];
+
+pub fn run_a(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
+    let (w, x) = uniform_stats();
+    let mut points = Vec::new();
+    let mut expected = Vec::new();
+    for &v_wl in &V_WLS {
+        let arch = QsArch::new(QsModel::new(TechNode::n65(), v_wl));
+        for &n in &NS {
+            let op = OpPoint::new(n, 6, 6, 14);
+            expected.push((v_wl, n, arch.noise(&op, &w, &x).snr_a_total_db()));
+            points.push(sweep_point(
+                &arch,
+                ArchKind::Qs,
+                format!("fig9a/vwl={v_wl}/n={n}"),
+                &op,
+                ctx.trials,
+                0x9A + n as u64,
+            ));
+        }
+    }
+    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+
+    let mut csv = CsvWriter::new(&["v_wl", "n", "snr_a_closed_db", "snr_a_sim_db"]);
+    let mut max_gap: f64 = 0.0;
+    let mut peak: f64 = f64::MIN;
+    for ((v_wl, n, e_db), r) in expected.iter().zip(&results) {
+        let s_db = r.measured.snr_a_total_db;
+        // E-S agreement only meaningful away from the clipping cliff where
+        // the binomial-tail approximation is loose
+        if *e_db > 5.0 && s_db > 5.0 {
+            max_gap = max_gap.max((e_db - s_db).abs());
+        }
+        peak = peak.max(s_db);
+        csv.row_f64(&[*v_wl, *n as f64, *e_db, s_db]);
+    }
+    csv.write_to(&ctx.csv_path("fig9a"))?;
+
+    // headline shape checks (V_WL = 0.8)
+    let sim = |v: f64, n: usize| {
+        results
+            .iter()
+            .find(|r| r.id == format!("fig9a/vwl={v}/n={n}"))
+            .unwrap()
+            .measured
+            .snr_a_total_db
+    };
+    let plateau_08 = sim(0.8, 64);
+    let collapse_08 = plateau_08 - sim(0.8, 512);
+    let plateau_06 = sim(0.6, 64);
+    println!(
+        "Fig. 9(a): QS-Arch plateau(0.8V)={plateau_08:.1} dB, collapse(512)={collapse_08:.1} dB, plateau(0.6V)={plateau_06:.1} dB, max|E-S|={max_gap:.2} dB"
+    );
+    Ok(FigSummary {
+        name: "fig9a".into(),
+        rows: results.len(),
+        checks: vec![
+            ("plateau_08_db".into(), plateau_08),
+            ("collapse_08_db".into(), collapse_08),
+            ("plateau_06_db".into(), plateau_06),
+            ("max_e_s_gap_db".into(), max_gap),
+        ],
+    })
+}
+
+pub fn run_b(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
+    let (w, x) = uniform_stats();
+    let b_adcs: Vec<u32> = (2..=11).collect();
+    let configs = [(0.8, 128usize), (0.7, 128), (0.8, 48)];
+
+    let mut points = Vec::new();
+    let mut meta = Vec::new();
+    for &(v_wl, n) in &configs {
+        let arch = QsArch::new(QsModel::new(TechNode::n65(), v_wl));
+        let bound = arch.b_adc_min(&OpPoint::new(n, 6, 6, 8), &w, &x);
+        for &b in &b_adcs {
+            let op = OpPoint::new(n, 6, 6, b);
+            meta.push((v_wl, n, b, bound, arch.noise(&op, &w, &x).snr_a_total_db()));
+            points.push(sweep_point(
+                &arch,
+                ArchKind::Qs,
+                format!("fig9b/vwl={v_wl}/n={n}/b={b}"),
+                &op,
+                ctx.trials,
+                0x9B + b as u64,
+            ));
+        }
+    }
+    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+
+    let mut csv = CsvWriter::new(&[
+        "v_wl",
+        "n",
+        "b_adc",
+        "b_adc_min_pred",
+        "snr_a_closed_db",
+        "snr_t_sim_db",
+    ]);
+    let mut gap_at_bound: f64 = f64::MIN;
+    for ((v_wl, n, b, bound, e_a), r) in meta.iter().zip(&results) {
+        csv.row_f64(&[
+            *v_wl,
+            *n as f64,
+            *b as f64,
+            *bound as f64,
+            *e_a,
+            r.measured.snr_t_db,
+        ]);
+        if b == bound {
+            // at the predicted minimum, SNR_T should be within ~1 dB of
+            // the simulated SNR_A
+            gap_at_bound = gap_at_bound.max(r.measured.snr_a_total_db - r.measured.snr_t_db);
+        }
+    }
+    csv.write_to(&ctx.csv_path("fig9b"))?;
+    println!(
+        "Fig. 9(b): max SNR_A - SNR_T at the predicted minimum B_ADC = {gap_at_bound:.2} dB"
+    );
+    Ok(FigSummary {
+        name: "fig9b".into(),
+        rows: results.len(),
+        checks: vec![("gap_at_bound_db".into(), gap_at_bound)],
+    })
+}

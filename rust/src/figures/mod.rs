@@ -1,0 +1,134 @@
+//! Figure/table regeneration drivers: one module per figure or table in
+//! the paper's evaluation (see DESIGN.md §4 for the experiment index).
+//! Every driver emits a CSV under the output directory and an ASCII
+//! rendering to stdout, and returns a short machine-checkable summary
+//! used by integration tests and EXPERIMENTS.md.
+
+pub mod ablation;
+pub mod fig12;
+pub mod fig13;
+pub mod fig2;
+pub mod fig4;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use crate::coordinator::Backend;
+
+/// Shared driver context.
+pub struct FigCtx {
+    pub backend: Backend,
+    pub out_dir: PathBuf,
+    /// MC trials per sweep point.
+    pub trials: usize,
+    pub workers: usize,
+    pub verbose: bool,
+}
+
+impl FigCtx {
+    pub fn native(out_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            backend: Backend::Native,
+            out_dir: out_dir.into(),
+            trials: 2048,
+            workers: crate::coordinator::SweepOptions::default().workers,
+            verbose: false,
+        }
+    }
+
+    pub fn sweep_opts(&self) -> crate::coordinator::SweepOptions {
+        crate::coordinator::SweepOptions {
+            workers: self.workers,
+            verbose: self.verbose,
+        }
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.out_dir.join(format!("{name}.csv"))
+    }
+}
+
+/// Summary of one regenerated figure: key quantitative checks that the
+/// integration tests (and EXPERIMENTS.md) assert on.
+#[derive(Clone, Debug, Default)]
+pub struct FigSummary {
+    pub name: String,
+    pub rows: usize,
+    /// (check name, value) pairs; semantics per figure.
+    pub checks: Vec<(String, f64)>,
+}
+
+impl FigSummary {
+    pub fn check(&self, name: &str) -> Option<f64> {
+        self.checks
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// Build a sweep point for an architecture at an operating point, with
+/// the default uniform signal statistics used throughout Sec. V.
+pub fn sweep_point(
+    arch: &dyn crate::arch::ImcArch,
+    kind: crate::mc::ArchKind,
+    id: String,
+    op: &crate::arch::OpPoint,
+    trials: usize,
+    seed: u64,
+) -> crate::coordinator::SweepPoint {
+    let w = crate::quant::SignalStats::uniform_signed(1.0);
+    let x = crate::quant::SignalStats::uniform_unsigned(1.0);
+    crate::coordinator::SweepPoint::new(id, kind, arch.pjrt_params(op, &w, &x))
+        .with_trials(trials)
+        .with_seed(seed)
+}
+
+/// Default uniform signal statistics (w signed, x unsigned).
+pub fn uniform_stats() -> (crate::quant::SignalStats, crate::quant::SignalStats) {
+    (
+        crate::quant::SignalStats::uniform_signed(1.0),
+        crate::quant::SignalStats::uniform_unsigned(1.0),
+    )
+}
+
+/// All figure names, in paper order.
+pub const ALL_FIGURES: &[&str] = &[
+    "fig2", "fig4a", "fig4b", "fig9a", "fig9b", "fig10a", "fig10b", "fig11a",
+    "fig11b", "fig12", "fig13", "table1", "table2", "table3", "ablation",
+];
+
+/// Dispatch by name ("all" runs everything).
+pub fn run(name: &str, ctx: &FigCtx) -> anyhow::Result<Vec<FigSummary>> {
+    let mut out = Vec::new();
+    let names: Vec<&str> = if name == "all" {
+        ALL_FIGURES.to_vec()
+    } else {
+        vec![name]
+    };
+    for n in names {
+        let s = match n {
+            "fig2" => fig2::run(ctx)?,
+            "fig4a" => fig4::run_a(ctx)?,
+            "fig4b" => fig4::run_b(ctx)?,
+            "fig9a" => fig9::run_a(ctx)?,
+            "fig9b" => fig9::run_b(ctx)?,
+            "fig10a" => fig10::run_a(ctx)?,
+            "fig10b" => fig10::run_b(ctx)?,
+            "fig11a" => fig11::run_a(ctx)?,
+            "fig11b" => fig11::run_b(ctx)?,
+            "fig12" => fig12::run(ctx)?,
+            "fig13" => fig13::run(ctx)?,
+            "table1" => tables::table1(ctx)?,
+            "table2" => tables::table2(ctx)?,
+            "table3" => tables::table3(ctx)?,
+            "ablation" => ablation::run(ctx)?,
+            other => anyhow::bail!("unknown figure '{other}' (try one of {ALL_FIGURES:?})"),
+        };
+        out.push(s);
+    }
+    Ok(out)
+}

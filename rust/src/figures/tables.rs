@@ -1,0 +1,224 @@
+//! Table regeneration: Table I (taxonomy), Table II (65 nm parameters),
+//! Table III (closed-form expressions validated against the
+//! sample-accurate simulator — the paper's E-vs-S methodology, Fig. 8).
+
+use super::{sweep_point, uniform_stats, FigCtx, FigSummary};
+use crate::arch::{CmArch, ImcArch, OpPoint, QrArch, QsArch};
+use crate::compute::{qr::QrModel, qs::QsModel};
+use crate::coordinator::run_sweep;
+use crate::mc::ArchKind;
+use crate::taxonomy::{model_counts, table1 as tax_table, AdcPrecision, WeightPrecision};
+use crate::tech::TechNode;
+use crate::util::csv::CsvWriter;
+use crate::util::stats::db;
+use crate::util::table::Table;
+
+pub fn table1(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
+    let designs = tax_table();
+    let mut tbl = Table::new(&["design", "QS", "IS", "QR", "Bx", "Bw", "B_ADC"])
+        .with_title("Table I — taxonomy of CMOS IMC designs");
+    let mut csv = CsvWriter::new(&["design", "year", "qs", "is", "qr", "bx", "bw", "b_adc"]);
+    let fmt_w = |w: &WeightPrecision| match w {
+        WeightPrecision::Bits(b) => b.to_string(),
+        WeightPrecision::Ternary => "T".into(),
+        WeightPrecision::Analog => "A".into(),
+    };
+    let fmt_a = |a: &AdcPrecision| match a {
+        AdcPrecision::Bits(b) => b.to_string(),
+        AdcPrecision::Analog => "A".into(),
+        AdcPrecision::Effective10x(b) => format!("{:.2}", *b as f64 / 10.0),
+    };
+    let tick = |b: bool| if b { "x".to_string() } else { String::new() };
+    for d in &designs {
+        tbl.row(vec![
+            d.name.into(),
+            tick(d.qs),
+            tick(d.is),
+            tick(d.qr),
+            fmt_w(&d.bx),
+            fmt_w(&d.bw),
+            fmt_a(&d.b_adc),
+        ]);
+        csv.row(&[
+            d.name.to_string(),
+            d.year.to_string(),
+            d.qs.to_string(),
+            d.is.to_string(),
+            d.qr.to_string(),
+            fmt_w(&d.bx),
+            fmt_w(&d.bw),
+            fmt_a(&d.b_adc),
+        ]);
+    }
+    csv.write_to(&ctx.csv_path("table1"))?;
+    println!("{}", tbl.render());
+    let (qs, is, qr) = model_counts(&designs);
+    Ok(FigSummary {
+        name: "table1".into(),
+        rows: designs.len(),
+        checks: vec![
+            ("designs".into(), designs.len() as f64),
+            ("qs_count".into(), qs as f64),
+            ("is_count".into(), is as f64),
+            ("qr_count".into(), qr as f64),
+        ],
+    })
+}
+
+pub fn table2(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
+    let t = TechNode::n65();
+    let rows: Vec<(&str, String)> = vec![
+        ("k' (uA/V^2)", format!("{}", t.k_prime * 1e6)),
+        ("alpha", format!("{}", t.alpha)),
+        ("sigma_T0 (ps)", format!("{}", t.sigma_t0 * 1e12)),
+        ("sigma_Vt (mV)", format!("{}", t.sigma_vt * 1e3)),
+        ("dV_BL,max (V)", format!("{}", t.dv_bl_max)),
+        ("V_t (V)", format!("{}", t.v_t)),
+        ("T_0 (ps)", format!("{}", t.t0 * 1e12)),
+        ("WL*Cox (fF)", format!("{}", t.wl_cox * 1e15)),
+        ("kappa (fF^0.5)", format!("{}", t.kappa_ff)),
+        ("p", format!("{}", t.p_inj)),
+        ("V_dd (V)", format!("{}", t.v_dd)),
+        ("g_m (uA/V)", format!("{}", t.g_m * 1e6)),
+    ];
+    let mut tbl = Table::new(&["parameter", "value"])
+        .with_title("Table II — 65 nm compute-model parameters");
+    let mut csv = CsvWriter::new(&["parameter", "value"]);
+    for (k, v) in &rows {
+        tbl.row(vec![k.to_string(), v.clone()]);
+        csv.row(&[k.to_string(), v.clone()]);
+    }
+    csv.write_to(&ctx.csv_path("table2"))?;
+    println!("{}", tbl.render());
+    Ok(FigSummary {
+        name: "table2".into(),
+        rows: rows.len(),
+        checks: vec![("params".into(), rows.len() as f64)],
+    })
+}
+
+/// Table III validation: closed-form sigma_eta^2 and derived SNRs vs the
+/// sample-accurate simulator at a grid of operating points on all three
+/// architectures.
+pub fn table3(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
+    let (w, x) = uniform_stats();
+    struct Case {
+        label: String,
+        closed_eta2: f64,
+        closed_snr_a_db: f64,
+        point: crate::coordinator::SweepPoint,
+    }
+    let mut cases: Vec<Case> = Vec::new();
+
+    // QS-Arch grid
+    for (v_wl, n) in [(0.8, 64usize), (0.8, 128), (0.7, 128), (0.6, 256)] {
+        let arch = QsArch::new(QsModel::new(TechNode::n65(), v_wl));
+        let op = OpPoint::new(n, 6, 6, 14);
+        let nb = arch.noise(&op, &w, &x);
+        cases.push(Case {
+            label: format!("QS v={v_wl} N={n}"),
+            closed_eta2: nb.sigma_eta_a2(),
+            closed_snr_a_db: nb.snr_a_total_db(),
+            point: sweep_point(
+                &arch,
+                ArchKind::Qs,
+                format!("t3/qs/{v_wl}/{n}"),
+                &op,
+                ctx.trials,
+                31 + n as u64,
+            ),
+        });
+    }
+    // QR-Arch grid
+    for (c_ff, n) in [(1.0, 128usize), (3.0, 128), (9.0, 256)] {
+        let arch = QrArch::new(QrModel::new(TechNode::n65(), c_ff));
+        let op = OpPoint::new(n, 6, 7, 14);
+        let nb = arch.noise(&op, &w, &x);
+        cases.push(Case {
+            label: format!("QR C={c_ff} N={n}"),
+            closed_eta2: nb.sigma_eta_a2(),
+            closed_snr_a_db: nb.snr_a_total_db(),
+            point: sweep_point(
+                &arch,
+                ArchKind::Qr,
+                format!("t3/qr/{c_ff}/{n}"),
+                &op,
+                ctx.trials,
+                57 + n as u64,
+            ),
+        });
+    }
+    // CM grid
+    for (v_wl, bw) in [(0.8, 5u32), (0.8, 6), (0.7, 7)] {
+        let arch = CmArch::new(
+            QsModel::new(TechNode::n65(), v_wl),
+            QrModel::new(TechNode::n65(), 3.0),
+        );
+        let op = OpPoint::new(64, 6, bw, 14);
+        let nb = arch.noise(&op, &w, &x);
+        cases.push(Case {
+            label: format!("CM v={v_wl} Bw={bw}"),
+            closed_eta2: nb.sigma_eta_a2(),
+            closed_snr_a_db: nb.snr_a_total_db(),
+            point: sweep_point(
+                &arch,
+                ArchKind::Cm,
+                format!("t3/cm/{v_wl}/{bw}"),
+                &op,
+                ctx.trials,
+                91 + bw as u64,
+            ),
+        });
+    }
+
+    let points: Vec<_> = cases.iter().map(|c| c.point.clone()).collect();
+    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+
+    let mut tbl = Table::new(&[
+        "case",
+        "eta2 (E)",
+        "eta2 (S)",
+        "gap dB",
+        "SNR_A E",
+        "SNR_A S",
+    ])
+    .with_title("Table III validation — closed form (E) vs simulation (S)");
+    let mut csv = CsvWriter::new(&[
+        "case",
+        "closed_eta2",
+        "sim_eta2",
+        "gap_db",
+        "closed_snr_a_db",
+        "sim_snr_a_db",
+    ]);
+    let mut max_gap: f64 = 0.0;
+    for (c, r) in cases.iter().zip(&results) {
+        let sim_eta2 = r.measured.sigma_eta_a2;
+        let gap = db(sim_eta2 / c.closed_eta2);
+        max_gap = max_gap.max(gap.abs());
+        tbl.row(vec![
+            c.label.clone(),
+            format!("{:.3e}", c.closed_eta2),
+            format!("{:.3e}", sim_eta2),
+            format!("{gap:+.2}"),
+            format!("{:.1}", c.closed_snr_a_db),
+            format!("{:.1}", r.measured.snr_a_total_db),
+        ]);
+        csv.row(&[
+            c.label.clone(),
+            format!("{:.6e}", c.closed_eta2),
+            format!("{:.6e}", sim_eta2),
+            format!("{gap:.3}"),
+            format!("{:.3}", c.closed_snr_a_db),
+            format!("{:.3}", r.measured.snr_a_total_db),
+        ]);
+    }
+    csv.write_to(&ctx.csv_path("table3"))?;
+    println!("{}", tbl.render());
+    println!("Table III: max |E-S| noise-power gap = {max_gap:.2} dB over {} cases", cases.len());
+    Ok(FigSummary {
+        name: "table3".into(),
+        rows: cases.len(),
+        checks: vec![("max_e_s_gap_db".into(), max_gap)],
+    })
+}

@@ -1,0 +1,37 @@
+//! # imclim — fundamental limits of in-memory computing architectures
+//!
+//! A production-grade reproduction of Gonugondla et al., *"Fundamental
+//! Limits on Energy-Delay-Accuracy of In-memory Architectures in
+//! Inference Applications"* (2020), built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) implement the
+//!   analog-core contractions of the sample-accurate Monte-Carlo
+//!   simulator; AOT-lowered to HLO text at build time.
+//! * **L2** — JAX models (`python/compile/model.py`) of the three IMC
+//!   architectures (QS-Arch, QR-Arch, CM) over the full signal chain.
+//! * **L3** — this crate: the closed-form analytical models (every
+//!   equation in the paper), the experiment coordinator (sweep scheduler,
+//!   worker pool, PJRT execution of the AOT artifacts), a native
+//!   Monte-Carlo oracle, the fixed-point DNN substrate, and drivers that
+//!   regenerate every figure and table of the paper's evaluation.
+//!
+//! Python never runs on the experiment path: `make artifacts` is the only
+//! Python invocation; everything else is this binary.
+
+pub mod arch;
+pub mod bench;
+pub mod cli;
+pub mod compute;
+pub mod coordinator;
+pub mod dnn;
+pub mod energy;
+pub mod figures;
+pub mod mc;
+pub mod prop;
+pub mod quant;
+pub mod runtime;
+pub mod snr;
+pub mod taxonomy;
+pub mod tech;
+pub mod util;

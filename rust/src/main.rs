@@ -1,0 +1,4 @@
+//! L3 coordinator CLI entrypoint.
+fn main() {
+    imclim::cli::main();
+}

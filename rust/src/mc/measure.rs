@@ -1,0 +1,131 @@
+//! Ensemble SNR measurement from the four MC output streams (eq. 7).
+
+use super::McOutput;
+use crate::util::stats::{db, Welford};
+
+/// All compute-SNR metrics measured from one Monte-Carlo ensemble.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MeasuredSnr {
+    pub sigma_yo2: f64,
+    pub sigma_qiy2: f64,
+    /// Analog noise (y_a - y_fx): eta_e + eta_h.
+    pub sigma_eta_a2: f64,
+    /// ADC quantization (y_hat - y_a).
+    pub sigma_qy2: f64,
+    pub sqnr_qiy_db: f64,
+    pub snr_a_db: f64,
+    /// Pre-ADC SNR_A (noise vs ideal, eq. 10).
+    pub snr_a_total_db: f64,
+    /// Total SNR_T (eq. 11).
+    pub snr_t_db: f64,
+    pub trials: u64,
+}
+
+/// Streaming accumulator: push MC output chunks as they arrive from the
+/// executor (chunks may arrive in any order; variance aggregation is
+/// order-independent up to float rounding).
+#[derive(Clone, Debug, Default)]
+pub struct SnrAccumulator {
+    sig: Welford,
+    qiy: Welford,
+    eta: Welford,
+    qy: Welford,
+    pre: Welford,
+    tot: Welford,
+}
+
+impl SnrAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_chunk(&mut self, out: &McOutput) {
+        for i in 0..out.len() {
+            let (yi, yfx, ya, yh) =
+                (out.y_ideal[i], out.y_fx[i], out.y_a[i], out.y_hat[i]);
+            self.sig.push(yi);
+            self.qiy.push(yfx - yi);
+            self.eta.push(ya - yfx);
+            self.qy.push(yh - ya);
+            self.pre.push(ya - yi);
+            self.tot.push(yh - yi);
+        }
+    }
+
+    pub fn merge(&mut self, other: &SnrAccumulator) {
+        self.sig.merge(&other.sig);
+        self.qiy.merge(&other.qiy);
+        self.eta.merge(&other.eta);
+        self.qy.merge(&other.qy);
+        self.pre.merge(&other.pre);
+        self.tot.merge(&other.tot);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.sig.count()
+    }
+
+    pub fn finalize(&self) -> MeasuredSnr {
+        let s2 = self.sig.variance();
+        MeasuredSnr {
+            sigma_yo2: s2,
+            sigma_qiy2: self.qiy.variance(),
+            sigma_eta_a2: self.eta.variance(),
+            sigma_qy2: self.qy.variance(),
+            sqnr_qiy_db: db(s2 / self.qiy.variance()),
+            snr_a_db: db(s2 / self.eta.variance()),
+            snr_a_total_db: db(s2 / self.pre.variance()),
+            snr_t_db: db(s2 / self.tot.variance()),
+            trials: self.sig.count(),
+        }
+    }
+}
+
+pub fn measure(out: &McOutput) -> MeasuredSnr {
+    let mut acc = SnrAccumulator::new();
+    acc.push_chunk(out);
+    acc.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_synthetic_streams() {
+        // construct streams with known noise powers
+        let mut out = McOutput::default();
+        let mut rng = crate::util::rng::Pcg64::new(8);
+        for _ in 0..100_000 {
+            let yi = rng.normal_scaled(0.0, 3.0);
+            let yfx = yi + rng.normal_scaled(0.0, 0.3);
+            let ya = yfx + rng.normal_scaled(0.0, 0.3);
+            let yh = ya + rng.normal_scaled(0.0, 0.3);
+            out.push(yi, yfx, ya, yh);
+        }
+        let m = measure(&out);
+        // each stage adds 0.09 to noise power; signal 9.0 -> 20 dB per stage
+        assert!((m.sqnr_qiy_db - 20.0).abs() < 0.2, "{}", m.sqnr_qiy_db);
+        assert!((m.snr_a_db - 20.0).abs() < 0.2);
+        // pre-ADC: 9/(0.18) = 17 dB; total: 9/0.27 = 15.2 dB
+        assert!((m.snr_a_total_db - db(9.0 / 0.18)).abs() < 0.2);
+        assert!((m.snr_t_db - db(9.0 / 0.27)).abs() < 0.2);
+        assert_eq!(m.trials, 100_000);
+    }
+
+    #[test]
+    fn snr_t_never_exceeds_components() {
+        let mut out = McOutput::default();
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        for _ in 0..10_000 {
+            let yi = rng.normal();
+            let yfx = yi + 0.1 * rng.normal();
+            let ya = yfx + 0.1 * rng.normal();
+            let yh = ya + 0.1 * rng.normal();
+            out.push(yi, yfx, ya, yh);
+        }
+        let m = measure(&out);
+        assert!(m.snr_t_db <= m.snr_a_total_db + 0.3);
+        assert!(m.snr_a_total_db <= m.sqnr_qiy_db + 0.3);
+    }
+}

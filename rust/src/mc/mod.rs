@@ -1,0 +1,505 @@
+//! Native sample-accurate Monte-Carlo simulator (Fig. 8 methodology).
+//!
+//! Mirrors `python/compile/model.py` bit-for-bit in structure: identical
+//! quantizers, bit-slicing, noise injection points, clipping and ADC
+//! models, driven by the *same* normalized parameter vector
+//! (`arch::pvec`). It serves three roles:
+//!
+//! 1. Cross-check oracle for the PJRT/Pallas path (integration tests
+//!    assert ensemble-statistical agreement).
+//! 2. Validation target for the Table III closed forms (E-vs-S curves).
+//! 3. Fallback/base implementation when artifacts are not built.
+
+mod measure;
+pub use measure::{measure, MeasuredSnr, SnrAccumulator};
+
+use crate::arch::pvec;
+use crate::util::rng::Pcg64;
+
+pub const B_MAX: usize = 8;
+
+/// Which architecture a parameter vector drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArchKind {
+    Qs,
+    Qr,
+    Cm,
+}
+
+impl ArchKind {
+    pub fn artifact_name(&self) -> &'static str {
+        match self {
+            ArchKind::Qs => "qs_arch",
+            ArchKind::Qr => "qr_arch",
+            ArchKind::Cm => "cm_arch",
+        }
+    }
+}
+
+/// Input distributions for the MC ensembles. The paper draws unsigned
+/// activations and zero-mean signed weights from two distributions
+/// (Sec. V-A); uniform is the default used in Sec. III-E.
+#[derive(Clone, Copy, Debug)]
+pub enum InputDist {
+    /// x ~ U[0,1), w ~ U[-1,1).
+    Uniform,
+    /// x ~ |N(0, sx)| clipped to [0,1), w ~ N(0, sw) clipped to [-1,1).
+    ClippedGaussian { sx: f64, sw: f64 },
+}
+
+impl InputDist {
+    fn draw_x(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            InputDist::Uniform => rng.uniform(),
+            InputDist::ClippedGaussian { sx, .. } => {
+                (rng.normal().abs() * sx).min(0.999_999)
+            }
+        }
+    }
+
+    fn draw_w(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            InputDist::Uniform => rng.uniform_in(-1.0, 1.0),
+            InputDist::ClippedGaussian { sw, .. } => {
+                (rng.normal() * sw).clamp(-0.999_999, 0.999_999)
+            }
+        }
+    }
+}
+
+/// One MC ensemble: the four output streams of eq. (6)'s decomposition.
+#[derive(Clone, Debug, Default)]
+pub struct McOutput {
+    pub y_ideal: Vec<f64>,
+    pub y_fx: Vec<f64>,
+    pub y_a: Vec<f64>,
+    pub y_hat: Vec<f64>,
+}
+
+impl McOutput {
+    pub fn len(&self) -> usize {
+        self.y_ideal.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y_ideal.is_empty()
+    }
+
+    pub fn push(&mut self, yi: f64, yfx: f64, ya: f64, yh: f64) {
+        self.y_ideal.push(yi);
+        self.y_fx.push(yfx);
+        self.y_a.push(ya);
+        self.y_hat.push(yh);
+    }
+
+    pub fn extend(&mut self, other: &McOutput) {
+        self.y_ideal.extend_from_slice(&other.y_ideal);
+        self.y_fx.extend_from_slice(&other.y_fx);
+        self.y_a.extend_from_slice(&other.y_a);
+        self.y_hat.extend_from_slice(&other.y_hat);
+    }
+}
+
+/// Run `trials` Monte-Carlo trials of the given architecture.
+pub fn simulate(
+    kind: ArchKind,
+    params: &[f64; pvec::P],
+    trials: usize,
+    seed: u64,
+    dist: InputDist,
+) -> McOutput {
+    let mut out = McOutput::default();
+    let mut rng = Pcg64::new(seed);
+    let n = params[pvec::IDX_N_ACTIVE] as usize;
+    let mut x = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    for _ in 0..trials {
+        for v in x.iter_mut() {
+            *v = dist.draw_x(&mut rng);
+        }
+        for v in w.iter_mut() {
+            *v = dist.draw_w(&mut rng);
+        }
+        let r = match kind {
+            ArchKind::Qs => qs_trial(params, &x, &w, &mut rng),
+            ArchKind::Qr => qr_trial(params, &x, &w, &mut rng),
+            ArchKind::Cm => cm_trial(params, &x, &w, &mut rng),
+        };
+        out.push(r.0, r.1, r.2, r.3);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Shared bit-slicing (mirrors model.py unsigned_bits / signed_bits /
+// signed_mag_bits, round-to-nearest).
+// ---------------------------------------------------------------------
+
+/// Unsigned activation code t in [0, 2^bx) and value t/2^bx.
+#[inline]
+fn x_code(x: f64, bx: u32) -> u32 {
+    let s = (1u32 << bx) as f64;
+    ((x * s + 0.5).floor().clamp(0.0, s - 1.0)) as u32
+}
+
+/// Two's-complement weight code t in [0, 2^bw); value t*2^{1-bw} - 1.
+#[inline]
+fn w_code(w: f64, bw: u32) -> u32 {
+    let half = (1u32 << (bw - 1)) as f64;
+    (((w + 1.0) * half + 0.5).floor().clamp(0.0, 2.0 * half - 1.0)) as u32
+}
+
+/// Input plane bit (plane j = 1..bx holds weight 2^-j).
+#[inline]
+fn x_bit(code: u32, bx: u32, j: u32) -> u32 {
+    if j > bx {
+        0
+    } else {
+        (code >> (bx - j)) & 1
+    }
+}
+
+/// Weight plane bit with complemented sign plane (plane 1).
+#[inline]
+fn w_bit(code: u32, bw: u32, i: u32) -> u32 {
+    if i > bw {
+        return 0;
+    }
+    let raw = (code >> (bw - i)) & 1;
+    if i == 1 {
+        1 - raw
+    } else {
+        raw
+    }
+}
+
+/// Weight plane recombination weights pw: [-1, 2^-1, ..., 2^{2-bw}].
+#[inline]
+fn w_plane_weight(bw: u32, i: u32) -> f64 {
+    if i > bw {
+        0.0
+    } else if i == 1 {
+        -1.0
+    } else {
+        2f64.powi(1 - i as i32)
+    }
+}
+
+/// Mid-tread ADC over [0, range].
+#[inline]
+fn adc_unsigned(v: f64, range: f64, b: f64) -> f64 {
+    let levels = 2f64.powf(b);
+    let delta = range / levels;
+    (v / delta).round().clamp(0.0, levels - 1.0) * delta
+}
+
+/// Mid-tread ADC over [-range, range].
+#[inline]
+fn adc_signed(v: f64, range: f64, b: f64) -> f64 {
+    let levels = 2f64.powf(b);
+    let delta = 2.0 * range / levels;
+    (v / delta).round().clamp(-levels / 2.0, levels / 2.0 - 1.0) * delta
+}
+
+// ---------------------------------------------------------------------
+// QS-Arch trial (model.py qs_arch).
+// ---------------------------------------------------------------------
+
+fn qs_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
+    let n = x.len();
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let b_adc = p[pvec::IDX_B_ADC];
+    let sigma_d = p[pvec::QS_IDX_SIGMA_D];
+    let sigma_t = p[pvec::QS_IDX_SIGMA_T];
+    let t_rf = p[pvec::QS_IDX_T_RF];
+    let sigma_theta = p[pvec::QS_IDX_SIGMA_THETA];
+    let k_h = p[pvec::QS_IDX_K_H];
+    let v_c = p[pvec::QS_IDX_V_C];
+    let correlated = p[pvec::QS_IDX_MODE] >= 0.5;
+
+    let mut y_ideal = 0.0;
+    let mut y_fx = 0.0;
+    let mut xc = vec![0u32; n];
+    let mut wc = vec![0u32; n];
+    for k in 0..n {
+        y_ideal += x[k] * w[k];
+        xc[k] = x_code(x[k], bx);
+        wc[k] = w_code(w[k], bw);
+        let xq = xc[k] as f64 / (1u32 << bx) as f64;
+        let wq = wc[k] as f64 * 2f64.powi(1 - bw as i32) - 1.0;
+        y_fx += xq * wq;
+    }
+
+    // Optional correlated per-cell noise (mode 1): spatial mismatch fixed
+    // across input cycles, pulse jitter shared across weight columns.
+    let g_cell: Vec<f64> = if correlated {
+        (0..n * bw as usize).map(|_| rng.normal()).collect()
+    } else {
+        Vec::new()
+    };
+    let g_pulse: Vec<f64> = if correlated {
+        (0..n * bx as usize).map(|_| rng.normal()).collect()
+    } else {
+        Vec::new()
+    };
+
+    // NOTE (EXPERIMENTS.md §Perf P4, reverted): a bit-packed AND+popcount
+    // formulation of the plane counts measured 3.5x *slower* than this
+    // plain per-cell loop — LLVM auto-vectorizes the shift/mask reduction
+    // over k, and the branchy mask-building pass defeated it.
+    let sigma_eff = (sigma_d * sigma_d + sigma_t * sigma_t).sqrt();
+    let mut y_a = 0.0;
+    let mut y_hat = 0.0;
+    for i in 1..=bw {
+        let pw = w_plane_weight(bw, i);
+        for j in 1..=bx {
+            let px = 2f64.powi(-(j as i32));
+            let mut count = 0u32;
+            let mut noisy = 0.0;
+            if correlated {
+                for k in 0..n {
+                    if w_bit(wc[k], bw, i) & x_bit(xc[k], bx, j) == 1 {
+                        count += 1;
+                        noisy += sigma_d * g_cell[(i as usize - 1) * n + k]
+                            + sigma_t * g_pulse[(j as usize - 1) * n + k];
+                    }
+                }
+            } else {
+                for k in 0..n {
+                    count += w_bit(wc[k], bw, i) & x_bit(xc[k], bx, j);
+                }
+            }
+            let c = count as f64;
+            let mut y_bl = if correlated {
+                c + noisy
+            } else {
+                c + c.sqrt() * sigma_eff * rng.normal()
+            };
+            y_bl -= t_rf * c;
+            let y_cl = y_bl.clamp(0.0, k_h);
+            let y_a_bl = y_cl + sigma_theta * rng.normal();
+            let y_hat_bl = adc_unsigned(y_a_bl, v_c, b_adc);
+            y_a += pw * px * y_a_bl;
+            y_hat += pw * px * y_hat_bl;
+        }
+    }
+    (y_ideal, y_fx, y_a, y_hat)
+}
+
+// ---------------------------------------------------------------------
+// QR-Arch trial (model.py qr_arch).
+// ---------------------------------------------------------------------
+
+fn qr_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
+    let n = x.len();
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let b_adc = p[pvec::IDX_B_ADC];
+    let sigma_c = p[pvec::QR_IDX_SIGMA_C];
+    let inj_a = p[pvec::QR_IDX_INJ_A];
+    let inj_b = p[pvec::QR_IDX_INJ_B];
+    let sigma_theta = p[pvec::QR_IDX_SIGMA_THETA];
+    let v_c = p[pvec::QR_IDX_V_C];
+    let v_lo = p[pvec::QR_IDX_V_LO];
+
+    let mut y_ideal = 0.0;
+    let mut y_fx = 0.0;
+    let mut xq = vec![0.0; n];
+    let mut wc = vec![0u32; n];
+    for k in 0..n {
+        y_ideal += x[k] * w[k];
+        xq[k] = x_code(x[k], bx) as f64 / (1u32 << bx) as f64;
+        wc[k] = w_code(w[k], bw);
+        let wq = wc[k] as f64 * 2f64.powi(1 - bw as i32) - 1.0;
+        y_fx += xq[k] * wq;
+    }
+
+    // Aggregate noise sampling (EXPERIMENTS.md §Perf P2): with
+    // b_k = v_k + inj_k deterministic given the data, the charge-share
+    // numerator/denominator pair
+    //   num = sum (1 + c_k)(b_k + th_k),   den = sum (1 + c_k)
+    // is jointly Gaussian given the data:
+    //   B = sum c_k            ~ N(0, sigma_c^2 n)
+    //   A = sum c_k b_k        ~ N(0, sigma_c^2 sum b^2), Cov = sigma_c^2 sum b
+    //   T = sum (1 + c_k) th_k ~ N(0, sigma_th^2 (n + 2B + n sigma_c^2)) | B
+    // so 3 draws per row replace ~2N per-cell draws, distributionally
+    // exact up to the O(sigma_th^2 sigma_c^2) concentration of sum c^2.
+    let mut y_a = 0.0;
+    let mut y_hat = 0.0;
+    let nf = n as f64;
+    for i in 1..=bw {
+        let pw = w_plane_weight(bw, i);
+        let mut sum_b = 0.0;
+        let mut sum_b2 = 0.0;
+        for (k, &xqk) in xq.iter().enumerate() {
+            let v = if w_bit(wc[k], bw, i) == 1 { xqk } else { 0.0 };
+            let b = v + inj_a - inj_b * v;
+            sum_b += b;
+            sum_b2 += b * b;
+        }
+        let big_b = sigma_c * nf.sqrt() * rng.normal();
+        let resid_var = (sum_b2 - sum_b * sum_b / nf).max(0.0);
+        let big_a = (sum_b / nf) * big_b + sigma_c * resid_var.sqrt() * rng.normal();
+        let th_var = sigma_theta * sigma_theta
+            * (nf + 2.0 * big_b + nf * sigma_c * sigma_c).max(0.0);
+        let big_t = th_var.sqrt() * rng.normal();
+        let v_row = (sum_b + big_a + big_t) / (nf + big_b).max(1e-6);
+        let v_row_hat = v_lo + adc_unsigned(v_row - v_lo, v_c, b_adc);
+        y_a += nf * pw * v_row;
+        y_hat += nf * pw * v_row_hat;
+    }
+    (y_ideal, y_fx, y_a, y_hat)
+}
+
+// ---------------------------------------------------------------------
+// CM trial (model.py cm_arch; sign-magnitude weights).
+// ---------------------------------------------------------------------
+
+fn cm_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
+    let n = x.len();
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let b_adc = p[pvec::IDX_B_ADC];
+    let sigma_d = p[pvec::CM_IDX_SIGMA_D];
+    let w_h = p[pvec::CM_IDX_W_H];
+    let sigma_c = p[pvec::CM_IDX_SIGMA_C];
+    let inj_a = p[pvec::CM_IDX_INJ_A];
+    let inj_b = p[pvec::CM_IDX_INJ_B];
+    let sigma_theta = p[pvec::CM_IDX_SIGMA_THETA];
+    let v_c = p[pvec::CM_IDX_V_C];
+
+    let half = (1u32 << (bw - 1)) as f64;
+    let mut y_ideal = 0.0;
+    let mut y_fx = 0.0;
+    // Aggregate sampling (EXPERIMENTS.md §Perf P3): the per-plane
+    // mismatch of a column sums to N(0, sigma_d^2 sum_i pm_i^2 mb_i) —
+    // one draw per column; clipping is applied after, exactly as in the
+    // per-plane formulation. The QR aggregation stage uses the same
+    // correlated (A, B, T) trick as qr_trial.
+    let nf = n as f64;
+    let mut sum_b = 0.0;
+    let mut sum_b2 = 0.0;
+    for k in 0..n {
+        y_ideal += x[k] * w[k];
+        let xqk = x_code(x[k], bx) as f64 / (1u32 << bx) as f64;
+        // sign-magnitude code: t in [0, 2^{bw-1})
+        let sgn = if w[k] < 0.0 { -1.0 } else { 1.0 };
+        let t = ((w[k].abs() * half + 0.5).floor()).min(half - 1.0) as u32;
+        let wq = sgn * t as f64 / half;
+        y_fx += xqk * wq;
+
+        // analog multi-bit weight: plane mismatch aggregated per column
+        let mut mag = 0.0;
+        let mut var = 0.0;
+        for i in 1..=(bw - 1) {
+            if (t >> (bw - 1 - i)) & 1 == 1 {
+                let pm = 2f64.powi(-(i as i32));
+                mag += pm;
+                var += pm * pm;
+            }
+        }
+        let w_eff = sgn * (mag + sigma_d * var.sqrt() * rng.normal());
+        let w_cl = w_eff.clamp(-w_h, w_h);
+        let u = w_cl * xqk;
+        let b = u + inj_a - inj_b * u.abs();
+        sum_b += b;
+        sum_b2 += b * b;
+    }
+    let big_b = sigma_c * nf.sqrt() * rng.normal();
+    let resid_var = (sum_b2 - sum_b * sum_b / nf).max(0.0);
+    let big_a = (sum_b / nf) * big_b + sigma_c * resid_var.sqrt() * rng.normal();
+    let th_var = sigma_theta * sigma_theta
+        * (nf + 2.0 * big_b + nf * sigma_c * sigma_c).max(0.0);
+    let big_t = th_var.sqrt() * rng.normal();
+    let v_out = (sum_b + big_a + big_t) / (nf + big_b).max(1e-6);
+    let v_hat = adc_signed(v_out, v_c, b_adc);
+    (y_ideal, y_fx, n as f64 * v_out, n as f64 * v_hat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::pvec;
+
+    fn base_params(n: usize, bx: u32, bw: u32) -> [f64; pvec::P] {
+        let mut p = [0.0; pvec::P];
+        p[pvec::IDX_N_ACTIVE] = n as f64;
+        p[pvec::IDX_BX] = bx as f64;
+        p[pvec::IDX_BW] = bw as f64;
+        p[pvec::IDX_B_ADC] = 14.0;
+        p
+    }
+
+    #[test]
+    fn qs_noiseless_equals_fixed_point() {
+        let mut p = base_params(100, 6, 6);
+        p[pvec::QS_IDX_K_H] = 1e9;
+        p[pvec::QS_IDX_V_C] = 200.0;
+        let out = simulate(ArchKind::Qs, &p, 64, 1, InputDist::Uniform);
+        for i in 0..out.len() {
+            assert!((out.y_a[i] - out.y_fx[i]).abs() < 1e-9);
+            assert!((out.y_hat[i] - out.y_a[i]).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn qr_noiseless_equals_fixed_point() {
+        let mut p = base_params(128, 6, 7);
+        p[pvec::QR_IDX_V_C] = 1.0;
+        let out = simulate(ArchKind::Qr, &p, 64, 2, InputDist::Uniform);
+        for i in 0..out.len() {
+            assert!((out.y_a[i] - out.y_fx[i]).abs() < 1e-9);
+            assert!((out.y_hat[i] - out.y_a[i]).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn cm_noiseless_equals_fixed_point() {
+        let mut p = base_params(64, 6, 6);
+        p[pvec::CM_IDX_W_H] = 1e9;
+        p[pvec::CM_IDX_V_C] = 0.5;
+        let out = simulate(ArchKind::Cm, &p, 64, 3, InputDist::Uniform);
+        for i in 0..out.len() {
+            assert!((out.y_a[i] - out.y_fx[i]).abs() < 1e-9, "{i}");
+        }
+    }
+
+    #[test]
+    fn qs_electrical_noise_matches_closed_form() {
+        let mut p = base_params(100, 6, 6);
+        p[pvec::QS_IDX_SIGMA_D] = 0.107;
+        p[pvec::QS_IDX_K_H] = 1e9;
+        p[pvec::QS_IDX_V_C] = 300.0;
+        let out = simulate(ArchKind::Qs, &p, 4000, 4, InputDist::Uniform);
+        let m = measure(&out);
+        let pred = 100.0 * 0.107 * 0.107 * (1.0 - 4f64.powi(-6)).powi(2) / 9.0;
+        let ratio = m.sigma_eta_a2 / pred;
+        assert!((0.85..1.18).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut p = base_params(64, 6, 6);
+        p[pvec::QS_IDX_SIGMA_D] = 0.1;
+        p[pvec::QS_IDX_K_H] = 50.0;
+        p[pvec::QS_IDX_V_C] = 50.0;
+        let a = simulate(ArchKind::Qs, &p, 16, 9, InputDist::Uniform);
+        let b = simulate(ArchKind::Qs, &p, 16, 9, InputDist::Uniform);
+        assert_eq!(a.y_hat, b.y_hat);
+        let c = simulate(ArchKind::Qs, &p, 16, 10, InputDist::Uniform);
+        assert_ne!(a.y_hat, c.y_hat);
+    }
+
+    #[test]
+    fn clipped_gaussian_dist_in_range() {
+        let mut rng = Pcg64::new(5);
+        let d = InputDist::ClippedGaussian { sx: 0.3, sw: 0.3 };
+        for _ in 0..1000 {
+            let x = d.draw_x(&mut rng);
+            let w = d.draw_w(&mut rng);
+            assert!((0.0..1.0).contains(&x));
+            assert!((-1.0..1.0).contains(&w));
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Minimal property-based testing framework (offline build: no proptest).
+//!
+//! Provides seeded generators and a runner that, on failure, reports the
+//! failing case's seed so it can be pinned as a regression. Used by the
+//! coordinator invariant tests (rust/tests/prop_coordinator.rs) and
+//! kernel/model property tests.
+
+use crate::util::rng::Pcg64;
+
+/// A generator of values from a PRNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg64) -> T;
+}
+
+impl<T, F: Fn(&mut Pcg64) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Pcg64) -> T {
+        self(rng)
+    }
+}
+
+/// Outcome of a property check over many cases.
+#[derive(Debug)]
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<PropFailure>,
+}
+
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case_index: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+impl PropResult {
+    /// Panic with a reproducible report if any case failed.
+    pub fn unwrap(self) {
+        if let Some(f) = self.failure {
+            panic!(
+                "property failed at case {} (rerun with seed {:#x}): {}",
+                f.case_index, f.seed, f.message
+            );
+        }
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xDEFA_017,
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. The property returns
+/// `Err(message)` to fail. Each case gets an independent, derivable seed.
+pub fn check<T>(
+    cfg: Config,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult {
+    let root = Pcg64::new(cfg.seed);
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed ^ ((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = root.stream(i as u64);
+        let value = gen.generate(&mut rng);
+        if let Err(message) = prop(&value) {
+            return PropResult {
+                cases: i + 1,
+                failure: Some(PropFailure {
+                    case_index: i,
+                    seed: case_seed,
+                    message,
+                }),
+            };
+        }
+    }
+    PropResult {
+        cases: cfg.cases,
+        failure: None,
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::util::rng::Pcg64;
+
+    pub fn usize_in(lo: usize, hi: usize) -> impl Fn(&mut Pcg64) -> usize {
+        move |rng| lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(lo: f64, hi: f64) -> impl Fn(&mut Pcg64) -> f64 {
+        move |rng| rng.uniform_in(lo, hi)
+    }
+
+    pub fn u32_in(lo: u32, hi: u32) -> impl Fn(&mut Pcg64) -> u32 {
+        move |rng| lo + rng.below((hi - lo + 1) as u64) as u32
+    }
+
+    pub fn vec_f64(len: usize, lo: f64, hi: f64) -> impl Fn(&mut Pcg64) -> Vec<f64> {
+        move |rng| (0..len).map(|_| rng.uniform_in(lo, hi)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let r = check(
+            Config {
+                cases: 32,
+                seed: 1,
+            },
+            gens::usize_in(1, 100),
+            |&n| {
+                if n >= 1 && n <= 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} out of range"))
+                }
+            },
+        );
+        assert_eq!(r.cases, 32);
+        assert!(r.failure.is_none());
+        r.unwrap();
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = check(
+            Config {
+                cases: 100,
+                seed: 2,
+            },
+            gens::usize_in(0, 10),
+            |&n| if n < 9 { Ok(()) } else { Err("too big".into()) },
+        );
+        let f = r.failure.expect("should fail eventually");
+        assert!(!f.message.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn unwrap_panics_on_failure() {
+        check(
+            Config { cases: 5, seed: 3 },
+            |_rng: &mut Pcg64| 1usize,
+            |_| Err("always".into()),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        use std::sync::Mutex;
+        let collect = |seed| {
+            let vals = Mutex::new(Vec::new());
+            check(
+                Config { cases: 10, seed },
+                gens::f64_in(0.0, 1.0),
+                |&v| {
+                    vals.lock().unwrap().push(v);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            vals.into_inner().unwrap()
+        };
+        let a = collect(42);
+        let b = collect(42);
+        assert_eq!(a, b);
+        assert_ne!(a, collect(43));
+    }
+}

@@ -1,0 +1,265 @@
+//! Quantization preliminaries (Sec. II) and compute-SNR metrics (Sec. III-A).
+//!
+//! Everything is expressed both as closed-form dB expressions (eqs. 1, 5,
+//! 8, 9) and as executable quantizers used by the native Monte-Carlo
+//! simulator, so the two can be cross-checked in tests.
+
+pub mod criteria;
+
+use crate::util::stats::db;
+
+/// Signal statistics entering the SQNR expressions: range, second moment
+/// and variance. For the paper's defaults: unsigned activations
+/// x ~ U[0, x_m) and signed weights w ~ U[-w_m, w_m).
+#[derive(Clone, Copy, Debug)]
+pub struct SignalStats {
+    /// Peak magnitude (x_m or w_m).
+    pub peak: f64,
+    /// E[s^2].
+    pub second_moment: f64,
+    /// Var(s).
+    pub variance: f64,
+}
+
+impl SignalStats {
+    /// Unsigned uniform on [0, peak).
+    pub fn uniform_unsigned(peak: f64) -> Self {
+        Self {
+            peak,
+            second_moment: peak * peak / 3.0,
+            variance: peak * peak / 12.0,
+        }
+    }
+
+    /// Signed uniform on [-peak, peak).
+    pub fn uniform_signed(peak: f64) -> Self {
+        Self {
+            peak,
+            second_moment: peak * peak / 3.0,
+            variance: peak * peak / 3.0,
+        }
+    }
+
+    /// PAR in dB as used in eq. (8): unsigned activations use
+    /// x_m^2 / (4 E[x^2]); signed weights use w_m^2 / sigma_w^2.
+    pub fn par_db_unsigned(&self) -> f64 {
+        db(self.peak * self.peak / (4.0 * self.second_moment))
+    }
+
+    pub fn par_db_signed(&self) -> f64 {
+        db(self.peak * self.peak / self.variance)
+    }
+}
+
+/// Quantization step sizes (Sec. II-C): Delta_w = w_m 2^{-(B_w-1)},
+/// Delta_x = x_m 2^{-B_x}, Delta_y = y_m 2^{-(B_y-1)}.
+pub fn step_signed(peak: f64, bits: u32) -> f64 {
+    peak * 2f64.powi(1 - bits as i32)
+}
+
+pub fn step_unsigned(peak: f64, bits: u32) -> f64 {
+    peak * 2f64.powi(-(bits as i32))
+}
+
+/// Eq. (1): SQNR_x(dB) = 6 B_x + 4.78 - PAR(dB).
+pub fn sqnr_db_eq1(bits: u32, par_db: f64) -> f64 {
+    6.02 * bits as f64 + 4.77 - par_db
+}
+
+/// DP signal variance (eq. 5): sigma_yo^2 = N sigma_w^2 E[x^2].
+pub fn dp_signal_variance(n: usize, w: &SignalStats, x: &SignalStats) -> f64 {
+    n as f64 * w.variance * x.second_moment
+}
+
+/// Output-referred input-quantization noise variance (eq. 5):
+/// sigma_qiy^2 = (N/12)(Delta_w^2 E[x^2] + Delta_x^2 sigma_w^2).
+pub fn qiy_variance(
+    n: usize,
+    bw: u32,
+    bx: u32,
+    w: &SignalStats,
+    x: &SignalStats,
+) -> f64 {
+    let dw = step_signed(w.peak, bw);
+    let dx = step_unsigned(x.peak, bx);
+    n as f64 / 12.0 * (dw * dw * x.second_moment + dx * dx * w.variance)
+}
+
+/// Eq. (8): output-referred SQNR due to input quantization, in dB.
+pub fn sqnr_qiy_db(n: usize, bw: u32, bx: u32, w: &SignalStats, x: &SignalStats) -> f64 {
+    db(dp_signal_variance(n, w, x) / qiy_variance(n, bw, bx, w, x))
+}
+
+/// Eq. (9): digitization SQNR for a B_y-bit output quantizer over the full
+/// range y_m = N x_m w_m, in dB:
+/// 6 B_y + 4.8 - [zeta_x + zeta_w](dB) - 10 log10(N).
+pub fn sqnr_qy_db(n: usize, by: u32, w: &SignalStats, x: &SignalStats) -> f64 {
+    sqnr_db_eq1(by, w.par_db_signed() + x.par_db_unsigned() + db(n as f64))
+}
+
+/// Executable round-to-nearest quantizers (match python/compile/model.py).
+pub fn quantize_unsigned(x: f64, peak: f64, bits: u32) -> f64 {
+    let s = 2f64.powi(bits as i32) / peak;
+    ((x * s + 0.5).floor().clamp(0.0, 2f64.powi(bits as i32) - 1.0)) / s
+}
+
+pub fn quantize_signed(w: f64, peak: f64, bits: u32) -> f64 {
+    // Two's complement Q1.(bits-1) code, round-to-nearest.
+    let half = 2f64.powi(bits as i32 - 1);
+    let t = ((w / peak + 1.0) * half + 0.5)
+        .floor()
+        .clamp(0.0, 2.0 * half - 1.0);
+    (t / half - 1.0) * peak
+}
+
+/// Sign-magnitude quantizer used by CM.
+pub fn quantize_sign_mag(w: f64, peak: f64, bits: u32) -> f64 {
+    let half = 2f64.powi(bits as i32 - 1);
+    let t = ((w.abs() / peak) * half + 0.5).floor().min(half - 1.0);
+    w.signum() * t / half * peak
+}
+
+/// Mid-tread uniform ADC over [0, range] with 2^bits levels.
+pub fn adc_unsigned(v: f64, range: f64, bits: u32) -> f64 {
+    let delta = range / 2f64.powi(bits as i32);
+    let code = (v / delta).round().clamp(0.0, 2f64.powi(bits as i32) - 1.0);
+    code * delta
+}
+
+/// Mid-tread uniform ADC over [-range, range] with 2^bits levels.
+pub fn adc_signed(v: f64, range: f64, bits: u32) -> f64 {
+    let delta = 2.0 * range / 2f64.powi(bits as i32);
+    let half = 2f64.powi(bits as i32 - 1);
+    let code = (v / delta).round().clamp(-half, half - 1.0);
+    code * delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::Welford;
+
+    fn default_w() -> SignalStats {
+        SignalStats::uniform_signed(1.0)
+    }
+
+    fn default_x() -> SignalStats {
+        SignalStats::uniform_unsigned(1.0)
+    }
+
+    #[test]
+    fn paper_par_values() {
+        // Sec. III-E: zeta_x = -1.3 dB (unsigned uniform), zeta_w = 4.8 dB.
+        assert!((default_x().par_db_unsigned() - (-1.25)).abs() < 0.1);
+        assert!((default_w().par_db_signed() - 4.77).abs() < 0.1);
+    }
+
+    #[test]
+    fn paper_sqnr_qiy_41db_at_7b() {
+        // Sec. III-E: B_x = B_w = 7 gives SQNR_qiy = 41 dB.
+        let v = sqnr_qiy_db(256, 7, 7, &default_w(), &default_x());
+        assert!((v - 41.0).abs() < 0.5, "{v}");
+    }
+
+    #[test]
+    fn sqnr_qiy_at_6b_matches_eq8_exactly() {
+        // Eq. (8) at B_x = B_w = 6 with uniform signals gives 35.2 dB.
+        // (The paper's Sec. V-A quotes 38.9 dB for this point, which is
+        // inconsistent with its own eq. (8) — the 41 dB value quoted for
+        // B_x = B_w = 7 in Sec. III-E *does* match eq. (8), and 35.2 =
+        // 41.2 - 6.02. We pin the equation; see EXPERIMENTS.md
+        // §Deviations.)
+        let v = sqnr_qiy_db(512, 6, 6, &default_w(), &default_x());
+        assert!((v - 35.2).abs() < 0.5, "{v}");
+        let v7 = sqnr_qiy_db(512, 7, 7, &default_w(), &default_x());
+        assert!((v7 - v - 6.02).abs() < 0.05);
+    }
+
+    #[test]
+    fn sqnr_qiy_independent_of_n() {
+        let a = sqnr_qiy_db(16, 6, 6, &default_w(), &default_x());
+        let b = sqnr_qiy_db(1024, 6, 6, &default_w(), &default_x());
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sqnr_qy_drops_3db_per_doubling_n() {
+        let a = sqnr_qy_db(128, 8, &default_w(), &default_x());
+        let b = sqnr_qy_db(256, 8, &default_w(), &default_x());
+        assert!((a - b - 3.0).abs() < 0.05, "{a} {b}");
+    }
+
+    #[test]
+    fn six_db_per_bit() {
+        let a = sqnr_qy_db(128, 8, &default_w(), &default_x());
+        let b = sqnr_qy_db(128, 9, &default_w(), &default_x());
+        assert!((b - a - 6.02).abs() < 0.01);
+    }
+
+    #[test]
+    fn quantizers_bound_error() {
+        let mut r = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let x = r.uniform();
+            let q = quantize_unsigned(x, 1.0, 6);
+            assert!((x - q).abs() <= 2f64.powi(-6) + 1e-12);
+            let w = r.uniform_in(-1.0, 1.0);
+            let qs = quantize_signed(w, 1.0, 6);
+            assert!((w - qs).abs() <= 2f64.powi(-5) + 1e-12);
+            let qm = quantize_sign_mag(w, 1.0, 6);
+            assert!((w - qm).abs() <= 2f64.powi(-5) + 1e-12);
+            assert!(qm == 0.0 || qm.signum() == w.signum());
+        }
+    }
+
+    #[test]
+    fn mc_sqnr_matches_eq1() {
+        // Monte-Carlo SQNR of the executable signed quantizer vs eq. (1)
+        // (eq. 1's step convention Delta = x_m 2^{-(B-1)} is the signed
+        // two's-complement one).
+        let mut r = Pcg64::new(2);
+        let mut sig = Welford::new();
+        let mut noise = Welford::new();
+        for _ in 0..400_000 {
+            let w = r.uniform_in(-1.0, 1.0);
+            sig.push(w);
+            noise.push(w - quantize_signed(w, 1.0, 7));
+        }
+        let meas = db(sig.variance() / noise.variance());
+        let pred = sqnr_db_eq1(7, default_w().par_db_signed());
+        assert!((meas - pred).abs() < 0.3, "meas={meas} pred={pred}");
+    }
+
+    #[test]
+    fn qiy_variance_matches_mc() {
+        let (n, bw, bx) = (64usize, 5u32, 5u32);
+        let w_s = default_w();
+        let x_s = default_x();
+        let pred = qiy_variance(n, bw, bx, &w_s, &x_s);
+        let mut r = Pcg64::new(3);
+        let mut noise = Welford::new();
+        for _ in 0..20_000 {
+            let mut err = 0.0;
+            for _ in 0..n {
+                let x = r.uniform();
+                let w = r.uniform_in(-1.0, 1.0);
+                let yq = quantize_signed(w, 1.0, bw) * quantize_unsigned(x, 1.0, bx);
+                err += yq - w * x;
+            }
+            noise.push(err);
+        }
+        let ratio = noise.variance() / pred;
+        assert!((0.8..1.25).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn adc_mid_tread_behaviour() {
+        assert_eq!(adc_unsigned(0.0, 1.0, 4), 0.0);
+        assert!((adc_unsigned(0.52, 1.0, 4) - 0.5).abs() < 0.04);
+        assert_eq!(adc_signed(0.0, 1.0, 4), 0.0);
+        let top = adc_unsigned(2.0, 1.0, 4);
+        assert!(top <= 1.0); // clips at full scale
+        assert!(adc_signed(-2.0, 1.0, 4) >= -1.0);
+    }
+}

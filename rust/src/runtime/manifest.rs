@@ -1,0 +1,155 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing: the I/O
+//! signature of every AOT-compiled executable, emitted by aot.py.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    /// (name, shape) in argument order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    pub fn input_shape(&self, name: &str) -> Option<&[usize]> {
+        self.inputs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.as_slice())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub m_trials: usize,
+    pub n_max: usize,
+    pub b_max: usize,
+    pub p: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let usize_field = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing numeric field '{k}'"))
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, spec) in arts {
+            let file = spec
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact '{name}' missing 'file'"))?
+                .to_string();
+            let mut inputs = Vec::new();
+            for inp in spec
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("artifact '{name}' missing 'inputs'"))?
+            {
+                let iname = inp
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow!("input missing name"))?
+                    .to_string();
+                let shape: Vec<usize> = inp
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow!("input missing shape"))?
+                    .iter()
+                    .filter_map(|v| v.as_usize())
+                    .collect();
+                inputs.push((iname, shape));
+            }
+            let outputs: Vec<String> = spec
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Self {
+            m_trials: usize_field("m_trials")?,
+            n_max: usize_field("n_max")?,
+            b_max: usize_field("b_max")?,
+            p: usize_field("p")?,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "m_trials": 64, "n_max": 512, "b_max": 8, "p": 16,
+      "artifacts": {
+        "qs_arch": {
+          "file": "qs_arch.hlo.txt",
+          "inputs": [
+            {"name": "x", "shape": [64, 512]},
+            {"name": "w", "shape": [64, 512]},
+            {"name": "seed", "shape": [2]},
+            {"name": "params", "shape": [16]}
+          ],
+          "outputs": ["y_ideal", "y_fx", "y_a", "y_hat"]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.m_trials, 64);
+        assert_eq!(m.p, 16);
+        let a = &m.artifacts["qs_arch"];
+        assert_eq!(a.input_shape("x"), Some(&[64usize, 512][..]));
+        assert_eq!(a.input_shape("params"), Some(&[16usize][..]));
+        assert_eq!(a.outputs.len(), 4);
+        assert!(a.input_shape("nope").is_none());
+    }
+
+    #[test]
+    fn p_matches_pvec_constant() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.p, crate::arch::pvec::P);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"m_trials": 1}"#).is_err());
+    }
+}

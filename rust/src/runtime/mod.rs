@@ -1,0 +1,223 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by the Python compile path and executes them on the PJRT CPU client.
+//!
+//! HLO *text* is the interchange format (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reparses
+//! and reassigns instruction ids, avoiding the 64-bit-id proto
+//! incompatibility between jax >= 0.5 and xla_extension 0.5.1.
+//!
+//! `PjRtLoadedExecutable` wraps raw pointers (!Send), so a `Runtime` is
+//! thread-local; the coordinator runs all PJRT work on one dedicated
+//! executor thread (see `crate::coordinator::service`).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::arch::pvec;
+use crate::mc::McOutput;
+
+/// Default artifact directory: $IMCLIM_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("IMCLIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A compiled architecture-simulation executable plus its static shapes.
+pub struct ArchExec {
+    exe: xla::PjRtLoadedExecutable,
+    /// MC trials per invocation (leading dim of x/w).
+    pub m: usize,
+    /// Maximum DP dimension (trailing dim of x/w).
+    pub n_max: usize,
+}
+
+impl ArchExec {
+    /// Execute one MC batch. `x`: m*n_max activations in [0,1), `w`:
+    /// m*n_max weights in [-1,1), row-major; `seed`: two counter words.
+    pub fn run(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        seed: [f32; 2],
+        params: &[f64; pvec::P],
+    ) -> Result<McOutput> {
+        if x.len() != self.m * self.n_max || w.len() != self.m * self.n_max {
+            bail!(
+                "input length {} != m*n_max = {}",
+                x.len(),
+                self.m * self.n_max
+            );
+        }
+        let xs = xla::Literal::vec1(x).reshape(&[self.m as i64, self.n_max as i64])?;
+        let ws = xla::Literal::vec1(w).reshape(&[self.m as i64, self.n_max as i64])?;
+        let sd = xla::Literal::vec1(&seed);
+        let pv: Vec<f32> = params.iter().map(|&v| v as f32).collect();
+        let pl = xla::Literal::vec1(&pv);
+        let result = self.exe.execute::<xla::Literal>(&[xs, ws, sd, pl])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 4 {
+            bail!("expected 4 outputs, got {}", parts.len());
+        }
+        let grab = |l: &xla::Literal| -> Result<Vec<f64>> {
+            Ok(l.to_vec::<f32>()?.into_iter().map(|v| v as f64).collect())
+        };
+        Ok(McOutput {
+            y_ideal: grab(&parts[0])?,
+            y_fx: grab(&parts[1])?,
+            y_a: grab(&parts[2])?,
+            y_hat: grab(&parts[3])?,
+        })
+    }
+}
+
+/// A compiled MLP-forward executable (Fig. 2 workload).
+pub struct MlpExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub dims: Vec<usize>, // [d0, d1, d2, d3]
+}
+
+impl MlpExec {
+    /// Run a noisy forward pass; weights row-major [out, in]. Returns
+    /// logits (batch x d3, row-major).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        x: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+        w3: &[f32],
+        b3: &[f32],
+        seed: [f32; 2],
+        sigmas: [f32; 3],
+    ) -> Result<Vec<f32>> {
+        let (d0, d1, d2, d3) = (self.dims[0], self.dims[1], self.dims[2], self.dims[3]);
+        let lit = |v: &[f32], r: usize, c: usize| -> Result<xla::Literal> {
+            if v.len() != r * c {
+                bail!("literal length {} != {}x{}", v.len(), r, c);
+            }
+            Ok(xla::Literal::vec1(v).reshape(&[r as i64, c as i64])?)
+        };
+        let args = [
+            lit(x, self.batch, d0)?,
+            lit(w1, d1, d0)?,
+            xla::Literal::vec1(b1),
+            lit(w2, d2, d1)?,
+            xla::Literal::vec1(b2),
+            lit(w3, d3, d2)?,
+            xla::Literal::vec1(b3),
+            xla::Literal::vec1(&seed),
+            xla::Literal::vec1(&sigmas),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        Ok(parts[0].to_vec::<f32>()?)
+    }
+}
+
+/// Thread-local PJRT runtime: one CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    arch_cache: RefCell<HashMap<String, Rc<ArchExec>>>,
+    mlp_cache: RefCell<Option<Rc<MlpExec>>>,
+}
+
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            arch_cache: RefCell::new(HashMap::new()),
+            mlp_cache: RefCell::new(None),
+        })
+    }
+
+    pub fn with_default_dir() -> Result<Self> {
+        Self::new(&default_artifacts_dir())
+    }
+
+    fn compile(&self, name: &str) -> Result<(xla::PjRtLoadedExecutable, &ArtifactSpec)> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok((exe, spec))
+    }
+
+    /// Load (compile-and-cache) an architecture simulator artifact.
+    pub fn arch(&self, name: &str) -> Result<Rc<ArchExec>> {
+        if let Some(e) = self.arch_cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let (exe, spec) = self.compile(name)?;
+        let xshape = spec
+            .input_shape("x")
+            .ok_or_else(|| anyhow!("artifact '{name}' has no input 'x'"))?;
+        if xshape.len() != 2 {
+            bail!("arch artifact expects 2-D x, got {xshape:?}");
+        }
+        let e = Rc::new(ArchExec {
+            exe,
+            m: xshape[0],
+            n_max: xshape[1],
+        });
+        self.arch_cache
+            .borrow_mut()
+            .insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Load the MLP forward executable.
+    pub fn mlp(&self) -> Result<Rc<MlpExec>> {
+        if let Some(e) = self.mlp_cache.borrow().as_ref() {
+            return Ok(e.clone());
+        }
+        let (exe, spec) = self.compile("mlp_fwd")?;
+        let x = spec.input_shape("x").ok_or_else(|| anyhow!("no x input"))?;
+        let w1 = spec.input_shape("w1").ok_or_else(|| anyhow!("no w1"))?;
+        let w2 = spec.input_shape("w2").ok_or_else(|| anyhow!("no w2"))?;
+        let w3 = spec.input_shape("w3").ok_or_else(|| anyhow!("no w3"))?;
+        let e = Rc::new(MlpExec {
+            exe,
+            batch: x[0],
+            dims: vec![x[1], w1[0], w2[0], w3[0]],
+        });
+        *self.mlp_cache.borrow_mut() = Some(e.clone());
+        Ok(e)
+    }
+
+    /// Round-trip smoke test (matmul + 2 on 2x2), proving the AOT bridge.
+    pub fn smoke(&self) -> Result<Vec<f32>> {
+        let (exe, _) = self.compile("smoke")?;
+        let x = xla::Literal::vec1(&[1f32, 2.0, 3.0, 4.0]).reshape(&[2, 2])?;
+        let y = xla::Literal::vec1(&[1f32, 1.0, 1.0, 1.0]).reshape(&[2, 2])?;
+        let result = exe.execute::<xla::Literal>(&[x, y])?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,165 @@
+//! Compute-SNR composition (Sec. III-A/B): eqs. (10)-(11) and the
+//! precision-assignment procedure that drives SNR_T -> SNR_a.
+
+use crate::util::stats::{db, from_db};
+
+/// Noise-power composition of parallel noise sources (all relative to the
+/// same signal power): 1/SNR_total = sum_i 1/SNR_i.
+pub fn compose(snrs: &[f64]) -> f64 {
+    let inv: f64 = snrs
+        .iter()
+        .map(|&s| if s.is_infinite() { 0.0 } else { 1.0 / s })
+        .sum();
+    if inv == 0.0 {
+        f64::INFINITY
+    } else {
+        1.0 / inv
+    }
+}
+
+/// Eq. (10): SNR_A = [1/SNR_a + 1/SQNR_qiy]^-1, in dB.
+pub fn snr_a_total_db(snr_a_db: f64, sqnr_qiy_db: f64) -> f64 {
+    db(compose(&[from_db(snr_a_db), from_db(sqnr_qiy_db)]))
+}
+
+/// Eq. (11): SNR_T = [1/SNR_A + 1/SQNR_qy]^-1, in dB.
+pub fn snr_t_db(snr_a_cap_db: f64, sqnr_qy_db: f64) -> f64 {
+    db(compose(&[from_db(snr_a_cap_db), from_db(sqnr_qy_db)]))
+}
+
+/// The full decomposition of one operating point, as estimated from
+/// Monte-Carlo ensembles or evaluated from closed forms.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SnrBreakdown {
+    /// Signal power sigma_yo^2.
+    pub signal_var: f64,
+    /// Input-quantization noise sigma_qiy^2.
+    pub qiy_var: f64,
+    /// Analog noise sigma_eta_a^2 (eta_e + eta_h).
+    pub analog_var: f64,
+    /// Output/ADC quantization noise sigma_qy^2.
+    pub qy_var: f64,
+}
+
+impl SnrBreakdown {
+    pub fn sqnr_qiy_db(&self) -> f64 {
+        db(self.signal_var / self.qiy_var)
+    }
+
+    pub fn snr_a_db(&self) -> f64 {
+        db(self.signal_var / self.analog_var)
+    }
+
+    /// Pre-ADC SNR_A (eq. 10).
+    pub fn snr_a_total_db(&self) -> f64 {
+        db(self.signal_var / (self.qiy_var + self.analog_var))
+    }
+
+    /// Total SNR_T (eq. 11).
+    pub fn snr_t_db(&self) -> f64 {
+        db(self.signal_var / (self.qiy_var + self.analog_var + self.qy_var))
+    }
+}
+
+/// Precision assignment procedure of Sec. III-B: given a target SNR_T*
+/// and the analog core's SNR_a, pick (B_x, B_w, B_y) so SNR_T -> SNR_a.
+#[derive(Clone, Copy, Debug)]
+pub struct PrecisionAssignment {
+    pub bx: u32,
+    pub bw: u32,
+    pub by: u32,
+    pub predicted_snr_t_db: f64,
+}
+
+/// Assign minimal (B_x, B_w) such that SQNR_qiy >= SNR_a + margin, and
+/// B_y per MPC such that SQNR_qy >= SNR_A + margin.
+pub fn assign_precisions(
+    snr_a_db: f64,
+    margin_db: f64,
+    w: &crate::quant::SignalStats,
+    x: &crate::quant::SignalStats,
+) -> PrecisionAssignment {
+    let mut bx = 1;
+    let mut bw = 1;
+    // grow the smaller contributor until the joint SQNR_qiy clears target
+    while crate::quant::sqnr_qiy_db(1, bw, bx, w, x) < snr_a_db + margin_db
+        && (bx < 16 || bw < 16)
+    {
+        // adding a bit where the marginal gain is larger
+        let grow_x = crate::quant::sqnr_qiy_db(1, bw, bx + 1, w, x)
+            >= crate::quant::sqnr_qiy_db(1, bw + 1, bx, w, x);
+        if grow_x {
+            bx += 1;
+        } else {
+            bw += 1;
+        }
+    }
+    let sqnr_qiy = crate::quant::sqnr_qiy_db(1, bw, bx, w, x);
+    let snr_a_cap = snr_a_total_db(snr_a_db, sqnr_qiy);
+    let by = crate::quant::criteria::mpc_min_bits(snr_a_cap, 0.5);
+    let sqnr_qy = crate::quant::criteria::mpc_sqnr_db(by, 4.0);
+    PrecisionAssignment {
+        bx,
+        bw,
+        by,
+        predicted_snr_t_db: snr_t_db(snr_a_cap, sqnr_qy),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::SignalStats;
+
+    #[test]
+    fn compose_basics() {
+        assert!((compose(&[100.0, 100.0]) - 50.0).abs() < 1e-9);
+        assert_eq!(compose(&[f64::INFINITY, f64::INFINITY]), f64::INFINITY);
+        assert!((compose(&[f64::INFINITY, 10.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nine_db_margin_gives_half_db_loss() {
+        // Sec. III-B: if SQNR >= SNR_a + 9 dB then SNR loss <= 0.5 dB.
+        let t = snr_a_total_db(30.0, 39.0);
+        assert!(30.0 - t <= 0.52, "{t}");
+        assert!(30.0 - t >= 0.4);
+    }
+
+    #[test]
+    fn snr_t_bounded_by_snr_a() {
+        for snr_a in [10.0, 20.0, 35.0] {
+            for q in [snr_a - 5.0, snr_a, snr_a + 20.0] {
+                assert!(snr_t_db(snr_a, q) <= snr_a + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn breakdown_consistency() {
+        let b = SnrBreakdown {
+            signal_var: 100.0,
+            qiy_var: 0.1,
+            analog_var: 1.0,
+            qy_var: 0.1,
+        };
+        let composed = snr_t_db(
+            snr_a_total_db(b.snr_a_db(), b.sqnr_qiy_db()),
+            crate::util::stats::db(b.signal_var / b.qy_var),
+        );
+        assert!((b.snr_t_db() - composed).abs() < 1e-9);
+    }
+
+    #[test]
+    fn assignment_reaches_snr_a() {
+        let w = SignalStats::uniform_signed(1.0);
+        let x = SignalStats::uniform_unsigned(1.0);
+        let a = assign_precisions(30.0, 9.0, &w, &x);
+        assert!(30.0 - a.predicted_snr_t_db < 1.0, "{a:?}");
+        assert!(a.bx <= 8 && a.bw <= 8, "{a:?}");
+        // Higher SNR_a needs more bits everywhere.
+        let a2 = assign_precisions(40.0, 9.0, &w, &x);
+        assert!(a2.bx + a2.bw > a.bx + a.bw);
+        assert!(a2.by > a.by);
+    }
+}

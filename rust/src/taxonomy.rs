@@ -1,0 +1,141 @@
+//! Table I: a taxonomy of published CMOS IMC designs classified by
+//! in-memory compute model (QS / IS / QR) and analog-core / ADC precision,
+//! as data, plus the consistency queries used to regenerate the table.
+
+use crate::mc::ArchKind;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdcPrecision {
+    Bits(u32),
+    Analog,    // continuous-valued input (Liu et al.)
+    Effective10x(u32), // e.g. 3.46 b stored as 34.6/10
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightPrecision {
+    Bits(u32),
+    Ternary,
+    Analog,
+}
+
+#[derive(Clone, Debug)]
+pub struct ImcDesign {
+    pub name: &'static str,
+    pub year: u32,
+    pub qs: bool,
+    pub is: bool,
+    pub qr: bool,
+    pub bx: WeightPrecision,
+    pub bw: WeightPrecision,
+    pub b_adc: AdcPrecision,
+}
+
+impl ImcDesign {
+    pub fn compute_models(&self) -> Vec<ArchKind> {
+        let mut v = Vec::new();
+        if self.qs {
+            v.push(ArchKind::Qs);
+        }
+        if self.qr {
+            v.push(ArchKind::Qr);
+        }
+        // IS maps onto the QS noise physics at the architecture level.
+        v
+    }
+}
+
+use AdcPrecision as A;
+use WeightPrecision as W;
+
+/// The 23 designs of Table I.
+pub fn table1() -> Vec<ImcDesign> {
+    fn d(
+        name: &'static str,
+        year: u32,
+        (qs, is, qr): (bool, bool, bool),
+        bx: W,
+        bw: W,
+        b_adc: A,
+    ) -> ImcDesign {
+        ImcDesign {
+            name,
+            year,
+            qs,
+            is,
+            qr,
+            bx,
+            bw,
+            b_adc,
+        }
+    }
+    vec![
+        d("Kang et al. [6]", 2018, (true, false, true), W::Bits(8), W::Bits(8), A::Bits(8)),
+        d("Biswas et al. [8]", 2018, (false, false, true), W::Bits(8), W::Bits(1), A::Bits(7)),
+        d("Zhang et al. [5]", 2017, (true, false, false), W::Bits(5), W::Bits(1), A::Bits(1)),
+        d("Valavi et al. [12]", 2018, (false, false, true), W::Bits(1), W::Bits(1), A::Bits(1)),
+        d("Khwa et al. [11]", 2018, (false, true, false), W::Bits(1), W::Bits(1), A::Bits(1)),
+        d("Jiang et al. [7]", 2018, (false, true, false), W::Bits(1), W::Bits(1), A::Effective10x(35)),
+        d("Si et al. [38]", 2019, (true, false, true), W::Bits(2), W::Bits(5), A::Bits(5)),
+        d("Jia et al. [39]", 2018, (false, false, true), W::Bits(1), W::Bits(1), A::Bits(8)),
+        d("Okumura et al. [40]", 2019, (false, true, false), W::Bits(1), W::Ternary, A::Bits(8)),
+        d("Kim et al. [13]", 2019, (false, true, false), W::Bits(1), W::Bits(1), A::Bits(1)),
+        d("Guo et al. [41]", 2019, (true, false, false), W::Bits(1), W::Bits(1), A::Bits(3)),
+        d("Yue et al. [42]", 2020, (true, false, true), W::Bits(2), W::Bits(5), A::Bits(5)),
+        d("Su et al. [15]", 2020, (true, false, false), W::Bits(2), W::Bits(1), A::Bits(5)),
+        d("Dong et al. [14]", 2020, (true, false, true), W::Bits(4), W::Bits(4), A::Bits(4)),
+        d("Si et al. [16]", 2020, (true, false, false), W::Bits(2), W::Bits(2), A::Bits(5)),
+        d("Jiang et al. [43]", 2020, (false, false, true), W::Bits(1), W::Bits(1), A::Bits(5)),
+        d("Jaiswal et al. [17]", 2019, (false, true, false), W::Bits(4), W::Bits(4), A::Bits(4)),
+        d("Ali et al. [18]", 2020, (true, false, true), W::Bits(4), W::Bits(4), A::Bits(4)),
+        d("Si et al. [19]", 2019, (true, false, false), W::Bits(1), W::Bits(1), A::Bits(1)),
+        d("Liu et al. [20]", 2020, (false, true, false), W::Analog, W::Bits(1), A::Bits(1)),
+        d("Zhang et al. [21]", 2020, (false, true, false), W::Bits(8), W::Bits(8), A::Bits(8)),
+        d("Gong et al. [22]", 2020, (true, false, false), W::Bits(2), W::Bits(3), A::Bits(8)),
+        d("Agrawal et al. [23]", 2019, (false, false, true), W::Bits(1), W::Bits(1), A::Bits(5)),
+    ]
+}
+
+/// Count designs per compute model (designs may use several).
+pub fn model_counts(designs: &[ImcDesign]) -> (usize, usize, usize) {
+    (
+        designs.iter().filter(|d| d.qs).count(),
+        designs.iter().filter(|d| d.is).count(),
+        designs.iter().filter(|d| d.qr).count(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_three_designs() {
+        assert_eq!(table1().len(), 23);
+    }
+
+    #[test]
+    fn every_design_uses_at_least_one_model() {
+        for d in table1() {
+            assert!(d.qs || d.is || d.qr, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn model_counts_plausible() {
+        let (qs, is, qr) = model_counts(&table1());
+        assert!(qs >= 10, "{qs}");
+        assert!(is >= 6, "{is}");
+        assert!(qr >= 8, "{qr}");
+    }
+
+    #[test]
+    fn binarized_designs_dominate() {
+        // Paper Sec. IV-B2: most IMCs binarize to cope with limited SNR_a.
+        let low_prec = table1()
+            .iter()
+            .filter(|d| matches!(d.bw, WeightPrecision::Bits(b) if b <= 2)
+                || matches!(d.bw, WeightPrecision::Ternary))
+            .count();
+        assert!(low_prec >= 12, "{low_prec}");
+    }
+}

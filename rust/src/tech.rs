@@ -1,0 +1,278 @@
+//! Technology parameters: the paper's Table II (65 nm) plus ITRS-trend
+//! scaled nodes for the Fig. 13 technology-scaling study.
+//!
+//! Substitution note (DESIGN.md §1): the paper cites the ITRS roadmap
+//! tables for scaled-node parameters without reproducing them; the values
+//! here encode the publicly-known trends the paper's conclusions rest on
+//! (lower V_dd and V_dd/V_t ratio, smaller capacitances, faster gates,
+//! larger normalized V_t variation; FDSOI at <= 22 nm).
+
+/// Boltzmann constant [J/K].
+pub const K_BOLTZMANN: f64 = 1.38e-23;
+
+/// Absolute temperature [K] (Table II).
+pub const TEMPERATURE: f64 = 300.0;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TechNode {
+    /// Feature size in nm (identifier).
+    pub node_nm: u32,
+    /// Supply voltage V_dd [V].
+    pub v_dd: f64,
+    /// Access-transistor threshold V_t [V].
+    pub v_t: f64,
+    /// Threshold-voltage variation sigma_Vt [V].
+    pub sigma_vt: f64,
+    /// alpha-law exponent (Table II: 1.8 at 65 nm).
+    pub alpha: f64,
+    /// Current factor k' [A/V^alpha] at W/L = 1.
+    pub k_prime: f64,
+    /// Unit WL-driver stage delay T_0 [s].
+    pub t0: f64,
+    /// Stage-delay variation sigma_T0 [s].
+    pub sigma_t0: f64,
+    /// WL pulse rise/fall time [s] (T_r = T_f assumed).
+    pub t_rise: f64,
+    /// Bit-line capacitance for a 512-row array [F].
+    pub c_bl_512: f64,
+    /// Maximum BL discharge Delta-V_BL,max [V].
+    pub dv_bl_max: f64,
+    /// Access-transistor transconductance g_m [A/V].
+    pub g_m: f64,
+    /// Switch-gate charge-injection capacitance W*L*C_ox [F].
+    pub wl_cox: f64,
+    /// MOM-capacitor Pelgrom coefficient kappa [sqrt(F) * 1e-7.5...] in
+    /// fF^0.5 units: sigma_C = kappa * sqrt(C/fF) fF.
+    pub kappa_ff: f64,
+    /// Charge-injection layout constant p in [0, 1].
+    pub p_inj: f64,
+}
+
+impl TechNode {
+    /// The paper's Table II 65 nm CMOS process.
+    pub fn n65() -> Self {
+        Self {
+            node_nm: 65,
+            v_dd: 1.0,
+            v_t: 0.4,
+            sigma_vt: 23.8e-3,
+            alpha: 1.8,
+            k_prime: 220e-6,
+            t0: 100e-12,
+            sigma_t0: 2.3e-12,
+            t_rise: 20e-12,
+            c_bl_512: 270e-15,
+            dv_bl_max: 0.9,
+            g_m: 66e-6,
+            wl_cox: 0.31e-15,
+            kappa_ff: 0.08,
+            p_inj: 0.5,
+        }
+    }
+
+    pub fn n45() -> Self {
+        Self {
+            node_nm: 45,
+            v_dd: 0.95,
+            v_t: 0.38,
+            sigma_vt: 26.0e-3,
+            k_prime: 300e-6,
+            t0: 80e-12,
+            sigma_t0: 2.0e-12,
+            t_rise: 16e-12,
+            c_bl_512: 187e-15,
+            dv_bl_max: 0.85,
+            g_m: 75e-6,
+            wl_cox: 0.24e-15,
+            ..Self::n65()
+        }
+    }
+
+    pub fn n32() -> Self {
+        Self {
+            node_nm: 32,
+            v_dd: 0.9,
+            v_t: 0.36,
+            sigma_vt: 28.5e-3,
+            k_prime: 380e-6,
+            t0: 60e-12,
+            sigma_t0: 1.8e-12,
+            t_rise: 12e-12,
+            c_bl_512: 133e-15,
+            dv_bl_max: 0.8,
+            g_m: 85e-6,
+            wl_cox: 0.18e-15,
+            ..Self::n65()
+        }
+    }
+
+    /// FDSOI from 22 nm down (paper Sec. V-D): lower A_vt resets sigma_Vt.
+    pub fn n22() -> Self {
+        Self {
+            node_nm: 22,
+            v_dd: 0.8,
+            v_t: 0.33,
+            sigma_vt: 22.0e-3,
+            k_prime: 450e-6,
+            t0: 45e-12,
+            sigma_t0: 1.5e-12,
+            t_rise: 9e-12,
+            c_bl_512: 91e-15,
+            dv_bl_max: 0.7,
+            g_m: 100e-6,
+            wl_cox: 0.14e-15,
+            kappa_ff: 0.07,
+            ..Self::n65()
+        }
+    }
+
+    pub fn n11() -> Self {
+        Self {
+            node_nm: 11,
+            v_dd: 0.72,
+            v_t: 0.31,
+            sigma_vt: 26.0e-3,
+            k_prime: 600e-6,
+            t0: 30e-12,
+            sigma_t0: 1.2e-12,
+            t_rise: 6e-12,
+            c_bl_512: 46e-15,
+            dv_bl_max: 0.62,
+            g_m: 120e-6,
+            wl_cox: 0.08e-15,
+            kappa_ff: 0.065,
+            ..Self::n65()
+        }
+    }
+
+    pub fn n7() -> Self {
+        Self {
+            node_nm: 7,
+            v_dd: 0.65,
+            v_t: 0.30,
+            sigma_vt: 30.0e-3,
+            k_prime: 700e-6,
+            t0: 22e-12,
+            sigma_t0: 1.0e-12,
+            t_rise: 5e-12,
+            c_bl_512: 29e-15,
+            dv_bl_max: 0.55,
+            g_m: 140e-6,
+            wl_cox: 0.06e-15,
+            kappa_ff: 0.06,
+            ..Self::n65()
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "65" | "65nm" => Some(Self::n65()),
+            "45" | "45nm" => Some(Self::n45()),
+            "32" | "32nm" => Some(Self::n32()),
+            "22" | "22nm" => Some(Self::n22()),
+            "11" | "11nm" => Some(Self::n11()),
+            "7" | "7nm" => Some(Self::n7()),
+            _ => None,
+        }
+    }
+
+    /// The Fig. 13 node set.
+    pub fn scaling_set() -> Vec<Self> {
+        vec![Self::n65(), Self::n22(), Self::n11(), Self::n7()]
+    }
+
+    /// All supported nodes, largest first.
+    pub fn all() -> Vec<Self> {
+        vec![
+            Self::n65(),
+            Self::n45(),
+            Self::n32(),
+            Self::n22(),
+            Self::n11(),
+            Self::n7(),
+        ]
+    }
+
+    /// Bit-line capacitance for an `rows`-row array (proportional).
+    pub fn c_bl(&self, rows: usize) -> f64 {
+        self.c_bl_512 * rows as f64 / 512.0
+    }
+
+    /// SRAM cell read current at a given WL voltage (alpha-law, eq. 31).
+    pub fn cell_current(&self, v_wl: f64, wl_ratio: f64) -> f64 {
+        let vov = (v_wl - self.v_t).max(0.0);
+        wl_ratio * self.k_prime * vov.powf(self.alpha)
+    }
+
+    /// Eq. (18): normalized cell-current mismatch sigma_D = sigma_I/I.
+    pub fn sigma_d(&self, v_wl: f64) -> f64 {
+        let vov = v_wl - self.v_t;
+        assert!(vov > 0.0, "V_WL {} must exceed V_t {}", v_wl, self.v_t);
+        self.alpha * self.sigma_vt / vov
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values_match_paper() {
+        let t = TechNode::n65();
+        assert_eq!(t.k_prime, 220e-6);
+        assert_eq!(t.alpha, 1.8);
+        assert_eq!(t.sigma_vt, 23.8e-3);
+        assert_eq!(t.v_t, 0.4);
+        assert_eq!(t.t0, 100e-12);
+        assert_eq!(t.kappa_ff, 0.08);
+        assert_eq!(t.p_inj, 0.5);
+        assert_eq!(t.wl_cox, 0.31e-15);
+        assert_eq!(t.g_m, 66e-6);
+    }
+
+    #[test]
+    fn sigma_d_range_matches_paper_8_to_25_pct() {
+        // Paper Sec. IV-B: sigma_Ij/Ij ranges 8% to 25% over the V_WL range.
+        let t = TechNode::n65();
+        let hi = t.sigma_d(0.58); // low V_WL end
+        let lo = t.sigma_d(0.93); // high V_WL end
+        assert!(lo > 0.07 && lo < 0.09, "{lo}");
+        assert!(hi > 0.2 && hi < 0.26, "{hi}");
+    }
+
+    #[test]
+    fn cell_current_magnitude() {
+        // ~ tens of uA per Sec. IV-B.
+        let t = TechNode::n65();
+        let i = t.cell_current(0.8, 1.0);
+        assert!(i > 10e-6 && i < 100e-6, "{i}");
+    }
+
+    #[test]
+    fn scaling_trends() {
+        let nodes = TechNode::all();
+        for pair in nodes.windows(2) {
+            let (a, b) = (&pair[0], &pair[1]);
+            assert!(b.node_nm < a.node_nm);
+            assert!(b.v_dd < a.v_dd, "V_dd decreases");
+            assert!(b.c_bl_512 < a.c_bl_512, "C_BL decreases");
+            assert!(b.t0 < a.t0, "gates get faster");
+            // V_dd/V_t headroom ratio shrinks with scaling
+            assert!(b.v_dd / b.v_t < a.v_dd / a.v_t + 1e-9);
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(TechNode::by_name("65").unwrap().node_nm, 65);
+        assert_eq!(TechNode::by_name("7nm").unwrap().node_nm, 7);
+        assert!(TechNode::by_name("3").is_none());
+    }
+
+    #[test]
+    fn c_bl_scales_with_rows() {
+        let t = TechNode::n65();
+        assert!((t.c_bl(512) - 270e-15).abs() < 1e-20);
+        assert!((t.c_bl(256) - 135e-15).abs() < 1e-20);
+    }
+}

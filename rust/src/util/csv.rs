@@ -1,0 +1,114 @@
+//! CSV emission for figure/table data (`results/*.csv`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Column-ordered CSV writer with RFC-4180-style quoting.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: row of f64 values formatted with 6 significant digits.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        let formatted: Vec<String> = cells.iter().map(|x| fmt_num(*x)).collect();
+        self.row(&formatted);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&join_quoted(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&join_quoted(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(self.to_string().as_bytes())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+pub fn fmt_num(x: f64) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+fn join_quoted(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_csv() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "x,y".into()]);
+        w.row_f64(&[2.5, 3.0]);
+        let s = w.to_string();
+        assert_eq!(s, "a,b\n1,\"x,y\"\n2.500000,3\n");
+        assert_eq!(w.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut w = CsvWriter::new(&["q"]);
+        w.row(&["say \"hi\"".into()]);
+        assert!(w.to_string().contains("\"say \"\"hi\"\"\""));
+    }
+}

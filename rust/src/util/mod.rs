@@ -1,0 +1,11 @@
+//! Dependency-free infrastructure: RNG, statistics, JSON, CSV, tables.
+//!
+//! The offline build vendors only the `xla` crate closure, so everything a
+//! typical project would pull from crates.io lives here, each module with
+//! its own unit tests.
+
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,216 @@
+//! Deterministic pseudo-random number generation for the native
+//! Monte-Carlo simulator and the property-testing framework.
+//!
+//! The build is fully offline (no `rand` crate), so we implement the two
+//! standard small generators used throughout: SplitMix64 for seeding and
+//! PCG64 (XSL-RR 128/64) as the workhorse stream, plus Gaussian sampling
+//! via the polar (Marsaglia) method.
+
+/// SplitMix64: used to expand a small seed into independent stream seeds.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG XSL-RR 128/64: 128-bit LCG state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed from a u64; stream id derives from the seed via SplitMix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let i = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let mut rng = Self {
+            state: 0,
+            inc: (i << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(s);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Independent child stream `k` (stable: does not advance `self`).
+    pub fn stream(&self, k: u64) -> Self {
+        let mut sm = SplitMix64::new((self.state >> 64) as u64 ^ k.wrapping_mul(0x9E37_79B9));
+        Pcg64::new(sm.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let v = self.next_u64();
+            let hi = ((v as u128 * n as u128) >> 64) as u64;
+            let lo = (v as u128 * n as u128) as u64;
+            if lo >= n.wrapping_neg() % n || n.is_power_of_two() {
+                return hi;
+            }
+            // retry only in the tiny biased region
+            if lo >= n {
+                return hi;
+            }
+        }
+    }
+
+    /// Standard normal via the polar (Marsaglia) method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// N(mu, sigma^2) sample.
+    #[inline]
+    pub fn normal_scaled(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Fill a slice with U[lo, hi) samples.
+    pub fn fill_uniform(&mut self, out: &mut [f64], lo: f64, hi: f64) {
+        for v in out.iter_mut() {
+            *v = self.uniform_in(lo, hi);
+        }
+    }
+
+    /// Fill a slice with standard normal samples.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values_differ() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn pcg_is_deterministic() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_are_independent() {
+        let root = Pcg64::new(7);
+        let mut s1 = root.stream(1);
+        let mut s2 = root.stream(2);
+        let same = (0..64).filter(|_| s1.next_u64() == s2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Pcg64::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let u = r.uniform();
+            s += u;
+            s2 += u * u;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(13);
+        let n = 200_000;
+        let (mut s, mut s2, mut s4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let g = r.normal();
+            s += g;
+            s2 += g * g;
+            s4 += g * g * g * g;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let kurt = s4 / n as f64 / (var * var);
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+        assert!((kurt - 3.0).abs() < 0.1, "kurt={kurt}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::new(17);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,219 @@
+//! Streaming statistics and dB helpers used by every SNR measurement.
+
+/// Numerically-stable streaming mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    /// Merge another accumulator (parallel aggregation; Chan's formula).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Paired-sample SNR accumulator: signal power from the reference stream,
+/// noise power from (observed - reference). This is how every compute-SNR
+/// metric of eq. (7) is estimated from Monte-Carlo ensembles.
+#[derive(Clone, Debug, Default)]
+pub struct SnrAccumulator {
+    pub signal: Welford,
+    pub noise: Welford,
+}
+
+impl SnrAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, reference: f64, observed: f64) {
+        self.signal.push(reference);
+        self.noise.push(observed - reference);
+    }
+
+    pub fn merge(&mut self, other: &SnrAccumulator) {
+        self.signal.merge(&other.signal);
+        self.noise.merge(&other.noise);
+    }
+
+    pub fn snr(&self) -> f64 {
+        let nv = self.noise.variance();
+        if nv <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.signal.variance() / nv
+        }
+    }
+
+    pub fn snr_db(&self) -> f64 {
+        db(self.snr())
+    }
+
+    pub fn count(&self) -> u64 {
+        self.signal.count()
+    }
+}
+
+/// 10*log10 with -inf guard.
+#[inline]
+pub fn db(x: f64) -> f64 {
+    if x <= 0.0 {
+        f64::NEG_INFINITY
+    } else {
+        10.0 * x.log10()
+    }
+}
+
+/// Inverse of `db`.
+#[inline]
+pub fn from_db(x_db: f64) -> f64 {
+    10f64.powf(x_db / 10.0)
+}
+
+/// Population variance of a slice.
+pub fn variance(xs: &[f64]) -> f64 {
+    let mut w = Welford::new();
+    w.extend(xs);
+    w.variance()
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// p-quantile (0..=1) by sorting a copy; fine for reporting-sized data.
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() - 1) as f64 * p).round() as usize;
+    v[idx]
+}
+
+/// Median absolute deviation (robust spread for bench reporting).
+pub fn median_abs_dev(xs: &[f64]) -> f64 {
+    let med = quantile(xs, 0.5);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    quantile(&devs, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        w.extend(&xs);
+        let m = xs.iter().sum::<f64>() / 5.0;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / 5.0;
+        assert!((w.mean() - m).abs() < 1e-12);
+        assert!((w.variance() - v).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut a = Welford::new();
+        a.extend(&xs[..37]);
+        let mut b = Welford::new();
+        b.extend(&xs[37..]);
+        a.merge(&b);
+        let mut full = Welford::new();
+        full.extend(&xs);
+        assert!((a.mean() - full.mean()).abs() < 1e-12);
+        assert!((a.variance() - full.variance()).abs() < 1e-12);
+        assert_eq!(a.count(), 100);
+    }
+
+    #[test]
+    fn snr_accumulator_known_ratio() {
+        // signal var 4, noise var 0.04 -> SNR = 100 = 20 dB
+        let mut acc = SnrAccumulator::new();
+        let mut rng = crate::util::rng::Pcg64::new(5);
+        for _ in 0..200_000 {
+            let s = rng.normal_scaled(0.0, 2.0);
+            let n = rng.normal_scaled(0.0, 0.2);
+            acc.push(s, s + n);
+        }
+        assert!((acc.snr_db() - 20.0).abs() < 0.2, "{}", acc.snr_db());
+    }
+
+    #[test]
+    fn db_roundtrip() {
+        for x in [0.01, 1.0, 42.0, 1e6] {
+            assert!((from_db(db(x)) - x).abs() / x < 1e-12);
+        }
+        assert_eq!(db(0.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn quantile_and_mad() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(median_abs_dev(&xs), 1.0);
+    }
+}

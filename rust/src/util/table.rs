@@ -1,0 +1,110 @@
+//! ASCII table rendering for CLI figure/table output.
+
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:>width$} ", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a dB value for display.
+pub fn fmt_db(x: f64) -> String {
+    if x.is_infinite() {
+        if x > 0.0 { "inf".into() } else { "-inf".into() }
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Format an energy in joules with an SI prefix (fJ/pJ/nJ).
+pub fn fmt_energy(x: f64) -> String {
+    let ax = x.abs();
+    if ax < 1e-12 {
+        format!("{:.2} fJ", x * 1e15)
+    } else if ax < 1e-9 {
+        format!("{:.2} pJ", x * 1e12)
+    } else if ax < 1e-6 {
+        format!("{:.2} nJ", x * 1e9)
+    } else {
+        format!("{:.3e} J", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new(&["name", "v"]).with_title("T");
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.starts_with("T\n"));
+        assert!(s.contains("long-name"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    fn energy_prefixes() {
+        assert_eq!(fmt_energy(3.2e-15), "3.20 fJ");
+        assert_eq!(fmt_energy(4.5e-12), "4.50 pJ");
+        assert_eq!(fmt_energy(7.0e-9), "7.00 nJ");
+    }
+}

@@ -1,0 +1,188 @@
+//! End-to-end integration tests over the native backend: regenerate the
+//! paper's figures at reduced trial counts and assert the headline
+//! qualitative claims (DESIGN.md §4) hold.
+
+use imclim::arch::{AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
+use imclim::compute::{qr::QrModel, qs::QsModel};
+use imclim::figures::{self, FigCtx};
+use imclim::tech::TechNode;
+
+fn ctx(tmp: &str) -> FigCtx {
+    let dir = std::env::temp_dir().join(format!("imclim-test-{tmp}"));
+    let mut c = FigCtx::native(dir);
+    c.trials = 1024;
+    c
+}
+
+#[test]
+fn fig4a_mpc_flat_bgc_grows() {
+    let s = figures::run("fig4a", &ctx("fig4a")).unwrap().remove(0);
+    // MPC: 8 bits meet ~40 dB independent of N.
+    assert!(s.check("mpc_at_8b_db").unwrap() >= 40.0);
+    // BGC assigns 16-20+ bits growing with N (paper: 16..20 for the
+    // plotted range; our range extends to 2^13).
+    assert!(s.check("bgc_bits_min").unwrap() >= 16.0);
+    assert!(s.check("bgc_bits_max").unwrap() > s.check("bgc_bits_min").unwrap());
+    // closed form matches MC within 1 dB
+    assert!(s.check("mpc_mc_err_max_db").unwrap() < 1.0);
+}
+
+#[test]
+fn fig4b_sqnr_peaks_at_zeta_4() {
+    let s = figures::run("fig4b", &ctx("fig4b")).unwrap().remove(0);
+    let z = s.check("best_zeta").unwrap();
+    assert!((3.0..=5.0).contains(&z), "{z}");
+    assert!(s.check("max_e_s_gap_db").unwrap() < 1.0);
+}
+
+#[test]
+fn fig12_adc_energy_shapes() {
+    let s = figures::run("fig12", &ctx("fig12")).unwrap().remove(0);
+    // QS-Arch: MPC ADC energy non-increasing with N.
+    assert!(s.check("qs_mpc_growth").unwrap() <= 1.05);
+    // QR/CM: BGC costs off-scale more than MPC at large N.
+    assert!(s.check("qr_bgc_over_mpc").unwrap() > 10.0);
+    assert!(s.check("cm_bgc_over_mpc").unwrap() > 10.0);
+    // QR/CM MPC ADC energy grows with N.
+    assert!(s.check("qr_mpc_growth").unwrap() > 2.0);
+    assert!(s.check("cm_mpc_growth").unwrap() > 2.0);
+}
+
+#[test]
+fn fig13_scaling_hurts_qs_not_qr() {
+    let s = figures::run("fig13", &ctx("fig13")).unwrap().remove(0);
+    let qs65 = s.check("qs_max_snr_65").unwrap();
+    let qs7 = s.check("qs_max_snr_7").unwrap();
+    assert!(qs65 > qs7, "QS max SNR_A must degrade with scaling: {qs65} vs {qs7}");
+    // QR stays within ~2 dB of its 65 nm max at 7 nm (quantization-limited)
+    let qr65 = s.check("qr_max_snr_65").unwrap();
+    let qr7 = s.check("qr_max_snr_7").unwrap();
+    assert!((qr65 - qr7).abs() < 3.0, "{qr65} {qr7}");
+}
+
+#[test]
+fn table1_and_table2_render() {
+    let s1 = figures::run("table1", &ctx("t1")).unwrap().remove(0);
+    assert_eq!(s1.check("designs").unwrap(), 23.0);
+    let s2 = figures::run("table2", &ctx("t2")).unwrap().remove(0);
+    assert!(s2.rows >= 12);
+}
+
+#[test]
+fn table3_e_vs_s_within_2db() {
+    let mut c = ctx("t3");
+    c.trials = 3000;
+    let s = figures::run("table3", &c).unwrap().remove(0);
+    assert!(
+        s.check("max_e_s_gap_db").unwrap() < 2.0,
+        "closed forms must track the simulator: {:?}",
+        s.checks
+    );
+}
+
+#[test]
+fn qr_reaches_high_snr_qs_cannot() {
+    // Conclusion bullet 3, the robust half: QR-based architectures are
+    // the ones that can deliver high compute SNR — QS-Arch has a hard
+    // SNR_a ceiling from V_t mismatch + headroom at any V_WL.
+    //
+    // (The "QS cheaper at low SNR" half reproduces only in the sub-10 dB
+    // corner under the eq. (26) ADC model: the k1 = 100 fJ/conversion
+    // floor times B_w*B_x conversions dominates QS-Arch's energy. See
+    // EXPERIMENTS.md §Deviations.)
+    let (w, x) = figures::uniform_stats();
+    let op = OpPoint::new(128, 6, 6, 8);
+
+    let qr_big = QrArch::new(QrModel::new(TechNode::n65(), 16.0));
+    assert!(qr_big.noise(&op, &w, &x).snr_a_db() > 30.0);
+    assert!(
+        QrArch::new(QrModel::new(TechNode::n65(), 9.0))
+            .noise(&op, &w, &x)
+            .snr_a_db()
+            > 28.0
+    );
+    let qs_best = (55..=95)
+        .map(|v| {
+            QsArch::new(QsModel::new(TechNode::n65(), v as f64 / 100.0))
+                .noise(&op, &w, &x)
+                .snr_a_db()
+        })
+        .fold(f64::MIN, f64::max);
+    assert!(qs_best < 30.0, "QS-Arch capped below 30 dB at N=128: {qs_best}");
+
+    // And the per-conversion accounting behind the deviation: QS-Arch
+    // pays Bw*Bx ADC conversions per DP, QR-Arch only Bw.
+    let qs = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+    let qr = QrArch::new(QrModel::new(TechNode::n65(), 1.0));
+    let e_qs_adc = qs.energy(&op, AdcCriterion::Mpc, &w, &x).adc;
+    let e_qr_adc = qr.energy(&op, AdcCriterion::Mpc, &w, &x).adc;
+    assert!(e_qs_adc > 2.0 * e_qr_adc, "{e_qs_adc} vs {e_qr_adc}");
+}
+
+#[test]
+fn snr_t_bounded_by_snr_a_everywhere() {
+    // Conclusion bullet 1 over a grid of operating points.
+    let (w, x) = figures::uniform_stats();
+    for n in [32usize, 128, 512] {
+        for b_adc in [4u32, 8, 12] {
+            let op = OpPoint::new(n, 6, 6, b_adc);
+            for arch in [
+                Box::new(QsArch::new(QsModel::new(TechNode::n65(), 0.7))) as Box<dyn ImcArch>,
+                Box::new(QrArch::new(QrModel::new(TechNode::n65(), 3.0))),
+                Box::new(CmArch::new(
+                    QsModel::new(TechNode::n65(), 0.7),
+                    QrModel::new(TechNode::n65(), 3.0),
+                )),
+            ] {
+                let nb = arch.noise(&op, &w, &x);
+                assert!(nb.snr_t_db(1e-6) <= nb.snr_a_db() + 1e-9);
+                assert!(nb.snr_a_total_db() <= nb.snr_a_db() + 1e-9);
+            }
+        }
+    }
+}
+
+#[test]
+fn cm_single_conversion_beats_qs_adc_energy() {
+    // Conclusion bullet 8: CM avoids the Bw*Bx ADC conversions.
+    let (w, x) = figures::uniform_stats();
+    let op = OpPoint::new(128, 6, 6, 8);
+    let qs = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+    let cm = CmArch::new(
+        QsModel::new(TechNode::n65(), 0.8),
+        QrModel::new(TechNode::n65(), 3.0),
+    );
+    let e_qs = qs.energy(&op, AdcCriterion::Mpc, &w, &x).adc;
+    let e_cm = cm.energy(&op, AdcCriterion::Mpc, &w, &x).adc;
+    assert!(e_cm < e_qs / 4.0, "{e_cm} vs {e_qs}");
+}
+
+#[test]
+fn cli_sweep_and_assign_run() {
+    use imclim::cli::args::Args;
+    let args = Args::parse(
+        "sweep --arch qr --co 3 --n 64 --trials 256"
+            .split_whitespace()
+            .map(str::to_string),
+    );
+    imclim::cli::run(&args).unwrap();
+    let args = Args::parse(
+        "assign --snr-a 30".split_whitespace().map(str::to_string),
+    );
+    imclim::cli::run(&args).unwrap();
+}
+
+#[test]
+fn ablation_correlated_mismatch_costs_about_3db() {
+    let mut c = ctx("abl");
+    c.trials = 2048;
+    let s = figures::run("ablation", &c).unwrap().remove(0);
+    let drop = s.check("corr_mean_drop_db").unwrap();
+    assert!((1.5..5.0).contains(&drop), "{drop}");
+    // Changing the input distribution moves signal power (E[x^2]) and
+    // bit statistics together, so SNR_a and SQNR_qiy shift by a similar
+    // amount — the *ratios* of the noise decomposition are stable.
+    let a = s.check("dist_snr_a_shift_db").unwrap();
+    let q = s.check("dist_sqnr_qiy_shift_db").unwrap();
+    assert!((a - q).abs() < 2.5, "snr_a shift {a} vs sqnr shift {q}");
+}

@@ -1,0 +1,178 @@
+//! Three-way agreement: closed form (Table III) vs native Rust MC vs the
+//! AOT JAX/Pallas artifacts through PJRT — the central validation that
+//! the three independent implementations describe the same physics.
+//! Uses the *_small artifacts (16 trials x 64 cells) for speed.
+
+use std::path::PathBuf;
+
+use imclim::arch::{pvec, ImcArch, OpPoint};
+use imclim::arch::{CmArch, QrArch, QsArch};
+use imclim::compute::{qr::QrModel, qs::QsModel};
+use imclim::coordinator::{run_point, Backend, PjrtService, SweepPoint};
+use imclim::mc::ArchKind;
+use imclim::quant::SignalStats;
+use imclim::tech::TechNode;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn stats() -> (SignalStats, SignalStats) {
+    (
+        SignalStats::uniform_signed(1.0),
+        SignalStats::uniform_unsigned(1.0),
+    )
+}
+
+/// |a - b| in dB terms must be below `tol_db`.
+fn assert_db_close(a: f64, b: f64, tol_db: f64, what: &str) {
+    assert!(
+        (a - b).abs() < tol_db,
+        "{what}: {a:.2} dB vs {b:.2} dB (tol {tol_db})"
+    );
+}
+
+#[test]
+fn three_way_agreement_all_architectures() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let service = PjrtService::spawn(dir, 4);
+    let handle = service.handle();
+    let (w, x) = stats();
+    let trials = 2048;
+
+    struct Case {
+        name: &'static str,
+        kind: ArchKind,
+        params: [f64; pvec::P],
+        closed_snr_a_db: f64,
+        /// closed-form tolerance (looser where Table III approximates)
+        tol_closed: f64,
+    }
+    let mut cases = Vec::new();
+
+    // QS-Arch at N=48 (inside the plateau for the small artifact's N_max=64)
+    {
+        let arch = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+        let op = OpPoint::new(48, 6, 6, 14);
+        cases.push(Case {
+            name: "qs",
+            kind: ArchKind::Qs,
+            params: arch.pjrt_params(&op, &w, &x),
+            closed_snr_a_db: arch.noise(&op, &w, &x).snr_a_total_db(),
+            tol_closed: 1.0,
+        });
+    }
+    // QR-Arch at C_o = 1 fF
+    {
+        let arch = QrArch::new(QrModel::new(TechNode::n65(), 1.0));
+        let op = OpPoint::new(64, 6, 7, 14);
+        cases.push(Case {
+            name: "qr",
+            kind: ArchKind::Qr,
+            params: arch.pjrt_params(&op, &w, &x),
+            closed_snr_a_db: arch.noise(&op, &w, &x).snr_a_total_db(),
+            tol_closed: 1.2,
+        });
+    }
+    // CM at B_w = 6
+    {
+        let arch = CmArch::new(
+            QsModel::new(TechNode::n65(), 0.8),
+            QrModel::new(TechNode::n65(), 3.0),
+        );
+        let op = OpPoint::new(64, 6, 6, 14);
+        cases.push(Case {
+            name: "cm",
+            kind: ArchKind::Cm,
+            params: arch.pjrt_params(&op, &w, &x),
+            closed_snr_a_db: arch.noise(&op, &w, &x).snr_a_total_db(),
+            tol_closed: 1.2,
+        });
+    }
+
+    for c in cases {
+        let point = SweepPoint::new(format!("xcheck/{}", c.name), c.kind, c.params)
+            .with_trials(trials)
+            .with_seed(0x5EED);
+        let native = run_point(&point, &Backend::Native).unwrap();
+        let pjrt = run_point(
+            &point,
+            &Backend::Pjrt {
+                handle: handle.clone(),
+                suffix: "_small",
+            },
+        )
+        .unwrap();
+
+        // native MC vs PJRT/Pallas MC: same physics, independent code +
+        // RNGs; agreement within MC ensemble error (~0.6 dB at 2k trials)
+        assert_db_close(
+            native.snr_a_total_db,
+            pjrt.snr_a_total_db,
+            1.0,
+            &format!("{} native-vs-pjrt SNR_A", c.name),
+        );
+        assert_db_close(
+            native.sqnr_qiy_db,
+            pjrt.sqnr_qiy_db,
+            1.0,
+            &format!("{} native-vs-pjrt SQNR_qiy", c.name),
+        );
+        // closed form vs both simulators
+        assert_db_close(
+            c.closed_snr_a_db,
+            native.snr_a_total_db,
+            c.tol_closed,
+            &format!("{} closed-vs-native SNR_A", c.name),
+        );
+        assert_db_close(
+            c.closed_snr_a_db,
+            pjrt.snr_a_total_db,
+            c.tol_closed + 0.5,
+            &format!("{} closed-vs-pjrt SNR_A", c.name),
+        );
+    }
+}
+
+#[test]
+fn pjrt_snr_t_saturates_with_adc_bits() {
+    // Fig. 9(b) behaviour through the PJRT path.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let service = PjrtService::spawn(dir, 4);
+    let handle = service.handle();
+    let (w, x) = stats();
+    let arch = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+
+    let snr_t = |b_adc: u32| {
+        let op = OpPoint::new(48, 6, 6, b_adc);
+        let point = SweepPoint::new(
+            format!("sat/{b_adc}"),
+            ArchKind::Qs,
+            arch.pjrt_params(&op, &w, &x),
+        )
+        .with_trials(1024)
+        .with_seed(77);
+        run_point(
+            &point,
+            &Backend::Pjrt {
+                handle: handle.clone(),
+                suffix: "_small",
+            },
+        )
+        .unwrap()
+    };
+    let low = snr_t(2);
+    let mid = snr_t(5);
+    let high = snr_t(9);
+    assert!(low.snr_t_db < mid.snr_t_db);
+    assert!(mid.snr_t_db <= high.snr_t_db + 0.3);
+    // at 9 bits the ADC no longer limits: SNR_T ~ SNR_A
+    assert!((high.snr_t_db - high.snr_a_total_db).abs() < 0.7);
+}

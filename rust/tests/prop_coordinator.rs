@@ -1,0 +1,230 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! aggregation), using the in-repo `prop` framework.
+
+use imclim::arch::pvec;
+use imclim::coordinator::{run_sweep, Backend, SweepOptions, SweepPoint};
+use imclim::mc::{ArchKind, InputDist, McOutput, SnrAccumulator};
+use imclim::prop::{check, gens, Config};
+use imclim::util::rng::Pcg64;
+
+fn random_point(rng: &mut Pcg64, idx: usize) -> SweepPoint {
+    let kind = match rng.below(3) {
+        0 => ArchKind::Qs,
+        1 => ArchKind::Qr,
+        _ => ArchKind::Cm,
+    };
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = gens::usize_in(8, 96)(rng) as f64;
+    p[pvec::IDX_BX] = gens::u32_in(2, 8)(rng) as f64;
+    p[pvec::IDX_BW] = gens::u32_in(2, 8)(rng) as f64;
+    p[pvec::IDX_B_ADC] = gens::u32_in(3, 12)(rng) as f64;
+    match kind {
+        ArchKind::Qs => {
+            p[pvec::QS_IDX_SIGMA_D] = rng.uniform_in(0.0, 0.25);
+            p[pvec::QS_IDX_K_H] = rng.uniform_in(20.0, 200.0);
+            p[pvec::QS_IDX_V_C] = rng.uniform_in(10.0, 100.0);
+        }
+        ArchKind::Qr => {
+            p[pvec::QR_IDX_SIGMA_C] = rng.uniform_in(0.0, 0.1);
+            p[pvec::QR_IDX_SIGMA_THETA] = rng.uniform_in(0.0, 0.01);
+            p[pvec::QR_IDX_V_C] = rng.uniform_in(0.2, 1.0);
+        }
+        ArchKind::Cm => {
+            p[pvec::CM_IDX_SIGMA_D] = rng.uniform_in(0.0, 0.25);
+            p[pvec::CM_IDX_W_H] = rng.uniform_in(0.3, 2.0);
+            p[pvec::CM_IDX_V_C] = rng.uniform_in(0.05, 0.8);
+        }
+    }
+    SweepPoint::new(format!("prop/{idx}/{kind:?}"), kind, p)
+        .with_trials(gens::usize_in(32, 200)(rng))
+        .with_seed(rng.next_u64())
+}
+
+#[test]
+fn every_point_gets_exactly_one_result_any_worker_count() {
+    check(
+        Config { cases: 12, seed: 0xAB },
+        |rng: &mut Pcg64| {
+            let n = gens::usize_in(1, 12)(rng);
+            let workers = gens::usize_in(1, 9)(rng);
+            let points: Vec<SweepPoint> =
+                (0..n).map(|i| random_point(rng, i)).collect();
+            (points, workers)
+        },
+        |(points, workers)| {
+            let ids: Vec<String> = points.iter().map(|p| p.id.clone()).collect();
+            let res = run_sweep(
+                points.clone(),
+                Backend::Native,
+                SweepOptions {
+                    workers: *workers,
+                    verbose: false,
+                },
+            );
+            if res.len() != points.len() {
+                return Err(format!("{} results for {} points", res.len(), points.len()));
+            }
+            for (i, r) in res.iter().enumerate() {
+                if r.index != i || r.id != ids[i] {
+                    return Err(format!("result {i} mismatched: {} at {}", r.id, r.index));
+                }
+                if let Some(e) = &r.error {
+                    return Err(format!("unexpected error: {e}"));
+                }
+                if r.measured.trials != points[i].trials as u64 {
+                    return Err(format!(
+                        "trial count {} != requested {}",
+                        r.measured.trials, points[i].trials
+                    ));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn results_deterministic_and_worker_count_independent() {
+    check(
+        Config { cases: 8, seed: 0xCD },
+        |rng: &mut Pcg64| {
+            (0..gens::usize_in(2, 8)(rng))
+                .map(|i| random_point(rng, i))
+                .collect::<Vec<_>>()
+        },
+        |points| {
+            let run = |workers| {
+                run_sweep(
+                    points.clone(),
+                    Backend::Native,
+                    SweepOptions {
+                        workers,
+                        verbose: false,
+                    },
+                )
+            };
+            let a = run(1);
+            let b = run(7);
+            for (x, y) in a.iter().zip(&b) {
+                if x.measured.snr_t_db.to_bits() != y.measured.snr_t_db.to_bits() {
+                    return Err(format!(
+                        "{}: {} != {}",
+                        x.id, x.measured.snr_t_db, y.measured.snr_t_db
+                    ));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn chunked_aggregation_is_order_insensitive() {
+    // The accumulator used by the PJRT batcher must give (nearly) the
+    // same statistics regardless of chunk arrival order.
+    check(
+        Config { cases: 20, seed: 0xEF },
+        |rng: &mut Pcg64| {
+            let chunks: Vec<McOutput> = (0..gens::usize_in(2, 6)(rng))
+                .map(|_| {
+                    let len = gens::usize_in(8, 64)(rng);
+                    let mut o = McOutput::default();
+                    for _ in 0..len {
+                        let yi = rng.normal();
+                        o.push(
+                            yi,
+                            yi + 0.1 * rng.normal(),
+                            yi + 0.2 * rng.normal(),
+                            yi + 0.3 * rng.normal(),
+                        );
+                    }
+                    o
+                })
+                .collect();
+            chunks
+        },
+        |chunks| {
+            let mut fwd = SnrAccumulator::new();
+            for c in chunks {
+                fwd.push_chunk(c);
+            }
+            let mut rev = SnrAccumulator::new();
+            for c in chunks.iter().rev() {
+                rev.push_chunk(c);
+            }
+            let (a, b) = (fwd.finalize(), rev.finalize());
+            let close = |p: f64, q: f64| (p - q).abs() < 1e-9 || (p - q).abs() / p.abs().max(1e-12) < 1e-9;
+            if !close(a.snr_t_db, b.snr_t_db) || a.trials != b.trials {
+                return Err(format!("{} vs {}", a.snr_t_db, b.snr_t_db));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn native_mc_respects_zero_noise_invariant() {
+    // For any op point with all noise off and wide ADC, SNR_T ==
+    // SQNR_qiy (no analog or output noise).
+    check(
+        Config { cases: 16, seed: 0x11 },
+        |rng: &mut Pcg64| {
+            let n = gens::usize_in(8, 128)(rng);
+            let bx = gens::u32_in(2, 8)(rng);
+            let bw = gens::u32_in(2, 8)(rng);
+            (n, bx, bw, rng.next_u64())
+        },
+        |&(n, bx, bw, seed)| {
+            let mut p = [0.0; pvec::P];
+            p[pvec::IDX_N_ACTIVE] = n as f64;
+            p[pvec::IDX_BX] = bx as f64;
+            p[pvec::IDX_BW] = bw as f64;
+            p[pvec::IDX_B_ADC] = 16.0;
+            p[pvec::QS_IDX_K_H] = 1e9;
+            p[pvec::QS_IDX_V_C] = 4.0 * n as f64;
+            let out = imclim::mc::simulate(ArchKind::Qs, &p, 200, seed, InputDist::Uniform);
+            let m = imclim::mc::measure(&out);
+            if (m.snr_t_db - m.sqnr_qiy_db).abs() > 0.2 {
+                return Err(format!(
+                    "SNR_T {} != SQNR_qiy {}",
+                    m.snr_t_db, m.sqnr_qiy_db
+                ));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn mc_snr_improves_with_smaller_sigma() {
+    // Monotonicity: less mismatch can't hurt SNR_a (statistically).
+    check(
+        Config { cases: 10, seed: 0x22 },
+        |rng: &mut Pcg64| (gens::f64_in(0.05, 0.3)(rng), rng.next_u64()),
+        |&(sigma, seed)| {
+            let mk = |s: f64| {
+                let mut p = [0.0; pvec::P];
+                p[pvec::IDX_N_ACTIVE] = 64.0;
+                p[pvec::IDX_BX] = 6.0;
+                p[pvec::IDX_BW] = 6.0;
+                p[pvec::IDX_B_ADC] = 14.0;
+                p[pvec::QS_IDX_SIGMA_D] = s;
+                p[pvec::QS_IDX_K_H] = 1e9;
+                p[pvec::QS_IDX_V_C] = 200.0;
+                let out = imclim::mc::simulate(ArchKind::Qs, &p, 1500, seed, InputDist::Uniform);
+                imclim::mc::measure(&out).snr_a_db
+            };
+            let hi = mk(sigma);
+            let lo = mk(sigma / 2.0);
+            if lo < hi + 1.0 {
+                return Err(format!("halving sigma {sigma}: {hi} -> {lo}"));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}

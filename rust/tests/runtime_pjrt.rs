@@ -1,0 +1,172 @@
+//! PJRT runtime integration: load the AOT artifacts and execute them.
+//! Requires `make artifacts` to have run (skips with a message if not).
+
+use std::path::PathBuf;
+
+use imclim::arch::pvec;
+use imclim::coordinator::{ArchRequest, MlpRequest, MlpWeights, PjrtService};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn smoke_round_trip() {
+    let dir = require_artifacts!();
+    let service = PjrtService::spawn(dir, 2);
+    let out = service.handle().smoke().unwrap();
+    assert_eq!(out, vec![5.0, 5.0, 9.0, 9.0]);
+}
+
+fn qs_params(n: f64) -> [f64; pvec::P] {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n;
+    p[pvec::IDX_BX] = 6.0;
+    p[pvec::IDX_BW] = 6.0;
+    p[pvec::IDX_B_ADC] = 8.0;
+    p[pvec::QS_IDX_SIGMA_D] = 0.107;
+    p[pvec::QS_IDX_K_H] = 48.0;
+    p[pvec::QS_IDX_V_C] = 48.0;
+    p
+}
+
+#[test]
+fn qs_small_artifact_runs_and_is_seed_deterministic() {
+    let dir = require_artifacts!();
+    let service = PjrtService::spawn(dir, 2);
+    let handle = service.handle();
+    let (m, n_max) = handle.arch_shape("qs_arch_small").unwrap();
+    assert_eq!((m, n_max), (16, 64));
+
+    let x: Vec<f32> = (0..m * n_max).map(|i| (i % 97) as f32 / 97.0).collect();
+    let w: Vec<f32> = (0..m * n_max)
+        .map(|i| ((i % 53) as f32 / 26.5) - 1.0)
+        .collect();
+    let req = |seed: [f32; 2]| ArchRequest {
+        artifact: "qs_arch_small".into(),
+        x: x.clone(),
+        w: w.clone(),
+        seed,
+        params: qs_params(48.0),
+    };
+    let a = handle.run_arch(req([1.0, 2.0])).unwrap();
+    let b = handle.run_arch(req([1.0, 2.0])).unwrap();
+    let c = handle.run_arch(req([3.0, 2.0])).unwrap();
+    assert_eq!(a.len(), m);
+    assert_eq!(a.y_hat, b.y_hat, "same seed, same outputs");
+    assert_ne!(a.y_hat, c.y_hat, "different seed, different noise");
+    // deterministic parts are seed-independent
+    assert_eq!(a.y_ideal, c.y_ideal);
+    assert_eq!(a.y_fx, c.y_fx);
+    // and finite
+    assert!(a.y_hat.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn all_arch_small_artifacts_noiseless_identity() {
+    // With zero noise params and a wide ADC, y_a == y_fx on all three.
+    let dir = require_artifacts!();
+    let service = PjrtService::spawn(dir, 2);
+    let handle = service.handle();
+    for (artifact, vc_idx, vc) in [
+        ("qs_arch_small", pvec::QS_IDX_V_C, 80.0),
+        ("qr_arch_small", pvec::QR_IDX_V_C, 1.0),
+        ("cm_arch_small", pvec::CM_IDX_V_C, 1.0),
+    ] {
+        let (m, n_max) = handle.arch_shape(artifact).unwrap();
+        let mut p = [0.0; pvec::P];
+        p[pvec::IDX_N_ACTIVE] = 32.0;
+        p[pvec::IDX_BX] = 6.0;
+        p[pvec::IDX_BW] = 6.0;
+        p[pvec::IDX_B_ADC] = 14.0;
+        p[vc_idx] = vc;
+        if artifact == "qs_arch_small" {
+            p[pvec::QS_IDX_K_H] = 1e9;
+        }
+        if artifact == "cm_arch_small" {
+            p[pvec::CM_IDX_W_H] = 1e9;
+        }
+        let x: Vec<f32> = (0..m * n_max).map(|i| (i % 89) as f32 / 89.0).collect();
+        let w: Vec<f32> = (0..m * n_max)
+            .map(|i| ((i % 41) as f32 / 20.5) - 1.0)
+            .collect();
+        let out = handle
+            .run_arch(ArchRequest {
+                artifact: artifact.into(),
+                x,
+                w,
+                seed: [5.0, 6.0],
+                params: p,
+            })
+            .unwrap();
+        for i in 0..out.len() {
+            assert!(
+                (out.y_a[i] - out.y_fx[i]).abs() < 1e-3,
+                "{artifact}[{i}]: y_a {} != y_fx {}",
+                out.y_a[i],
+                out.y_fx[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_artifact_matches_native_forward() {
+    let dir = require_artifacts!();
+    let service = PjrtService::spawn(dir, 2);
+    let handle = service.handle();
+
+    // a tiny deterministic network
+    let mlp = imclim::dnn::Mlp::new(&[64, 128, 64, 10], 3);
+    let weights = MlpWeights {
+        w1: mlp.w[0].clone(),
+        b1: mlp.b[0].clone(),
+        w2: mlp.w[1].clone(),
+        b2: mlp.b[1].clone(),
+        w3: mlp.w[2].clone(),
+        b3: mlp.b[2].clone(),
+    };
+    let batch = 256;
+    let x: Vec<f32> = (0..batch * 64).map(|i| (i % 101) as f32 / 101.0).collect();
+    let logits = handle
+        .run_mlp(MlpRequest {
+            x: x.clone(),
+            weights,
+            seed: [0.0, 0.0],
+            sigmas: [0.0, 0.0, 0.0],
+        })
+        .unwrap();
+    assert_eq!(logits.len(), batch * 10);
+    // compare a few rows against the native forward
+    for row in [0usize, 17, 255] {
+        let native = mlp.forward(&x[row * 64..(row + 1) * 64]);
+        for c in 0..10 {
+            let diff = (logits[row * 10 + c] - native[c]).abs();
+            assert!(diff < 1e-3, "row {row} class {c}: {diff}");
+        }
+    }
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let dir = require_artifacts!();
+    let service = PjrtService::spawn(dir, 2);
+    let err = service
+        .handle()
+        .arch_shape("definitely_not_an_artifact")
+        .unwrap_err();
+    assert!(err.to_string().contains("not in manifest"), "{err}");
+}
