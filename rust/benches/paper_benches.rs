@@ -11,6 +11,7 @@ use imclim::arch::{pvec, ImcArch, OpPoint, QsArch};
 use imclim::bench::{black_box, BenchConfig, Suite};
 use imclim::compute::qs::QsModel;
 use imclim::coordinator::{run_sweep, Backend, PjrtService, SweepOptions, SweepPoint};
+use imclim::engine::Engine;
 use imclim::figures::{self, FigCtx};
 use imclim::mc::{simulate, ArchKind, InputDist};
 use imclim::tech::TechNode;
@@ -89,11 +90,38 @@ fn main() {
         });
     }
 
+    // ---- engine result cache: warm-run latency of the same workload ----
+    {
+        let dir = std::env::temp_dir().join("imclim-bench-engine-cache");
+        let _ = std::fs::remove_dir_all(&dir);
+        let engine = Engine::new(
+            Backend::Native,
+            SweepOptions {
+                workers: 8,
+                verbose: false,
+            },
+        )
+        .with_cache(dir);
+        let points: Vec<SweepPoint> = (0..16)
+            .map(|i| {
+                SweepPoint::new(format!("c{i}"), ArchKind::Qs, qs_params(128.0, 0.1))
+                    .with_trials(512)
+                    .with_seed(i)
+            })
+            .collect();
+        black_box(engine.run(points.clone())); // cold run populates the cache
+        suite.bench("engine_cached_sweep_16pts", 16.0, || {
+            black_box(engine.run(points.clone()));
+        });
+    }
+
     // ---- figure/table regeneration (one bench per paper exhibit) ------
     let ctx = || {
         let mut c = FigCtx::native(std::env::temp_dir().join("imclim-bench"));
         c.trials = 512;
         c.verbose = false;
+        // figure benches measure the cold compute path, not cache hits
+        c.cache = false;
         c
     };
     for name in [

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   figure <name|all>    regenerate a paper figure/table (CSV + stdout)
 //!   table <t1|t2|t3>     aliases for table1/table2/table3
-//!   sweep                ad-hoc operating-point sweep on one arch
+//!   sweep                user-defined design-space grid through the
+//!                        cached sweep engine (lists + ranges per axis)
 //!   dnn                  train the Fig. 2 MLP and report accuracy/SNR
 //!   smoke                PJRT round-trip smoke test
 //!   assign               precision assignment for a target SNR (Sec. III-B)
@@ -16,9 +17,11 @@ use std::path::PathBuf;
 use crate::arch::{pvec, AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
 use crate::compute::{qr::QrModel, qs::QsModel};
 use crate::coordinator::{Backend, PjrtService};
+use crate::engine::{parse_grid_f64, parse_grid_u32, parse_grid_usize, SweepSpec};
 use crate::figures::FigCtx;
-use crate::mc::ArchKind;
+use crate::mc::{ArchKind, InputDist};
 use crate::tech::TechNode;
+use crate::util::csv::CsvWriter;
 use crate::util::table::{fmt_db, fmt_energy, Table};
 use args::Args;
 
@@ -32,8 +35,13 @@ COMMANDS:
                       fig9b fig10a fig10b fig11a fig11b fig12 fig13
                       table1 table2 table3)
   table <1|2|3>       shorthand for table1/table2/table3
-  sweep               custom sweep: --arch qs|qr|cm --n N --bx B --bw B
-                      --b-adc B [--vwl V] [--co FF] [--node 65|45|...]
+  sweep               design-space grid through the cached engine; every
+                      axis takes lists \"a,b,c\" and ranges \"lo:hi[:step]\":
+                      --arch qs,qr,cm --n 64,128 --bx 6 --bw 6
+                      --b-adc 4:10 --vwl 0.6:0.8:0.1 --co 1,3,9
+                      --node 65,7 --dist uniform,gauss [--seed S]
+                      emits <out-dir>/sweep.csv; repeated points are
+                      served from the cache under <out-dir>/cache
   assign              precision assignment: --snr-a DB [--margin DB]
   dnn                 train the Fig. 2 MLP: [--epochs E]
   smoke               PJRT artifact round-trip check
@@ -45,6 +53,7 @@ COMMON OPTIONS:
   --artifacts DIR     artifact directory for pjrt (default: artifacts)
   --trials N          MC trials per point (default: 2048)
   --workers N         worker threads (default: all cores, max 16)
+  --no-cache          bypass the content-addressed result cache
   --verbose           progress output
 ";
 
@@ -110,6 +119,7 @@ fn make_ctx(args: &Args) -> anyhow::Result<(FigCtx, Option<PjrtService>)> {
             trials,
             workers,
             verbose,
+            cache: !args.has("no-cache"),
         },
         service,
     ))
@@ -144,12 +154,13 @@ fn cmd_table(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_arch(args: &Args) -> anyhow::Result<(Box<dyn ImcArch>, ArchKind)> {
-    let node = TechNode::by_name(args.opt("node").unwrap_or("65"))
-        .ok_or_else(|| anyhow::anyhow!("unknown node"))?;
-    let v_wl = args.opt_parse("vwl", 0.8f64);
-    let c_ff = args.opt_parse("co", 3.0f64);
-    Ok(match args.opt("arch").unwrap_or("qs") {
+fn build_arch(
+    name: &str,
+    node: TechNode,
+    v_wl: f64,
+    c_ff: f64,
+) -> anyhow::Result<(Box<dyn ImcArch>, ArchKind)> {
+    Ok(match name {
         "qs" => (
             Box::new(QsArch::new(QsModel::new(node, v_wl))),
             ArchKind::Qs,
@@ -165,72 +176,238 @@ fn parse_arch(args: &Args) -> anyhow::Result<(Box<dyn ImcArch>, ArchKind)> {
             )),
             ArchKind::Cm,
         ),
-        other => anyhow::bail!("unknown arch '{other}'"),
+        other => anyhow::bail!("unknown arch '{other}' (qs, qr or cm)"),
     })
 }
 
+/// Per-point metadata carried alongside the sweep: the grid coordinates
+/// plus the closed-form predictions that accompany the simulation.
+struct SweepMeta {
+    arch: String,
+    node_nm: u32,
+    v_wl: f64,
+    c_ff: f64,
+    n: usize,
+    bx: u32,
+    bw: u32,
+    b_adc: u32,
+    dist: String,
+    nb: crate::arch::NoiseBreakdown,
+    b_adc_min: u32,
+    energy_mpc_j: f64,
+    delay_ns: f64,
+}
+
+fn csv_list(raw: &str) -> Vec<String> {
+    raw.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    let (arch, kind) = parse_arch(args)?;
     let (ctx, _service) = make_ctx(args)?;
-    let op = OpPoint::new(
-        args.opt_parse("n", 128usize),
-        args.opt_parse("bx", 6u32),
-        args.opt_parse("bw", 6u32),
-        args.opt_parse("b-adc", 8u32),
-    );
+    std::fs::create_dir_all(&ctx.out_dir)?;
+
+    let archs = csv_list(args.opt("arch").unwrap_or("qs"));
+    let nodes = csv_list(args.opt("node").unwrap_or("65"));
+    let dists = csv_list(args.opt("dist").unwrap_or("uniform"));
+    for a in &archs {
+        anyhow::ensure!(
+            matches!(a.as_str(), "qs" | "qr" | "cm"),
+            "unknown arch '{a}' (qs, qr or cm)"
+        );
+    }
+    for nd in &nodes {
+        anyhow::ensure!(TechNode::by_name(nd).is_some(), "unknown node '{nd}'");
+    }
+    for d in &dists {
+        anyhow::ensure!(
+            matches!(d.as_str(), "uniform" | "gauss"),
+            "unknown dist '{d}' (uniform or gauss)"
+        );
+    }
+    let vwls = parse_grid_f64(args.opt("vwl").unwrap_or("0.8"))?;
+    let cos = parse_grid_f64(args.opt("co").unwrap_or("3"))?;
+    let ns = parse_grid_usize(args.opt("n").unwrap_or("128"))?;
+    let bxs = parse_grid_u32(args.opt("bx").unwrap_or("6"))?;
+    let bws = parse_grid_u32(args.opt("bw").unwrap_or("6"))?;
+    let b_adcs = parse_grid_u32(args.opt("b-adc").unwrap_or("8"))?;
+    let seed = args.opt_parse("seed", 7u64);
+
+    let arch_refs: Vec<&str> = archs.iter().map(String::as_str).collect();
+    let node_refs: Vec<&str> = nodes.iter().map(String::as_str).collect();
+    let dist_refs: Vec<&str> = dists.iter().map(String::as_str).collect();
+    let spec = SweepSpec::new("sweep")
+        .axis_strs("arch", &arch_refs)
+        .axis_strs("node", &node_refs)
+        .axis_f64("vwl", &vwls)
+        .axis_f64("co", &cos)
+        .axis_usize("n", &ns)
+        .axis_u32("bx", &bxs)
+        .axis_u32("bw", &bws)
+        .axis_u32("badc", &b_adcs)
+        .axis_strs("dist", &dist_refs);
+    anyhow::ensure!(!spec.is_empty(), "empty sweep grid");
+
+    // Closed forms use the paper's uniform signal statistics throughout;
+    // the input distribution axis only changes the simulated ensemble.
     let (w, x) = crate::figures::uniform_stats();
+    let mut points = Vec::with_capacity(spec.len());
+    let mut meta: Vec<SweepMeta> = Vec::with_capacity(spec.len());
+    for gp in spec.points() {
+        let arch_name = gp.text(0).to_string();
+        let node = TechNode::by_name(gp.text(1)).expect("validated above");
+        let v_wl = gp.num(2);
+        let c_ff = gp.num(3);
+        let n = gp.int(4) as usize;
+        let bx = gp.int(5) as u32;
+        let bw = gp.int(6) as u32;
+        let b_adc = gp.int(7) as u32;
+        let dist = gp.text(8).to_string();
+        let (arch, kind) = build_arch(&arch_name, node, v_wl, c_ff)?;
+        let op = OpPoint::new(n, bx, bw, b_adc);
+        let mut point =
+            crate::figures::sweep_point(arch.as_ref(), kind, gp.id.clone(), &op, ctx.trials, seed);
+        if dist == "gauss" {
+            point.dist = InputDist::ClippedGaussian { sx: 0.35, sw: 0.35 };
+        }
+        meta.push(SweepMeta {
+            arch: arch_name,
+            node_nm: node.node_nm,
+            v_wl,
+            c_ff,
+            n,
+            bx,
+            bw,
+            b_adc,
+            dist,
+            nb: arch.noise(&op, &w, &x),
+            b_adc_min: arch.b_adc_min(&op, &w, &x),
+            energy_mpc_j: arch.energy(&op, AdcCriterion::Mpc, &w, &x).total(),
+            delay_ns: arch.delay(&op) * 1e9,
+        });
+        points.push(point);
+    }
 
-    let nb = arch.noise(&op, &w, &x);
-    let e_mpc = arch.energy(&op, AdcCriterion::Mpc, &w, &x);
-    let point = crate::figures::sweep_point(
-        arch.as_ref(),
-        kind,
-        format!("sweep/{}", arch.name()),
-        &op,
-        ctx.trials,
-        args.opt_parse("seed", 7u64),
+    let (results, stats) = ctx.engine().run_with_stats(points);
+
+    let mut csv = CsvWriter::new(&[
+        "arch",
+        "node_nm",
+        "vwl",
+        "co_ff",
+        "n",
+        "bx",
+        "bw",
+        "b_adc",
+        "dist",
+        "snr_a_closed_db",
+        "snr_a_sim_db",
+        "snr_t_sim_db",
+        "b_adc_min_mpc",
+        "energy_mpc_j",
+        "delay_ns",
+        "error",
+    ]);
+    for (m, r) in meta.iter().zip(&results) {
+        csv.row(&[
+            m.arch.clone(),
+            m.node_nm.to_string(),
+            m.v_wl.to_string(),
+            m.c_ff.to_string(),
+            m.n.to_string(),
+            m.bx.to_string(),
+            m.bw.to_string(),
+            m.b_adc.to_string(),
+            m.dist.clone(),
+            format!("{:.4}", m.nb.snr_a_total_db()),
+            format!("{:.4}", r.measured.snr_a_total_db),
+            format!("{:.4}", r.measured.snr_t_db),
+            m.b_adc_min.to_string(),
+            format!("{:.6e}", m.energy_mpc_j),
+            format!("{:.4}", m.delay_ns),
+            r.error.clone().unwrap_or_default(),
+        ]);
+    }
+    let csv_path = ctx.csv_path("sweep");
+    csv.write_to(&csv_path)?;
+
+    if results.len() == 1 {
+        let m = &meta[0];
+        let r = &results[0];
+        if let Some(e) = &r.error {
+            anyhow::bail!("sweep point failed: {e}");
+        }
+        let mut t = Table::new(&["metric", "closed form", "simulated"]).with_title(&format!(
+            "{} at N={} Bx={} Bw={} B_ADC={} ({} nm)",
+            m.arch, m.n, m.bx, m.bw, m.b_adc, m.node_nm
+        ));
+        t.row(vec![
+            "SQNR_qiy (dB)".into(),
+            fmt_db(m.nb.sqnr_qiy_db()),
+            fmt_db(r.measured.sqnr_qiy_db),
+        ]);
+        t.row(vec![
+            "SNR_a (dB)".into(),
+            fmt_db(m.nb.snr_a_db()),
+            fmt_db(r.measured.snr_a_db),
+        ]);
+        t.row(vec![
+            "SNR_A (dB)".into(),
+            fmt_db(m.nb.snr_a_total_db()),
+            fmt_db(r.measured.snr_a_total_db),
+        ]);
+        t.row(vec![
+            "SNR_T (dB)".into(),
+            "-".into(),
+            fmt_db(r.measured.snr_t_db),
+        ]);
+        t.row(vec![
+            "B_ADC min (MPC)".into(),
+            m.b_adc_min.to_string(),
+            "-".into(),
+        ]);
+        t.row(vec![
+            "energy/DP (MPC)".into(),
+            fmt_energy(m.energy_mpc_j),
+            "-".into(),
+        ]);
+        t.row(vec![
+            "delay/DP".into(),
+            format!("{:.2} ns", m.delay_ns),
+            "-".into(),
+        ]);
+        println!("{}", t.render());
+    } else {
+        let shown = results.len().min(10);
+        let mut t = Table::new(&["point", "SNR_A sim (dB)", "SNR_T sim (dB)"])
+            .with_title(&format!("sweep: {} points", results.len()));
+        for r in results.iter().take(shown) {
+            t.row(vec![
+                r.id.clone(),
+                fmt_db(r.measured.snr_a_total_db),
+                fmt_db(r.measured.snr_t_db),
+            ]);
+        }
+        println!("{}", t.render());
+        if results.len() > shown {
+            println!("... {} more rows in the CSV", results.len() - shown);
+        }
+    }
+    println!(
+        "sweep: {} points ({} cache hits, {} computed{}) -> {}",
+        results.len(),
+        stats.hits,
+        stats.misses,
+        if stats.errors > 0 {
+            format!(", {} errors", stats.errors)
+        } else {
+            String::new()
+        },
+        csv_path.display()
     );
-    let measured = crate::coordinator::run_point(&point, &ctx.backend)?;
-
-    let mut t = Table::new(&["metric", "closed form", "simulated"])
-        .with_title(&format!("{} at N={} Bx={} Bw={} B_ADC={}",
-            arch.name(), op.n, op.bx, op.bw, op.b_adc));
-    t.row(vec![
-        "SQNR_qiy (dB)".into(),
-        fmt_db(nb.sqnr_qiy_db()),
-        fmt_db(measured.sqnr_qiy_db),
-    ]);
-    t.row(vec![
-        "SNR_a (dB)".into(),
-        fmt_db(nb.snr_a_db()),
-        fmt_db(measured.snr_a_db),
-    ]);
-    t.row(vec![
-        "SNR_A (dB)".into(),
-        fmt_db(nb.snr_a_total_db()),
-        fmt_db(measured.snr_a_total_db),
-    ]);
-    t.row(vec![
-        "SNR_T (dB)".into(),
-        "-".into(),
-        fmt_db(measured.snr_t_db),
-    ]);
-    t.row(vec![
-        "B_ADC min (MPC)".into(),
-        arch.b_adc_min(&op, &w, &x).to_string(),
-        "-".into(),
-    ]);
-    t.row(vec![
-        "energy/DP (MPC)".into(),
-        fmt_energy(e_mpc.total()),
-        "-".into(),
-    ]);
-    t.row(vec![
-        "delay/DP".into(),
-        format!("{:.2} ns", arch.delay(&op) * 1e9),
-        "-".into(),
-    ]);
-    println!("{}", t.render());
     Ok(())
 }
 

@@ -3,8 +3,12 @@
 //!
 //! * `service` — the PJRT executor service (single-owner thread for the
 //!   !Send XLA objects, bounded-queue backpressure).
-//! * `scheduler` — sweep scheduling: job queue -> worker pool -> trial
-//!   batching -> order-independent statistical aggregation.
+//! * `scheduler` — sweep scheduling: lock-free atomic work claiming ->
+//!   worker pool with per-worker result buffers -> trial batching ->
+//!   order-independent statistical aggregation.
+//!
+//! Cached execution (grid building, content-addressed result reuse)
+//! lives one layer up in `crate::engine`, which drives this scheduler.
 //!
 //! Python never appears here: the executor consumes AOT-compiled HLO
 //! artifacts; the native Monte-Carlo backend needs nothing at all.

@@ -2,6 +2,12 @@
 //! jobs, fans them out over a worker pool, batches trials into
 //! fixed-shape executor invocations, and aggregates ensemble statistics.
 //!
+//! Scheduling is lock-free: workers claim jobs with a single atomic
+//! fetch-add over the shared (immutable) point slice and collect their
+//! results into per-worker buffers, which are merged back into input
+//! order after the pool joins. There is no job-queue mutex and no shared
+//! result-store mutex on the hot path.
+//!
 //! Invariants (enforced by tests in rust/tests/prop_coordinator.rs):
 //!  * every submitted point produces exactly one result;
 //!  * per-point trial counts are met or exceeded (batch round-up);
@@ -9,9 +15,7 @@
 //!    worker count and completion order;
 //!  * a failing point never stalls the pool (fail-fast per point).
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
 
 use crate::arch::pvec;
 use crate::mc::{ArchKind, InputDist, McOutput, MeasuredSnr, SnrAccumulator};
@@ -61,6 +65,9 @@ pub struct SweepResult {
     pub index: usize,
     pub measured: MeasuredSnr,
     pub error: Option<String>,
+    /// True when the result was served from the engine's result cache
+    /// rather than computed by this run (see `crate::engine`).
+    pub cached: bool,
 }
 
 /// Execution backend for the analog-core simulation.
@@ -75,6 +82,17 @@ pub enum Backend {
         handle: PjrtHandle,
         suffix: &'static str,
     },
+}
+
+impl Backend {
+    /// Stable identifier folded into the engine's content-addressed cache
+    /// keys, so results from different execution backends never alias.
+    pub fn cache_id(&self) -> String {
+        match self {
+            Backend::Native => "native".into(),
+            Backend::Pjrt { suffix, .. } => format!("pjrt{suffix}"),
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -98,60 +116,86 @@ impl Default for SweepOptions {
 }
 
 /// Run all points; the returned vector is ordered like the input.
+///
+/// Work distribution is an atomic-index claiming loop over the shared
+/// point slice: each worker does `next.fetch_add(1)` to claim the next
+/// unprocessed point and appends the result to its own buffer, so no
+/// lock is taken anywhere on the execution path. Per-point seeding is
+/// part of the point itself, so results are bit-identical regardless of
+/// worker count or completion order.
 pub fn run_sweep(
     points: Vec<SweepPoint>,
     backend: Backend,
     opts: SweepOptions,
 ) -> Vec<SweepResult> {
     let n_points = points.len();
-    let queue: Arc<Mutex<VecDeque<(usize, SweepPoint)>>> =
-        Arc::new(Mutex::new(points.into_iter().enumerate().collect()));
-    let results: Arc<Mutex<Vec<Option<SweepResult>>>> =
-        Arc::new(Mutex::new(vec![None; n_points]));
-    let done = Arc::new(AtomicUsize::new(0));
+    if n_points == 0 {
+        return Vec::new();
+    }
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let points_slice: &[SweepPoint] = &points;
 
-    let workers = opts.workers.max(1).min(n_points.max(1));
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let queue = queue.clone();
-            let results = results.clone();
-            let backend = backend.clone();
-            let done = done.clone();
-            scope.spawn(move || loop {
-                let job = queue.lock().unwrap().pop_front();
-                let Some((index, point)) = job else { break };
-                let res = run_point(&point, &backend);
-                let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
-                if opts.verbose {
-                    eprintln!(
-                        "[{finished}/{n_points}] {} snr_t={:.2} dB",
-                        point.id,
-                        res.as_ref().map(|m| m.snr_t_db).unwrap_or(f64::NAN)
-                    );
-                }
-                let result = match res {
-                    Ok(measured) => SweepResult {
-                        id: point.id.clone(),
-                        index,
-                        measured,
-                        error: None,
-                    },
-                    Err(e) => SweepResult {
-                        id: point.id.clone(),
-                        index,
-                        measured: MeasuredSnr::default(),
-                        error: Some(e.to_string()),
-                    },
-                };
-                results.lock().unwrap()[index] = Some(result);
-            });
-        }
+    let workers = opts.workers.clamp(1, n_points);
+    let buffers: Vec<Vec<SweepResult>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let backend = backend.clone();
+                let next = &next;
+                let done = &done;
+                scope.spawn(move || {
+                    let mut local: Vec<SweepResult> = Vec::new();
+                    loop {
+                        let index = next.fetch_add(1, Ordering::Relaxed);
+                        if index >= n_points {
+                            break;
+                        }
+                        let point = &points_slice[index];
+                        let res = run_point(point, &backend);
+                        let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                        if opts.verbose {
+                            eprintln!(
+                                "[{finished}/{n_points}] {} snr_t={:.2} dB",
+                                point.id,
+                                res.as_ref().map(|m| m.snr_t_db).unwrap_or(f64::NAN)
+                            );
+                        }
+                        local.push(match res {
+                            Ok(measured) => SweepResult {
+                                id: point.id.clone(),
+                                index,
+                                measured,
+                                error: None,
+                                cached: false,
+                            },
+                            Err(e) => SweepResult {
+                                id: point.id.clone(),
+                                index,
+                                measured: MeasuredSnr::default(),
+                                error: Some(e.to_string()),
+                                cached: false,
+                            },
+                        });
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
     });
 
-    Arc::try_unwrap(results)
-        .expect("workers joined")
-        .into_inner()
-        .unwrap()
+    let mut slots: Vec<Option<SweepResult>> = vec![None; n_points];
+    for buffer in buffers {
+        for result in buffer {
+            let index = result.index;
+            debug_assert!(slots[index].is_none(), "point {index} claimed twice");
+            slots[index] = Some(result);
+        }
+    }
+    slots
         .into_iter()
         .map(|r| r.expect("every point produces a result"))
         .collect()
@@ -278,7 +322,22 @@ mod tests {
             assert_eq!(r.index, i);
             assert_eq!(r.id, format!("p{i}"));
             assert!(r.error.is_none());
+            assert!(!r.cached, "scheduler never serves cached results");
             assert_eq!(r.measured.trials, 256);
+        }
+    }
+
+    #[test]
+    fn more_workers_than_points_is_fine() {
+        let points: Vec<SweepPoint> = (0..3).map(|i| qs_point(&format!("p{i}"), 16, 1)).collect();
+        let res = run_sweep(
+            points,
+            Backend::Native,
+            SweepOptions { workers: 16, verbose: false },
+        );
+        assert_eq!(res.len(), 3);
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.index, i);
         }
     }
 

@@ -1,0 +1,326 @@
+//! Content-addressed result cache for Monte-Carlo sweep points.
+//!
+//! Every [`SweepPoint`] is identified by a stable 128-bit key over its
+//! *content*: (arch kind, normalized parameter vector, trials, seed,
+//! input distribution, backend id). The point `id` (display label)
+//! deliberately does not participate, so the same physical operating
+//! point reached from different figures or CLI sweeps shares one record.
+//!
+//! Records are JSON files `<dir>/<key>.json` (same hand-rolled JSON
+//! style as `runtime::manifest`) holding the [`MeasuredSnr`] with every
+//! `f64` serialized as its exact IEEE-754 bit pattern in hex, so a cache
+//! hit is *bit-identical* to the run that produced it — including
+//! non-finite values, which plain JSON numbers cannot represent. A
+//! `manifest.json` in the same directory indexes key -> label for humans
+//! and tooling.
+//!
+//! Robustness contract: any unreadable, corrupt, version-skewed or
+//! key-mismatched record is treated as a cache miss (recompute), never
+//! an error.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::SweepPoint;
+use crate::mc::{ArchKind, InputDist, MeasuredSnr};
+use crate::util::json::{num, obj, s, Json};
+
+const CACHE_VERSION: f64 = 1.0;
+
+/// Domain-separation prefix: bump alongside `CACHE_VERSION` whenever the
+/// key encoding *or the simulator's semantics* change — the key covers a
+/// point's inputs, not the code that computes it, so a physics change
+/// must invalidate old records by version bump (or `--no-cache` / a
+/// fresh out-dir on the caller's side).
+const KEY_PREFIX: &[u8] = b"imclim-sweep-record-v1\0";
+
+/// Stable 128-bit content key (32 hex chars) for one sweep point on one
+/// backend. Everything that can change the measured result participates;
+/// the display id does not.
+pub fn cache_key(point: &SweepPoint, backend_id: &str) -> String {
+    let mut bytes = Vec::with_capacity(KEY_PREFIX.len() + 192 + backend_id.len());
+    bytes.extend_from_slice(KEY_PREFIX);
+    bytes.push(match point.kind {
+        ArchKind::Qs => 1,
+        ArchKind::Qr => 2,
+        ArchKind::Cm => 3,
+    });
+    bytes.extend_from_slice(&(point.trials as u64).to_le_bytes());
+    bytes.extend_from_slice(&point.seed.to_le_bytes());
+    match point.dist {
+        InputDist::Uniform => bytes.push(0),
+        InputDist::ClippedGaussian { sx, sw } => {
+            bytes.push(1);
+            bytes.extend_from_slice(&sx.to_bits().to_le_bytes());
+            bytes.extend_from_slice(&sw.to_bits().to_le_bytes());
+        }
+    }
+    for p in &point.params {
+        bytes.extend_from_slice(&p.to_bits().to_le_bytes());
+    }
+    bytes.extend_from_slice(backend_id.as_bytes());
+    format!(
+        "{:016x}{:016x}",
+        absorb(&bytes, 0x243F_6A88_85A3_08D3),
+        absorb(&bytes, 0x1319_8A2E_0370_7344)
+    )
+}
+
+/// SplitMix64-absorption hash: XOR each little-endian 8-byte word into
+/// the state and run the SplitMix64 finalizer. Not cryptographic — just
+/// a stable, well-mixed content fingerprint.
+fn absorb(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = seed;
+    for chunk in bytes.chunks(8) {
+        let mut word = [0u8; 8];
+        word[..chunk.len()].copy_from_slice(chunk);
+        h ^= u64::from_le_bytes(word);
+        h = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= h >> 31;
+    }
+    h ^ bytes.len() as u64
+}
+
+fn f64_hex(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+/// On-disk result cache rooted at one directory, bound to one backend.
+pub struct ResultCache {
+    dir: PathBuf,
+    backend_id: String,
+}
+
+impl ResultCache {
+    pub fn new(dir: impl Into<PathBuf>, backend_id: impl Into<String>) -> Self {
+        Self {
+            dir: dir.into(),
+            backend_id: backend_id.into(),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn key(&self, point: &SweepPoint) -> String {
+        cache_key(point, &self.backend_id)
+    }
+
+    fn record_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Look up a point; `None` on miss *or* on any record defect.
+    pub fn load(&self, point: &SweepPoint) -> Option<MeasuredSnr> {
+        let key = self.key(point);
+        let text = std::fs::read_to_string(self.record_path(&key)).ok()?;
+        decode_record(&text, &key)
+    }
+
+    /// Persist a computed result for a point.
+    pub fn store(&self, point: &SweepPoint, measured: &MeasuredSnr) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating cache dir {}", self.dir.display()))?;
+        let key = self.key(point);
+        let record = encode_record(point, &self.backend_id, &key, measured);
+        let path = self.record_path(&key);
+        std::fs::write(&path, record.to_string())
+            .with_context(|| format!("writing cache record {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Merge `(key, id)` pairs into `manifest.json`. A missing or corrupt
+    /// manifest is rebuilt from scratch.
+    pub fn update_manifest(&self, entries: &[(String, String)]) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.dir.join("manifest.json");
+        let mut index: BTreeMap<String, Json> = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|j| j.get("entries").and_then(|e| e.as_obj()).cloned())
+            .unwrap_or_default();
+        for (key, id) in entries {
+            index.insert(key.clone(), Json::Str(id.clone()));
+        }
+        let manifest = obj(vec![
+            ("version", num(CACHE_VERSION)),
+            ("backend", s(&self.backend_id)),
+            ("entries", Json::Obj(index)),
+        ]);
+        std::fs::write(&path, manifest.to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+fn encode_record(point: &SweepPoint, backend_id: &str, key: &str, m: &MeasuredSnr) -> Json {
+    let dist = match point.dist {
+        InputDist::Uniform => "uniform".to_string(),
+        InputDist::ClippedGaussian { sx, sw } => {
+            format!("gauss:{:016x}:{:016x}", sx.to_bits(), sw.to_bits())
+        }
+    };
+    obj(vec![
+        ("version", num(CACHE_VERSION)),
+        ("key", s(key)),
+        ("id", s(&point.id)),
+        ("kind", s(point.kind.artifact_name())),
+        ("backend", s(backend_id)),
+        ("trials", num(point.trials as f64)),
+        ("seed", s(&format!("{:016x}", point.seed))),
+        ("dist", s(&dist)),
+        (
+            "params",
+            Json::Arr(point.params.iter().map(|&p| f64_hex(p)).collect()),
+        ),
+        ("measured_trials", num(m.trials as f64)),
+        (
+            "measured_bits",
+            obj(vec![
+                ("sigma_yo2", f64_hex(m.sigma_yo2)),
+                ("sigma_qiy2", f64_hex(m.sigma_qiy2)),
+                ("sigma_eta_a2", f64_hex(m.sigma_eta_a2)),
+                ("sigma_qy2", f64_hex(m.sigma_qy2)),
+                ("sqnr_qiy_db", f64_hex(m.sqnr_qiy_db)),
+                ("snr_a_db", f64_hex(m.snr_a_db)),
+                ("snr_a_total_db", f64_hex(m.snr_a_total_db)),
+                ("snr_t_db", f64_hex(m.snr_t_db)),
+            ]),
+        ),
+    ])
+}
+
+fn decode_record(text: &str, key: &str) -> Option<MeasuredSnr> {
+    let j = Json::parse(text).ok()?;
+    if j.get("version")?.as_f64()? != CACHE_VERSION {
+        return None;
+    }
+    if j.get("key")?.as_str()? != key {
+        return None;
+    }
+    let bits = j.get("measured_bits")?;
+    let field = |name: &str| -> Option<f64> {
+        let hex = bits.get(name)?.as_str()?;
+        u64::from_str_radix(hex, 16).ok().map(f64::from_bits)
+    };
+    Some(MeasuredSnr {
+        sigma_yo2: field("sigma_yo2")?,
+        sigma_qiy2: field("sigma_qiy2")?,
+        sigma_eta_a2: field("sigma_eta_a2")?,
+        sigma_qy2: field("sigma_qy2")?,
+        sqnr_qiy_db: field("sqnr_qiy_db")?,
+        snr_a_db: field("snr_a_db")?,
+        snr_a_total_db: field("snr_a_total_db")?,
+        snr_t_db: field("snr_t_db")?,
+        trials: j.get("measured_trials")?.as_f64()? as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::pvec;
+
+    fn point(id: &str) -> SweepPoint {
+        let mut p = [0.0; pvec::P];
+        p[pvec::IDX_N_ACTIVE] = 64.0;
+        p[pvec::IDX_BX] = 6.0;
+        p[pvec::IDX_BW] = 6.0;
+        p[pvec::IDX_B_ADC] = 8.0;
+        SweepPoint::new(id, ArchKind::Qs, p)
+            .with_trials(128)
+            .with_seed(0xFEED)
+    }
+
+    fn tmp_cache(name: &str) -> ResultCache {
+        let dir = std::env::temp_dir().join(format!("imclim-cache-unit-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        ResultCache::new(dir, "native")
+    }
+
+    #[test]
+    fn key_is_stable_and_content_addressed() {
+        let p = point("a");
+        assert_eq!(cache_key(&p, "native"), cache_key(&p, "native"));
+        assert_eq!(cache_key(&p, "native").len(), 32);
+        // the label does not participate
+        let renamed = point("totally-different-label");
+        assert_eq!(cache_key(&p, "native"), cache_key(&renamed, "native"));
+        // the backend does
+        assert_ne!(cache_key(&p, "native"), cache_key(&p, "pjrt"));
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical_even_for_non_finite() {
+        let cache = tmp_cache("roundtrip");
+        let p = point("r");
+        let m = MeasuredSnr {
+            sigma_yo2: 1.234e-5,
+            sigma_qiy2: 0.0,
+            sigma_eta_a2: 7.7,
+            sigma_qy2: f64::NAN,
+            sqnr_qiy_db: f64::INFINITY,
+            snr_a_db: -13.25,
+            snr_a_total_db: f64::NEG_INFINITY,
+            snr_t_db: 42.125,
+            trials: 128,
+        };
+        cache.store(&p, &m).unwrap();
+        let got = cache.load(&p).expect("hit");
+        assert_eq!(got.sigma_yo2.to_bits(), m.sigma_yo2.to_bits());
+        assert_eq!(got.sigma_qy2.to_bits(), m.sigma_qy2.to_bits());
+        assert_eq!(got.sqnr_qiy_db.to_bits(), m.sqnr_qiy_db.to_bits());
+        assert_eq!(got.snr_a_total_db.to_bits(), m.snr_a_total_db.to_bits());
+        assert_eq!(got.snr_t_db.to_bits(), m.snr_t_db.to_bits());
+        assert_eq!(got.trials, m.trials);
+    }
+
+    #[test]
+    fn defective_records_are_misses_not_errors() {
+        let cache = tmp_cache("defects");
+        let p = point("d");
+        assert!(cache.load(&p).is_none(), "cold cache misses");
+        cache.store(&p, &MeasuredSnr::default()).unwrap();
+        assert!(cache.load(&p).is_some());
+        let path = cache.record_path(&cache.key(&p));
+        for garbage in ["", "{ not json", "{\"version\": 1}", "[1,2,3]"] {
+            std::fs::write(&path, garbage).unwrap();
+            assert!(cache.load(&p).is_none(), "corrupt record {garbage:?}");
+        }
+        // a record stored under the wrong key is rejected too
+        cache.store(&p, &MeasuredSnr::default()).unwrap();
+        let other = {
+            let mut o = point("d");
+            o.seed = 999;
+            o
+        };
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(cache.record_path(&cache.key(&other)), text).unwrap();
+        assert!(cache.load(&other).is_none(), "key mismatch is a miss");
+    }
+
+    #[test]
+    fn manifest_merges_entries() {
+        let cache = tmp_cache("manifest");
+        cache
+            .update_manifest(&[("k1".into(), "id1".into())])
+            .unwrap();
+        cache
+            .update_manifest(&[("k2".into(), "id2".into()), ("k1".into(), "id1b".into())])
+            .unwrap();
+        let text = std::fs::read_to_string(cache.dir().join("manifest.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let entries = j.get("entries").unwrap().as_obj().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries["k1"].as_str(), Some("id1b"));
+        assert_eq!(entries["k2"].as_str(), Some("id2"));
+    }
+}

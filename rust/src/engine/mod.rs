@@ -1,0 +1,204 @@
+//! The unified sweep engine: declarative grids, a content-addressed
+//! result cache, and the cached execution front-end shared by every
+//! figure driver, `imclim sweep`, and the benches.
+//!
+//! Layering: `spec` builds grids of labelled operating points, the
+//! [`Engine`] partitions them into cache hits and misses, the misses run
+//! through the lock-free `coordinator::scheduler` worker pool, and fresh
+//! results are persisted by `cache` so the next invocation — same figure
+//! re-run, an overlapping CLI sweep, a different driver touching the
+//! same physical operating point — computes nothing twice. `report`
+//! holds the CSV/summary emission patterns the drivers share.
+//!
+//! ```text
+//!   SweepSpec ──> Vec<SweepPoint> ──> Engine::run ──┬─ hits:   ResultCache
+//!                                                   └─ misses: run_sweep()
+//!                                                              └──> ResultCache::store
+//! ```
+//!
+//! Results keep their submission order, and a cache hit is bit-identical
+//! to the run that produced it, so a warm re-run of any driver is
+//! byte-identical to a cold one.
+
+pub mod cache;
+pub mod report;
+pub mod spec;
+
+pub use cache::{cache_key, ResultCache};
+pub use report::{BoundReport, EsReport};
+pub use spec::{
+    parse_grid_f64, parse_grid_u32, parse_grid_usize, Axis, AxisValue, GridPoint, SweepSpec,
+};
+
+use std::path::PathBuf;
+
+use crate::coordinator::{run_sweep, Backend, SweepOptions, SweepPoint, SweepResult};
+
+/// What one [`Engine::run_with_stats`] call did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    /// Points served from the result cache (no Monte-Carlo executed).
+    pub hits: usize,
+    /// Points computed this run (and, on success, newly cached).
+    pub misses: usize,
+    /// Computed points that ended in error (never cached).
+    pub errors: usize,
+}
+
+/// Cached sweep executor: the one entry point every consumer drives.
+pub struct Engine {
+    backend: Backend,
+    opts: SweepOptions,
+    cache: Option<ResultCache>,
+}
+
+impl Engine {
+    pub fn new(backend: Backend, opts: SweepOptions) -> Self {
+        Self {
+            backend,
+            opts,
+            cache: None,
+        }
+    }
+
+    /// Enable the content-addressed result cache rooted at `dir`.
+    pub fn with_cache(mut self, dir: impl Into<PathBuf>) -> Self {
+        let backend_id = self.backend.cache_id();
+        self.cache = Some(ResultCache::new(dir, backend_id));
+        self
+    }
+
+    pub fn cache(&self) -> Option<&ResultCache> {
+        self.cache.as_ref()
+    }
+
+    /// Run all points (cache-aware); results are ordered like the input.
+    pub fn run(&self, points: Vec<SweepPoint>) -> Vec<SweepResult> {
+        self.run_with_stats(points).0
+    }
+
+    /// Like [`Engine::run`], also reporting hit/miss/error counts.
+    pub fn run_with_stats(&self, points: Vec<SweepPoint>) -> (Vec<SweepResult>, RunStats) {
+        let mut stats = RunStats::default();
+        let Some(cache) = &self.cache else {
+            let results = run_sweep(points, self.backend.clone(), self.opts);
+            stats.misses = results.len();
+            stats.errors = results.iter().filter(|r| r.error.is_some()).count();
+            return (results, stats);
+        };
+
+        let n = points.len();
+        let mut slots: Vec<Option<SweepResult>> = vec![None; n];
+        let mut miss_idx: Vec<usize> = Vec::new();
+        for (i, point) in points.iter().enumerate() {
+            if let Some(measured) = cache.load(point) {
+                slots[i] = Some(SweepResult {
+                    id: point.id.clone(),
+                    index: i,
+                    measured,
+                    error: None,
+                    cached: true,
+                });
+                stats.hits += 1;
+            } else {
+                miss_idx.push(i);
+            }
+        }
+
+        let miss_points: Vec<SweepPoint> = miss_idx.iter().map(|&i| points[i].clone()).collect();
+        let computed = run_sweep(miss_points, self.backend.clone(), self.opts);
+        stats.misses = computed.len();
+        let mut manifest: Vec<(String, String)> = Vec::new();
+        for (j, mut result) in computed.into_iter().enumerate() {
+            let i = miss_idx[j];
+            if result.error.is_none() {
+                let point = &points[i];
+                if cache.store(point, &result.measured).is_ok() {
+                    manifest.push((cache.key(point), point.id.clone()));
+                }
+            } else {
+                stats.errors += 1;
+            }
+            result.index = i;
+            slots[i] = Some(result);
+        }
+        let _ = cache.update_manifest(&manifest);
+
+        let results = slots
+            .into_iter()
+            .map(|r| r.expect("every point produces a result"))
+            .collect();
+        (results, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::pvec;
+    use crate::mc::ArchKind;
+
+    fn qs_point(id: &str, n: usize, seed: u64) -> SweepPoint {
+        let mut p = [0.0; pvec::P];
+        p[pvec::IDX_N_ACTIVE] = n as f64;
+        p[pvec::IDX_BX] = 4.0;
+        p[pvec::IDX_BW] = 4.0;
+        p[pvec::IDX_B_ADC] = 8.0;
+        p[pvec::QS_IDX_SIGMA_D] = 0.1;
+        p[pvec::QS_IDX_K_H] = 40.0;
+        p[pvec::QS_IDX_V_C] = 40.0;
+        SweepPoint::new(id, ArchKind::Qs, p)
+            .with_trials(64)
+            .with_seed(seed)
+    }
+
+    #[test]
+    fn cacheless_engine_is_a_passthrough() {
+        let engine = Engine::new(
+            Backend::Native,
+            SweepOptions {
+                workers: 2,
+                verbose: false,
+            },
+        );
+        let points: Vec<SweepPoint> = (0..4).map(|i| qs_point(&format!("p{i}"), 16, i)).collect();
+        let (results, stats) = engine.run_with_stats(points);
+        assert_eq!(results.len(), 4);
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 4);
+        assert_eq!(stats.errors, 0);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert!(!r.cached);
+        }
+    }
+
+    #[test]
+    fn identical_content_under_different_labels_shares_one_record() {
+        let dir = std::env::temp_dir().join("imclim-engine-unit-dedupe");
+        let _ = std::fs::remove_dir_all(&dir);
+        let engine = Engine::new(
+            Backend::Native,
+            SweepOptions {
+                workers: 2,
+                verbose: false,
+            },
+        )
+        .with_cache(dir);
+        // same physics, different labels: first run computes both misses,
+        // second run serves both from the single shared record.
+        let mk = || vec![qs_point("label/a", 24, 5), qs_point("label/b", 24, 5)];
+        let (first, s1) = engine.run_with_stats(mk());
+        assert_eq!(s1.misses, 2);
+        let (second, s2) = engine.run_with_stats(mk());
+        assert_eq!(s2.hits, 2);
+        assert_eq!(s2.misses, 0);
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.measured.snr_t_db.to_bits(),
+                b.measured.snr_t_db.to_bits()
+            );
+        }
+    }
+}

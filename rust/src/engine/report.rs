@@ -1,0 +1,179 @@
+//! Shared figure-driver reporting: the two CSV/summary emission patterns
+//! every sweep-backed driver used to duplicate inline.
+//!
+//! * [`EsReport`] — closed-form (E) vs simulated (S) comparison rows
+//!   `[axes..., e_db, s_db]` plus the running max |E-S| gap, optionally
+//!   gated to points where both values are meaningful (away from
+//!   clipping cliffs where the closed-form tail approximations are
+//!   loose).
+//! * [`BoundReport`] — ADC-precision sweeps: arbitrary numeric rows plus
+//!   the max `SNR_A - SNR_T` gap *at the predicted minimum B_ADC* and
+//!   the largest predicted bound.
+
+use std::path::Path;
+
+use crate::util::csv::CsvWriter;
+
+/// Which points count toward the max-gap statistic.
+#[derive(Clone, Copy, Debug)]
+enum Gate {
+    /// Every point counts.
+    None,
+    /// Both closed-form and simulated values must clear the threshold.
+    Both(f64),
+    /// Only the closed-form value must clear the threshold (the
+    /// simulated value still counts even if it collapsed — that *is*
+    /// the disagreement the statistic exists to expose).
+    Expected(f64),
+}
+
+/// Closed-form vs simulation report (fig9a/10a/11a/fig4b shape).
+pub struct EsReport {
+    csv: CsvWriter,
+    gate: Gate,
+    max_gap: f64,
+}
+
+impl EsReport {
+    /// `header` must end with the two comparison columns (closed, sim).
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            csv: CsvWriter::new(header),
+            gate: Gate::None,
+            max_gap: 0.0,
+        }
+    }
+
+    /// Like [`EsReport::new`], but only points with both values above
+    /// `gate_db` count toward the max-gap statistic.
+    pub fn gated(header: &[&str], gate_db: f64) -> Self {
+        Self {
+            gate: Gate::Both(gate_db),
+            ..Self::new(header)
+        }
+    }
+
+    /// Like [`EsReport::gated`], but gated on the closed-form value only.
+    pub fn gated_on_expected(header: &[&str], gate_db: f64) -> Self {
+        Self {
+            gate: Gate::Expected(gate_db),
+            ..Self::new(header)
+        }
+    }
+
+    /// Emit one row `[axes..., e_db, s_db]` and fold the |E-S| gap.
+    pub fn push(&mut self, axes: &[f64], e_db: f64, s_db: f64) {
+        let mut row = axes.to_vec();
+        row.push(e_db);
+        row.push(s_db);
+        self.csv.row_f64(&row);
+        let counted = match self.gate {
+            Gate::None => true,
+            Gate::Both(gate) => e_db > gate && s_db > gate,
+            Gate::Expected(gate) => e_db > gate,
+        };
+        if counted {
+            self.max_gap = self.max_gap.max((e_db - s_db).abs());
+        }
+    }
+
+    pub fn max_gap(&self) -> f64 {
+        self.max_gap
+    }
+
+    pub fn rows(&self) -> usize {
+        self.csv.n_rows()
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        self.csv.write_to(path)
+    }
+}
+
+/// ADC-precision bound report (fig9b/10b/11b shape).
+pub struct BoundReport {
+    csv: CsvWriter,
+    gap_at_bound: f64,
+    bound_max: u32,
+}
+
+impl BoundReport {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            csv: CsvWriter::new(header),
+            gap_at_bound: f64::MIN,
+            bound_max: 0,
+        }
+    }
+
+    /// Emit one numeric row; `b_adc`/`bound` and the two simulated SNRs
+    /// feed the at-the-bound gap and max-bound statistics.
+    pub fn push(
+        &mut self,
+        row: &[f64],
+        b_adc: u32,
+        bound: u32,
+        snr_a_sim_db: f64,
+        snr_t_sim_db: f64,
+    ) {
+        self.csv.row_f64(row);
+        self.bound_max = self.bound_max.max(bound);
+        if b_adc == bound {
+            self.gap_at_bound = self.gap_at_bound.max(snr_a_sim_db - snr_t_sim_db);
+        }
+    }
+
+    /// Max simulated `SNR_A - SNR_T` at the predicted minimum B_ADC
+    /// (`f64::MIN` if the grid never hit a bound).
+    pub fn gap_at_bound(&self) -> f64 {
+        self.gap_at_bound
+    }
+
+    pub fn bound_max(&self) -> u32 {
+        self.bound_max
+    }
+
+    pub fn rows(&self) -> usize {
+        self.csv.n_rows()
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        self.csv.write_to(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn es_report_tracks_gap_with_gate() {
+        let mut r = EsReport::gated(&["n", "e", "s"], 5.0);
+        r.push(&[16.0], 30.0, 29.0); // counted: gap 1
+        r.push(&[32.0], 4.0, -20.0); // below gate: ignored
+        r.push(&[64.0], 20.0, 26.5); // counted: gap 6.5
+        assert_eq!(r.rows(), 3);
+        assert!((r.max_gap() - 6.5).abs() < 1e-12);
+
+        let mut ungated = EsReport::new(&["n", "e", "s"]);
+        ungated.push(&[1.0], 4.0, -20.0);
+        assert!((ungated.max_gap() - 24.0).abs() < 1e-12);
+
+        // expected-only gate: a collapsed simulated value still counts
+        let mut exp = EsReport::gated_on_expected(&["n", "e", "s"], 5.0);
+        exp.push(&[1.0], 20.0, 2.0); // e above gate, s collapsed: gap 18
+        exp.push(&[2.0], 4.0, 30.0); // e below gate: ignored
+        assert!((exp.max_gap() - 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_report_only_counts_gap_at_bound() {
+        let mut r = BoundReport::new(&["b", "bound", "snr_t"]);
+        r.push(&[4.0, 6.0, 10.0], 4, 6, 30.0, 10.0); // not at bound
+        r.push(&[6.0, 6.0, 28.0], 6, 6, 30.0, 28.0); // at bound: gap 2
+        r.push(&[7.0, 8.0, 29.0], 7, 8, 30.0, 29.0); // not at bound
+        assert_eq!(r.rows(), 3);
+        assert!((r.gap_at_bound() - 2.0).abs() < 1e-12);
+        assert_eq!(r.bound_max(), 8);
+    }
+}

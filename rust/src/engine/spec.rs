@@ -1,0 +1,387 @@
+//! Declarative sweep grids: named axes, cartesian products, generated
+//! point ids.
+//!
+//! A [`SweepSpec`] is a list of named axes; [`SweepSpec::points`] emits
+//! the row-major cartesian product (first axis slowest), each point
+//! carrying a generated id of the form `name/axis1=v1/axis2=v2/...` —
+//! the exact label scheme the figure drivers used to hand-format, e.g.
+//! `fig9a/vwl=0.8/n=128`. An axis may span several dimensions that vary
+//! together ([`SweepSpec::axis_tuples`]), which models paired
+//! configurations such as Fig. 9(b)'s `(V_WL, N)` operating points.
+//!
+//! The module also provides the grid-string parsers behind the
+//! `imclim sweep` CLI: `"a,b,c"` lists and `"lo:hi[:step]"` inclusive
+//! ranges.
+
+use std::fmt;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// One value along a grid dimension.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AxisValue {
+    Num(f64),
+    Int(i64),
+    Str(String),
+}
+
+impl fmt::Display for AxisValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AxisValue::Num(v) => write!(f, "{v}"),
+            AxisValue::Int(v) => write!(f, "{v}"),
+            AxisValue::Str(s) => f.write_str(s),
+        }
+    }
+}
+
+/// One axis of a sweep grid: one or more named dimensions whose values
+/// vary together (a plain axis has exactly one dimension).
+#[derive(Clone, Debug)]
+pub struct Axis {
+    pub names: Vec<String>,
+    /// Each entry is one tuple of values, aligned with `names`.
+    pub values: Vec<Vec<AxisValue>>,
+}
+
+/// A declarative sweep grid.
+#[derive(Clone, Debug, Default)]
+pub struct SweepSpec {
+    /// Id prefix for every generated point (e.g. `"fig9a"`).
+    pub name: String,
+    pub axes: Vec<Axis>,
+}
+
+impl SweepSpec {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            axes: Vec::new(),
+        }
+    }
+
+    fn push_single(mut self, name: &str, values: Vec<AxisValue>) -> Self {
+        self.axes.push(Axis {
+            names: vec![name.to_string()],
+            values: values.into_iter().map(|v| vec![v]).collect(),
+        });
+        self
+    }
+
+    pub fn axis_f64(self, name: &str, values: &[f64]) -> Self {
+        self.push_single(name, values.iter().map(|&v| AxisValue::Num(v)).collect())
+    }
+
+    pub fn axis_usize(self, name: &str, values: &[usize]) -> Self {
+        self.push_single(
+            name,
+            values.iter().map(|&v| AxisValue::Int(v as i64)).collect(),
+        )
+    }
+
+    pub fn axis_u32(self, name: &str, values: &[u32]) -> Self {
+        self.push_single(
+            name,
+            values.iter().map(|&v| AxisValue::Int(v as i64)).collect(),
+        )
+    }
+
+    pub fn axis_strs(self, name: &str, values: &[&str]) -> Self {
+        self.push_single(
+            name,
+            values.iter().map(|v| AxisValue::Str(v.to_string())).collect(),
+        )
+    }
+
+    /// A multi-dimension axis: the named dimensions vary *together*, one
+    /// tuple per grid step (e.g. paired `(v_wl, n)` configurations).
+    pub fn axis_tuples(mut self, names: &[&str], values: Vec<Vec<AxisValue>>) -> Self {
+        for v in &values {
+            assert_eq!(
+                v.len(),
+                names.len(),
+                "axis tuple arity {} != {} names",
+                v.len(),
+                names.len()
+            );
+        }
+        self.axes.push(Axis {
+            names: names.iter().map(|s| s.to_string()).collect(),
+            values,
+        });
+        self
+    }
+
+    /// Number of grid points (product of axis lengths; 1 with no axes).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row-major cartesian product: first axis slowest, last fastest.
+    pub fn points(&self) -> Vec<GridPoint> {
+        if self.axes.iter().any(|a| a.values.is_empty()) {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(self.len());
+        let mut idx = vec![0usize; self.axes.len()];
+        loop {
+            let mut values = Vec::new();
+            let mut id = self.name.clone();
+            for (axis, &i) in self.axes.iter().zip(&idx) {
+                for (name, value) in axis.names.iter().zip(&axis.values[i]) {
+                    id.push('/');
+                    id.push_str(name);
+                    id.push('=');
+                    let _ = write!(id, "{value}");
+                    values.push(value.clone());
+                }
+            }
+            out.push(GridPoint { id, values });
+            // odometer increment, last axis fastest
+            let mut k = self.axes.len();
+            loop {
+                if k == 0 {
+                    return out;
+                }
+                k -= 1;
+                idx[k] += 1;
+                if idx[k] < self.axes[k].values.len() {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+    }
+}
+
+/// One generated grid point: its id and the flattened dimension values
+/// (in axis order, tuples expanded in place).
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub id: String,
+    pub values: Vec<AxisValue>,
+}
+
+impl GridPoint {
+    /// Numeric value of dimension `dim` (accepts `Num` and `Int`).
+    pub fn num(&self, dim: usize) -> f64 {
+        match &self.values[dim] {
+            AxisValue::Num(v) => *v,
+            AxisValue::Int(v) => *v as f64,
+            AxisValue::Str(s) => panic!("grid dim {dim} is '{s}', not numeric"),
+        }
+    }
+
+    /// Integer value of dimension `dim`.
+    pub fn int(&self, dim: usize) -> i64 {
+        match &self.values[dim] {
+            AxisValue::Int(v) => *v,
+            other => panic!("grid dim {dim} is {other:?}, not an integer"),
+        }
+    }
+
+    /// String value of dimension `dim`.
+    pub fn text(&self, dim: usize) -> &str {
+        match &self.values[dim] {
+            AxisValue::Str(s) => s,
+            other => panic!("grid dim {dim} is {other:?}, not a string"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI grid-string parsing: "a,b,c" lists and "lo:hi[:step]" ranges.
+// ---------------------------------------------------------------------
+
+fn parse_f64_token(token: &str) -> Result<f64> {
+    token
+        .parse::<f64>()
+        .map_err(|_| anyhow!("bad number '{token}'"))
+}
+
+fn parse_usize_token(token: &str) -> Result<usize> {
+    token
+        .parse::<usize>()
+        .map_err(|_| anyhow!("bad integer '{token}'"))
+}
+
+/// Parse a float grid: `"0.6,0.8"`, `"0.5:0.8:0.1"` (inclusive). A
+/// step-less range uses step 1; a sub-unit range like `"0.6:0.8"` is
+/// rejected rather than silently collapsing to its lower bound.
+pub fn parse_grid_f64(grid: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for part in grid.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        match fields.as_slice() {
+            [v] => out.push(parse_f64_token(v)?),
+            [lo, hi] => {
+                let (lo, hi) = (parse_f64_token(lo)?, parse_f64_token(hi)?);
+                ensure!(
+                    hi <= lo || hi - lo >= 1.0,
+                    "range {lo}:{hi} needs an explicit step (lo:hi:step)"
+                );
+                push_f64_range(&mut out, lo, hi, 1.0)?
+            }
+            [lo, hi, step] => push_f64_range(
+                &mut out,
+                parse_f64_token(lo)?,
+                parse_f64_token(hi)?,
+                parse_f64_token(step)?,
+            )?,
+            _ => bail!("bad grid segment '{part}' (want v, lo:hi or lo:hi:step)"),
+        }
+    }
+    ensure!(!out.is_empty(), "empty grid '{grid}'");
+    Ok(out)
+}
+
+fn push_f64_range(out: &mut Vec<f64>, lo: f64, hi: f64, step: f64) -> Result<()> {
+    ensure!(step > 0.0, "range step must be positive, got {step}");
+    ensure!(hi >= lo, "range {lo}:{hi} is descending");
+    let steps = ((hi - lo) / step + 1e-9).floor() as usize;
+    ensure!(steps < 1_000_000, "range {lo}:{hi}:{step} is too large");
+    for i in 0..=steps {
+        out.push(lo + step * i as f64);
+    }
+    Ok(())
+}
+
+/// Parse an integer grid: `"64,128"`, `"2:11"`, `"16:128:16"`.
+pub fn parse_grid_usize(grid: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in grid.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        match fields.as_slice() {
+            [v] => out.push(parse_usize_token(v)?),
+            [lo, hi] => {
+                push_usize_range(&mut out, parse_usize_token(lo)?, parse_usize_token(hi)?, 1)?
+            }
+            [lo, hi, step] => push_usize_range(
+                &mut out,
+                parse_usize_token(lo)?,
+                parse_usize_token(hi)?,
+                parse_usize_token(step)?,
+            )?,
+            _ => bail!("bad grid segment '{part}' (want v, lo:hi or lo:hi:step)"),
+        }
+    }
+    ensure!(!out.is_empty(), "empty grid '{grid}'");
+    Ok(out)
+}
+
+fn push_usize_range(out: &mut Vec<usize>, lo: usize, hi: usize, step: usize) -> Result<()> {
+    ensure!(step >= 1, "range step must be >= 1");
+    ensure!(hi >= lo, "range {lo}:{hi} is descending");
+    let mut v = lo;
+    while v <= hi {
+        out.push(v);
+        v += step;
+    }
+    Ok(())
+}
+
+/// Parse a `u32` grid (same syntax as [`parse_grid_usize`]).
+pub fn parse_grid_u32(grid: &str) -> Result<Vec<u32>> {
+    parse_grid_usize(grid)?
+        .into_iter()
+        .map(|v| u32::try_from(v).map_err(|_| anyhow!("{v} does not fit in u32")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_product_ids_match_driver_scheme() {
+        let spec = SweepSpec::new("fig9a")
+            .axis_f64("vwl", &[0.5, 0.8])
+            .axis_usize("n", &[16, 128]);
+        assert_eq!(spec.len(), 4);
+        let points = spec.points();
+        let ids: Vec<&str> = points.iter().map(|p| p.id.as_str()).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "fig9a/vwl=0.5/n=16",
+                "fig9a/vwl=0.5/n=128",
+                "fig9a/vwl=0.8/n=16",
+                "fig9a/vwl=0.8/n=128",
+            ]
+        );
+        assert_eq!(points[3].num(0), 0.8);
+        assert_eq!(points[3].int(1), 128);
+    }
+
+    #[test]
+    fn integer_valued_floats_format_like_hand_written_ids() {
+        // format!("{}", 3.0f64) == "3", which is what the drivers emitted.
+        let spec = SweepSpec::new("fig10a").axis_f64("c", &[1.0, 3.0, 9.0]);
+        let ids: Vec<String> = spec.points().into_iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec!["fig10a/c=1", "fig10a/c=3", "fig10a/c=9"]);
+    }
+
+    #[test]
+    fn tuple_axis_varies_dims_together() {
+        let configs = vec![
+            vec![AxisValue::Num(0.8), AxisValue::Int(128)],
+            vec![AxisValue::Num(0.7), AxisValue::Int(128)],
+            vec![AxisValue::Num(0.8), AxisValue::Int(48)],
+        ];
+        let spec = SweepSpec::new("fig9b")
+            .axis_tuples(&["vwl", "n"], configs)
+            .axis_u32("b", &[2, 3]);
+        assert_eq!(spec.len(), 6);
+        let points = spec.points();
+        assert_eq!(points[0].id, "fig9b/vwl=0.8/n=128/b=2");
+        assert_eq!(points[5].id, "fig9b/vwl=0.8/n=48/b=3");
+        assert_eq!(points[5].num(0), 0.8);
+        assert_eq!(points[5].int(1), 48);
+        assert_eq!(points[5].int(2), 3);
+    }
+
+    #[test]
+    fn no_axes_is_a_single_point_and_empty_axis_is_empty() {
+        let spec = SweepSpec::new("solo");
+        assert_eq!(spec.len(), 1);
+        let pts = spec.points();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].id, "solo");
+        let empty = SweepSpec::new("none").axis_f64("x", &[]);
+        assert!(empty.is_empty());
+        assert!(empty.points().is_empty());
+    }
+
+    #[test]
+    fn grid_strings_parse_lists_and_ranges() {
+        assert_eq!(parse_grid_usize("64,128").unwrap(), vec![64, 128]);
+        assert_eq!(parse_grid_usize("2:5").unwrap(), vec![2, 3, 4, 5]);
+        assert_eq!(parse_grid_usize("16:64:16").unwrap(), vec![16, 32, 48, 64]);
+        assert_eq!(parse_grid_u32("4:6").unwrap(), vec![4, 5, 6]);
+        let v = parse_grid_f64("0.5:0.8:0.1").unwrap();
+        assert_eq!(v.len(), 4);
+        assert!((v[3] - 0.8).abs() < 1e-9);
+        assert_eq!(parse_grid_f64("1,2.5").unwrap(), vec![1.0, 2.5]);
+        // mixed lists and ranges compose
+        assert_eq!(parse_grid_usize("8,16:18").unwrap(), vec![8, 16, 17, 18]);
+    }
+
+    #[test]
+    fn grid_strings_reject_garbage() {
+        assert!(parse_grid_usize("").is_err());
+        assert!(parse_grid_usize("abc").is_err());
+        assert!(parse_grid_usize("5:2").is_err());
+        assert!(parse_grid_f64("1:2:0").is_err());
+        assert!(parse_grid_f64("1:2:3:4").is_err());
+        // a sub-unit step-less float range must not collapse silently
+        assert!(parse_grid_f64("0.6:0.8").is_err());
+        assert_eq!(parse_grid_f64("1:3").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(parse_grid_f64("2:2").unwrap(), vec![2.0]);
+        assert!(parse_grid_u32("99999999999").is_err());
+    }
+}

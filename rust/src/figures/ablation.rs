@@ -12,7 +12,7 @@
 use super::{sweep_point, uniform_stats, FigCtx, FigSummary};
 use crate::arch::{pvec, ImcArch, OpPoint, QsArch};
 use crate::compute::qs::QsModel;
-use crate::coordinator::run_sweep;
+use crate::engine::SweepSpec;
 use crate::mc::{ArchKind, InputDist};
 use crate::tech::TechNode;
 use crate::util::csv::CsvWriter;
@@ -23,25 +23,24 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
 
     // (a) correlated vs independent mismatch, QS-Arch SNR_A vs N.
     let arch = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
-    let mut points = Vec::new();
     let ns = [32usize, 64, 96, 128];
-    for &n in &ns {
+    let spec = SweepSpec::new("abl/corr")
+        .axis_usize("n", &ns)
+        .axis_f64("mode", &[0.0, 1.0]);
+    let mut points = Vec::with_capacity(spec.len());
+    for gp in spec.points() {
+        let n = gp.int(0) as usize;
+        let mode = gp.num(1);
         let op = OpPoint::new(n, 6, 6, 14);
-        for mode in [0.0, 1.0] {
-            let mut p = arch.pjrt_params(&op, &w, &x);
-            p[pvec::QS_IDX_MODE] = mode;
-            points.push(
-                crate::coordinator::SweepPoint::new(
-                    format!("abl/corr/{n}/{mode}"),
-                    ArchKind::Qs,
-                    p,
-                )
+        let mut p = arch.pjrt_params(&op, &w, &x);
+        p[pvec::QS_IDX_MODE] = mode;
+        points.push(
+            crate::coordinator::SweepPoint::new(gp.id, ArchKind::Qs, p)
                 .with_trials(ctx.trials)
                 .with_seed(0xAB1 + n as u64),
-            );
-        }
+        );
     }
-    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+    let results = ctx.run_points(points);
     let mut csv = CsvWriter::new(&["n", "mode", "snr_a_sim_db"]);
     let mut drops = Vec::new();
     for (i, &n) in ns.iter().enumerate() {
@@ -60,11 +59,7 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let mut gauss = base.clone();
     gauss.id = "abl/dist/gauss".into();
     gauss.dist = InputDist::ClippedGaussian { sx: 0.35, sw: 0.35 };
-    let r = run_sweep(
-        vec![base, gauss],
-        ctx.backend.clone(),
-        ctx.sweep_opts(),
-    );
+    let r = ctx.run_points(vec![base, gauss]);
     csv.row_f64(&[-1.0, 0.0, r[0].measured.snr_a_db]);
     csv.row_f64(&[-1.0, 1.0, r[1].measured.snr_a_db]);
     checks.push((

@@ -2,14 +2,14 @@
 //! (a) SNR_A vs B_x for C_o in {1, 3, 9 fF}: SNR improves with C_o
 //!     (~+8 dB at 3 fF, ~+12 dB at 9 fF over 1 fF);
 //! (b) SNR_T vs B_ADC at B_x = 6: MPC's 6-8 bits suffice (BGC: 12+).
+//! Executed through the cached sweep engine.
 
 use super::{sweep_point, uniform_stats, FigCtx, FigSummary};
 use crate::arch::{ImcArch, OpPoint, QrArch};
 use crate::compute::qr::QrModel;
-use crate::coordinator::run_sweep;
+use crate::engine::{BoundReport, EsReport, SweepSpec};
 use crate::mc::ArchKind;
 use crate::tech::TechNode;
-use crate::util::csv::CsvWriter;
 
 pub const CAPS_FF: [f64; 3] = [1.0, 3.0, 9.0];
 
@@ -18,33 +18,34 @@ pub fn run_a(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let bxs: Vec<u32> = (2..=8).collect();
     let n = 128;
 
-    let mut points = Vec::new();
-    let mut meta = Vec::new();
-    for &c in &CAPS_FF {
+    let spec = SweepSpec::new("fig10a")
+        .axis_f64("c", &CAPS_FF)
+        .axis_u32("bx", &bxs);
+    let mut points = Vec::with_capacity(spec.len());
+    let mut meta = Vec::with_capacity(spec.len());
+    for gp in spec.points() {
+        let c = gp.num(0);
+        let bx = gp.int(1) as u32;
         let arch = QrArch::new(QrModel::new(TechNode::n65(), c));
-        for &bx in &bxs {
-            let op = OpPoint::new(n, bx, 7, 14);
-            meta.push((c, bx, arch.noise(&op, &w, &x).snr_a_total_db()));
-            points.push(sweep_point(
-                &arch,
-                ArchKind::Qr,
-                format!("fig10a/c={c}/bx={bx}"),
-                &op,
-                ctx.trials,
-                0xA0 + bx as u64,
-            ));
-        }
+        let op = OpPoint::new(n, bx, 7, 14);
+        meta.push((c, bx, arch.noise(&op, &w, &x).snr_a_total_db()));
+        points.push(sweep_point(
+            &arch,
+            ArchKind::Qr,
+            gp.id,
+            &op,
+            ctx.trials,
+            0xA0 + bx as u64,
+        ));
     }
-    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+    let results = ctx.run_points(points);
 
-    let mut csv = CsvWriter::new(&["c_o_ff", "b_x", "snr_a_closed_db", "snr_a_sim_db"]);
-    let mut max_gap: f64 = 0.0;
+    let mut report = EsReport::new(&["c_o_ff", "b_x", "snr_a_closed_db", "snr_a_sim_db"]);
     for ((c, bx, e_db), r) in meta.iter().zip(&results) {
-        let s_db = r.measured.snr_a_total_db;
-        max_gap = max_gap.max((e_db - s_db).abs());
-        csv.row_f64(&[*c, *bx as f64, *e_db, s_db]);
+        report.push(&[*c, *bx as f64], *e_db, r.measured.snr_a_total_db);
     }
-    csv.write_to(&ctx.csv_path("fig10a"))?;
+    report.write_to(&ctx.csv_path("fig10a"))?;
+    let max_gap = report.max_gap();
 
     let sim_at = |c: f64, bx: u32| {
         results
@@ -76,44 +77,48 @@ pub fn run_b(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let b_adcs: Vec<u32> = (2..=12).collect();
     let n = 128;
 
-    let mut points = Vec::new();
-    let mut meta = Vec::new();
-    for &c in &CAPS_FF {
+    let spec = SweepSpec::new("fig10b")
+        .axis_f64("c", &CAPS_FF)
+        .axis_u32("b", &b_adcs);
+    let mut points = Vec::with_capacity(spec.len());
+    let mut meta = Vec::with_capacity(spec.len());
+    for gp in spec.points() {
+        let c = gp.num(0);
+        let b = gp.int(1) as u32;
         let arch = QrArch::new(QrModel::new(TechNode::n65(), c));
         let bound = arch.b_adc_min(&OpPoint::new(n, 6, 7, 8), &w, &x);
-        for &b in &b_adcs {
-            let op = OpPoint::new(n, 6, 7, b);
-            meta.push((c, b, bound, arch.noise(&op, &w, &x).snr_a_total_db()));
-            points.push(sweep_point(
-                &arch,
-                ArchKind::Qr,
-                format!("fig10b/c={c}/b={b}"),
-                &op,
-                ctx.trials,
-                0xB0 + b as u64,
-            ));
-        }
+        let op = OpPoint::new(n, 6, 7, b);
+        meta.push((c, b, bound, arch.noise(&op, &w, &x).snr_a_total_db()));
+        points.push(sweep_point(
+            &arch,
+            ArchKind::Qr,
+            gp.id,
+            &op,
+            ctx.trials,
+            0xB0 + b as u64,
+        ));
     }
-    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+    let results = ctx.run_points(points);
 
-    let mut csv = CsvWriter::new(&[
+    let mut report = BoundReport::new(&[
         "c_o_ff",
         "b_adc",
         "b_adc_min_pred",
         "snr_a_closed_db",
         "snr_t_sim_db",
     ]);
-    let mut gap_at_bound: f64 = f64::MIN;
-    let mut bound_max = 0u32;
     for ((c, b, bound, e_a), r) in meta.iter().zip(&results) {
-        csv.row_f64(&[*c, *b as f64, *bound as f64, *e_a, r.measured.snr_t_db]);
-        bound_max = bound_max.max(*bound);
-        if b == bound {
-            gap_at_bound =
-                gap_at_bound.max(r.measured.snr_a_total_db - r.measured.snr_t_db);
-        }
+        report.push(
+            &[*c, *b as f64, *bound as f64, *e_a, r.measured.snr_t_db],
+            *b,
+            *bound,
+            r.measured.snr_a_total_db,
+            r.measured.snr_t_db,
+        );
     }
-    csv.write_to(&ctx.csv_path("fig10b"))?;
+    report.write_to(&ctx.csv_path("fig10b"))?;
+    let gap_at_bound = report.gap_at_bound();
+    let bound_max = report.bound_max();
     println!(
         "Fig. 10(b): MPC bound <= {bound_max} bits; max SNR_A - SNR_T at bound = {gap_at_bound:.2} dB (BGC would need {})",
         crate::quant::criteria::bgc_bits(6, 7, n)

@@ -2,14 +2,14 @@
 //! (a) SNR_A vs B_w: quantization noise falls and headroom-clipping noise
 //!     rises with B_w => an SNR-optimal B_w, shifting right as V_WL drops;
 //! (b) SNR_T vs B_ADC at B_w = 6: MPC bound << BGC's 19 bits.
+//! Executed through the cached sweep engine.
 
 use super::{sweep_point, uniform_stats, FigCtx, FigSummary};
 use crate::arch::{CmArch, ImcArch, OpPoint};
 use crate::compute::{qr::QrModel, qs::QsModel};
-use crate::coordinator::run_sweep;
+use crate::engine::{BoundReport, EsReport, SweepSpec};
 use crate::mc::ArchKind;
 use crate::tech::TechNode;
-use crate::util::csv::CsvWriter;
 
 pub const V_WLS: [f64; 3] = [0.6, 0.7, 0.8];
 
@@ -25,43 +25,49 @@ pub fn run_a(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let bws: Vec<u32> = (2..=8).collect();
     let n = 64;
 
-    let mut points = Vec::new();
-    let mut meta = Vec::new();
-    for &v in &V_WLS {
+    let spec = SweepSpec::new("fig11a")
+        .axis_f64("vwl", &V_WLS)
+        .axis_u32("bw", &bws);
+    let mut points = Vec::with_capacity(spec.len());
+    let mut meta = Vec::with_capacity(spec.len());
+    for gp in spec.points() {
+        let v = gp.num(0);
+        let bw = gp.int(1) as u32;
         let arch = cm(v);
-        for &bw in &bws {
-            let op = OpPoint::new(n, 6, bw, 14);
-            let nb = arch.noise(&op, &w, &x);
-            meta.push((v, bw, nb.snr_a_total_db(), nb.sigma_eta_h2, nb.sigma_eta_e2));
-            points.push(sweep_point(
-                &arch,
-                ArchKind::Cm,
-                format!("fig11a/vwl={v}/bw={bw}"),
-                &op,
-                ctx.trials,
-                0xC0 + bw as u64,
-            ));
-        }
+        let op = OpPoint::new(n, 6, bw, 14);
+        let nb = arch.noise(&op, &w, &x);
+        meta.push((v, bw, nb.snr_a_total_db(), nb.sigma_eta_h2, nb.sigma_eta_e2));
+        points.push(sweep_point(
+            &arch,
+            ArchKind::Cm,
+            gp.id,
+            &op,
+            ctx.trials,
+            0xC0 + bw as u64,
+        ));
     }
-    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+    let results = ctx.run_points(points);
 
-    let mut csv = CsvWriter::new(&[
-        "v_wl",
-        "b_w",
-        "snr_a_closed_db",
-        "snr_a_sim_db",
-        "sigma_eta_h2",
-        "sigma_eta_e2",
-    ]);
-    let mut max_gap: f64 = 0.0;
+    let mut report = EsReport::gated_on_expected(
+        &[
+            "v_wl",
+            "b_w",
+            "sigma_eta_h2",
+            "sigma_eta_e2",
+            "snr_a_closed_db",
+            "snr_a_sim_db",
+        ],
+        5.0,
+    );
     for ((v, bw, e_db, h2, e2), r) in meta.iter().zip(&results) {
-        let s_db = r.measured.snr_a_total_db;
-        if *e_db > 5.0 {
-            max_gap = max_gap.max((e_db - s_db).abs());
-        }
-        csv.row_f64(&[*v, *bw as f64, *e_db, s_db, *h2, *e2]);
+        report.push(
+            &[*v, *bw as f64, *h2, *e2],
+            *e_db,
+            r.measured.snr_a_total_db,
+        );
     }
-    csv.write_to(&ctx.csv_path("fig11a"))?;
+    report.write_to(&ctx.csv_path("fig11a"))?;
+    let max_gap = report.max_gap();
 
     // optimum B_w per V_WL from the simulation
     let best_bw = |v: f64| -> u32 {
@@ -104,39 +110,43 @@ pub fn run_b(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let b_adcs: Vec<u32> = (2..=11).collect();
     let n = 64;
 
-    let mut points = Vec::new();
-    let mut meta = Vec::new();
-    for &v in &V_WLS {
+    let spec = SweepSpec::new("fig11b")
+        .axis_f64("vwl", &V_WLS)
+        .axis_u32("b", &b_adcs);
+    let mut points = Vec::with_capacity(spec.len());
+    let mut meta = Vec::with_capacity(spec.len());
+    for gp in spec.points() {
+        let v = gp.num(0);
+        let b = gp.int(1) as u32;
         let arch = cm(v);
         let bound = arch.b_adc_min(&OpPoint::new(n, 6, 6, 8), &w, &x);
-        for &b in &b_adcs {
-            let op = OpPoint::new(n, 6, 6, b);
-            meta.push((v, b, bound));
-            points.push(sweep_point(
-                &arch,
-                ArchKind::Cm,
-                format!("fig11b/vwl={v}/b={b}"),
-                &op,
-                ctx.trials,
-                0xD0 + b as u64,
-            ));
-        }
+        let op = OpPoint::new(n, 6, 6, b);
+        meta.push((v, b, bound));
+        points.push(sweep_point(
+            &arch,
+            ArchKind::Cm,
+            gp.id,
+            &op,
+            ctx.trials,
+            0xD0 + b as u64,
+        ));
     }
-    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+    let results = ctx.run_points(points);
 
-    let mut csv =
-        CsvWriter::new(&["v_wl", "b_adc", "b_adc_min_pred", "snr_t_sim_db"]);
-    let mut gap_at_bound: f64 = f64::MIN;
-    let mut bound_max = 0;
+    let mut report =
+        BoundReport::new(&["v_wl", "b_adc", "b_adc_min_pred", "snr_t_sim_db"]);
     for ((v, b, bound), r) in meta.iter().zip(&results) {
-        csv.row_f64(&[*v, *b as f64, *bound as f64, r.measured.snr_t_db]);
-        bound_max = bound_max.max(*bound);
-        if b == bound {
-            gap_at_bound =
-                gap_at_bound.max(r.measured.snr_a_total_db - r.measured.snr_t_db);
-        }
+        report.push(
+            &[*v, *b as f64, *bound as f64, r.measured.snr_t_db],
+            *b,
+            *bound,
+            r.measured.snr_a_total_db,
+            r.measured.snr_t_db,
+        );
     }
-    csv.write_to(&ctx.csv_path("fig11b"))?;
+    report.write_to(&ctx.csv_path("fig11b"))?;
+    let gap_at_bound = report.gap_at_bound();
+    let bound_max = report.bound_max();
     println!(
         "Fig. 11(b): MPC assigns <= {bound_max} bits (BGC: {}); max SNR_A - SNR_T at bound = {gap_at_bound:.2} dB",
         crate::quant::criteria::bgc_bits(6, 6, n)

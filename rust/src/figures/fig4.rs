@@ -5,6 +5,7 @@
 //! Closed forms (eqs. 9, 13, 14) are validated against Monte-Carlo.
 
 use super::{FigCtx, FigSummary};
+use crate::engine::EsReport;
 use crate::quant::criteria::{bgc_bits, bgc_sqnr_db, mpc_sqnr_db};
 use crate::quant::{adc_signed, SignalStats};
 use crate::util::csv::CsvWriter;
@@ -104,9 +105,8 @@ pub fn run_b(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     // Clipping events are rare near the optimum (p_c ~ 1e-4 at zeta = 4),
     // so the E-S comparison needs a deep ensemble to resolve them.
     let trials = (ctx.trials * 150).max(300_000);
-    let mut csv = CsvWriter::new(&["zeta", "mpc_db", "mc_db"]);
+    let mut report = EsReport::new(&["zeta", "mpc_db", "mc_db"]);
     let mut best = (0.0, f64::MIN);
-    let mut max_err: f64 = 0.0;
     for &z in &zetas {
         let pred = mpc_sqnr_db(by, z);
         // Gaussian-output MC (CLT regime: N = 512)
@@ -125,10 +125,10 @@ pub fn run_b(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
         if pred > best.1 {
             best = (z, pred);
         }
-        max_err = max_err.max((pred - mc).abs());
-        csv.row_f64(&[z, pred, mc]);
+        report.push(&[z], pred, mc);
     }
-    csv.write_to(&ctx.csv_path("fig4b"))?;
+    report.write_to(&ctx.csv_path("fig4b"))?;
+    let max_err = report.max_gap();
     println!(
         "Fig. 4(b): SQNR_qy^MPC(B_y=8) maximized at zeta = {} ({:.2} dB); max |E-S| = {:.2} dB",
         best.0, best.1, max_err

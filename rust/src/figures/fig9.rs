@@ -3,54 +3,51 @@
 //!     N_max, higher V_WL -> higher plateau but earlier collapse;
 //! (b) SNR_T vs B_ADC: saturates at SNR_A once B_ADC clears the Table III
 //!     lower bound (circled value).
-//! E (closed form) and S (sample-accurate simulation) on every point.
+//! E (closed form) and S (sample-accurate simulation) on every point,
+//! executed through the cached sweep engine.
 
 use super::{sweep_point, uniform_stats, FigCtx, FigSummary};
 use crate::arch::{ImcArch, OpPoint, QsArch};
 use crate::compute::qs::QsModel;
-use crate::coordinator::run_sweep;
+use crate::engine::{AxisValue, BoundReport, EsReport, SweepSpec};
 use crate::mc::ArchKind;
 use crate::tech::TechNode;
-use crate::util::csv::CsvWriter;
 
 pub const V_WLS: [f64; 4] = [0.5, 0.6, 0.7, 0.8];
 pub const NS: [usize; 9] = [16, 32, 48, 64, 96, 128, 192, 320, 512];
 
 pub fn run_a(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let (w, x) = uniform_stats();
-    let mut points = Vec::new();
-    let mut expected = Vec::new();
-    for &v_wl in &V_WLS {
+    let spec = SweepSpec::new("fig9a")
+        .axis_f64("vwl", &V_WLS)
+        .axis_usize("n", &NS);
+    let mut points = Vec::with_capacity(spec.len());
+    let mut expected = Vec::with_capacity(spec.len());
+    for gp in spec.points() {
+        let v_wl = gp.num(0);
+        let n = gp.int(1) as usize;
         let arch = QsArch::new(QsModel::new(TechNode::n65(), v_wl));
-        for &n in &NS {
-            let op = OpPoint::new(n, 6, 6, 14);
-            expected.push((v_wl, n, arch.noise(&op, &w, &x).snr_a_total_db()));
-            points.push(sweep_point(
-                &arch,
-                ArchKind::Qs,
-                format!("fig9a/vwl={v_wl}/n={n}"),
-                &op,
-                ctx.trials,
-                0x9A + n as u64,
-            ));
-        }
+        let op = OpPoint::new(n, 6, 6, 14);
+        expected.push((v_wl, n, arch.noise(&op, &w, &x).snr_a_total_db()));
+        points.push(sweep_point(
+            &arch,
+            ArchKind::Qs,
+            gp.id,
+            &op,
+            ctx.trials,
+            0x9A + n as u64,
+        ));
     }
-    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+    let results = ctx.run_points(points);
 
-    let mut csv = CsvWriter::new(&["v_wl", "n", "snr_a_closed_db", "snr_a_sim_db"]);
-    let mut max_gap: f64 = 0.0;
-    let mut peak: f64 = f64::MIN;
+    // E-S agreement only meaningful away from the clipping cliff where
+    // the binomial-tail approximation is loose, hence the 5 dB gate.
+    let mut report = EsReport::gated(&["v_wl", "n", "snr_a_closed_db", "snr_a_sim_db"], 5.0);
     for ((v_wl, n, e_db), r) in expected.iter().zip(&results) {
-        let s_db = r.measured.snr_a_total_db;
-        // E-S agreement only meaningful away from the clipping cliff where
-        // the binomial-tail approximation is loose
-        if *e_db > 5.0 && s_db > 5.0 {
-            max_gap = max_gap.max((e_db - s_db).abs());
-        }
-        peak = peak.max(s_db);
-        csv.row_f64(&[*v_wl, *n as f64, *e_db, s_db]);
+        report.push(&[*v_wl, *n as f64], *e_db, r.measured.snr_a_total_db);
     }
-    csv.write_to(&ctx.csv_path("fig9a"))?;
+    report.write_to(&ctx.csv_path("fig9a"))?;
+    let max_gap = report.max_gap();
 
     // headline shape checks (V_WL = 0.8)
     let sim = |v: f64, n: usize| {
@@ -84,27 +81,37 @@ pub fn run_b(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let b_adcs: Vec<u32> = (2..=11).collect();
     let configs = [(0.8, 128usize), (0.7, 128), (0.8, 48)];
 
-    let mut points = Vec::new();
-    let mut meta = Vec::new();
-    for &(v_wl, n) in &configs {
+    let spec = SweepSpec::new("fig9b")
+        .axis_tuples(
+            &["vwl", "n"],
+            configs
+                .iter()
+                .map(|&(v, n)| vec![AxisValue::Num(v), AxisValue::Int(n as i64)])
+                .collect(),
+        )
+        .axis_u32("b", &b_adcs);
+    let mut points = Vec::with_capacity(spec.len());
+    let mut meta = Vec::with_capacity(spec.len());
+    for gp in spec.points() {
+        let v_wl = gp.num(0);
+        let n = gp.int(1) as usize;
+        let b = gp.int(2) as u32;
         let arch = QsArch::new(QsModel::new(TechNode::n65(), v_wl));
         let bound = arch.b_adc_min(&OpPoint::new(n, 6, 6, 8), &w, &x);
-        for &b in &b_adcs {
-            let op = OpPoint::new(n, 6, 6, b);
-            meta.push((v_wl, n, b, bound, arch.noise(&op, &w, &x).snr_a_total_db()));
-            points.push(sweep_point(
-                &arch,
-                ArchKind::Qs,
-                format!("fig9b/vwl={v_wl}/n={n}/b={b}"),
-                &op,
-                ctx.trials,
-                0x9B + b as u64,
-            ));
-        }
+        let op = OpPoint::new(n, 6, 6, b);
+        meta.push((v_wl, n, b, bound, arch.noise(&op, &w, &x).snr_a_total_db()));
+        points.push(sweep_point(
+            &arch,
+            ArchKind::Qs,
+            gp.id,
+            &op,
+            ctx.trials,
+            0x9B + b as u64,
+        ));
     }
-    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+    let results = ctx.run_points(points);
 
-    let mut csv = CsvWriter::new(&[
+    let mut report = BoundReport::new(&[
         "v_wl",
         "n",
         "b_adc",
@@ -112,23 +119,24 @@ pub fn run_b(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
         "snr_a_closed_db",
         "snr_t_sim_db",
     ]);
-    let mut gap_at_bound: f64 = f64::MIN;
     for ((v_wl, n, b, bound, e_a), r) in meta.iter().zip(&results) {
-        csv.row_f64(&[
-            *v_wl,
-            *n as f64,
-            *b as f64,
-            *bound as f64,
-            *e_a,
+        report.push(
+            &[
+                *v_wl,
+                *n as f64,
+                *b as f64,
+                *bound as f64,
+                *e_a,
+                r.measured.snr_t_db,
+            ],
+            *b,
+            *bound,
+            r.measured.snr_a_total_db,
             r.measured.snr_t_db,
-        ]);
-        if b == bound {
-            // at the predicted minimum, SNR_T should be within ~1 dB of
-            // the simulated SNR_A
-            gap_at_bound = gap_at_bound.max(r.measured.snr_a_total_db - r.measured.snr_t_db);
-        }
+        );
     }
-    csv.write_to(&ctx.csv_path("fig9b"))?;
+    report.write_to(&ctx.csv_path("fig9b"))?;
+    let gap_at_bound = report.gap_at_bound();
     println!(
         "Fig. 9(b): max SNR_A - SNR_T at the predicted minimum B_ADC = {gap_at_bound:.2} dB"
     );

@@ -3,6 +3,12 @@
 //! Every driver emits a CSV under the output directory and an ASCII
 //! rendering to stdout, and returns a short machine-checkable summary
 //! used by integration tests and EXPERIMENTS.md.
+//!
+//! All Monte-Carlo sweeps run through the unified engine
+//! ([`FigCtx::run_points`]): grids come from `engine::SweepSpec`, and
+//! results are served from the content-addressed cache under
+//! `<out_dir>/cache`, so re-running a driver with the same out-dir
+//! recomputes nothing and reproduces the cold run byte-for-byte.
 
 pub mod ablation;
 pub mod fig12;
@@ -16,7 +22,8 @@ pub mod tables;
 
 use std::path::PathBuf;
 
-use crate::coordinator::Backend;
+use crate::coordinator::{Backend, SweepPoint, SweepResult};
+use crate::engine::Engine;
 
 /// Shared driver context.
 pub struct FigCtx {
@@ -26,6 +33,9 @@ pub struct FigCtx {
     pub trials: usize,
     pub workers: usize,
     pub verbose: bool,
+    /// Serve repeated points from the content-addressed result cache
+    /// under `out_dir/cache` (on by default; `--no-cache` in the CLI).
+    pub cache: bool,
 }
 
 impl FigCtx {
@@ -36,6 +46,7 @@ impl FigCtx {
             trials: 2048,
             workers: crate::coordinator::SweepOptions::default().workers,
             verbose: false,
+            cache: true,
         }
     }
 
@@ -44,6 +55,32 @@ impl FigCtx {
             workers: self.workers,
             verbose: self.verbose,
         }
+    }
+
+    /// The sweep engine this context drives (cache rooted at
+    /// `out_dir/cache` unless disabled).
+    pub fn engine(&self) -> Engine {
+        let engine = Engine::new(self.backend.clone(), self.sweep_opts());
+        if self.cache {
+            engine.with_cache(self.out_dir.join("cache"))
+        } else {
+            engine
+        }
+    }
+
+    /// Run sweep points through the engine (cache-aware, input order).
+    pub fn run_points(&self, points: Vec<SweepPoint>) -> Vec<SweepResult> {
+        let (results, stats) = self.engine().run_with_stats(points);
+        if self.verbose {
+            eprintln!(
+                "[engine] {} points: {} cache hits, {} computed, {} errors",
+                results.len(),
+                stats.hits,
+                stats.misses,
+                stats.errors
+            );
+        }
+        results
     }
 
     pub fn csv_path(&self, name: &str) -> PathBuf {

@@ -5,7 +5,7 @@
 use super::{sweep_point, uniform_stats, FigCtx, FigSummary};
 use crate::arch::{CmArch, ImcArch, OpPoint, QrArch, QsArch};
 use crate::compute::{qr::QrModel, qs::QsModel};
-use crate::coordinator::run_sweep;
+use crate::engine::{AxisValue, SweepSpec};
 use crate::mc::ArchKind;
 use crate::taxonomy::{model_counts, table1 as tax_table, AdcPrecision, WeightPrecision};
 use crate::tech::TechNode;
@@ -109,9 +109,21 @@ pub fn table3(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
         point: crate::coordinator::SweepPoint,
     }
     let mut cases: Vec<Case> = Vec::new();
+    let pairs = |items: &[(f64, usize)]| -> Vec<Vec<AxisValue>> {
+        items
+            .iter()
+            .map(|&(knob, dim)| vec![AxisValue::Num(knob), AxisValue::Int(dim as i64)])
+            .collect()
+    };
 
     // QS-Arch grid
-    for (v_wl, n) in [(0.8, 64usize), (0.8, 128), (0.7, 128), (0.6, 256)] {
+    let qs_spec = SweepSpec::new("t3/qs").axis_tuples(
+        &["vwl", "n"],
+        pairs(&[(0.8, 64), (0.8, 128), (0.7, 128), (0.6, 256)]),
+    );
+    for gp in qs_spec.points() {
+        let v_wl = gp.num(0);
+        let n = gp.int(1) as usize;
         let arch = QsArch::new(QsModel::new(TechNode::n65(), v_wl));
         let op = OpPoint::new(n, 6, 6, 14);
         let nb = arch.noise(&op, &w, &x);
@@ -119,18 +131,15 @@ pub fn table3(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
             label: format!("QS v={v_wl} N={n}"),
             closed_eta2: nb.sigma_eta_a2(),
             closed_snr_a_db: nb.snr_a_total_db(),
-            point: sweep_point(
-                &arch,
-                ArchKind::Qs,
-                format!("t3/qs/{v_wl}/{n}"),
-                &op,
-                ctx.trials,
-                31 + n as u64,
-            ),
+            point: sweep_point(&arch, ArchKind::Qs, gp.id, &op, ctx.trials, 31 + n as u64),
         });
     }
     // QR-Arch grid
-    for (c_ff, n) in [(1.0, 128usize), (3.0, 128), (9.0, 256)] {
+    let qr_spec = SweepSpec::new("t3/qr")
+        .axis_tuples(&["c", "n"], pairs(&[(1.0, 128), (3.0, 128), (9.0, 256)]));
+    for gp in qr_spec.points() {
+        let c_ff = gp.num(0);
+        let n = gp.int(1) as usize;
         let arch = QrArch::new(QrModel::new(TechNode::n65(), c_ff));
         let op = OpPoint::new(n, 6, 7, 14);
         let nb = arch.noise(&op, &w, &x);
@@ -138,18 +147,15 @@ pub fn table3(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
             label: format!("QR C={c_ff} N={n}"),
             closed_eta2: nb.sigma_eta_a2(),
             closed_snr_a_db: nb.snr_a_total_db(),
-            point: sweep_point(
-                &arch,
-                ArchKind::Qr,
-                format!("t3/qr/{c_ff}/{n}"),
-                &op,
-                ctx.trials,
-                57 + n as u64,
-            ),
+            point: sweep_point(&arch, ArchKind::Qr, gp.id, &op, ctx.trials, 57 + n as u64),
         });
     }
     // CM grid
-    for (v_wl, bw) in [(0.8, 5u32), (0.8, 6), (0.7, 7)] {
+    let cm_spec = SweepSpec::new("t3/cm")
+        .axis_tuples(&["vwl", "bw"], pairs(&[(0.8, 5), (0.8, 6), (0.7, 7)]));
+    for gp in cm_spec.points() {
+        let v_wl = gp.num(0);
+        let bw = gp.int(1) as u32;
         let arch = CmArch::new(
             QsModel::new(TechNode::n65(), v_wl),
             QrModel::new(TechNode::n65(), 3.0),
@@ -160,19 +166,12 @@ pub fn table3(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
             label: format!("CM v={v_wl} Bw={bw}"),
             closed_eta2: nb.sigma_eta_a2(),
             closed_snr_a_db: nb.snr_a_total_db(),
-            point: sweep_point(
-                &arch,
-                ArchKind::Cm,
-                format!("t3/cm/{v_wl}/{bw}"),
-                &op,
-                ctx.trials,
-                91 + bw as u64,
-            ),
+            point: sweep_point(&arch, ArchKind::Cm, gp.id, &op, ctx.trials, 91 + bw as u64),
         });
     }
 
     let points: Vec<_> = cases.iter().map(|c| c.point.clone()).collect();
-    let results = run_sweep(points, ctx.backend.clone(), ctx.sweep_opts());
+    let results = ctx.run_points(points);
 
     let mut tbl = Table::new(&[
         "case",

@@ -11,10 +11,15 @@
 //! * **L2** — JAX models (`python/compile/model.py`) of the three IMC
 //!   architectures (QS-Arch, QR-Arch, CM) over the full signal chain.
 //! * **L3** — this crate: the closed-form analytical models (every
-//!   equation in the paper), the experiment coordinator (sweep scheduler,
-//!   worker pool, PJRT execution of the AOT artifacts), a native
-//!   Monte-Carlo oracle, the fixed-point DNN substrate, and drivers that
-//!   regenerate every figure and table of the paper's evaluation.
+//!   equation in the paper), the sweep engine (`engine`: declarative
+//!   grids, a content-addressed result cache, cached execution), the
+//!   experiment coordinator (lock-free sweep scheduler, worker pool,
+//!   PJRT execution of the AOT artifacts), a native Monte-Carlo oracle,
+//!   the fixed-point DNN substrate, and drivers that regenerate every
+//!   figure and table of the paper's evaluation — all through the same
+//!   cached, parallel path, so arbitrary design-space queries (the
+//!   `imclim sweep` subcommand) are first-class, not just the paper's
+//!   fixed figures.
 //!
 //! Python never runs on the experiment path: `make artifacts` is the only
 //! Python invocation; everything else is this binary.
@@ -26,6 +31,7 @@ pub mod compute;
 pub mod coordinator;
 pub mod dnn;
 pub mod energy;
+pub mod engine;
 pub mod figures;
 pub mod mc;
 pub mod prop;

@@ -77,6 +77,17 @@ pub struct McOutput {
 }
 
 impl McOutput {
+    /// Preallocate all four streams for `trials` entries, so the
+    /// per-trial accumulate path never reallocates.
+    pub fn with_capacity(trials: usize) -> Self {
+        Self {
+            y_ideal: Vec::with_capacity(trials),
+            y_fx: Vec::with_capacity(trials),
+            y_a: Vec::with_capacity(trials),
+            y_hat: Vec::with_capacity(trials),
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.y_ideal.len()
     }
@@ -108,7 +119,7 @@ pub fn simulate(
     seed: u64,
     dist: InputDist,
 ) -> McOutput {
-    let mut out = McOutput::default();
+    let mut out = McOutput::with_capacity(trials);
     let mut rng = Pcg64::new(seed);
     let n = params[pvec::IDX_N_ACTIVE] as usize;
     let mut x = vec![0.0; n];
@@ -489,6 +500,18 @@ mod tests {
         assert_eq!(a.y_hat, b.y_hat);
         let c = simulate(ArchKind::Qs, &p, 16, 10, InputDist::Uniform);
         assert_ne!(a.y_hat, c.y_hat);
+    }
+
+    #[test]
+    fn with_capacity_preallocates_all_streams() {
+        let out = McOutput::with_capacity(100);
+        assert!(out.is_empty());
+        assert!(out.y_ideal.capacity() >= 100);
+        assert!(out.y_fx.capacity() >= 100);
+        assert!(out.y_a.capacity() >= 100);
+        assert!(out.y_hat.capacity() >= 100);
+        let sim = simulate(ArchKind::Qs, &base_params(16, 4, 4), 33, 1, InputDist::Uniform);
+        assert_eq!(sim.len(), 33);
     }
 
     #[test]

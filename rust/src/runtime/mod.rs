@@ -12,6 +12,11 @@
 
 pub mod manifest;
 
+/// Offline stand-in for the vendored `xla` crate: same API surface,
+/// fails at runtime instead of at build time. Swap for the real
+/// bindings to execute artifacts (see its module docs).
+mod xla;
+
 pub use manifest::{ArtifactSpec, Manifest};
 
 use std::cell::RefCell;

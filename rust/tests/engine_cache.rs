@@ -1,0 +1,172 @@
+//! Engine + result-cache integration: a warm re-run performs zero
+//! Monte-Carlo recomputation and is bit-identical to the cold run; cache
+//! keys react to every content field; corrupted records fall back to
+//! recompute instead of erroring.
+
+use std::path::{Path, PathBuf};
+
+use imclim::arch::pvec;
+use imclim::coordinator::{Backend, SweepOptions, SweepPoint};
+use imclim::engine::{cache_key, Engine};
+use imclim::mc::{ArchKind, InputDist};
+
+fn qs_point(id: &str, n: usize, seed: u64, trials: usize) -> SweepPoint {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n as f64;
+    p[pvec::IDX_BX] = 6.0;
+    p[pvec::IDX_BW] = 6.0;
+    p[pvec::IDX_B_ADC] = 8.0;
+    p[pvec::QS_IDX_SIGMA_D] = 0.1;
+    p[pvec::QS_IDX_K_H] = 60.0;
+    p[pvec::QS_IDX_V_C] = 60.0;
+    SweepPoint::new(id, ArchKind::Qs, p)
+        .with_trials(trials)
+        .with_seed(seed)
+}
+
+/// Fresh (pre-cleaned) cache directory for one test.
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imclim-engine-test-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn engine(dir: &Path) -> Engine {
+    Engine::new(
+        Backend::Native,
+        SweepOptions {
+            workers: 4,
+            verbose: false,
+        },
+    )
+    .with_cache(dir.to_path_buf())
+}
+
+#[test]
+fn warm_rerun_recomputes_nothing_and_is_bit_identical() {
+    let dir = tmp_dir("warm");
+    let mk = || -> Vec<SweepPoint> {
+        (0..6)
+            .map(|i| qs_point(&format!("p{i}"), 32 + 8 * i, i as u64, 200))
+            .collect()
+    };
+    let e = engine(&dir);
+    let (cold, s1) = e.run_with_stats(mk());
+    assert_eq!(s1.hits, 0);
+    assert_eq!(s1.misses, 6);
+    assert_eq!(s1.errors, 0);
+
+    let (warm, s2) = e.run_with_stats(mk());
+    assert_eq!(s2.misses, 0, "warm run must not recompute anything");
+    assert_eq!(s2.hits, 6);
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.id, b.id);
+        assert!(b.cached, "warm results are flagged as cached");
+        assert!(b.error.is_none());
+        // every measured field is bit-identical to the cold run
+        assert_eq!(a.measured.sigma_yo2.to_bits(), b.measured.sigma_yo2.to_bits());
+        assert_eq!(a.measured.sigma_qiy2.to_bits(), b.measured.sigma_qiy2.to_bits());
+        assert_eq!(
+            a.measured.sigma_eta_a2.to_bits(),
+            b.measured.sigma_eta_a2.to_bits()
+        );
+        assert_eq!(a.measured.sigma_qy2.to_bits(), b.measured.sigma_qy2.to_bits());
+        assert_eq!(
+            a.measured.sqnr_qiy_db.to_bits(),
+            b.measured.sqnr_qiy_db.to_bits()
+        );
+        assert_eq!(a.measured.snr_a_db.to_bits(), b.measured.snr_a_db.to_bits());
+        assert_eq!(
+            a.measured.snr_a_total_db.to_bits(),
+            b.measured.snr_a_total_db.to_bits()
+        );
+        assert_eq!(a.measured.snr_t_db.to_bits(), b.measured.snr_t_db.to_bits());
+        assert_eq!(a.measured.trials, b.measured.trials);
+    }
+    // the manifest indexes every point
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    for r in &cold {
+        assert!(manifest.contains(&r.id), "manifest lists {}", r.id);
+    }
+}
+
+#[test]
+fn partial_overlap_computes_only_the_new_points() {
+    let dir = tmp_dir("partial");
+    let e = engine(&dir);
+    let (_, s1) = e.run_with_stats(vec![qs_point("a", 32, 1, 128), qs_point("b", 48, 2, 128)]);
+    assert_eq!(s1.misses, 2);
+    // one old point, one new point, interleaved
+    let (res, s2) = e.run_with_stats(vec![
+        qs_point("c", 64, 3, 128),
+        qs_point("a", 32, 1, 128),
+    ]);
+    assert_eq!(s2.hits, 1);
+    assert_eq!(s2.misses, 1);
+    assert_eq!(res[0].id, "c");
+    assert!(!res[0].cached);
+    assert_eq!(res[1].id, "a");
+    assert!(res[1].cached);
+}
+
+#[test]
+fn key_reacts_to_every_content_field_but_not_the_label() {
+    let base = qs_point("k", 64, 7, 256);
+    let key = cache_key(&base, "native");
+    assert_eq!(key.len(), 32);
+
+    let mut trials = base.clone();
+    trials.trials = 512;
+    assert_ne!(cache_key(&trials, "native"), key, "trials");
+
+    let mut seed = base.clone();
+    seed.seed = 8;
+    assert_ne!(cache_key(&seed, "native"), key, "seed");
+
+    let mut dist = base.clone();
+    dist.dist = InputDist::ClippedGaussian { sx: 0.3, sw: 0.3 };
+    assert_ne!(cache_key(&dist, "native"), key, "dist");
+
+    let mut params = base.clone();
+    params.params[pvec::IDX_B_ADC] += 1.0;
+    assert_ne!(cache_key(&params, "native"), key, "params");
+
+    let mut kind = base.clone();
+    kind.kind = ArchKind::Qr;
+    assert_ne!(cache_key(&kind, "native"), key, "kind");
+
+    assert_ne!(cache_key(&base, "pjrt"), key, "backend");
+
+    // content-addressed: the display label does not matter
+    let mut renamed = base.clone();
+    renamed.id = "some/other/label".into();
+    assert_eq!(cache_key(&renamed, "native"), key, "label must not matter");
+}
+
+#[test]
+fn corrupted_record_falls_back_to_recompute() {
+    let dir = tmp_dir("corrupt");
+    let e = engine(&dir);
+    let mk = || vec![qs_point("c0", 48, 3, 128)];
+    let (cold, _) = e.run_with_stats(mk());
+
+    let key = cache_key(&mk()[0], "native");
+    let record = dir.join(format!("{key}.json"));
+    assert!(record.exists(), "record written at {}", record.display());
+    std::fs::write(&record, "{ definitely not json").unwrap();
+
+    let (again, stats) = e.run_with_stats(mk());
+    assert_eq!(stats.misses, 1, "corrupt record must be treated as a miss");
+    assert_eq!(stats.hits, 0);
+    assert!(again[0].error.is_none(), "recompute succeeds, no error");
+    assert_eq!(
+        cold[0].measured.snr_t_db.to_bits(),
+        again[0].measured.snr_t_db.to_bits(),
+        "recomputed value matches the original"
+    );
+
+    // and the repaired record serves the next run
+    let (_, healed) = e.run_with_stats(mk());
+    assert_eq!(healed.hits, 1);
+}

@@ -9,6 +9,9 @@ use imclim::tech::TechNode;
 
 fn ctx(tmp: &str) -> FigCtx {
     let dir = std::env::temp_dir().join(format!("imclim-test-{tmp}"));
+    // start cold: a cache surviving from a previous test invocation would
+    // mask simulator regressions behind bit-identical stale results
+    let _ = std::fs::remove_dir_all(&dir);
     let mut c = FigCtx::native(dir);
     c.trials = 1024;
     c
