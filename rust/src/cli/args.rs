@@ -1,7 +1,10 @@
 //! Hand-rolled argument parser (offline build: no clap): positional
-//! arguments plus `--flag value` / `--switch` options.
+//! arguments plus `--flag value` / `--switch` options, and the
+//! human-unit value parsers (byte sizes, durations) used by `cache gc`.
 
 use std::collections::BTreeMap;
+
+use anyhow::{anyhow, ensure, Result};
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -60,6 +63,45 @@ impl Args {
     }
 }
 
+/// Parse a byte size with optional binary-unit suffix: `"4096"`,
+/// `"512k"`, `"10M"`, `"2g"` (k/m/g = KiB/MiB/GiB).
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let t = s.trim();
+    ensure!(!t.is_empty(), "empty byte size");
+    let (digits, mult) = match t.chars().next_back().unwrap() {
+        'k' | 'K' => (&t[..t.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&t[..t.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t, 1u64),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad byte size '{s}' (want N, Nk, Nm or Ng)"))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow!("byte size '{s}' overflows"))
+}
+
+/// Parse a duration in seconds with optional suffix: `"90"`, `"45s"`,
+/// `"10m"`, `"6h"`, `"7d"`.
+pub fn parse_duration_secs(s: &str) -> Result<u64> {
+    let t = s.trim();
+    ensure!(!t.is_empty(), "empty duration");
+    let (digits, mult) = match t.chars().next_back().unwrap() {
+        's' | 'S' => (&t[..t.len() - 1], 1u64),
+        'm' | 'M' => (&t[..t.len() - 1], 60),
+        'h' | 'H' => (&t[..t.len() - 1], 3600),
+        'd' | 'D' => (&t[..t.len() - 1], 86_400),
+        _ => (t, 1),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad duration '{s}' (want N, Ns, Nm, Nh or Nd)"))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow!("duration '{s}' overflows"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,5 +140,28 @@ mod tests {
         let a = parse("--trials abc");
         assert_eq!(a.opt_parse("trials", 7usize), 7);
         assert_eq!(a.opt_parse("missing", 3.5f64), 3.5);
+    }
+
+    #[test]
+    fn byte_sizes_with_binary_suffixes() {
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes("512k").unwrap(), 512 * 1024);
+        assert_eq!(parse_bytes("10M").unwrap(), 10 * 1024 * 1024);
+        assert_eq!(parse_bytes("2g").unwrap(), 2 * 1024 * 1024 * 1024);
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("k").is_err());
+        assert!(parse_bytes("ten").is_err());
+        assert!(parse_bytes("99999999999999999999g").is_err());
+    }
+
+    #[test]
+    fn durations_with_suffixes() {
+        assert_eq!(parse_duration_secs("90").unwrap(), 90);
+        assert_eq!(parse_duration_secs("45s").unwrap(), 45);
+        assert_eq!(parse_duration_secs("10m").unwrap(), 600);
+        assert_eq!(parse_duration_secs("6h").unwrap(), 21_600);
+        assert_eq!(parse_duration_secs("7d").unwrap(), 604_800);
+        assert!(parse_duration_secs("").is_err());
+        assert!(parse_duration_secs("soon").is_err());
     }
 }

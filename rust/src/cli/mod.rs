@@ -4,7 +4,11 @@
 //!   figure <name|all>    regenerate a paper figure/table (CSV + stdout)
 //!   table <t1|t2|t3>     aliases for table1/table2/table3
 //!   sweep                user-defined design-space grid through the
-//!                        cached sweep engine (lists + ranges per axis)
+//!                        cached sweep engine (lists + ranges per axis);
+//!                        distributes across shard subprocesses with
+//!                        --procs k, or runs one shard with --shard i/k
+//!   merge                union shard cache directories into one
+//!   cache                cache maintenance: gc (size/age LRU), stats
 //!   dnn                  train the Fig. 2 MLP and report accuracy/SNR
 //!   smoke                PJRT round-trip smoke test
 //!   assign               precision assignment for a target SNR (Sec. III-B)
@@ -13,17 +17,23 @@
 pub mod args;
 
 use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::Context as _;
 
 use crate::arch::{pvec, AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
 use crate::compute::{qr::QrModel, qs::QsModel};
-use crate::coordinator::{Backend, PjrtService};
-use crate::engine::{parse_grid_f64, parse_grid_u32, parse_grid_usize, SweepSpec};
+use crate::coordinator::{run_shard_procs, Backend, PjrtService, ShardCommand};
+use crate::engine::{
+    gc, merge_cache_dirs, parse_grid_f64, parse_grid_u32, parse_grid_usize, parse_shard,
+    scan_records, GcOptions, SweepSpec,
+};
 use crate::figures::FigCtx;
 use crate::mc::{ArchKind, InputDist};
 use crate::tech::TechNode;
 use crate::util::csv::CsvWriter;
 use crate::util::table::{fmt_db, fmt_energy, Table};
-use args::Args;
+use args::{parse_bytes, parse_duration_secs, Args};
 
 const USAGE: &str = "\
 imclim — fundamental limits of in-memory computing architectures
@@ -42,6 +52,20 @@ COMMANDS:
                       --node 65,7 --dist uniform,gauss [--seed S]
                       emits <out-dir>/sweep.csv; repeated points are
                       served from the cache under <out-dir>/cache
+                        --procs K    distribute over K shard subprocesses,
+                                     merge their caches, then emit the
+                                     canonical CSV from the merged cache
+                                     (byte-identical to a 1-process run);
+                                     --keep-shards keeps shard-i/ dirs
+                        --shard i/K  run only shard i of a K-way split
+                                     (point ids and cache keys unchanged)
+  merge <dir>...      union shard cache dirs (or their out-dirs) into
+                      <out-dir>/cache, rebuilding the manifest; reports
+                      key collisions with differing payloads
+  cache gc            evict cache records: --max-bytes N[k|m|g] (LRU to
+                      fit) and/or --max-age T[s|m|h|d] (expire older;
+                      newer records are never evicted); --dry-run
+  cache stats         record count / size / age summary of the cache
   assign              precision assignment: --snr-a DB [--margin DB]
   dnn                 train the Fig. 2 MLP: [--epochs E]
   smoke               PJRT artifact round-trip check
@@ -74,6 +98,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         Some("figure") => cmd_figure(args),
         Some("table") => cmd_table(args),
         Some("sweep") => cmd_sweep(args),
+        Some("merge") => cmd_merge(args),
+        Some("cache") => cmd_cache(args),
         Some("assign") => cmd_assign(args),
         Some("dnn") => cmd_dnn(args),
         Some("smoke") => cmd_smoke(args),
@@ -207,6 +233,102 @@ fn csv_list(raw: &str) -> Vec<String> {
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let shard = args.opt("shard").map(parse_shard).transpose()?;
+    let procs = args.opt_parse("procs", 1usize);
+    if procs > 1 {
+        anyhow::ensure!(
+            shard.is_none(),
+            "--procs and --shard are mutually exclusive (the parent assigns shards)"
+        );
+        anyhow::ensure!(
+            !args.has("no-cache"),
+            "--procs needs the result cache: shard outputs are exchanged by merging caches"
+        );
+        orchestrate_sharded_sweep(args, procs)?;
+        // warm pass over the merged cache computes nothing and emits the
+        // canonical full-grid sweep.csv (byte-identical to a one-process
+        // run, since every record round-trips bit-exactly).
+        return run_sweep_grid(args, None);
+    }
+    run_sweep_grid(args, shard)
+}
+
+/// Spawn `procs` shard subprocesses of this same sweep, stream their
+/// progress, and merge their cache directories into `<out-dir>/cache`.
+fn orchestrate_sharded_sweep(args: &Args, procs: usize) -> anyhow::Result<()> {
+    let out_dir: PathBuf = args.opt("out-dir").unwrap_or("results").into();
+    std::fs::create_dir_all(&out_dir)?;
+    let exe = std::env::current_exe().context("locating the imclim executable")?;
+    let mut shards = Vec::with_capacity(procs);
+    let mut shard_dirs = Vec::with_capacity(procs);
+    for i in 0..procs {
+        let dir = out_dir.join(format!("shard-{i}"));
+        let mut command = std::process::Command::new(&exe);
+        command.arg("sweep");
+        for (k, v) in &args.options {
+            if matches!(k.as_str(), "out-dir" | "procs" | "shard") {
+                continue;
+            }
+            command.arg(format!("--{k}")).arg(v);
+        }
+        for sw in &args.switches {
+            if sw == "keep-shards" {
+                continue;
+            }
+            command.arg(format!("--{sw}"));
+        }
+        // split the default thread budget across the shard processes so
+        // --procs doesn't oversubscribe the CPU K-fold; an explicit
+        // --workers is the user's per-shard choice and passes through.
+        if args.opt("workers").is_none() {
+            let per_shard = crate::coordinator::SweepOptions::default()
+                .workers
+                .div_ceil(procs)
+                .max(1);
+            command.arg("--workers").arg(per_shard.to_string());
+        }
+        command.arg("--shard").arg(format!("{i}/{procs}"));
+        command.arg("--out-dir").arg(&dir);
+        shards.push(ShardCommand {
+            label: format!("shard {i}/{procs}"),
+            command,
+        });
+        shard_dirs.push(dir);
+    }
+    eprintln!(
+        "sweep: distributing over {procs} shard processes under {}",
+        out_dir.display()
+    );
+    run_shard_procs(shards)?;
+
+    let dst = out_dir.join("cache");
+    let sources: Vec<PathBuf> = shard_dirs.iter().map(|d| d.join("cache")).collect();
+    let report = merge_cache_dirs(&dst, &sources)?;
+    eprintln!(
+        "sweep: merged {} shard caches into {} ({} new records, {} already shared)",
+        procs,
+        dst.display(),
+        report.copied,
+        report.identical
+    );
+    if !report.collisions.is_empty() {
+        eprintln!(
+            "warning: {} cache keys collided with differing payloads (kept existing): {:?}",
+            report.collisions.len(),
+            report.collisions
+        );
+    }
+    if !args.has("keep-shards") && report.collisions.is_empty() {
+        for d in &shard_dirs {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+    Ok(())
+}
+
+/// Run the sweep grid in-process (optionally restricted to one shard of
+/// a `--shard i/k` split) and emit `<out-dir>/sweep.csv`.
+fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<()> {
     let (ctx, _service) = make_ctx(args)?;
     std::fs::create_dir_all(&ctx.out_dir)?;
 
@@ -239,7 +361,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let arch_refs: Vec<&str> = archs.iter().map(String::as_str).collect();
     let node_refs: Vec<&str> = nodes.iter().map(String::as_str).collect();
     let dist_refs: Vec<&str> = dists.iter().map(String::as_str).collect();
-    let spec = SweepSpec::new("sweep")
+    let mut spec = SweepSpec::new("sweep")
         .axis_strs("arch", &arch_refs)
         .axis_strs("node", &node_refs)
         .axis_f64("vwl", &vwls)
@@ -249,7 +371,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         .axis_u32("bw", &bws)
         .axis_u32("badc", &b_adcs)
         .axis_strs("dist", &dist_refs);
-    anyhow::ensure!(!spec.is_empty(), "empty sweep grid");
+    // the *full* grid must be non-empty; an individual shard may still
+    // be (more shards than points), which is fine — it emits zero rows.
+    anyhow::ensure!(spec.full_len() > 0, "empty sweep grid");
+    if let Some((i, k)) = shard {
+        spec = spec.shard(i, k)?;
+    }
 
     // Closed forms use the paper's uniform signal statistics throughout;
     // the input distribution axis only changes the simulated ensemble.
@@ -397,7 +524,10 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         }
     }
     println!(
-        "sweep: {} points ({} cache hits, {} computed{}) -> {}",
+        "sweep{}: {} points ({} cache hits, {} computed{}) -> {}",
+        shard
+            .map(|(i, k)| format!(" [shard {i}/{k}]"))
+            .unwrap_or_default(),
         results.len(),
         stats.hits,
         stats.misses,
@@ -408,7 +538,119 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         },
         csv_path.display()
     );
+    // the CSV (with its error column) is written either way, but failed
+    // points must be observable to scripts and the --procs parent
+    anyhow::ensure!(
+        stats.errors == 0,
+        "{} sweep point(s) failed (see the error column in {})",
+        stats.errors,
+        csv_path.display()
+    );
     Ok(())
+}
+
+fn cmd_merge(args: &Args) -> anyhow::Result<()> {
+    let sources: Vec<PathBuf> = args.positionals[1..].iter().map(PathBuf::from).collect();
+    anyhow::ensure!(
+        !sources.is_empty(),
+        "usage: imclim merge <shard-dir>... [--out-dir DIR]"
+    );
+    let out_dir: PathBuf = args.opt("out-dir").unwrap_or("results").into();
+    let dst = out_dir.join("cache");
+    // accept either an out-dir (containing cache/) or a cache dir itself
+    let resolved: Vec<PathBuf> = sources
+        .iter()
+        .map(|p| {
+            let nested = p.join("cache");
+            if nested.is_dir() {
+                nested
+            } else {
+                p.clone()
+            }
+        })
+        .collect();
+    let report = merge_cache_dirs(&dst, &resolved)?;
+    println!(
+        "merged {} dirs into {}: {} new records, {} identical, {} collisions",
+        resolved.len(),
+        dst.display(),
+        report.copied,
+        report.identical,
+        report.collisions.len()
+    );
+    if report.backends.len() > 1 {
+        println!(
+            "warning: mixed backends across merged caches: {:?}",
+            report.backends
+        );
+    }
+    if !report.collisions.is_empty() {
+        println!("warning: keys with differing payloads (existing copy kept):");
+        for k in report.collisions.iter().take(20) {
+            println!("  {k}");
+        }
+        if report.collisions.len() > 20 {
+            println!("  ... and {} more", report.collisions.len() - 20);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cache(args: &Args) -> anyhow::Result<()> {
+    let dir: PathBuf = match args.opt("dir") {
+        Some(d) => d.into(),
+        None => PathBuf::from(args.opt("out-dir").unwrap_or("results")).join("cache"),
+    };
+    match args.pos(1) {
+        Some("gc") => {
+            let max_bytes = args.opt("max-bytes").map(parse_bytes).transpose()?;
+            let max_age = args
+                .opt("max-age")
+                .map(parse_duration_secs)
+                .transpose()?
+                .map(Duration::from_secs);
+            anyhow::ensure!(
+                max_bytes.is_some() || max_age.is_some(),
+                "cache gc needs --max-bytes and/or --max-age"
+            );
+            let report = gc(
+                &dir,
+                &GcOptions {
+                    max_bytes,
+                    max_age,
+                    dry_run: args.has("dry-run"),
+                },
+            )?;
+            println!(
+                "cache gc{}: {} records scanned, {} evicted, {} -> {} bytes in {}",
+                if args.has("dry-run") { " (dry run)" } else { "" },
+                report.scanned,
+                report.evicted,
+                report.bytes_before,
+                report.bytes_after,
+                dir.display()
+            );
+            Ok(())
+        }
+        Some("stats") => {
+            let records = scan_records(&dir)?;
+            let total: u64 = records.iter().map(|r| r.bytes).sum();
+            let oldest = records
+                .first()
+                .and_then(|r| r.modified.elapsed().ok())
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            println!(
+                "cache {}: {} records, {} bytes, oldest last used {}s ago",
+                dir.display(),
+                records.len(),
+                total,
+                oldest
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown cache subcommand {other:?} (gc or stats)"),
+    }
 }
 
 fn cmd_assign(args: &Args) -> anyhow::Result<()> {

@@ -2,7 +2,9 @@
 //! simulators.
 //!
 //! * `service` — the PJRT executor service (single-owner thread for the
-//!   !Send XLA objects, bounded-queue backpressure).
+//!   !Send XLA objects, bounded-queue backpressure) and the shard
+//!   subprocess runner for distributed sweeps (spawn/stream/join of
+//!   `imclim sweep --shard i/k` children).
 //! * `scheduler` — sweep scheduling: lock-free atomic work claiming ->
 //!   worker pool with per-worker result buffers -> trial batching ->
 //!   order-independent statistical aggregation.
@@ -17,4 +19,6 @@ pub mod scheduler;
 pub mod service;
 
 pub use scheduler::{run_point, run_sweep, Backend, SweepOptions, SweepPoint, SweepResult};
-pub use service::{ArchRequest, MlpRequest, MlpWeights, PjrtHandle, PjrtService};
+pub use service::{
+    run_shard_procs, ArchRequest, MlpRequest, MlpWeights, PjrtHandle, PjrtService, ShardCommand,
+};

@@ -1,12 +1,21 @@
-//! The PJRT executor service: one dedicated thread owning the (!Send)
-//! PJRT client and compiled executables, fed by a bounded request channel
-//! (backpressure: producers block when the executor falls behind).
+//! Executor services for the coordinator:
+//!
+//! * the PJRT executor — one dedicated thread owning the (!Send) PJRT
+//!   client and compiled executables, fed by a bounded request channel
+//!   (backpressure: producers block when the executor falls behind);
+//! * the shard-subprocess runner ([`run_shard_procs`]) — parent-side
+//!   orchestration for distributed sweeps: spawn one `imclim sweep
+//!   --shard i/k` subprocess per shard, stream their progress lines
+//!   with a per-shard prefix, and report any failures.
 //!
 //! This is the serving-style split the three-layer architecture calls
 //! for: worker threads generate workloads and aggregate statistics; all
-//! XLA execution funnels through this single-owner service.
+//! XLA execution funnels through the single-owner PJRT service, and all
+//! multi-process execution funnels through the shard runner.
 
+use std::io::{BufRead, BufReader, Read};
 use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
@@ -170,4 +179,68 @@ fn executor_loop(dir: PathBuf, rx: Receiver<Msg>) {
 
 fn clone_err(e: &anyhow::Error) -> anyhow::Error {
     anyhow!("PJRT runtime init failed: {e}")
+}
+
+// ---------------------------------------------------------------------
+// Shard-subprocess orchestration (distributed sweeps).
+// ---------------------------------------------------------------------
+
+/// One shard subprocess of a distributed sweep: a display label (used to
+/// prefix streamed progress lines, e.g. `shard 2/4`) and the prepared
+/// command.
+pub struct ShardCommand {
+    pub label: String,
+    pub command: Command,
+}
+
+/// Spawn every shard subprocess concurrently, stream each one's stdout
+/// and stderr to this process's stderr line-by-line (prefixed with the
+/// shard label), and wait for all of them. Every failure — spawn, wait,
+/// or a non-zero exit — is collected rather than returned early, so a
+/// failing shard never orphans its siblings: all spawned children are
+/// drained and waited on before the combined error is reported.
+pub fn run_shard_procs(shards: Vec<ShardCommand>) -> Result<()> {
+    let mut failures: Vec<String> = Vec::new();
+    let mut children: Vec<(String, Child)> = Vec::new();
+    for mut shard in shards {
+        shard.command.stdout(Stdio::piped()).stderr(Stdio::piped());
+        match shard.command.spawn() {
+            Ok(child) => children.push((shard.label, child)),
+            Err(e) => failures.push(format!("spawning {} failed: {e}", shard.label)),
+        }
+    }
+    let mut readers: Vec<JoinHandle<()>> = Vec::new();
+    for (label, child) in &mut children {
+        if let Some(out) = child.stdout.take() {
+            readers.push(stream_lines(label.clone(), out));
+        }
+        if let Some(err) = child.stderr.take() {
+            readers.push(stream_lines(label.clone(), err));
+        }
+    }
+    for (label, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("{label} exited with {status}")),
+            Err(e) => failures.push(format!("waiting on {label} failed: {e}")),
+        }
+    }
+    for r in readers {
+        let _ = r.join();
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "shard subprocess failure: {}",
+        failures.join("; ")
+    );
+    Ok(())
+}
+
+/// Forward a child pipe to stderr, one prefixed line at a time.
+fn stream_lines(label: String, pipe: impl Read + Send + 'static) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        for line in BufReader::new(pipe).lines().map_while(std::result::Result::ok) {
+            eprintln!("[{label}] {line}");
+        }
+    })
 }

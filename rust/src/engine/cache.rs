@@ -17,9 +17,23 @@
 //! Robustness contract: any unreadable, corrupt, version-skewed or
 //! key-mismatched record is treated as a cache miss (recompute), never
 //! an error.
+//!
+//! Beyond the per-point sweep records, this module provides:
+//!
+//! * **memo records** ([`ResultCache::load_memo`] /
+//!   [`ResultCache::store_memo`]) — content-addressed `Vec<f64>` values
+//!   for the bespoke Monte-Carlo quantities of the fig2/fig4 drivers,
+//!   keyed by `(tag, params)` under a separate domain prefix;
+//! * **shard-directory merge** ([`merge_cache_dirs`]) — plain file union
+//!   of content-addressed records from distributed sweep shards, with
+//!   collision detection and a rebuilt consolidated manifest;
+//! * **garbage collection** ([`gc`]) — size/age-based LRU eviction for
+//!   long-lived out-dirs, driven by the manifest and record metadata
+//!   (cache hits refresh a record's mtime, making mtime order LRU order).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
 
 use anyhow::{Context, Result};
 
@@ -29,12 +43,18 @@ use crate::util::json::{num, obj, s, Json};
 
 const CACHE_VERSION: f64 = 1.0;
 
+const MANIFEST_FILE: &str = "manifest.json";
+
 /// Domain-separation prefix: bump alongside `CACHE_VERSION` whenever the
 /// key encoding *or the simulator's semantics* change — the key covers a
 /// point's inputs, not the code that computes it, so a physics change
 /// must invalidate old records by version bump (or `--no-cache` / a
 /// fresh out-dir on the caller's side).
 const KEY_PREFIX: &[u8] = b"imclim-sweep-record-v1\0";
+
+/// Domain prefix for memo records (bespoke driver Monte-Carlo values),
+/// so a memo key can never collide with a sweep-point key.
+const MEMO_PREFIX: &[u8] = b"imclim-memo-record-v1\0";
 
 /// Stable 128-bit content key (32 hex chars) for one sweep point on one
 /// backend. Everything that can change the measured result participates;
@@ -61,6 +81,25 @@ pub fn cache_key(point: &SweepPoint, backend_id: &str) -> String {
         bytes.extend_from_slice(&p.to_bits().to_le_bytes());
     }
     bytes.extend_from_slice(backend_id.as_bytes());
+    format!(
+        "{:016x}{:016x}",
+        absorb(&bytes, 0x243F_6A88_85A3_08D3),
+        absorb(&bytes, 0x1319_8A2E_0370_7344)
+    )
+}
+
+/// Stable 128-bit content key for one memo quantity: a named (`tag`)
+/// deterministic function of the `params` vector. Backend-independent —
+/// memo values come from the bespoke native Monte-Carlo in the fig2/fig4
+/// drivers, which no execution backend participates in.
+pub fn memo_key(tag: &str, params: &[f64]) -> String {
+    let mut bytes = Vec::with_capacity(MEMO_PREFIX.len() + tag.len() + 1 + 8 * params.len());
+    bytes.extend_from_slice(MEMO_PREFIX);
+    bytes.extend_from_slice(tag.as_bytes());
+    bytes.push(0);
+    for p in params {
+        bytes.extend_from_slice(&p.to_bits().to_le_bytes());
+    }
     format!(
         "{:016x}{:016x}",
         absorb(&bytes, 0x243F_6A88_85A3_08D3),
@@ -115,11 +154,54 @@ impl ResultCache {
         self.dir.join(format!("{key}.json"))
     }
 
-    /// Look up a point; `None` on miss *or* on any record defect.
+    /// Look up a point; `None` on miss *or* on any record defect. A hit
+    /// refreshes the record's mtime so [`gc`]'s LRU order tracks use.
     pub fn load(&self, point: &SweepPoint) -> Option<MeasuredSnr> {
         let key = self.key(point);
-        let text = std::fs::read_to_string(self.record_path(&key)).ok()?;
-        decode_record(&text, &key)
+        let path = self.record_path(&key);
+        let text = std::fs::read_to_string(&path).ok()?;
+        let decoded = decode_record(&text, &key);
+        if decoded.is_some() {
+            touch(&path);
+        }
+        decoded
+    }
+
+    /// Look up a memo quantity; `None` on miss or any record defect.
+    /// Hits refresh the record's mtime (LRU, as in [`ResultCache::load`]).
+    pub fn load_memo(&self, tag: &str, params: &[f64]) -> Option<Vec<f64>> {
+        let key = memo_key(tag, params);
+        let path = self.record_path(&key);
+        let text = std::fs::read_to_string(&path).ok()?;
+        let decoded = decode_memo(&text, &key, tag);
+        if decoded.is_some() {
+            touch(&path);
+        }
+        decoded
+    }
+
+    /// Persist a memo quantity (bit-exact, like sweep records).
+    pub fn store_memo(&self, tag: &str, params: &[f64], values: &[f64]) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating cache dir {}", self.dir.display()))?;
+        let key = memo_key(tag, params);
+        let record = obj(vec![
+            ("version", num(CACHE_VERSION)),
+            ("key", s(&key)),
+            ("tag", s(tag)),
+            (
+                "params",
+                Json::Arr(params.iter().map(|&p| f64_hex(p)).collect()),
+            ),
+            (
+                "values",
+                Json::Arr(values.iter().map(|&v| f64_hex(v)).collect()),
+            ),
+        ]);
+        let path = self.record_path(&key);
+        std::fs::write(&path, record.to_string())
+            .with_context(|| format!("writing memo record {}", path.display()))?;
+        Ok(())
     }
 
     /// Persist a computed result for a point.
@@ -141,24 +223,48 @@ impl ResultCache {
             return Ok(());
         }
         std::fs::create_dir_all(&self.dir)?;
-        let path = self.dir.join("manifest.json");
-        let mut index: BTreeMap<String, Json> = std::fs::read_to_string(&path)
-            .ok()
-            .and_then(|t| Json::parse(&t).ok())
-            .and_then(|j| j.get("entries").and_then(|e| e.as_obj()).cloned())
-            .unwrap_or_default();
+        let mut index = read_manifest_entries(&self.dir);
         for (key, id) in entries {
             index.insert(key.clone(), Json::Str(id.clone()));
         }
-        let manifest = obj(vec![
-            ("version", num(CACHE_VERSION)),
-            ("backend", s(&self.backend_id)),
-            ("entries", Json::Obj(index)),
-        ]);
-        std::fs::write(&path, manifest.to_string())
-            .with_context(|| format!("writing {}", path.display()))?;
-        Ok(())
+        write_manifest(&self.dir, &self.backend_id, index)
     }
+}
+
+/// Best-effort mtime refresh (LRU bookkeeping); failure is harmless.
+fn touch(path: &Path) {
+    if let Ok(f) = std::fs::OpenOptions::new().write(true).open(path) {
+        let _ = f.set_modified(SystemTime::now());
+    }
+}
+
+/// `entries` map of a directory's manifest (empty on missing/corrupt).
+fn read_manifest_entries(dir: &Path) -> BTreeMap<String, Json> {
+    std::fs::read_to_string(dir.join(MANIFEST_FILE))
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.get("entries").and_then(|e| e.as_obj()).cloned())
+        .unwrap_or_default()
+}
+
+/// `backend` field of a directory's manifest, if readable.
+fn read_manifest_backend(dir: &Path) -> Option<String> {
+    std::fs::read_to_string(dir.join(MANIFEST_FILE))
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.get("backend").and_then(|b| b.as_str()).map(str::to_string))
+}
+
+fn write_manifest(dir: &Path, backend: &str, entries: BTreeMap<String, Json>) -> Result<()> {
+    let path = dir.join(MANIFEST_FILE);
+    let manifest = obj(vec![
+        ("version", num(CACHE_VERSION)),
+        ("backend", s(backend)),
+        ("entries", Json::Obj(entries)),
+    ]);
+    std::fs::write(&path, manifest.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
 }
 
 fn encode_record(point: &SweepPoint, backend_id: &str, key: &str, m: &MeasuredSnr) -> Json {
@@ -222,6 +328,244 @@ fn decode_record(text: &str, key: &str) -> Option<MeasuredSnr> {
         snr_t_db: field("snr_t_db")?,
         trials: j.get("measured_trials")?.as_f64()? as u64,
     })
+}
+
+fn decode_memo(text: &str, key: &str, tag: &str) -> Option<Vec<f64>> {
+    let j = Json::parse(text).ok()?;
+    if j.get("version")?.as_f64()? != CACHE_VERSION {
+        return None;
+    }
+    if j.get("key")?.as_str()? != key {
+        return None;
+    }
+    if j.get("tag")?.as_str()? != tag {
+        return None;
+    }
+    j.get("values")?
+        .as_arr()?
+        .iter()
+        .map(|v| {
+            let hex = v.as_str()?;
+            u64::from_str_radix(hex, 16).ok().map(f64::from_bits)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Shard-directory merge (distributed sweeps).
+// ---------------------------------------------------------------------
+
+/// Outcome of one [`merge_cache_dirs`] call.
+#[derive(Clone, Debug, Default)]
+pub struct MergeReport {
+    /// Records copied into the destination.
+    pub copied: usize,
+    /// Records already present with byte-identical payloads.
+    pub identical: usize,
+    /// Keys present in both source and destination with *differing*
+    /// payloads (the destination's copy is kept).
+    pub collisions: Vec<String>,
+    /// Distinct manifest `backend` ids seen across all directories.
+    pub backends: Vec<String>,
+}
+
+/// Union the content-addressed records of `sources` into `dst` and
+/// rebuild a consolidated `manifest.json` there. Keys are content
+/// hashes, so disjoint shard caches merge by plain file copy; a key
+/// present on both sides with different bytes is reported as a
+/// collision (and the destination's payload wins). The rebuilt manifest
+/// only indexes keys that exist as records in `dst`.
+pub fn merge_cache_dirs(dst: &Path, sources: &[PathBuf]) -> Result<MergeReport> {
+    std::fs::create_dir_all(dst).with_context(|| format!("creating {}", dst.display()))?;
+    let mut report = MergeReport::default();
+    let mut entries = read_manifest_entries(dst);
+    let mut backends: Vec<String> = read_manifest_backend(dst).into_iter().collect();
+
+    for src in sources {
+        for (key, path) in list_record_files(src)? {
+            let bytes = match std::fs::read(&path) {
+                Ok(b) => b,
+                Err(_) => continue, // vanished mid-merge: skip
+            };
+            let dst_path = dst.join(format!("{key}.json"));
+            match std::fs::read(&dst_path) {
+                Ok(existing) if existing == bytes => report.identical += 1,
+                Ok(_) => report.collisions.push(key),
+                Err(_) => {
+                    std::fs::write(&dst_path, &bytes)
+                        .with_context(|| format!("writing {}", dst_path.display()))?;
+                    report.copied += 1;
+                }
+            }
+        }
+        for (key, id) in read_manifest_entries(src) {
+            entries.entry(key).or_insert(id);
+        }
+        if let Some(b) = read_manifest_backend(src) {
+            if !backends.contains(&b) {
+                backends.push(b);
+            }
+        }
+    }
+
+    // the consolidated manifest only indexes records that exist on disk
+    entries.retain(|key, _| dst.join(format!("{key}.json")).exists());
+    let backend = backends.first().cloned().unwrap_or_else(|| "unknown".into());
+    write_manifest(dst, &backend, entries)?;
+    report.backends = backends;
+    report.collisions.sort();
+    Ok(report)
+}
+
+/// All `(key, path)` record files in a cache dir (manifest excluded).
+/// Sorted by key for deterministic iteration; an absent directory is
+/// just empty.
+fn list_record_files(dir: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let is_json = path.extension().and_then(|e| e.to_str()) == Some("json");
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !is_json || name == MANIFEST_FILE || !path.is_file() {
+            continue;
+        }
+        if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+            out.push((stem.to_string(), path.clone()));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Garbage collection (size/age LRU eviction).
+// ---------------------------------------------------------------------
+
+/// One record's on-disk metadata, as seen by [`gc`] and `cache stats`.
+#[derive(Clone, Debug)]
+pub struct RecordInfo {
+    pub key: String,
+    pub path: PathBuf,
+    pub bytes: u64,
+    pub modified: SystemTime,
+}
+
+/// Scan a cache directory's records (manifest excluded), oldest first
+/// (mtime order = LRU order, since cache hits refresh mtimes).
+pub fn scan_records(dir: &Path) -> Result<Vec<RecordInfo>> {
+    let mut out = Vec::new();
+    for (key, path) in list_record_files(dir)? {
+        let meta = match std::fs::metadata(&path) {
+            Ok(m) => m,
+            Err(_) => continue,
+        };
+        let modified = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        out.push(RecordInfo {
+            key,
+            path,
+            bytes: meta.len(),
+            modified,
+        });
+    }
+    out.sort_by(|a, b| (a.modified, &a.key).cmp(&(b.modified, &b.key)));
+    Ok(out)
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GcOptions {
+    /// Target total record size; least-recently-used records are evicted
+    /// until the directory fits. Records newer than `max_age` (when set)
+    /// are protected from size eviction.
+    pub max_bytes: Option<u64>,
+    /// Records last used longer ago than this are expired outright;
+    /// records newer than this are never evicted.
+    pub max_age: Option<Duration>,
+    /// Report what would be evicted without deleting anything.
+    pub dry_run: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct GcReport {
+    pub scanned: usize,
+    pub evicted: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+    pub evicted_keys: Vec<String>,
+}
+
+/// Evict cache records by age and size. Age first: anything older than
+/// `max_age` expires. Then size: while the total exceeds `max_bytes`,
+/// evict least-recently-used records — but never one newer than
+/// `max_age` (when both are given, `max_age` acts as a protection
+/// floor, so `max_bytes` is best-effort). Evicted keys are dropped from
+/// the manifest. With `dry_run`, nothing is deleted (the manifest is
+/// left alone) and the report shows what would happen.
+pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
+    let records = scan_records(dir)?; // oldest first
+    let now = SystemTime::now();
+    let total: u64 = records.iter().map(|r| r.bytes).sum();
+    let mut report = GcReport {
+        scanned: records.len(),
+        bytes_before: total,
+        bytes_after: total,
+        ..GcReport::default()
+    };
+
+    let age_of = |r: &RecordInfo| now.duration_since(r.modified).unwrap_or(Duration::ZERO);
+    let mut keep = vec![true; records.len()];
+    let mut remaining = total;
+    for (i, r) in records.iter().enumerate() {
+        if matches!(opts.max_age, Some(max) if age_of(r) > max) {
+            keep[i] = false;
+            remaining -= r.bytes;
+        }
+    }
+    if let Some(max_bytes) = opts.max_bytes {
+        for (i, r) in records.iter().enumerate() {
+            if remaining <= max_bytes {
+                break;
+            }
+            if !keep[i] {
+                continue;
+            }
+            if matches!(opts.max_age, Some(max) if age_of(r) <= max) {
+                continue; // protected: newer than max_age
+            }
+            keep[i] = false;
+            remaining -= r.bytes;
+        }
+    }
+    let evict: Vec<&RecordInfo> = records
+        .iter()
+        .zip(&keep)
+        .filter(|(_, &k)| !k)
+        .map(|(r, _)| r)
+        .collect();
+
+    report.evicted = evict.len();
+    report.bytes_after = remaining;
+    report.evicted_keys = evict.iter().map(|r| r.key.clone()).collect();
+    report.evicted_keys.sort();
+    if opts.dry_run || evict.is_empty() {
+        return Ok(report);
+    }
+    for r in &evict {
+        let _ = std::fs::remove_file(&r.path);
+    }
+    // drop evicted keys from the manifest (if one exists)
+    if dir.join(MANIFEST_FILE).exists() {
+        let mut entries = read_manifest_entries(dir);
+        for r in &evict {
+            entries.remove(&r.key);
+        }
+        let backend = read_manifest_backend(dir).unwrap_or_else(|| "unknown".into());
+        write_manifest(dir, &backend, entries)?;
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -305,6 +649,36 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::write(cache.record_path(&cache.key(&other)), text).unwrap();
         assert!(cache.load(&other).is_none(), "key mismatch is a miss");
+    }
+
+    #[test]
+    fn memo_roundtrip_and_key_discrimination() {
+        let cache = tmp_cache("memo");
+        assert!(cache.load_memo("fig4/mc", &[1.0, 2.0]).is_none());
+        let values = vec![40.25, f64::NAN, -3.5e-7];
+        cache.store_memo("fig4/mc", &[1.0, 2.0], &values).unwrap();
+        let got = cache.load_memo("fig4/mc", &[1.0, 2.0]).expect("hit");
+        assert_eq!(got.len(), 3);
+        for (a, b) in got.iter().zip(&values) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exact memo values");
+        }
+        // tag and params both participate in the key
+        assert!(cache.load_memo("fig4/other", &[1.0, 2.0]).is_none());
+        assert!(cache.load_memo("fig4/mc", &[1.0, 2.5]).is_none());
+        // memo keys share the 128-bit format but live in their own domain
+        assert_eq!(memo_key("fig4/mc", &[1.0, 2.0]).len(), 32);
+        assert!(cache.load(&point("memo-vs-sweep")).is_none());
+    }
+
+    #[test]
+    fn corrupt_memo_is_a_miss() {
+        let cache = tmp_cache("memo-corrupt");
+        cache.store_memo("t", &[7.0], &[1.0]).unwrap();
+        let path = cache.record_path(&memo_key("t", &[7.0]));
+        for garbage in ["", "{", "{\"version\": 1}", "{\"values\": [1]}"] {
+            std::fs::write(&path, garbage).unwrap();
+            assert!(cache.load_memo("t", &[7.0]).is_none(), "{garbage:?}");
+        }
     }
 
     #[test]

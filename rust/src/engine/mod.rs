@@ -24,12 +24,17 @@ pub mod cache;
 pub mod report;
 pub mod spec;
 
-pub use cache::{cache_key, ResultCache};
+pub use cache::{
+    cache_key, gc, memo_key, merge_cache_dirs, scan_records, GcOptions, GcReport, MergeReport,
+    RecordInfo, ResultCache,
+};
 pub use report::{BoundReport, EsReport};
 pub use spec::{
-    parse_grid_f64, parse_grid_u32, parse_grid_usize, Axis, AxisValue, GridPoint, SweepSpec,
+    parse_grid_f64, parse_grid_u32, parse_grid_usize, parse_shard, Axis, AxisValue, GridPoint,
+    SweepSpec,
 };
 
+use std::cell::RefCell;
 use std::path::PathBuf;
 
 use crate::coordinator::{run_sweep, Backend, SweepOptions, SweepPoint, SweepResult};
@@ -37,11 +42,13 @@ use crate::coordinator::{run_sweep, Backend, SweepOptions, SweepPoint, SweepResu
 /// What one [`Engine::run_with_stats`] call did.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RunStats {
-    /// Points served from the result cache (no Monte-Carlo executed).
+    /// Points served without running Monte-Carlo: pre-existing cache
+    /// records, plus in-run duplicates of a just-computed point (same
+    /// content key under a different label).
     pub hits: usize,
-    /// Points computed this run (and, on success, newly cached).
+    /// Unique points computed this run (and, on success, newly cached).
     pub misses: usize,
-    /// Computed points that ended in error (never cached).
+    /// Points whose computation ended in error (never cached).
     pub errors: usize,
 }
 
@@ -50,6 +57,10 @@ pub struct Engine {
     backend: Backend,
     opts: SweepOptions,
     cache: Option<ResultCache>,
+    /// Manifest entries for memo records, batched into one
+    /// `manifest.json` rewrite (see [`Engine::flush_manifest`]) instead
+    /// of one rewrite per [`Engine::memo`] call.
+    pending_manifest: RefCell<Vec<(String, String)>>,
 }
 
 impl Engine {
@@ -58,6 +69,7 @@ impl Engine {
             backend,
             opts,
             cache: None,
+            pending_manifest: RefCell::new(Vec::new()),
         }
     }
 
@@ -105,22 +117,52 @@ impl Engine {
             }
         }
 
-        let miss_points: Vec<SweepPoint> = miss_idx.iter().map(|&i| points[i].clone()).collect();
-        let computed = run_sweep(miss_points, self.backend.clone(), self.opts);
+        // group misses by content key: identical-content points reached
+        // under different labels (e.g. a cross-grid axis that one arch
+        // ignores) compute once and share the result
+        let mut rep_of_key: std::collections::BTreeMap<String, usize> =
+            std::collections::BTreeMap::new();
+        let mut rep_point_idx: Vec<usize> = Vec::new(); // rep -> index into `points`
+        let mut rep_for_miss: Vec<usize> = Vec::with_capacity(miss_idx.len());
+        for &i in &miss_idx {
+            let key = cache.key(&points[i]);
+            let rep = *rep_of_key.entry(key).or_insert_with(|| {
+                rep_point_idx.push(i);
+                rep_point_idx.len() - 1
+            });
+            rep_for_miss.push(rep);
+        }
+        let rep_points: Vec<SweepPoint> =
+            rep_point_idx.iter().map(|&i| points[i].clone()).collect();
+        let computed = run_sweep(rep_points, self.backend.clone(), self.opts);
         stats.misses = computed.len();
+
         let mut manifest: Vec<(String, String)> = Vec::new();
-        for (j, mut result) in computed.into_iter().enumerate() {
-            let i = miss_idx[j];
+        for (r, result) in computed.iter().enumerate() {
             if result.error.is_none() {
-                let point = &points[i];
+                let point = &points[rep_point_idx[r]];
                 if cache.store(point, &result.measured).is_ok() {
                     manifest.push((cache.key(point), point.id.clone()));
                 }
-            } else {
-                stats.errors += 1;
             }
-            result.index = i;
-            slots[i] = Some(result);
+        }
+        // fan the computed results out to every miss slot; duplicates of
+        // a representative count as hits on the freshly-stored record
+        for (j, &i) in miss_idx.iter().enumerate() {
+            let src = &computed[rep_for_miss[j]];
+            let duplicate = rep_point_idx[rep_for_miss[j]] != i;
+            if src.error.is_some() {
+                stats.errors += 1;
+            } else if duplicate {
+                stats.hits += 1;
+            }
+            slots[i] = Some(SweepResult {
+                id: points[i].id.clone(),
+                index: i,
+                measured: src.measured,
+                error: src.error.clone(),
+                cached: duplicate && src.error.is_none(),
+            });
         }
         let _ = cache.update_manifest(&manifest);
 
@@ -129,6 +171,66 @@ impl Engine {
             .map(|r| r.expect("every point produces a result"))
             .collect();
         (results, stats)
+    }
+
+    /// Serve a bespoke Monte-Carlo quantity through the result cache:
+    /// returns the values for `(tag, params)` and whether they were a
+    /// cache hit (in which case `f` was never called). This is how the
+    /// fig2/fig4 drivers — whose measurements are not per-`SweepPoint`
+    /// ensembles — share the engine's content-addressed cache; `label`
+    /// only feeds the human-readable manifest.
+    pub fn memo(
+        &self,
+        tag: &str,
+        params: &[f64],
+        label: &str,
+        f: impl FnOnce() -> Vec<f64>,
+    ) -> (Vec<f64>, bool) {
+        let Some(cache) = &self.cache else {
+            return (f(), false);
+        };
+        if let Some(values) = cache.load_memo(tag, params) {
+            return (values, true);
+        }
+        let values = f();
+        if cache.store_memo(tag, params, &values).is_ok() {
+            self.pending_manifest
+                .borrow_mut()
+                .push((cache::memo_key(tag, params), label.to_string()));
+        }
+        (values, false)
+    }
+
+    /// Overwrite the memo record for `(tag, params)` with freshly
+    /// computed values — the repair path for a record that decoded but
+    /// failed the caller's shape validation, so the next run is a true
+    /// cache hit again instead of a perpetual recompute.
+    pub fn memo_repair(&self, tag: &str, params: &[f64], label: &str, values: &[f64]) {
+        let Some(cache) = &self.cache else {
+            return;
+        };
+        if cache.store_memo(tag, params, values).is_ok() {
+            self.pending_manifest
+                .borrow_mut()
+                .push((cache::memo_key(tag, params), label.to_string()));
+        }
+    }
+
+    /// Write the batched memo manifest entries out (one `manifest.json`
+    /// rewrite for any number of `memo` misses). Also runs on drop, so
+    /// drivers that create an engine per run never need to call this.
+    pub fn flush_manifest(&self) {
+        let Some(cache) = &self.cache else {
+            return;
+        };
+        let pending = std::mem::take(&mut *self.pending_manifest.borrow_mut());
+        let _ = cache.update_manifest(&pending);
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.flush_manifest();
     }
 }
 
@@ -174,6 +276,40 @@ mod tests {
     }
 
     #[test]
+    fn memo_calls_f_once_then_serves_hits() {
+        let dir = std::env::temp_dir().join("imclim-engine-unit-memo");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = SweepOptions {
+            workers: 1,
+            verbose: false,
+        };
+        let engine = Engine::new(Backend::Native, opts).with_cache(&dir);
+        let mut calls = 0;
+        let (v1, hit1) = engine.memo("t/x", &[1.0, 2.0], "label/a", || {
+            calls += 1;
+            vec![3.25]
+        });
+        assert!(!hit1);
+        assert_eq!(v1, vec![3.25]);
+        let (v2, hit2) = engine.memo("t/x", &[1.0, 2.0], "label/a", || {
+            calls += 1;
+            vec![999.0]
+        });
+        assert!(hit2, "second lookup is a cache hit");
+        assert_eq!(v2[0].to_bits(), 3.25f64.to_bits());
+        assert_eq!(calls, 1, "the compute closure ran exactly once");
+        // the batched manifest entry lands when the engine goes away
+        drop(engine);
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(manifest.contains("label/a"), "memo label in manifest");
+        // cacheless engines just pass through
+        let bare = Engine::new(Backend::Native, opts);
+        let (v3, hit3) = bare.memo("t/x", &[1.0, 2.0], "label/a", || vec![7.0]);
+        assert!(!hit3);
+        assert_eq!(v3, vec![7.0]);
+    }
+
+    #[test]
     fn identical_content_under_different_labels_shares_one_record() {
         let dir = std::env::temp_dir().join("imclim-engine-unit-dedupe");
         let _ = std::fs::remove_dir_all(&dir);
@@ -185,11 +321,14 @@ mod tests {
             },
         )
         .with_cache(dir);
-        // same physics, different labels: first run computes both misses,
+        // same physics, different labels: the first run computes the
+        // shared content once (the duplicate is a same-run hit), the
         // second run serves both from the single shared record.
         let mk = || vec![qs_point("label/a", 24, 5), qs_point("label/b", 24, 5)];
         let (first, s1) = engine.run_with_stats(mk());
-        assert_eq!(s1.misses, 2);
+        assert_eq!(s1.misses, 1, "identical content computes once");
+        assert_eq!(s1.hits, 1, "the duplicate is served, not recomputed");
+        assert!(first[1].cached, "duplicate flagged as cached");
         let (second, s2) = engine.run_with_stats(mk());
         assert_eq!(s2.hits, 2);
         assert_eq!(s2.misses, 0);

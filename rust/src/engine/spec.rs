@@ -45,12 +45,16 @@ pub struct Axis {
     pub values: Vec<Vec<AxisValue>>,
 }
 
-/// A declarative sweep grid.
+/// A declarative sweep grid, optionally restricted to one shard of a
+/// k-way round-robin partition (see [`SweepSpec::shard`]).
 #[derive(Clone, Debug, Default)]
 pub struct SweepSpec {
     /// Id prefix for every generated point (e.g. `"fig9a"`).
     pub name: String,
     pub axes: Vec<Axis>,
+    /// `Some((index, count))` keeps only points whose global row-major
+    /// index ≡ index (mod count).
+    shard: Option<(usize, usize)>,
 }
 
 impl SweepSpec {
@@ -58,6 +62,7 @@ impl SweepSpec {
         Self {
             name: name.into(),
             axes: Vec::new(),
+            shard: None,
         }
     }
 
@@ -113,9 +118,46 @@ impl SweepSpec {
         self
     }
 
-    /// Number of grid points (product of axis lengths; 1 with no axes).
-    pub fn len(&self) -> usize {
+    /// Restrict this spec to shard `index` of a `count`-way round-robin
+    /// partition of the full grid: the shard keeps exactly the points
+    /// whose global row-major index ≡ `index` (mod `count`). Point ids
+    /// (and therefore result-cache keys) are identical to the unsharded
+    /// grid's, so shard caches stay content-address-compatible and can
+    /// be merged by plain file union. The k shards of a grid are
+    /// pairwise disjoint and their union is the full grid.
+    pub fn shard(mut self, index: usize, count: usize) -> Result<Self> {
+        ensure!(count >= 1, "shard count must be >= 1, got {count}");
+        ensure!(
+            index < count,
+            "shard index {index} out of range for {count} shards"
+        );
+        ensure!(
+            self.shard.is_none(),
+            "spec is already sharded; shard the full grid instead"
+        );
+        self.shard = Some((index, count));
+        Ok(self)
+    }
+
+    /// The active `(index, count)` shard restriction, if any.
+    pub fn shard_params(&self) -> Option<(usize, usize)> {
+        self.shard
+    }
+
+    /// Number of grid points in the full cartesian product (ignoring any
+    /// shard restriction; 1 with no axes).
+    pub fn full_len(&self) -> usize {
         self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    /// Number of grid points this spec emits (shard-aware).
+    pub fn len(&self) -> usize {
+        let total = self.full_len();
+        match self.shard {
+            None => total,
+            Some((i, k)) if total > i => (total - i).div_ceil(k),
+            Some(_) => 0,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -123,25 +165,32 @@ impl SweepSpec {
     }
 
     /// Row-major cartesian product: first axis slowest, last fastest.
+    /// With a shard restriction, only that shard's points are emitted
+    /// (ids unchanged from the full grid).
     pub fn points(&self) -> Vec<GridPoint> {
         if self.axes.iter().any(|a| a.values.is_empty()) {
             return Vec::new();
         }
+        let (shard_index, shard_count) = self.shard.unwrap_or((0, 1));
         let mut out = Vec::with_capacity(self.len());
         let mut idx = vec![0usize; self.axes.len()];
+        let mut global = 0usize;
         loop {
-            let mut values = Vec::new();
-            let mut id = self.name.clone();
-            for (axis, &i) in self.axes.iter().zip(&idx) {
-                for (name, value) in axis.names.iter().zip(&axis.values[i]) {
-                    id.push('/');
-                    id.push_str(name);
-                    id.push('=');
-                    let _ = write!(id, "{value}");
-                    values.push(value.clone());
+            if global % shard_count == shard_index {
+                let mut values = Vec::new();
+                let mut id = self.name.clone();
+                for (axis, &i) in self.axes.iter().zip(&idx) {
+                    for (name, value) in axis.names.iter().zip(&axis.values[i]) {
+                        id.push('/');
+                        id.push_str(name);
+                        id.push('=');
+                        let _ = write!(id, "{value}");
+                        values.push(value.clone());
+                    }
                 }
+                out.push(GridPoint { id, values });
             }
-            out.push(GridPoint { id, values });
+            global += 1;
             // odometer increment, last axis fastest
             let mut k = self.axes.len();
             loop {
@@ -157,6 +206,24 @@ impl SweepSpec {
             }
         }
     }
+}
+
+/// Parse a `--shard i/k` argument: shard index `i` of `k` total shards.
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let (i, k) = s
+        .split_once('/')
+        .ok_or_else(|| anyhow!("bad shard '{s}' (want i/k, e.g. 0/4)"))?;
+    let i = i
+        .trim()
+        .parse::<usize>()
+        .map_err(|_| anyhow!("bad shard index '{i}'"))?;
+    let k = k
+        .trim()
+        .parse::<usize>()
+        .map_err(|_| anyhow!("bad shard count '{k}'"))?;
+    ensure!(k >= 1, "shard count must be >= 1, got {k}");
+    ensure!(i < k, "shard index {i} out of range for {k} shards");
+    Ok((i, k))
 }
 
 /// One generated grid point: its id and the flattened dimension values
@@ -369,6 +436,57 @@ mod tests {
         assert_eq!(parse_grid_f64("1,2.5").unwrap(), vec![1.0, 2.5]);
         // mixed lists and ranges compose
         assert_eq!(parse_grid_usize("8,16:18").unwrap(), vec![8, 16, 17, 18]);
+    }
+
+    #[test]
+    fn shards_partition_the_grid_with_unchanged_ids() {
+        let spec = SweepSpec::new("s")
+            .axis_usize("n", &[1, 2, 3, 4, 5])
+            .axis_u32("b", &[7, 8]);
+        let full: Vec<String> = spec.points().into_iter().map(|p| p.id).collect();
+        assert_eq!(full.len(), 10);
+        let k = 4;
+        let mut merged: Vec<(usize, String)> = Vec::new();
+        for i in 0..k {
+            let shard = spec.clone().shard(i, k).unwrap();
+            let pts = shard.points();
+            assert_eq!(pts.len(), shard.len(), "len() matches points() for {i}/{k}");
+            for (j, p) in pts.into_iter().enumerate() {
+                // point j of shard i sits at global index i + j*k
+                merged.push((i + j * k, p.id));
+            }
+        }
+        merged.sort();
+        let ids: Vec<String> = merged.into_iter().map(|(_, id)| id).collect();
+        assert_eq!(ids, full, "union of shards == full grid, ids unchanged");
+    }
+
+    #[test]
+    fn shard_rejects_bad_parameters() {
+        let spec = SweepSpec::new("s").axis_usize("n", &[1, 2]);
+        assert!(spec.clone().shard(0, 0).is_err());
+        assert!(spec.clone().shard(3, 3).is_err());
+        assert!(spec.clone().shard(0, 2).unwrap().shard(0, 2).is_err());
+        assert_eq!(spec.shard_params(), None);
+    }
+
+    #[test]
+    fn more_shards_than_points_leaves_some_empty() {
+        let spec = SweepSpec::new("s").axis_usize("n", &[1, 2]);
+        let sizes: Vec<usize> = (0..5)
+            .map(|i| spec.clone().shard(i, 5).unwrap().points().len())
+            .collect();
+        assert_eq!(sizes, vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn parse_shard_accepts_i_slash_k() {
+        assert_eq!(parse_shard("0/4").unwrap(), (0, 4));
+        assert_eq!(parse_shard("3/4").unwrap(), (3, 4));
+        assert!(parse_shard("4/4").is_err());
+        assert!(parse_shard("0/0").is_err());
+        assert!(parse_shard("1").is_err());
+        assert!(parse_shard("a/b").is_err());
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Fig. 2: per-layer SNR_T requirements of DP computations in a DNN.
 //! (Substituted workload: 3-layer MLP on the synthetic dataset; see
 //! DESIGN.md §1.)
+//!
+//! The whole measurement — dataset generation, MLP training, and the
+//! noisy per-layer SNR sweep — is deterministic in its configuration, so
+//! it is served through the engine's memo cache: a warm re-run trains
+//! nothing and performs zero Monte-Carlo trials.
 
 use super::{FigCtx, FigSummary};
 use crate::dnn::{
@@ -9,14 +14,65 @@ use crate::dnn::{
 use crate::util::csv::CsvWriter;
 use crate::util::table::Table;
 
-pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
-    let ds = Dataset::generate(&DatasetConfig::default());
-    let mut mlp = Mlp::new(&[64, 128, 64, 10], 7);
-    let curve = mlp.train(&ds, &TrainConfig::default());
-    let clean = mlp.accuracy(&ds, true);
+/// Network shape shared with the AOT `mlp_fwd` artifact.
+const DIMS: [usize; 4] = [64, 128, 64, 10];
+/// `Mlp::new` weight-init seed.
+const INIT_SEED: u64 = 7;
+/// Accuracy-loss tolerance defining the SNR_T requirement.
+const TOLERANCE: f64 = 0.01;
 
+pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let grid: Vec<f64> = (-4..=48).step_by(2).map(|v| v as f64).collect();
-    let reqs = layer_snr_requirements(&mlp, &ds, &grid, 0.01, &NoisyEvalConfig::default());
+    let train = TrainConfig::default();
+    let noisy = NoisyEvalConfig::default();
+
+    // Memo key: every knob the measurement depends on. (The dataset
+    // generator's internal defaults are code constants; changing them is
+    // a physics change and must bump the cache version, like any other
+    // simulator-semantics change.)
+    let mut params: Vec<f64> = vec![
+        INIT_SEED as f64,
+        train.epochs as f64,
+        train.batch as f64,
+        train.lr as f64,
+        train.momentum as f64,
+        train.seed as f64,
+        noisy.repeats as f64,
+        noisy.seed as f64,
+        TOLERANCE,
+    ];
+    params.extend(DIMS.iter().map(|&d| d as f64));
+    params.extend(grid.iter().copied());
+
+    let engine = ctx.engine();
+    let compute = || {
+        let ds = Dataset::generate(&DatasetConfig::default());
+        let mut mlp = Mlp::new(&DIMS, INIT_SEED);
+        let curve = mlp.train(&ds, &train);
+        let clean = mlp.accuracy(&ds, true);
+        let reqs = layer_snr_requirements(&mlp, &ds, &grid, TOLERANCE, &noisy);
+        let mut v = vec![
+            clean,
+            curve.len() as f64,
+            curve.last().map(|c| c.0).unwrap_or(f64::NAN),
+        ];
+        v.extend(reqs);
+        v
+    };
+    let (mut values, mut cached) = engine.memo("fig2/mlp", &params, "fig2", || compute());
+    if values.len() <= 3 {
+        // decodable-but-defective record (too few values to hold any
+        // layer): degrade to recompute like every other cache defect,
+        // and repair the record so the next run is a real hit again
+        values = compute();
+        cached = false;
+        engine.memo_repair("fig2/mlp", &params, "fig2", &values);
+    }
+    anyhow::ensure!(values.len() > 3, "fig2 measurement produced no layers");
+    let clean = values[0];
+    let epochs_run = values[1] as usize;
+    let final_loss = values[2];
+    let reqs = &values[3..];
 
     let mut csv = CsvWriter::new(&["layer", "snr_t_req_db", "clean_acc"]);
     let mut tbl = Table::new(&["layer", "SNR_T* (dB)"])
@@ -28,16 +84,21 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     csv.write_to(&ctx.csv_path("fig2"))?;
     println!("{}", tbl.render());
     println!(
-        "clean test accuracy {:.3} after {} epochs (final loss {:.4})",
-        clean,
-        curve.len(),
-        curve.last().map(|c| c.0).unwrap_or(f64::NAN)
+        "clean test accuracy {clean:.3} after {epochs_run} epochs (final loss {final_loss:.4}){}",
+        if cached { " [cached]" } else { "" }
     );
 
     let mut checks = vec![
         ("clean_acc".to_string(), clean),
-        ("max_req_db".to_string(), reqs.iter().cloned().fold(f64::MIN, f64::max)),
-        ("min_req_db".to_string(), reqs.iter().cloned().fold(f64::MAX, f64::min)),
+        (
+            "max_req_db".to_string(),
+            reqs.iter().cloned().fold(f64::MIN, f64::max),
+        ),
+        (
+            "min_req_db".to_string(),
+            reqs.iter().cloned().fold(f64::MAX, f64::min),
+        ),
+        ("mc_cached".to_string(), if cached { 1.0 } else { 0.0 }),
     ];
     checks.extend(
         reqs.iter()

@@ -1,0 +1,333 @@
+//! Cache robustness: shard-directory merge is byte-identical to a
+//! single-process run (engine-level and end-to-end through the CLI's
+//! `--procs` orchestration), corrupt/truncated records degrade to
+//! recompute, and GC respects `--max-bytes` while never evicting
+//! records newer than `--max-age`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
+
+use imclim::arch::pvec;
+use imclim::coordinator::{Backend, SweepOptions, SweepPoint};
+use imclim::engine::{cache_key, gc, merge_cache_dirs, scan_records, Engine, GcOptions};
+use imclim::figures::{self, FigCtx};
+use imclim::mc::ArchKind;
+
+fn qs_point(id: &str, n: usize, seed: u64) -> SweepPoint {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n as f64;
+    p[pvec::IDX_BX] = 5.0;
+    p[pvec::IDX_BW] = 5.0;
+    p[pvec::IDX_B_ADC] = 7.0;
+    p[pvec::QS_IDX_SIGMA_D] = 0.1;
+    p[pvec::QS_IDX_K_H] = 50.0;
+    p[pvec::QS_IDX_V_C] = 50.0;
+    SweepPoint::new(id, ArchKind::Qs, p)
+        .with_trials(96)
+        .with_seed(seed)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imclim-merge-gc-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn engine(dir: &Path) -> Engine {
+    Engine::new(
+        Backend::Native,
+        SweepOptions {
+            workers: 2,
+            verbose: false,
+        },
+    )
+    .with_cache(dir.to_path_buf())
+}
+
+/// Every file in a directory, name -> bytes (non-recursive).
+fn dir_bytes(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).unwrap().flatten() {
+        if entry.path().is_file() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            out.insert(name, std::fs::read(entry.path()).unwrap());
+        }
+    }
+    out
+}
+
+fn set_age(path: &Path, secs: u64) {
+    let f = std::fs::OpenOptions::new().write(true).open(path).unwrap();
+    f.set_modified(SystemTime::now() - Duration::from_secs(secs))
+        .unwrap();
+}
+
+#[test]
+fn merged_shard_dirs_are_byte_identical_to_single_run() {
+    let points: Vec<SweepPoint> = (0..8)
+        .map(|i| qs_point(&format!("m/{i}"), 16 + 4 * i, i as u64))
+        .collect();
+
+    let single = tmp_dir("merge-single");
+    engine(&single).run(points.clone());
+
+    // two "shards" computing the even/odd halves in their own dirs
+    let shard0 = tmp_dir("merge-shard0");
+    let shard1 = tmp_dir("merge-shard1");
+    let evens: Vec<SweepPoint> = points.iter().step_by(2).cloned().collect();
+    let odds: Vec<SweepPoint> = points.iter().skip(1).step_by(2).cloned().collect();
+    engine(&shard0).run(evens);
+    engine(&shard1).run(odds);
+
+    let merged = tmp_dir("merge-merged");
+    let report = merge_cache_dirs(&merged, &[shard0, shard1]).unwrap();
+    assert_eq!(report.copied, 8);
+    assert_eq!(report.identical, 0);
+    assert!(report.collisions.is_empty());
+    assert_eq!(report.backends, vec!["native".to_string()]);
+
+    let a = dir_bytes(&single);
+    let b = dir_bytes(&merged);
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>(),
+        "same file set (records + manifest)"
+    );
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "byte-identical: {name}");
+    }
+    // and the merged cache actually serves: a re-run computes nothing
+    let (_, stats) = engine(&merged).run_with_stats(points);
+    assert_eq!(stats.misses, 0);
+    assert_eq!(stats.hits, 8);
+}
+
+#[test]
+fn merge_detects_collisions_and_keeps_destination() {
+    let dst = tmp_dir("collide-dst");
+    let src = tmp_dir("collide-src");
+    std::fs::create_dir_all(&dst).unwrap();
+    std::fs::create_dir_all(&src).unwrap();
+    std::fs::write(dst.join("kboth.json"), b"{\"v\": 1}").unwrap();
+    std::fs::write(src.join("kboth.json"), b"{\"v\": 2}").unwrap();
+    std::fs::write(src.join("konly.json"), b"{\"v\": 3}").unwrap();
+    std::fs::write(src.join("ksame.json"), b"{\"v\": 4}").unwrap();
+    std::fs::write(dst.join("ksame.json"), b"{\"v\": 4}").unwrap();
+
+    let report = merge_cache_dirs(&dst, &[src]).unwrap();
+    assert_eq!(report.copied, 1, "only the new key is copied");
+    assert_eq!(report.identical, 1);
+    assert_eq!(report.collisions, vec!["kboth".to_string()]);
+    // destination payload wins on collision
+    assert_eq!(std::fs::read(dst.join("kboth.json")).unwrap(), b"{\"v\": 1}");
+    assert_eq!(std::fs::read(dst.join("konly.json")).unwrap(), b"{\"v\": 3}");
+}
+
+#[test]
+fn truncated_record_degrades_to_recompute() {
+    let dir = tmp_dir("truncate");
+    let e = engine(&dir);
+    let mk = || vec![qs_point("t/0", 24, 9)];
+    let (cold, s0) = e.run_with_stats(mk());
+    assert_eq!(s0.misses, 1);
+
+    let record = dir.join(format!("{}.json", cache_key(&mk()[0], "native")));
+    let bytes = std::fs::read(&record).unwrap();
+    for keep in [bytes.len() / 2, 1, 0] {
+        std::fs::write(&record, &bytes[..keep]).unwrap();
+        let (again, stats) = e.run_with_stats(mk());
+        assert_eq!(stats.misses, 1, "truncated to {keep} bytes is a miss");
+        assert!(again[0].error.is_none());
+        assert_eq!(
+            cold[0].measured.snr_t_db.to_bits(),
+            again[0].measured.snr_t_db.to_bits(),
+            "recompute is bit-identical"
+        );
+    }
+}
+
+/// Build a cache with 4 records aged (oldest -> newest) 400s, 300s,
+/// 200s, 100s; returns (dir, keys oldest-first).
+fn aged_cache(name: &str) -> (PathBuf, Vec<String>) {
+    let dir = tmp_dir(name);
+    let points: Vec<SweepPoint> = (0..4)
+        .map(|i| qs_point(&format!("gc/{i}"), 16 + 4 * i, i as u64))
+        .collect();
+    engine(&dir).run(points);
+    let mut records = scan_records(&dir).unwrap();
+    assert_eq!(records.len(), 4);
+    // stable assignment: sort by key, then age deterministically
+    records.sort_by(|a, b| a.key.cmp(&b.key));
+    for (i, r) in records.iter().enumerate() {
+        set_age(&r.path, 400 - 100 * i as u64);
+    }
+    let keys: Vec<String> = records.iter().map(|r| r.key.clone()).collect();
+    (dir, keys)
+}
+
+#[test]
+fn gc_max_age_expires_only_older_records() {
+    let (dir, keys) = aged_cache("gc-age");
+    let report = gc(
+        &dir,
+        &GcOptions {
+            max_bytes: None,
+            max_age: Some(Duration::from_secs(250)),
+            dry_run: false,
+        },
+    )
+    .unwrap();
+    // ages 400 and 300 expire; 200 and 100 survive
+    assert_eq!(report.scanned, 4);
+    assert_eq!(report.evicted, 2);
+    let mut expect = vec![keys[0].clone(), keys[1].clone()];
+    expect.sort();
+    assert_eq!(report.evicted_keys, expect);
+    let survivors = scan_records(&dir).unwrap();
+    assert_eq!(survivors.len(), 2);
+    // manifest no longer lists evicted keys, still lists survivors
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    assert!(!manifest.contains(&keys[0]));
+    assert!(!manifest.contains(&keys[1]));
+    assert!(manifest.contains(&keys[2]));
+    assert!(manifest.contains(&keys[3]));
+}
+
+#[test]
+fn gc_max_bytes_evicts_least_recently_used_first() {
+    let (dir, keys) = aged_cache("gc-bytes");
+    let records = scan_records(&dir).unwrap(); // oldest first
+    let budget: u64 = records[2].bytes + records[3].bytes;
+    let report = gc(
+        &dir,
+        &GcOptions {
+            max_bytes: Some(budget),
+            max_age: None,
+            dry_run: false,
+        },
+    )
+    .unwrap();
+    assert_eq!(report.evicted, 2, "evicts until it fits");
+    assert!(report.bytes_after <= budget);
+    let mut expect = vec![keys[0].clone(), keys[1].clone()];
+    expect.sort();
+    assert_eq!(report.evicted_keys, expect, "oldest two go first");
+    let survivor_keys: Vec<String> = scan_records(&dir)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.key)
+        .collect();
+    assert!(survivor_keys.contains(&keys[2]));
+    assert!(survivor_keys.contains(&keys[3]));
+}
+
+#[test]
+fn gc_never_evicts_records_newer_than_max_age() {
+    let (dir, _) = aged_cache("gc-protect");
+    // zero byte budget, but every record is newer than max-age: all
+    // records are protected, so nothing may be evicted.
+    let report = gc(
+        &dir,
+        &GcOptions {
+            max_bytes: Some(0),
+            max_age: Some(Duration::from_secs(3600)),
+            dry_run: false,
+        },
+    )
+    .unwrap();
+    assert_eq!(report.evicted, 0, "max-age protects newer records");
+    assert_eq!(report.bytes_after, report.bytes_before);
+    assert_eq!(scan_records(&dir).unwrap().len(), 4);
+}
+
+#[test]
+fn gc_dry_run_deletes_nothing() {
+    let (dir, _) = aged_cache("gc-dry");
+    let report = gc(
+        &dir,
+        &GcOptions {
+            max_bytes: Some(0),
+            max_age: None,
+            dry_run: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(report.evicted, 4, "dry run reports the plan");
+    assert_eq!(scan_records(&dir).unwrap().len(), 4, "nothing deleted");
+}
+
+#[test]
+fn fig4a_rerun_serves_all_monte_carlo_from_cache() {
+    let dir = tmp_dir("fig4a-warm");
+    let mut ctx = FigCtx::native(dir.clone());
+    ctx.trials = 64; // bespoke MC floors at 2000 trials internally
+    let s1 = figures::run("fig4a", &ctx).unwrap().remove(0);
+    assert!(s1.check("mc_points").unwrap() > 0.0);
+    assert_eq!(s1.check("mc_cached_points").unwrap(), 0.0, "cold run");
+    let csv1 = std::fs::read(dir.join("fig4a.csv")).unwrap();
+
+    let s2 = figures::run("fig4a", &ctx).unwrap().remove(0);
+    assert_eq!(
+        s2.check("mc_cached_points").unwrap(),
+        s2.check("mc_points").unwrap(),
+        "warm run performs zero Monte-Carlo"
+    );
+    let csv2 = std::fs::read(dir.join("fig4a.csv")).unwrap();
+    assert_eq!(csv1, csv2, "warm CSV is byte-identical");
+}
+
+#[test]
+fn sharded_cli_sweep_is_byte_identical_to_single_process() {
+    let exe = env!("CARGO_BIN_EXE_imclim");
+    let base = [
+        "sweep", "--arch", "qs", "--n", "8,12,16,20", "--b-adc", "4,5", "--trials", "48",
+        "--workers", "2",
+    ];
+    let single = tmp_dir("cli-single");
+    let sharded = tmp_dir("cli-sharded");
+
+    let out = std::process::Command::new(exe)
+        .args(base)
+        .arg("--out-dir")
+        .arg(&single)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "single-process sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let out = std::process::Command::new(exe)
+        .args(base)
+        .args(["--procs", "4"])
+        .arg("--out-dir")
+        .arg(&sharded)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "sharded sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let csv_a = std::fs::read(single.join("sweep.csv")).unwrap();
+    let csv_b = std::fs::read(sharded.join("sweep.csv")).unwrap();
+    assert_eq!(csv_a, csv_b, "sweep.csv byte-identical across k=4 shards");
+
+    let cache_a = dir_bytes(&single.join("cache"));
+    let cache_b = dir_bytes(&sharded.join("cache"));
+    assert_eq!(
+        cache_a.keys().collect::<Vec<_>>(),
+        cache_b.keys().collect::<Vec<_>>(),
+        "cache dirs hold the same records"
+    );
+    for (name, bytes) in &cache_a {
+        assert_eq!(bytes, &cache_b[name], "cache record {name} differs");
+    }
+    assert!(
+        !sharded.join("shard-0").exists(),
+        "shard work dirs are cleaned up after a clean merge"
+    );
+}

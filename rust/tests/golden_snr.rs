@@ -1,0 +1,208 @@
+//! Golden regression tests for the closed-form SNR/physics stack.
+//!
+//! Every value below was hand-derived from the paper's equations
+//! (Table II constants, eqs. 1/5/8-15/18-24) at the 512-row reference
+//! configuration — 65 nm, V_WL = 0.8 V, C_o = 3 fF, B_x = B_w = 6,
+//! uniform signal statistics — and cross-checked against the paper's
+//! quoted figures (sigma_D ~ 0.107, k_h ~ 44, SQNR_qiy(7,7) = 41 dB,
+//! MPC(8 b, zeta 4) ~ 40.8 dB). They pin the *exact* closed forms: a
+//! physics regression that moves any of these quantities fails loudly
+//! instead of silently shifting every figure.
+
+use imclim::arch::{binomial_clip_moment, ImcArch, OpPoint, QrArch, QsArch};
+use imclim::compute::is_model::IsModel;
+use imclim::compute::qr::QrModel;
+use imclim::compute::qs::QsModel;
+use imclim::quant::criteria::{bgc_sqnr_db, gaussian_clip_stats, mpc_sqnr_db};
+use imclim::quant::{
+    dp_signal_variance, qiy_variance, sqnr_qiy_db, sqnr_qy_db, SignalStats,
+};
+use imclim::snr::{compose, snr_a_total_db};
+use imclim::tech::TechNode;
+
+/// Relative-tolerance pin with a readable failure message.
+fn pin(label: &str, actual: f64, golden: f64, rel: f64) {
+    let err = ((actual - golden) / golden.abs().max(1e-300)).abs();
+    assert!(
+        err < rel,
+        "{label}: actual {actual:.15e} vs golden {golden:.15e} (rel err {err:.2e})"
+    );
+}
+
+fn uni() -> (SignalStats, SignalStats) {
+    (
+        SignalStats::uniform_signed(1.0),
+        SignalStats::uniform_unsigned(1.0),
+    )
+}
+
+#[test]
+fn golden_signal_statistics_and_input_quantization() {
+    let (w, x) = uni();
+    // PAR (eq. 8 prelude): 10 log10(3/4) and 10 log10(3).
+    pin("par_x", x.par_db_unsigned(), -1.249_387_366_082_999_3, 1e-12);
+    pin("par_w", w.par_db_signed(), 4.771_212_547_196_624, 1e-12);
+    // eq. (5): sigma_yo^2 = N sigma_w^2 E[x^2] = 512/9.
+    pin(
+        "dp_signal_var",
+        dp_signal_variance(512, &w, &x),
+        56.888_888_888_888_886,
+        1e-12,
+    );
+    // eq. (5): sigma_qiy^2 at B_x = B_w = 6.
+    pin(
+        "qiy_var",
+        qiy_variance(512, 6, 6, &w, &x),
+        0.017_361_111_111_111_11,
+        1e-12,
+    );
+    // eq. (8): SQNR_qiy = 35.154... dB (= 41.2 dB at 7/7 minus 6.02).
+    pin(
+        "sqnr_qiy",
+        sqnr_qiy_db(512, 6, 6, &w, &x),
+        35.154_499_349_597_18,
+        1e-12,
+    );
+    // eq. (9): full-range 8-bit output quantizer at N = 512.
+    pin(
+        "sqnr_qy",
+        sqnr_qy_db(512, 8, &w, &x),
+        22.315_475_209_128_06,
+        1e-12,
+    );
+}
+
+#[test]
+fn golden_snr_composition() {
+    // eq. (10): 30 dB analog + 39 dB input quantization -> 29.485 dB.
+    pin(
+        "snr_a_total",
+        snr_a_total_db(30.0, 39.0),
+        29.485_030_579_747_7,
+        1e-12,
+    );
+    pin("compose", compose(&[100.0, 100.0]), 50.0, 1e-12);
+}
+
+#[test]
+fn golden_output_precision_criteria() {
+    let (w, x) = uni();
+    // eq. (14): MPC at B_y = 8, zeta = 4 (paper: ~40.8 dB).
+    pin("mpc_8_4", mpc_sqnr_db(8, 4.0), 40.546_022_393_519_33, 1e-9);
+    // eq. (13): BGC at B_x = B_w = 7, N = 512.
+    pin(
+        "bgc_7_7_512",
+        bgc_sqnr_db(7, 7, 512, &w, &x),
+        112.620_874_428_644_68,
+        1e-12,
+    );
+    // clipping probability at 4 sigma stays in the paper's ~1e-4 band
+    let (pc, _) = gaussian_clip_stats(4.0);
+    assert!(pc > 1e-5 && pc < 1e-3, "{pc}");
+}
+
+#[test]
+fn golden_qs_compute_model() {
+    // 65 nm, V_WL = 0.8 V, 512-row bit-line (Table II + eqs. 16-21).
+    let qs = QsModel::new(TechNode::n65(), 0.8);
+    pin("qs_sigma_d", qs.sigma_d(), 0.1071, 1e-12);
+    pin("qs_cell_current", qs.cell_current(), 6.341_937_011_421_957e-5, 1e-9);
+    pin("qs_t_rf", qs.t_rf(), 1.285_714_285_714_285_5e-11, 1e-12);
+    pin(
+        "qs_delta_v_unit",
+        qs.delta_v_unit(),
+        0.020_468_685_592_420_075,
+        1e-9,
+    );
+    pin("qs_k_h", qs.k_h(), 43.969_604_004_923_81, 1e-9);
+    pin("qs_sigma_t_rel", qs.sigma_t_rel(), 0.023, 1e-12);
+    pin(
+        "qs_sigma_theta_counts",
+        qs.sigma_theta_counts(512),
+        0.012_356_423_142_755_441,
+        1e-9,
+    );
+}
+
+#[test]
+fn golden_is_compute_model() {
+    let is = IsModel::new(TechNode::n65(), 0.8);
+    pin("is_sigma_d", is.sigma_d(), 0.1071, 1e-12);
+    pin(
+        "is_delta_v_unit",
+        is.delta_v_unit(),
+        0.042_279_580_076_146_39,
+        1e-9,
+    );
+    pin("is_k_h", is.k_h(), 9.460_831_902_294_01, 1e-9);
+}
+
+#[test]
+fn golden_qr_compute_model() {
+    let qr = QrModel::new(TechNode::n65(), 3.0);
+    pin("qr_sigma_c", qr.sigma_c_rel(), 0.046_188_021_535_170_06, 1e-12);
+    pin(
+        "qr_sigma_theta",
+        qr.sigma_theta_volts(),
+        1.174_734_012_447_073e-3,
+        1e-12,
+    );
+    pin("qr_inj_a", qr.inj_a_rel(), 0.030_999_999_999_999_996, 1e-12);
+    pin("qr_inj_b", qr.inj_b_rel(), 0.051_666_666_666_666_666, 1e-12);
+}
+
+#[test]
+fn golden_binomial_clip_moment_at_reference_headroom() {
+    // E[(K - k_h)^2; K >= k_h], K ~ Bin(512, 1/4), k_h = k_h(0.8 V):
+    // the headroom-collapse moment behind Fig. 9(a)'s N_max cliff.
+    let k_h = QsModel::new(TechNode::n65(), 0.8).k_h();
+    pin(
+        "binclip_512",
+        binomial_clip_moment(512, 0.25, k_h),
+        7_157.107_451_089_362,
+        1e-9,
+    );
+}
+
+#[test]
+fn golden_qs_arch_noise_decomposition() {
+    let (w, x) = uni();
+    let arch = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+    // Below N_max (N = 128): mismatch-limited, ~18.7 dB.
+    let nb = arch.noise(&OpPoint::new(128, 6, 6, 8), &w, &x);
+    pin("qs_snr_a_128", nb.snr_a_db(), 18.664_432_739_236_958, 1e-9);
+    pin(
+        "qs_snr_a_total_128",
+        nb.snr_a_total_db(),
+        18.568_060_899_934_242,
+        1e-9,
+    );
+    // Above N_max (N = 512): headroom clipping collapses the SNR.
+    let nb = arch.noise(&OpPoint::new(512, 6, 6, 8), &w, &x);
+    pin("qs_snr_a_512", nb.snr_a_db(), -17.474_086_834_415_637, 1e-9);
+    pin(
+        "qs_snr_a_total_512",
+        nb.snr_a_total_db(),
+        -17.474_110_544_030_94,
+        1e-9,
+    );
+}
+
+#[test]
+fn golden_qr_arch_noise_decomposition() {
+    let (w, x) = uni();
+    let arch = QrArch::new(QrModel::new(TechNode::n65(), 3.0));
+    // The refined QR noise model is N-independent in SNR_a (both signal
+    // and noise scale linearly with N) — pin it at the 512-row reference.
+    let nb = arch.noise(&OpPoint::new(512, 6, 6, 8), &w, &x);
+    pin("qr_snr_a_512", nb.snr_a_db(), 22.205_072_260_460_95, 1e-9);
+    pin(
+        "qr_snr_a_total_512",
+        nb.snr_a_total_db(),
+        21.990_261_132_279_12,
+        1e-9,
+    );
+    assert_eq!(nb.sigma_eta_h2, 0.0, "QR has no headroom clipping");
+    let nb128 = arch.noise(&OpPoint::new(128, 6, 6, 8), &w, &x);
+    pin("qr_snr_a_128", nb128.snr_a_db(), 22.205_072_260_460_95, 1e-9);
+}

@@ -1,0 +1,165 @@
+//! Property-style tests for `SweepSpec`: k-way sharding is a partition
+//! of the full grid (union == grid, pairwise disjoint, ids and values
+//! unchanged), and grid-string parsing round-trips through formatting,
+//! including degenerate ranges and error cases.
+
+use std::collections::BTreeMap;
+
+use imclim::engine::{parse_grid_f64, parse_grid_u32, parse_grid_usize, parse_shard, SweepSpec};
+
+/// A deterministic multi-axis grid of the given shape.
+fn spec(shape: &[usize]) -> SweepSpec {
+    let mut s = SweepSpec::new("prop");
+    for (a, &len) in shape.iter().enumerate() {
+        let vals: Vec<usize> = (0..len).map(|v| v * (a + 2) + 1).collect();
+        s = s.axis_usize(&format!("a{a}"), &vals);
+    }
+    s
+}
+
+#[test]
+fn sharding_is_a_partition_for_many_shapes_and_counts() {
+    let shapes = [
+        vec![1],
+        vec![5],
+        vec![2, 3],
+        vec![4, 1, 3],
+        vec![2, 2, 2, 2],
+        vec![7, 5],
+    ];
+    for shape in &shapes {
+        let full = spec(shape).points();
+        for k in 1..=7 {
+            // union of all shards covers every global index exactly once
+            let mut seen: BTreeMap<usize, String> = BTreeMap::new();
+            for i in 0..k {
+                let shard = spec(shape).shard(i, k).unwrap();
+                let points = shard.points();
+                assert_eq!(
+                    points.len(),
+                    shard.len(),
+                    "len() consistent with points() for shard {i}/{k}"
+                );
+                for (j, p) in points.into_iter().enumerate() {
+                    // point j of shard i is global point i + j*k
+                    let global = i + j * k;
+                    assert!(global < full.len(), "shard emits only grid points");
+                    assert_eq!(p.id, full[global].id, "ids unchanged by sharding");
+                    assert_eq!(
+                        p.values, full[global].values,
+                        "values unchanged by sharding"
+                    );
+                    let prev = seen.insert(global, p.id);
+                    assert!(prev.is_none(), "point {global} claimed by two shards");
+                }
+            }
+            assert_eq!(
+                seen.len(),
+                full.len(),
+                "shards {k}-partition the {shape:?} grid"
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_len_formula_matches_enumeration() {
+    for total_shape in [vec![1], vec![3], vec![10], vec![3, 4], vec![13]] {
+        let full_len = spec(&total_shape).points().len();
+        for k in 1..=9 {
+            let mut sum = 0;
+            for i in 0..k {
+                let s = spec(&total_shape).shard(i, k).unwrap();
+                assert_eq!(s.len(), s.points().len());
+                sum += s.len();
+            }
+            assert_eq!(sum, full_len, "shape {total_shape:?}, k={k}");
+        }
+    }
+}
+
+#[test]
+fn shard_validation_errors() {
+    let base = spec(&[4]);
+    assert!(base.clone().shard(0, 0).is_err(), "zero shards");
+    assert!(base.clone().shard(2, 2).is_err(), "index == count");
+    assert!(
+        base.clone().shard(0, 2).unwrap().shard(1, 2).is_err(),
+        "re-sharding a shard"
+    );
+    assert!(parse_shard("2/4").is_ok());
+    assert!(parse_shard("4/4").is_err());
+    assert!(parse_shard("x/4").is_err());
+    assert!(parse_shard("1:4").is_err());
+    assert!(parse_shard("").is_err());
+}
+
+#[test]
+fn grid_lists_roundtrip_through_formatting() {
+    let usize_lists = [
+        vec![1, 2, 3],
+        vec![64, 128],
+        vec![5],
+        vec![2, 4, 6, 8, 100],
+    ];
+    for vals in &usize_lists {
+        let joined = vals
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        assert_eq!(&parse_grid_usize(&joined).unwrap(), vals, "{joined}");
+    }
+    let f64_lists = [vec![0.5, 0.75], vec![1.0, 2.5, 3.25], vec![0.625]];
+    for vals in &f64_lists {
+        let joined = vals
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        assert_eq!(&parse_grid_f64(&joined).unwrap(), vals, "{joined}");
+    }
+}
+
+#[test]
+fn ranges_expand_inclusively_and_roundtrip() {
+    let expanded = parse_grid_usize("4:16:4").unwrap();
+    assert_eq!(expanded, vec![4, 8, 12, 16]);
+    // re-formatting the expansion parses back to the same grid
+    let rejoined = expanded
+        .iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    assert_eq!(parse_grid_usize(&rejoined).unwrap(), expanded);
+    // step that overshoots the upper bound stops at the last in-range value
+    assert_eq!(parse_grid_usize("1:10:4").unwrap(), vec![1, 5, 9]);
+    // float range hits its inclusive endpoint within epsilon
+    let v = parse_grid_f64("0.6:0.9:0.1").unwrap();
+    assert_eq!(v.len(), 4);
+    assert!((v[3] - 0.9).abs() < 1e-9);
+}
+
+#[test]
+fn degenerate_ranges() {
+    assert_eq!(parse_grid_usize("7:7").unwrap(), vec![7]);
+    assert_eq!(parse_grid_usize("7:7:3").unwrap(), vec![7]);
+    assert_eq!(parse_grid_f64("2:2").unwrap(), vec![2.0]);
+    assert_eq!(parse_grid_f64("2.5:2.5:0.5").unwrap(), vec![2.5]);
+    assert_eq!(parse_grid_u32("0:0").unwrap(), vec![0]);
+    // mixed lists and ranges compose in order
+    assert_eq!(parse_grid_usize("9,1:3,7").unwrap(), vec![9, 1, 2, 3, 7]);
+}
+
+#[test]
+fn error_cases_reject_cleanly() {
+    assert!(parse_grid_usize("").is_err());
+    assert!(parse_grid_usize(",,,").is_err());
+    assert!(parse_grid_usize("5:2").is_err(), "descending");
+    assert!(parse_grid_usize("1:5:0").is_err(), "zero step");
+    assert!(parse_grid_f64("1:2:3:4").is_err(), "too many fields");
+    assert!(parse_grid_f64("0.6:0.8").is_err(), "sub-unit step-less");
+    assert!(parse_grid_f64("1:2:-1").is_err(), "negative step");
+    assert!(parse_grid_u32("99999999999").is_err(), "u32 overflow");
+    assert!(parse_grid_usize("abc").is_err());
+}

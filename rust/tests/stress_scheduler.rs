@@ -1,0 +1,110 @@
+//! Concurrency stress tests for the lock-free sweep scheduler: many
+//! workers racing over many tiny jobs must lose nothing, duplicate
+//! nothing, keep submission order in the results, and produce
+//! bit-identical measurements regardless of worker count or repetition.
+
+use std::collections::HashSet;
+
+use imclim::arch::pvec;
+use imclim::coordinator::{run_sweep, Backend, SweepOptions, SweepPoint};
+use imclim::mc::ArchKind;
+
+/// A deliberately tiny job: few rows, few trials — the scheduling
+/// overhead dominates, maximizing contention on the claim counter.
+fn tiny_point(i: usize) -> SweepPoint {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = 4.0 + (i % 3) as f64;
+    p[pvec::IDX_BX] = 4.0;
+    p[pvec::IDX_BW] = 4.0;
+    p[pvec::IDX_B_ADC] = 6.0;
+    p[pvec::QS_IDX_SIGMA_D] = 0.1;
+    p[pvec::QS_IDX_K_H] = 40.0;
+    p[pvec::QS_IDX_V_C] = 40.0;
+    SweepPoint::new(format!("stress/{i}"), ArchKind::Qs, p)
+        .with_trials(8)
+        .with_seed(i as u64)
+}
+
+fn run(n: usize, workers: usize) -> Vec<imclim::coordinator::SweepResult> {
+    let points: Vec<SweepPoint> = (0..n).map(tiny_point).collect();
+    run_sweep(
+        points,
+        Backend::Native,
+        SweepOptions {
+            workers,
+            verbose: false,
+        },
+    )
+}
+
+#[test]
+fn many_workers_tiny_jobs_lose_and_duplicate_nothing() {
+    let n = 400;
+    let results = run(n, 16);
+    assert_eq!(results.len(), n, "no lost points");
+    let mut ids = HashSet::new();
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.index, i, "submission order preserved");
+        assert_eq!(r.id, format!("stress/{i}"));
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(!r.cached);
+        assert_eq!(r.measured.trials, 8, "trial count met");
+        assert!(ids.insert(r.id.clone()), "no duplicated point: {}", r.id);
+    }
+    assert_eq!(ids.len(), n);
+}
+
+#[test]
+fn results_are_bit_identical_across_worker_counts() {
+    let n = 120;
+    let baseline = run(n, 1);
+    for workers in [2usize, 3, 5, 8, 16] {
+        let racy = run(n, workers);
+        assert_eq!(racy.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&racy) {
+            assert_eq!(a.index, b.index, "workers={workers}");
+            assert_eq!(a.id, b.id, "workers={workers}");
+            assert_eq!(
+                a.measured.snr_t_db.to_bits(),
+                b.measured.snr_t_db.to_bits(),
+                "workers={workers}, point {}",
+                a.id
+            );
+            assert_eq!(
+                a.measured.sigma_yo2.to_bits(),
+                b.measured.sigma_yo2.to_bits(),
+                "workers={workers}, point {}",
+                a.id
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_are_bit_identical() {
+    let a = run(60, 8);
+    let b = run(60, 8);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.measured.snr_a_db.to_bits(), y.measured.snr_a_db.to_bits());
+        assert_eq!(x.measured.snr_t_db.to_bits(), y.measured.snr_t_db.to_bits());
+    }
+}
+
+#[test]
+fn extreme_oversubscription_single_point() {
+    // 16 workers, 1 job: 15 workers must exit cleanly without claiming.
+    let results = run(1, 16);
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].index, 0);
+    assert!(results[0].error.is_none());
+}
+
+#[test]
+fn worker_count_zero_is_clamped_not_deadlocked() {
+    // SweepOptions{workers: 0} must still make progress (clamped to 1).
+    let results = run(5, 0);
+    assert_eq!(results.len(), 5);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.index, i);
+    }
+}
