@@ -14,7 +14,9 @@ use imclim::coordinator::{run_sweep, Backend, PjrtService, SweepOptions, SweepPo
 use imclim::engine::Engine;
 use imclim::figures::{self, FigCtx};
 use imclim::mc::{simulate, ArchKind, InputDist};
+use imclim::opt::{frontier, optimize, ArchChoice, Constraints, Domain, Objective};
 use imclim::tech::TechNode;
+use imclim::util::json::{arr, num, obj, s, Json};
 
 fn qs_params(n: f64, sigma_d: f64) -> [f64; pvec::P] {
     let mut p = [0.0; pvec::P];
@@ -136,6 +138,42 @@ fn main() {
         });
     }
 
+    // ---- design-space optimizer (opt_*: emitted to BENCH_opt.json) ----
+    {
+        let (w, x) = figures::uniform_stats();
+        let domain = Domain {
+            archs: vec![ArchChoice::Qs, ArchChoice::Qr, ArchChoice::Cm],
+            nodes: vec![TechNode::n65(), TechNode::n22()],
+            vwls: vec![0.6, 0.65, 0.7, 0.75, 0.8],
+            cos: vec![0.5, 1.0, 3.0, 9.0],
+            ns: vec![32, 64, 128, 256, 512],
+            bxs: vec![4, 6, 8],
+            bws: vec![4, 6, 8],
+            b_adcs: vec![2, 4, 6, 8, 10, 12],
+        }
+        .normalized()
+        .unwrap();
+        let candidates = domain.point_count() as f64;
+        suite.bench("opt_frontier_extract", candidates, || {
+            black_box(frontier(&domain, 1, &w, &x));
+        });
+        suite.bench("opt_frontier_extract_4shards", candidates, || {
+            black_box(frontier(&domain, 4, &w, &x));
+        });
+        suite.bench("opt_min_energy_constrained", candidates, || {
+            black_box(optimize(
+                &domain,
+                Objective::MinEnergy,
+                &Constraints {
+                    snr_t_min_db: Some(18.0),
+                    ..Constraints::default()
+                },
+                &w,
+                &x,
+            ));
+        });
+    }
+
     // ---- DNN substrate -------------------------------------------------
     {
         use imclim::dnn::*;
@@ -225,6 +263,38 @@ fn main() {
         });
     } else {
         eprintln!("(pjrt benches skipped: run `make artifacts`)");
+    }
+
+    // Persist the optimizer hot-path numbers so successive PRs get a
+    // perf trajectory: BENCH_opt.json ($BENCH_OPT_JSON overrides the
+    // path) holds one record per opt_* bench that ran this invocation.
+    let opt_reports: Vec<Json> = suite
+        .reports
+        .iter()
+        .filter(|r| r.name.starts_with("opt_"))
+        .map(|r| {
+            obj(vec![
+                ("name", s(&r.name)),
+                ("iters", num(r.iters as f64)),
+                ("median_ns", num(r.median.as_nanos() as f64)),
+                ("mad_ns", num(r.mad.as_nanos() as f64)),
+                ("mean_ns", num(r.mean.as_nanos() as f64)),
+                ("items_per_sec", num(r.items_per_sec())),
+            ])
+        })
+        .collect();
+    if !opt_reports.is_empty() {
+        let path = std::env::var_os("BENCH_OPT_JSON")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("BENCH_opt.json"));
+        let doc = obj(vec![
+            ("suite", s("opt")),
+            ("benches", arr(opt_reports)),
+        ]);
+        match std::fs::write(&path, doc.to_string()) {
+            Ok(()) => println!("opt bench records -> {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
     }
 
     println!("\n{} benches complete", suite.reports.len());

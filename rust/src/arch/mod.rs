@@ -78,6 +78,10 @@ pub enum AdcCriterion {
     Bgc,
     /// Truncated BGC at a fixed B_y.
     TBgc(u32),
+    /// Explicit ADC precision over the MPC statistical (4-sigma) range —
+    /// the design-space explorer's B_ADC axis (`crate::opt`), where the
+    /// bit count is a search dimension rather than an assignment rule.
+    Fixed(u32),
 }
 
 /// Closed-form noise decomposition at one operating point (Table III).
@@ -159,7 +163,7 @@ pub trait ImcArch {
         x: &SignalStats,
     ) -> f64 {
         match crit {
-            AdcCriterion::Mpc => self.v_c_volts(op, w, x),
+            AdcCriterion::Mpc | AdcCriterion::Fixed(_) => self.v_c_volts(op, w, x),
             _ => self.v_c_full_volts(op, w, x),
         }
     }
@@ -204,7 +208,7 @@ pub trait ImcArch {
         match crit {
             AdcCriterion::Mpc => self.b_adc_min(op, w, x),
             AdcCriterion::Bgc => self.b_adc_bgc(op),
-            AdcCriterion::TBgc(b) => b,
+            AdcCriterion::TBgc(b) | AdcCriterion::Fixed(b) => b,
         }
     }
 }

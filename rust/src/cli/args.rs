@@ -63,6 +63,31 @@ impl Args {
     }
 }
 
+/// Worked examples appended to the `imclim` usage screen.
+pub const EXAMPLES: &str = "
+EXAMPLES:
+  # arbitrary design-space grid, cached + distributed over 4 processes
+  imclim sweep --arch qs,qr --n 64,128,256 --b-adc 4:10 \\
+      --vwl 0.6:0.8:0.1 --trials 4096 --procs 4 --out-dir results
+
+  # energy-delay-accuracy Pareto frontier of the same space, with each
+  # frontier point Monte-Carlo-validated through the shared cache
+  imclim pareto --arch qs,qr --n 64:512:64 --b-adc 4:10 \\
+      --vwl 0.6:0.9:0.1 --validate --out-dir results
+
+  # cheapest design reaching 21.5 dB SNR_T (the MPC operating point of
+  # the 512-row reference: B_ADC comes out at the eq. (15) assignment)
+  imclim optimize --objective min-energy --snr-t-min 21.5
+
+  # highest-accuracy design under an energy budget
+  imclim optimize --objective max-snr --energy-max 5e-12 --delay-max 2.5
+
+  # machine-check conclusion 3: the QS->QR preference flip appears once
+  # Bx/Bw scale with the target (precision assignment), N held at 512
+  imclim pareto --crossover --n 512 --bx 1:8 --bw 1:8 --b-adc 1:14 \\
+      --vwl 0.55:0.9:0.05 --co 0.5,1,2,3,6,9 --targets 1:28:1
+";
+
 /// Parse a byte size with optional binary-unit suffix: `"4096"`,
 /// `"512k"`, `"10M"`, `"2g"` (k/m/g = KiB/MiB/GiB).
 pub fn parse_bytes(s: &str) -> Result<u64> {

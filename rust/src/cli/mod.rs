@@ -7,6 +7,13 @@
 //!                        cached sweep engine (lists + ranges per axis);
 //!                        distributes across shard subprocesses with
 //!                        --procs k, or runs one shard with --shard i/k
+//!   pareto               energy-delay-accuracy Pareto frontier of a
+//!                        design domain (closed forms, branch-and-bound),
+//!                        optional MC validation through the engine cache,
+//!                        optional QS-vs-QR crossover report
+//!   optimize             constrained design-space optimum: min-energy /
+//!                        min-delay / max-snr subject to SNR_T, energy
+//!                        and delay bounds
 //!   merge                union shard cache directories into one
 //!   cache                cache maintenance: gc (size/age LRU), stats
 //!   dnn                  train the Fig. 2 MLP and report accuracy/SNR
@@ -59,6 +66,32 @@ COMMANDS:
                                      --keep-shards keeps shard-i/ dirs
                         --shard i/K  run only shard i of a K-way split
                                      (point ids and cache keys unchanged)
+  pareto              Pareto frontier (max SNR_T, min energy, min delay)
+                      of a design domain, from the closed-form models by
+                      dominance-pruned branch-and-bound; same axis syntax
+                      as sweep plus QS/CM knob --vwl and QR knob --co
+                      (irrelevant knobs are dropped per architecture):
+                      --arch qs,qr --node 65 --vwl 0.6:0.9:0.1 --co 3
+                      --n 64:512:64 --bx 6 --bw 6 --b-adc 4:10
+                      emits <out-dir>/pareto.csv (no row is dominated)
+                        --procs K     extract over K worker threads
+                                      (round-robin family shards merged
+                                      and re-pruned; output identical to
+                                      a 1-thread run)
+                        --validate    Monte-Carlo-check frontier points
+                                      through the cached sweep engine
+                                      ([--trials N] [--seed S]; a cache
+                                      populated by `sweep` over the same
+                                      axes serves it without recompute)
+                        --crossover   append the QS-vs-QR preference
+                                      report over --targets (default
+                                      1:28:1 dB), emitting crossover.csv
+  optimize            constrained optimum over the same domain axes:
+                      --objective min-energy|min-delay|max-snr with any
+                      of --snr-t-min DB, --energy-max J, --delay-max NS;
+                      prints the winning design (always a Pareto point
+                      of its domain) + its MPC ADC assignment, and emits
+                      <out-dir>/optimize.csv
   merge <dir>...      union shard cache dirs (or their out-dirs) into
                       <out-dir>/cache, rebuilding the manifest; reports
                       key collisions with differing payloads
@@ -70,6 +103,15 @@ COMMANDS:
   dnn                 train the Fig. 2 MLP: [--epochs E]
   smoke               PJRT artifact round-trip check
   info                design-space summary
+
+GRID SYNTAX (every axis):
+  lists \"a,b,c\" and inclusive ranges \"lo:hi[:step]\" (step defaults
+  to 1), composable: \"8,16:64:16\". Range endpoint rule: hi is included
+  iff (hi-lo)/step is within 1e-9 relative tolerance of an integer —
+  non-dividing steps stop at the last in-range value (\"1:10:4\" ->
+  1,5,9), and when the endpoint divides, the last value is exactly the
+  hi you typed (\"0.55:0.9:0.05\" ends on 0.9), immune to float
+  representation drift. Values are lo + i*step (no accumulation).
 
 COMMON OPTIONS:
   --out-dir DIR       output directory for CSVs (default: results)
@@ -98,6 +140,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         Some("figure") => cmd_figure(args),
         Some("table") => cmd_table(args),
         Some("sweep") => cmd_sweep(args),
+        Some("pareto") => cmd_pareto(args),
+        Some("optimize") => cmd_optimize(args),
         Some("merge") => cmd_merge(args),
         Some("cache") => cmd_cache(args),
         Some("assign") => cmd_assign(args),
@@ -106,6 +150,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         Some("info") => cmd_info(),
         _ => {
             print!("{USAGE}");
+            print!("{}", args::EXAMPLES);
             Ok(())
         }
     }
@@ -180,30 +225,29 @@ fn cmd_table(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Instantiate an architecture model for the sweep CLI — through
+/// `opt::Family::build`, the same constructor the design-space
+/// optimizer uses, so `imclim sweep` and `pareto --validate` produce
+/// identical `pjrt_params` (and therefore share cache records) by
+/// construction. The shape fields of the throwaway family are dummies:
+/// only (arch, node, knobs) feed the model.
 fn build_arch(
     name: &str,
     node: TechNode,
     v_wl: f64,
     c_ff: f64,
 ) -> anyhow::Result<(Box<dyn ImcArch>, ArchKind)> {
-    Ok(match name {
-        "qs" => (
-            Box::new(QsArch::new(QsModel::new(node, v_wl))),
-            ArchKind::Qs,
-        ),
-        "qr" => (
-            Box::new(QrArch::new(QrModel::new(node, c_ff))),
-            ArchKind::Qr,
-        ),
-        "cm" => (
-            Box::new(CmArch::new(
-                QsModel::new(node, v_wl),
-                QrModel::new(node, c_ff),
-            )),
-            ArchKind::Cm,
-        ),
-        other => anyhow::bail!("unknown arch '{other}' (qs, qr or cm)"),
-    })
+    let arch = crate::opt::ArchChoice::parse(name)?;
+    let family = crate::opt::Family {
+        arch,
+        node,
+        v_wl: Some(v_wl),
+        c_ff: Some(c_ff),
+        n: 1,
+        bx: 1,
+        bw: 1,
+    };
+    Ok((family.build(), arch.kind()))
 }
 
 /// Per-point metadata carried alongside the sweep: the grid coordinates
@@ -544,6 +588,287 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
         stats.errors == 0,
         "{} sweep point(s) failed (see the error column in {})",
         stats.errors,
+        csv_path.display()
+    );
+    Ok(())
+}
+
+/// Parse the shared design-domain axes of `pareto` / `optimize`. The
+/// defaults span the reference design space: QS vs QR at 65 nm over the
+/// usable V_WL range, N up to the 512-row array, B_ADC 4..10.
+fn parse_opt_domain(args: &Args) -> anyhow::Result<crate::opt::Domain> {
+    let archs = csv_list(args.opt("arch").unwrap_or("qs,qr"))
+        .iter()
+        .map(|a| crate::opt::ArchChoice::parse(a))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let nodes = csv_list(args.opt("node").unwrap_or("65"))
+        .iter()
+        .map(|nd| TechNode::by_name(nd).ok_or_else(|| anyhow::anyhow!("unknown node '{nd}'")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    crate::opt::Domain {
+        archs,
+        nodes,
+        vwls: parse_grid_f64(args.opt("vwl").unwrap_or("0.6:0.9:0.1"))?,
+        cos: parse_grid_f64(args.opt("co").unwrap_or("3"))?,
+        ns: parse_grid_usize(args.opt("n").unwrap_or("64:512:64"))?,
+        bxs: parse_grid_u32(args.opt("bx").unwrap_or("6"))?,
+        bws: parse_grid_u32(args.opt("bw").unwrap_or("6"))?,
+        b_adcs: parse_grid_u32(args.opt("b-adc").unwrap_or("4:10"))?,
+    }
+    .normalized()
+}
+
+/// Shared CSV emission for design points: the closed-form columns plus
+/// (for `pareto --validate`) the simulated SNR_T and any point error.
+fn design_point_csv() -> CsvWriter {
+    CsvWriter::new(&[
+        "arch",
+        "node_nm",
+        "vwl",
+        "co_ff",
+        "n",
+        "bx",
+        "bw",
+        "b_adc",
+        "b_adc_mpc",
+        "snr_a_db",
+        "snr_t_db",
+        "energy_j",
+        "delay_ns",
+        "snr_t_sim_db",
+        "sim_error",
+    ])
+}
+
+fn design_point_row(csv: &mut CsvWriter, p: &crate::opt::DesignPoint, sim: &str, err: &str) {
+    csv.row(&[
+        p.family.arch.name().to_string(),
+        p.family.node.node_nm.to_string(),
+        p.family.v_wl.map(|v| v.to_string()).unwrap_or_default(),
+        p.family.c_ff.map(|c| c.to_string()).unwrap_or_default(),
+        p.family.n.to_string(),
+        p.family.bx.to_string(),
+        p.family.bw.to_string(),
+        p.b_adc.to_string(),
+        p.b_adc_mpc.to_string(),
+        format!("{:.4}", p.snr_a_total_db),
+        format!("{:.4}", p.snr_t_db),
+        format!("{:.6e}", p.energy_j),
+        format!("{:.4}", p.delay_ns()),
+        sim.to_string(),
+        err.to_string(),
+    ]);
+}
+
+fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
+    let domain = parse_opt_domain(args)?;
+    let procs = args.opt_parse("procs", 1usize);
+    anyhow::ensure!(procs >= 1, "--procs must be >= 1");
+    let (ctx, _service) = make_ctx(args)?;
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let (w, x) = crate::figures::uniform_stats();
+
+    let frontier = crate::opt::frontier(&domain, procs, &w, &x);
+
+    // Optional Monte-Carlo validation of the frontier points, through
+    // the cached sweep engine: content keys ignore labels, so a cache
+    // populated by `imclim sweep` (sharded or not) over the same axes
+    // serves these points without recomputation.
+    let mut sims: Vec<(String, String)> =
+        vec![(String::new(), String::new()); frontier.points.len()];
+    let mut sim_errors = 0usize;
+    if args.has("validate") {
+        let seed = args.opt_parse("seed", 7u64);
+        let points: Vec<crate::coordinator::SweepPoint> = frontier
+            .points
+            .iter()
+            .map(|p| {
+                let arch = p.family.build();
+                let op = OpPoint::new(p.family.n, p.family.bx, p.family.bw, p.b_adc);
+                crate::coordinator::SweepPoint::new(
+                    format!("pareto/{}", p.label()),
+                    p.family.arch.kind(),
+                    arch.pjrt_params(&op, &w, &x),
+                )
+                .with_trials(ctx.trials)
+                .with_seed(seed)
+            })
+            .collect();
+        let (results, stats) = ctx.engine().run_with_stats(points);
+        for (slot, r) in sims.iter_mut().zip(&results) {
+            if let Some(e) = &r.error {
+                slot.1 = e.clone();
+            } else {
+                slot.0 = format!("{:.4}", r.measured.snr_t_db);
+            }
+        }
+        println!(
+            "pareto: validated {} frontier points ({} cache hits, {} computed{})",
+            results.len(),
+            stats.hits,
+            stats.misses,
+            if stats.errors > 0 {
+                format!(", {} errors", stats.errors)
+            } else {
+                String::new()
+            }
+        );
+        sim_errors = stats.errors;
+    }
+
+    // the CSV (with its sim_error column) is written even when
+    // validation points failed, so the failure below is inspectable
+    let mut csv = design_point_csv();
+    for (p, (sim, err)) in frontier.points.iter().zip(&sims) {
+        design_point_row(&mut csv, p, sim, err);
+    }
+    let csv_path = ctx.csv_path("pareto");
+    csv.write_to(&csv_path)?;
+    anyhow::ensure!(
+        sim_errors == 0,
+        "{} validation point(s) failed (see the sim_error column in {})",
+        sim_errors,
+        csv_path.display()
+    );
+
+    let shown = frontier.points.len().min(10);
+    let mut t = Table::new(&["design", "SNR_T (dB)", "energy/DP", "delay"]).with_title(&format!(
+        "Pareto frontier: {} of {} candidates survive",
+        frontier.points.len(),
+        frontier.points_total
+    ));
+    for p in frontier.points.iter().take(shown) {
+        t.row(vec![
+            p.label(),
+            fmt_db(p.snr_t_db),
+            fmt_energy(p.energy_j),
+            format!("{:.2} ns", p.delay_ns()),
+        ]);
+    }
+    println!("{}", t.render());
+    if frontier.points.len() > shown {
+        println!("... {} more rows in the CSV", frontier.points.len() - shown);
+    }
+    println!(
+        "pareto: {} families ({} pruned by corner bounds), {} of {} candidates evaluated, frontier {} -> {}",
+        frontier.families,
+        frontier.families_pruned,
+        frontier.points_evaluated,
+        frontier.points_total,
+        frontier.points.len(),
+        csv_path.display()
+    );
+
+    if args.has("crossover") {
+        let targets = parse_grid_f64(args.opt("targets").unwrap_or("1:28:1"))?;
+        let report = crate::opt::crossover(&domain, &targets, &w, &x)?;
+        let mut csv = CsvWriter::new(&[
+            "target_snr_t_db",
+            "qs_energy_j",
+            "qs_design",
+            "qr_energy_j",
+            "qr_design",
+            "preferred",
+        ]);
+        for row in &report.rows {
+            let fmt = |p: &Option<crate::opt::DesignPoint>| match p {
+                Some(p) => (format!("{:.6e}", p.energy_j), p.label()),
+                None => (String::new(), String::new()),
+            };
+            let (qs_e, qs_d) = fmt(&row.qs);
+            let (qr_e, qr_d) = fmt(&row.qr);
+            csv.row(&[
+                format!("{:.2}", row.target_snr_t_db),
+                qs_e,
+                qs_d,
+                qr_e,
+                qr_d,
+                row.preferred.map(|a| a.name().to_string()).unwrap_or_default(),
+            ]);
+        }
+        let cross_path = ctx.csv_path("crossover");
+        csv.write_to(&cross_path)?;
+        match report.crossover_snr_t_db {
+            Some(c) => println!(
+                "crossover: QS-Arch preferred below {c:.2} dB, QR-Arch at and above \
+                 (conclusion 3; QS ceiling {:.2} dB, QR ceiling {:.2} dB) -> {}",
+                report.qs_max_snr_t_db,
+                report.qr_max_snr_t_db,
+                cross_path.display()
+            ),
+            None => println!(
+                "crossover: no preference flip inside this domain \
+                 (QS ceiling {:.2} dB, QR ceiling {:.2} dB) -> {}",
+                report.qs_max_snr_t_db,
+                report.qr_max_snr_t_db,
+                cross_path.display()
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+    let domain = parse_opt_domain(args)?;
+    let objective = crate::opt::Objective::parse(args.opt("objective").unwrap_or("min-energy"))?;
+    let parse_f64_opt = |name: &str| -> anyhow::Result<Option<f64>> {
+        args.opt(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad --{name} '{v}'"))
+            })
+            .transpose()
+    };
+    let constraints = crate::opt::Constraints {
+        snr_t_min_db: parse_f64_opt("snr-t-min")?,
+        energy_max_j: parse_f64_opt("energy-max")?,
+        delay_max_s: parse_f64_opt("delay-max")?.map(|ns| ns * 1e-9),
+    };
+    let (ctx, _service) = make_ctx(args)?;
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let (w, x) = crate::figures::uniform_stats();
+
+    let report = crate::opt::optimize(&domain, objective, &constraints, &w, &x);
+    let Some(best) = &report.best else {
+        anyhow::bail!(
+            "no design in the domain satisfies the constraints \
+             ({} families: {} pruned by bounds, {} evaluated)",
+            report.families,
+            report.families_pruned,
+            report.families_evaluated
+        );
+    };
+
+    let mut csv = design_point_csv();
+    design_point_row(&mut csv, best, "", "");
+    let csv_path = ctx.csv_path("optimize");
+    csv.write_to(&csv_path)?;
+
+    let mut t = Table::new(&["metric", "value"]).with_title(&format!(
+        "{} optimum: {}",
+        objective.name(),
+        best.label()
+    ));
+    t.row(vec!["SNR_A (dB)".into(), fmt_db(best.snr_a_total_db)]);
+    t.row(vec!["SNR_T (dB)".into(), fmt_db(best.snr_t_db)]);
+    t.row(vec!["energy/DP".into(), fmt_energy(best.energy_j)]);
+    t.row(vec!["delay/DP".into(), format!("{:.2} ns", best.delay_ns())]);
+    t.row(vec![
+        "B_ADC".into(),
+        if best.b_adc == best.b_adc_mpc {
+            format!("{} (matches MPC assignment)", best.b_adc)
+        } else {
+            format!("{} (MPC would assign {})", best.b_adc, best.b_adc_mpc)
+        },
+    ]);
+    println!("{}", t.render());
+    println!(
+        "optimize: {} families ({} pruned by bounds, {} behind the incumbent cut), \
+         {} evaluated -> {}",
+        report.families,
+        report.families_pruned,
+        report.families_cut,
+        report.families_evaluated,
         csv_path.display()
     );
     Ok(())

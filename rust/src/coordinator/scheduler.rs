@@ -86,11 +86,20 @@ pub enum Backend {
 
 impl Backend {
     /// Stable identifier folded into the engine's content-addressed cache
-    /// keys, so results from different execution backends never alias.
+    /// keys, so results from different execution backends never alias —
+    /// including different *builds* of the same backend: the PJRT id
+    /// carries the artifact-set fingerprint (manifest + HLO payload
+    /// bytes), so a recompiled artifact set never serves records
+    /// computed by its predecessor; the native id carries the crate
+    /// version, which isolates *released* simulator generations — a
+    /// physics change must bump the crate version (or the cache
+    /// KEY_PREFIX) to invalidate old records, as Cargo.toml documents.
     pub fn cache_id(&self) -> String {
         match self {
-            Backend::Native => "native".into(),
-            Backend::Pjrt { suffix, .. } => format!("pjrt{suffix}"),
+            Backend::Native => format!("native@{}", env!("CARGO_PKG_VERSION")),
+            Backend::Pjrt { handle, suffix } => {
+                format!("pjrt{suffix}@{}", handle.artifact_fingerprint())
+            }
         }
     }
 }
@@ -355,5 +364,24 @@ mod tests {
     fn empty_sweep_is_fine() {
         let res = run_sweep(Vec::new(), Backend::Native, SweepOptions::default());
         assert!(res.is_empty());
+    }
+
+    #[test]
+    fn cache_id_carries_backend_identity_and_version() {
+        let id = Backend::Native.cache_id();
+        assert_eq!(id, format!("native@{}", env!("CARGO_PKG_VERSION")));
+        // the stubbed offline runtime has no manifest: its artifact
+        // fingerprint degrades to the placeholder, still distinct from
+        // the native id (and from any real artifact build's hash)
+        let service = crate::coordinator::PjrtService::spawn(
+            std::env::temp_dir().join("imclim-no-artifacts-here"),
+            1,
+        );
+        let pjrt = Backend::Pjrt {
+            handle: service.handle(),
+            suffix: "_small",
+        };
+        assert_eq!(pjrt.cache_id(), "pjrt_small@unmanifested");
+        assert_ne!(pjrt.cache_id(), id);
     }
 }

@@ -64,6 +64,10 @@ enum Msg {
 #[derive(Clone)]
 pub struct PjrtHandle {
     tx: SyncSender<Msg>,
+    /// Fingerprint of the artifact set this executor serves (see
+    /// `runtime::artifact_fingerprint`); folded into cache keys so
+    /// recompiled artifacts never alias older cached results.
+    artifact_fingerprint: String,
 }
 
 impl PjrtHandle {
@@ -91,6 +95,11 @@ impl PjrtHandle {
         rrx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
     }
 
+    /// Fingerprint of the artifact set behind this executor.
+    pub fn artifact_fingerprint(&self) -> &str {
+        &self.artifact_fingerprint
+    }
+
     /// Static (m_trials, n_max) shape of an arch artifact.
     pub fn arch_shape(&self, artifact: &str) -> Result<(usize, usize)> {
         let (rtx, rrx) = sync_channel(1);
@@ -105,6 +114,7 @@ impl PjrtHandle {
 pub struct PjrtService {
     handle: Option<JoinHandle<()>>,
     tx: SyncSender<Msg>,
+    artifact_fingerprint: String,
 }
 
 impl PjrtService {
@@ -113,6 +123,7 @@ impl PjrtService {
     /// first request.
     pub fn spawn(artifacts_dir: PathBuf, queue_depth: usize) -> Self {
         let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(queue_depth);
+        let artifact_fingerprint = crate::runtime::artifact_fingerprint(&artifacts_dir);
         let handle = std::thread::Builder::new()
             .name("pjrt-executor".into())
             .spawn(move || executor_loop(artifacts_dir, rx))
@@ -120,12 +131,14 @@ impl PjrtService {
         Self {
             handle: Some(handle),
             tx,
+            artifact_fingerprint,
         }
     }
 
     pub fn handle(&self) -> PjrtHandle {
         PjrtHandle {
             tx: self.tx.clone(),
+            artifact_fingerprint: self.artifact_fingerprint.clone(),
         }
     }
 }

@@ -307,13 +307,31 @@ pub fn parse_grid_f64(grid: &str) -> Result<Vec<f64>> {
     Ok(out)
 }
 
+/// Expand an inclusive float range deterministically.
+///
+/// Endpoint rule: `hi` is included iff `(hi - lo) / step` is within
+/// relative tolerance 1e-9 of an integer (so non-dividing steps stop at
+/// the last in-range value, and representation error in `lo`/`hi`/`step`
+/// cannot flip the decision). Emitted values are `lo + i * step` —
+/// multiplication, never accumulation, so there is no drift — except
+/// the final value, which is snapped to exactly `hi` when the endpoint
+/// divides: `0.55:0.9:0.05` ends on the literal `0.9`, not
+/// `0.55 + 7 * 0.05`.
 fn push_f64_range(out: &mut Vec<f64>, lo: f64, hi: f64, step: f64) -> Result<()> {
     ensure!(step > 0.0, "range step must be positive, got {step}");
     ensure!(hi >= lo, "range {lo}:{hi} is descending");
-    let steps = ((hi - lo) / step + 1e-9).floor() as usize;
-    ensure!(steps < 1_000_000, "range {lo}:{hi}:{step} is too large");
+    let exact = (hi - lo) / step;
+    let rounded = exact.round();
+    let divides = (exact - rounded).abs() <= 1e-9 * rounded.abs().max(1.0);
+    let steps = if divides { rounded } else { exact.floor() };
+    ensure!(steps < 1e6, "range {lo}:{hi}:{step} is too large");
+    let steps = steps as usize;
     for i in 0..=steps {
-        out.push(lo + step * i as f64);
+        if divides && i == steps {
+            out.push(hi);
+        } else {
+            out.push(lo + step * i as f64);
+        }
     }
     Ok(())
 }

@@ -2,20 +2,39 @@
 //! trade-off (Bx = 3, Bw = 4, N = 100), nodes 65 nm -> 7 nm.
 //! Swept knob: V_WL for QS-Arch and CM, C_o for QR-Arch.
 //!
+//! The scan runs on the design-space optimizer (`crate::opt`): each
+//! operating point is an opt [`Family`] costed through [`FamilyEval`]
+//! (closed-form noise once per family, energy at the MPC ADC
+//! assignment), and the per-node energy-delay-accuracy frontier of the
+//! same families is extracted with `opt::frontier_of_families` — the
+//! figure's trade-off curves are exactly the domain the `imclim pareto`
+//! verb searches.
+//!
 //! Expected shapes (Sec. V-D): per node, energy drops ~2x (QS/CM) or ~4x
 //! (QR) per 6 dB of SNR_A given up; the maximum achievable SNR_A of
 //! QS-Arch/CM *decreases* with scaling, while QR-Arch approaches the
 //! input-quantization limit at every node.
 
 use super::{uniform_stats, FigCtx, FigSummary};
-use crate::arch::{AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
-use crate::compute::{qr::QrModel, qs::QsModel};
+use crate::opt::{frontier_of_families, ArchChoice, Family, FamilyEval};
 use crate::tech::TechNode;
 use crate::util::csv::CsvWriter;
 
+/// The figure's operating shape: N = 100, Bx = 3, Bw = 4.
+fn family(arch: ArchChoice, node: TechNode, v_wl: Option<f64>, c_ff: Option<f64>) -> Family {
+    Family {
+        arch,
+        node,
+        v_wl,
+        c_ff,
+        n: 100,
+        bx: 3,
+        bw: 4,
+    }
+}
+
 pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let (w, x) = uniform_stats();
-    let op = OpPoint::new(100, 3, 4, 8);
     let nodes = TechNode::scaling_set();
 
     let mut csv = CsvWriter::new(&[
@@ -24,6 +43,8 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
     let mut checks = Vec::new();
 
     for node in &nodes {
+        let mut families = Vec::new();
+
         // QS-Arch and CM: sweep V_WL across the usable overdrive range.
         let v_min = node.v_t + 0.12;
         let v_max = node.v_dd;
@@ -33,60 +54,71 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<FigSummary> {
 
         let mut qs_max_snr: f64 = f64::MIN;
         for &v in &v_steps {
-            let mut qs_model = QsModel::new(*node, v);
-            qs_model.c_bl = node.c_bl_512;
-            let arch = QsArch::new(qs_model);
-            let nb = arch.noise(&op, &w, &x);
-            let e = arch.energy(&op, AdcCriterion::Mpc, &w, &x).total();
-            qs_max_snr = qs_max_snr.max(nb.snr_a_total_db());
-            csv.row(&[
-                "qs".into(),
-                node.node_nm.to_string(),
-                format!("{v:.3}"),
-                format!("{:.3}", nb.snr_a_total_db()),
-                format!("{:.6e}", e),
-            ]);
-
-            let cm = CmArch::new(qs_model, QrModel::new(*node, 3.0));
-            let nb = cm.noise(&op, &w, &x);
-            let e = cm.energy(&op, AdcCriterion::Mpc, &w, &x).total();
-            csv.row(&[
-                "cm".into(),
-                node.node_nm.to_string(),
-                format!("{v:.3}"),
-                format!("{:.3}", nb.snr_a_total_db()),
-                format!("{:.6e}", e),
-            ]);
+            for arch in [ArchChoice::Qs, ArchChoice::Cm] {
+                let c_ff = Some(3.0).filter(|_| arch == ArchChoice::Cm);
+                let fam = family(arch, *node, Some(v), c_ff);
+                let eval = FamilyEval::new(fam.clone(), &w, &x);
+                let p = eval.design_point(eval.b_adc_mpc, &w, &x);
+                if arch == ArchChoice::Qs {
+                    qs_max_snr = qs_max_snr.max(p.snr_a_total_db);
+                }
+                csv.row(&[
+                    arch.name().into(),
+                    node.node_nm.to_string(),
+                    format!("{v:.3}"),
+                    format!("{:.3}", p.snr_a_total_db),
+                    format!("{:.6e}", p.energy_j),
+                ]);
+                families.push(fam);
+            }
         }
         checks.push((format!("qs_max_snr_{}", node.node_nm), qs_max_snr));
 
         // QR-Arch: sweep C_o.
         let mut qr_max_snr: f64 = f64::MIN;
         for c_ff in [0.5, 1.0, 2.0, 3.0, 6.0, 9.0] {
-            let arch = QrArch::new(QrModel::new(*node, c_ff));
-            let nb = arch.noise(&op, &w, &x);
-            let e = arch.energy(&op, AdcCriterion::Mpc, &w, &x).total();
-            qr_max_snr = qr_max_snr.max(nb.snr_a_total_db());
+            let fam = family(ArchChoice::Qr, *node, None, Some(c_ff));
+            let eval = FamilyEval::new(fam.clone(), &w, &x);
+            let p = eval.design_point(eval.b_adc_mpc, &w, &x);
+            qr_max_snr = qr_max_snr.max(p.snr_a_total_db);
             csv.row(&[
                 "qr".into(),
                 node.node_nm.to_string(),
                 format!("{c_ff:.1}"),
-                format!("{:.3}", nb.snr_a_total_db()),
-                format!("{:.6e}", e),
+                format!("{:.3}", p.snr_a_total_db),
+                format!("{:.6e}", p.energy_j),
             ]);
+            families.push(fam);
         }
         checks.push((format!("qr_max_snr_{}", node.node_nm), qr_max_snr));
+
+        // The node's energy-delay-accuracy frontier over the same scan
+        // families (B_ADC 4..10): a non-empty strict subset of the scan.
+        let fr = frontier_of_families(&families, &[4, 5, 6, 7, 8, 9, 10], 1, &w, &x);
+        anyhow::ensure!(
+            !fr.points.is_empty() && fr.points.len() < fr.points_total,
+            "degenerate fig13 frontier at {} nm: {} of {}",
+            node.node_nm,
+            fr.points.len(),
+            fr.points_total
+        );
+        checks.push((
+            format!("frontier_{}", node.node_nm),
+            fr.points.len() as f64,
+        ));
     }
     csv.write_to(&ctx.csv_path("fig13"))?;
 
     let get = |k: &str| checks.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap();
     println!(
-        "Fig. 13: QS-Arch max SNR_A 65nm={:.1} dB -> 7nm={:.1} dB (scaling hurts); QR-Arch 65nm={:.1} -> 7nm={:.1} dB (quantization-limited: SQNR_qiy={:.1} dB)",
+        "Fig. 13: QS-Arch max SNR_A 65nm={:.1} dB -> 7nm={:.1} dB (scaling hurts); QR-Arch 65nm={:.1} -> 7nm={:.1} dB (quantization-limited: SQNR_qiy={:.1} dB); per-node frontier sizes 65nm={} 7nm={}",
         get("qs_max_snr_65"),
         get("qs_max_snr_7"),
         get("qr_max_snr_65"),
         get("qr_max_snr_7"),
         crate::quant::sqnr_qiy_db(100, 4, 3, &w, &x),
+        get("frontier_65"),
+        get("frontier_7"),
     );
     Ok(FigSummary {
         name: "fig13".into(),

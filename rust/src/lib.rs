@@ -15,11 +15,13 @@
 //!   grids, a content-addressed result cache, cached execution), the
 //!   experiment coordinator (lock-free sweep scheduler, worker pool,
 //!   PJRT execution of the AOT artifacts), a native Monte-Carlo oracle,
-//!   the fixed-point DNN substrate, and drivers that regenerate every
-//!   figure and table of the paper's evaluation — all through the same
-//!   cached, parallel path, so arbitrary design-space queries (the
-//!   `imclim sweep` subcommand) are first-class, not just the paper's
-//!   fixed figures.
+//!   the fixed-point DNN substrate, the design-space optimizer (`opt`:
+//!   Pareto frontiers, constrained search, the QS-vs-QR crossover
+//!   report behind `imclim pareto` / `imclim optimize`), and drivers
+//!   that regenerate every figure and table of the paper's evaluation —
+//!   all through the same cached, parallel path, so arbitrary
+//!   design-space queries (the `imclim sweep` subcommand) are
+//!   first-class, not just the paper's fixed figures.
 //!
 //! Python never runs on the experiment path: `make artifacts` is the only
 //! Python invocation; everything else is this binary.
@@ -34,6 +36,7 @@ pub mod energy;
 pub mod engine;
 pub mod figures;
 pub mod mc;
+pub mod opt;
 pub mod prop;
 pub mod quant;
 pub mod runtime;

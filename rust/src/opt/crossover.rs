@@ -1,0 +1,198 @@
+//! QS-vs-QR crossover report (the paper's conclusion 3): locate the
+//! compute-SNR target at which the preferred architecture flips from
+//! QS-based to QR-based.
+//!
+//! For each target SNR_T the report solves `min energy s.t. SNR_T >=
+//! target` separately over the domain's QS families and its QR
+//! families, and marks whichever is cheaper as preferred (ties go to
+//! QS, the simpler circuit). The crossover is the first target of the
+//! trailing run of QR-preferred rows — above it QR is always preferred
+//! (or QS is outright infeasible, its SNR_a ceiling being the other
+//! half of conclusion 3); below it QS wins at least once.
+//!
+//! Reproduction note: with the eq. (26) ADC model the k1 = 100 fJ
+//! conversion floor times B_w*B_x conversions dominates QS-Arch energy,
+//! so the flip sits in the low-SNR corner and only appears when the
+//! domain lets B_x/B_w scale down with the target (the paper's
+//! precision-assignment discipline). A domain pinned at B_x = B_w = 6
+//! reports no crossover — QR preferred throughout.
+
+use anyhow::{ensure, Result};
+
+use super::domain::{ArchChoice, DesignPoint, Domain};
+use super::optimize::Objective;
+use crate::quant::SignalStats;
+
+/// One target row of the report.
+#[derive(Debug)]
+pub struct CrossoverRow {
+    pub target_snr_t_db: f64,
+    /// Cheapest QS design meeting the target, if any.
+    pub qs: Option<DesignPoint>,
+    /// Cheapest QR design meeting the target, if any.
+    pub qr: Option<DesignPoint>,
+    pub preferred: Option<ArchChoice>,
+}
+
+#[derive(Debug)]
+pub struct CrossoverReport {
+    pub rows: Vec<CrossoverRow>,
+    /// First target of the trailing QR-preferred run, when the flip
+    /// exists (QS preferred somewhere below, QR everywhere at/above).
+    pub crossover_snr_t_db: Option<f64>,
+    /// Highest feasible target per architecture (dB), `-inf` if none.
+    pub qs_max_snr_t_db: f64,
+    pub qr_max_snr_t_db: f64,
+}
+
+/// Build the crossover report over `targets` (dB, ascending). The
+/// domain must contain both the QS and the QR architecture; CM families
+/// are ignored (the report compares the paper's two pure compute
+/// models).
+pub fn crossover(
+    domain: &Domain,
+    targets: &[f64],
+    w: &SignalStats,
+    x: &SignalStats,
+) -> Result<CrossoverReport> {
+    ensure!(
+        domain.archs.contains(&ArchChoice::Qs) && domain.archs.contains(&ArchChoice::Qr),
+        "crossover needs both qs and qr in the domain"
+    );
+    ensure!(!targets.is_empty(), "crossover needs a target SNR grid");
+    ensure!(
+        targets.windows(2).all(|t| t[0] < t[1]),
+        "crossover targets must be strictly ascending"
+    );
+
+    // Full per-arch curves, evaluated once; every target then scans the
+    // curve (min-energy is a suffix query on the SNR axis).
+    let qs_points = domain.restricted_to(ArchChoice::Qs).all_points(w, x);
+    let qr_points = domain.restricted_to(ArchChoice::Qr).all_points(w, x);
+    let max_snr = |pts: &[DesignPoint]| {
+        pts.iter()
+            .map(|p| p.snr_t_db)
+            .fold(f64::NEG_INFINITY, f64::max)
+    };
+    let cheapest_at = |pts: &[DesignPoint], target: f64| -> Option<DesignPoint> {
+        let mut best: Option<&DesignPoint> = None;
+        for p in pts {
+            if p.snr_t_db >= target
+                && best.is_none_or(|cur| Objective::MinEnergy.better(p, cur))
+            {
+                best = Some(p);
+            }
+        }
+        best.cloned()
+    };
+
+    let mut rows = Vec::with_capacity(targets.len());
+    for &target in targets {
+        let qs = cheapest_at(&qs_points, target);
+        let qr = cheapest_at(&qr_points, target);
+        let preferred = match (&qs, &qr) {
+            (Some(a), Some(b)) => Some(if a.energy_j <= b.energy_j {
+                ArchChoice::Qs
+            } else {
+                ArchChoice::Qr
+            }),
+            (Some(_), None) => Some(ArchChoice::Qs),
+            (None, Some(_)) => Some(ArchChoice::Qr),
+            (None, None) => None,
+        };
+        rows.push(CrossoverRow {
+            target_snr_t_db: target,
+            qs,
+            qr,
+            preferred,
+        });
+    }
+
+    // trailing QR run strictly after the last QS-preferred row
+    let crossover_snr_t_db = rows
+        .iter()
+        .rposition(|r| r.preferred == Some(ArchChoice::Qs))
+        .and_then(|last_qs| {
+            rows[last_qs + 1..]
+                .iter()
+                .find(|r| r.preferred == Some(ArchChoice::Qr))
+                .map(|r| r.target_snr_t_db)
+        });
+
+    Ok(CrossoverReport {
+        rows,
+        crossover_snr_t_db,
+        qs_max_snr_t_db: max_snr(&qs_points),
+        qr_max_snr_t_db: max_snr(&qr_points),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::uniform_stats;
+    use crate::tech::TechNode;
+
+    #[test]
+    fn report_rows_are_consistent_with_their_curves() {
+        let (w, x) = uniform_stats();
+        let d = Domain {
+            archs: vec![ArchChoice::Qs, ArchChoice::Qr],
+            nodes: vec![TechNode::n65()],
+            vwls: vec![0.6, 0.8],
+            cos: vec![1.0, 3.0],
+            ns: vec![128],
+            bxs: vec![2, 4, 6],
+            bws: vec![2, 4, 6],
+            b_adcs: vec![2, 4, 6, 8],
+        }
+        .normalized()
+        .unwrap();
+        let report = crossover(&d, &[5.0, 10.0, 15.0, 20.0, 40.0], &w, &x).unwrap();
+        assert_eq!(report.rows.len(), 5);
+        for row in &report.rows {
+            for p in row.qs.iter().chain(&row.qr) {
+                assert!(p.snr_t_db >= row.target_snr_t_db, "meets its target");
+            }
+            if let (Some(a), Some(b)) = (&row.qs, &row.qr) {
+                let want = if a.energy_j <= b.energy_j {
+                    ArchChoice::Qs
+                } else {
+                    ArchChoice::Qr
+                };
+                assert_eq!(row.preferred, Some(want));
+            }
+        }
+        // 40 dB is beyond both ceilings in this domain
+        assert!(report.rows[4].preferred.is_none());
+        assert!(report.qr_max_snr_t_db > report.qs_max_snr_t_db);
+    }
+
+    #[test]
+    fn rejects_domains_without_both_archs_or_bad_targets() {
+        let (w, x) = uniform_stats();
+        let d = Domain {
+            archs: vec![ArchChoice::Qs],
+            nodes: vec![TechNode::n65()],
+            vwls: vec![0.8],
+            cos: vec![3.0],
+            ns: vec![64],
+            bxs: vec![6],
+            bws: vec![6],
+            b_adcs: vec![8],
+        }
+        .normalized()
+        .unwrap();
+        assert!(crossover(&d, &[5.0], &w, &x).is_err());
+        let both = Domain {
+            archs: vec![ArchChoice::Qs, ArchChoice::Qr],
+            ..d
+        }
+        .normalized()
+        .unwrap();
+        assert!(crossover(&both, &[], &w, &x).is_err());
+        assert!(crossover(&both, &[5.0, 5.0], &w, &x).is_err());
+        assert!(crossover(&both, &[5.0, 4.0], &w, &x).is_err());
+        assert!(crossover(&both, &[1.0, 2.0], &w, &x).is_ok());
+    }
+}

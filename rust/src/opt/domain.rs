@@ -1,0 +1,517 @@
+//! Search domains for the design-space optimizer: axis sets, family
+//! enumeration, and closed-form evaluation of candidate design points.
+//!
+//! A [`Domain`] is a *set* of candidate designs — the cartesian product
+//! of its axes, with architecture-irrelevant knobs dropped (QS-Arch
+//! ignores `C_o`, QR-Arch ignores `V_WL`), so the same domain written
+//! with its axis values in any order describes the same design set. A
+//! [`Family`] is one analog configuration (everything except B_ADC);
+//! the noise decomposition is B_ADC-independent, so a family is the
+//! unit of expensive evaluation and the B_ADC axis is costed from one
+//! [`FamilyEval`].
+
+use anyhow::{bail, ensure, Result};
+
+use crate::arch::{AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
+use crate::compute::{qr::QrModel, qs::QsModel};
+use crate::mc::ArchKind;
+use crate::quant::criteria::snr_t_with_mpc_adc_db;
+use crate::quant::SignalStats;
+use crate::tech::TechNode;
+
+/// Architecture selector for the design-space explorer.
+///
+/// Deliberately distinct from `mc::ArchKind`: this is the *search-axis*
+/// identity (CLI short names, total order for canonical domain
+/// enumeration, knob semantics), while `ArchKind` is the simulator
+/// dispatch tag with artifact-naming semantics. [`ArchChoice::kind`] is
+/// the one bridge — an architecture added to the models must extend
+/// both enums and that mapping (the compiler's exhaustive matches flag
+/// every site).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ArchChoice {
+    Qs,
+    Qr,
+    Cm,
+}
+
+impl ArchChoice {
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "qs" => ArchChoice::Qs,
+            "qr" => ArchChoice::Qr,
+            "cm" => ArchChoice::Cm,
+            other => bail!("unknown arch '{other}' (qs, qr or cm)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchChoice::Qs => "qs",
+            ArchChoice::Qr => "qr",
+            ArchChoice::Cm => "cm",
+        }
+    }
+
+    /// The simulator kind for Monte-Carlo validation of a design point.
+    pub fn kind(self) -> ArchKind {
+        match self {
+            ArchChoice::Qs => ArchKind::Qs,
+            ArchChoice::Qr => ArchKind::Qr,
+            ArchChoice::Cm => ArchKind::Cm,
+        }
+    }
+}
+
+/// The search domain of one design-space query. Construct with a struct
+/// literal and call [`Domain::normalized`] before use: axes are sorted
+/// and deduplicated (a domain is a set), and the values validated.
+#[derive(Clone, Debug, Default)]
+pub struct Domain {
+    pub archs: Vec<ArchChoice>,
+    pub nodes: Vec<TechNode>,
+    /// QS word-line voltages [V] (QS-Arch and CM knob).
+    pub vwls: Vec<f64>,
+    /// QR unit capacitances [fF] (QR-Arch and CM knob).
+    pub cos: Vec<f64>,
+    pub ns: Vec<usize>,
+    pub bxs: Vec<u32>,
+    pub bws: Vec<u32>,
+    pub b_adcs: Vec<u32>,
+}
+
+impl Domain {
+    /// Sort + dedup every axis and validate the values. Returns the
+    /// canonical form of the domain; every `opt` entry point expects it.
+    pub fn normalized(mut self) -> Result<Domain> {
+        self.archs.sort();
+        self.archs.dedup();
+        self.nodes.sort_by_key(|n| n.node_nm);
+        self.nodes.dedup_by_key(|n| n.node_nm);
+        for axis in [&mut self.vwls, &mut self.cos] {
+            axis.sort_by(f64::total_cmp);
+            axis.dedup();
+        }
+        self.ns.sort_unstable();
+        self.ns.dedup();
+        for axis in [&mut self.bxs, &mut self.bws, &mut self.b_adcs] {
+            axis.sort_unstable();
+            axis.dedup();
+        }
+        ensure!(!self.archs.is_empty(), "domain needs at least one arch");
+        ensure!(!self.nodes.is_empty(), "domain needs at least one node");
+        ensure!(!self.ns.is_empty(), "domain needs an N axis");
+        ensure!(!self.bxs.is_empty(), "domain needs a Bx axis");
+        ensure!(!self.bws.is_empty(), "domain needs a Bw axis");
+        ensure!(!self.b_adcs.is_empty(), "domain needs a B_ADC axis");
+        let needs_vwl = self.archs.iter().any(|a| *a != ArchChoice::Qr);
+        let needs_co = self.archs.iter().any(|a| *a != ArchChoice::Qs);
+        ensure!(!needs_vwl || !self.vwls.is_empty(), "domain needs a V_WL axis");
+        ensure!(!needs_co || !self.cos.is_empty(), "domain needs a C_o axis");
+        for node in &self.nodes {
+            for &v in &self.vwls {
+                ensure!(
+                    !needs_vwl || v > node.v_t,
+                    "V_WL {v} V does not exceed V_t {} V at {} nm",
+                    node.v_t,
+                    node.node_nm
+                );
+                ensure!(
+                    !needs_vwl || v <= node.v_dd,
+                    "V_WL {v} V exceeds V_dd {} V at {} nm",
+                    node.v_dd,
+                    node.node_nm
+                );
+            }
+        }
+        for &c in &self.cos {
+            ensure!(!needs_co || c > 0.0, "C_o must be positive, got {c} fF");
+        }
+        for &n in &self.ns {
+            ensure!(n >= 1, "N must be >= 1");
+        }
+        for &b in self.bxs.iter().chain(&self.bws).chain(&self.b_adcs) {
+            ensure!((1..=30).contains(&b), "precision {b} out of range 1..=30");
+        }
+        Ok(self)
+    }
+
+    /// All families of the domain (every analog configuration, B_ADC
+    /// excluded), in canonical order. Architecture-irrelevant knobs are
+    /// dropped: QS families span `vwls` only, QR families `cos` only, CM
+    /// families the full `vwls x cos` product.
+    pub fn families(&self) -> Vec<Family> {
+        let mut out = Vec::new();
+        for &arch in &self.archs {
+            for node in &self.nodes {
+                let knobs: Vec<(Option<f64>, Option<f64>)> = match arch {
+                    ArchChoice::Qs => self.vwls.iter().map(|&v| (Some(v), None)).collect(),
+                    ArchChoice::Qr => self.cos.iter().map(|&c| (None, Some(c))).collect(),
+                    ArchChoice::Cm => self
+                        .vwls
+                        .iter()
+                        .flat_map(|&v| self.cos.iter().map(move |&c| (Some(v), Some(c))))
+                        .collect(),
+                };
+                for (v_wl, c_ff) in knobs {
+                    for &n in &self.ns {
+                        for &bx in &self.bxs {
+                            for &bw in &self.bws {
+                                out.push(Family {
+                                    arch,
+                                    node: *node,
+                                    v_wl,
+                                    c_ff,
+                                    n,
+                                    bx,
+                                    bw,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total candidate count: families x B_ADC values.
+    pub fn point_count(&self) -> usize {
+        self.families().len() * self.b_adcs.len()
+    }
+
+    /// Brute-force evaluation of every candidate in the domain (no
+    /// pruning) — the reference the frontier extractor is tested against,
+    /// and the full-curve input of the crossover report.
+    pub fn all_points(&self, w: &SignalStats, x: &SignalStats) -> Vec<DesignPoint> {
+        let mut out = Vec::with_capacity(self.point_count());
+        for family in self.families() {
+            let eval = FamilyEval::new(family, w, x);
+            for &b in &self.b_adcs {
+                out.push(eval.design_point(b, w, x));
+            }
+        }
+        out
+    }
+
+    /// The domain restricted to one architecture (axes unchanged).
+    pub fn restricted_to(&self, arch: ArchChoice) -> Domain {
+        Domain {
+            archs: vec![arch],
+            ..self.clone()
+        }
+    }
+}
+
+/// Canonical family ordering key: architecture, node, knob bits, shape.
+pub type FamilyKey = (u8, u32, u64, u64, usize, u32, u32);
+
+/// Canonical candidate ordering key: family key, then B_ADC.
+pub type PointKey = (FamilyKey, u32);
+
+/// One analog configuration: everything except the B_ADC axis. The
+/// knob options follow the architecture: `v_wl` is `Some` for QS/CM,
+/// `c_ff` for QR/CM.
+#[derive(Clone, Debug)]
+pub struct Family {
+    pub arch: ArchChoice,
+    pub node: TechNode,
+    pub v_wl: Option<f64>,
+    pub c_ff: Option<f64>,
+    pub n: usize,
+    pub bx: u32,
+    pub bw: u32,
+}
+
+impl Family {
+    /// Instantiate the closed-form architecture model.
+    pub fn build(&self) -> Box<dyn ImcArch> {
+        match self.arch {
+            ArchChoice::Qs => Box::new(QsArch::new(QsModel::new(
+                self.node,
+                self.v_wl.expect("QS family needs v_wl"),
+            ))),
+            ArchChoice::Qr => Box::new(QrArch::new(QrModel::new(
+                self.node,
+                self.c_ff.expect("QR family needs c_ff"),
+            ))),
+            ArchChoice::Cm => Box::new(CmArch::new(
+                QsModel::new(self.node, self.v_wl.expect("CM family needs v_wl")),
+                QrModel::new(self.node, self.c_ff.expect("CM family needs c_ff")),
+            )),
+        }
+    }
+
+    fn op(&self, b_adc: u32) -> OpPoint {
+        OpPoint::new(self.n, self.bx, self.bw, b_adc)
+    }
+
+    /// Cheap bounds over the whole family, computable *without* the
+    /// noise decomposition (no `binomial_clip_moment`): energy and delay
+    /// are monotone non-decreasing in B_ADC, so their values at the
+    /// smallest grid B_ADC bound every family member from below, and
+    /// SNR_T < SNR_A < SQNR_qiy bounds accuracy from above. These are
+    /// the branch-and-bound tests of `opt::pareto` / `opt::optimize`.
+    pub fn bounds(&self, b_adc_min: u32, w: &SignalStats, x: &SignalStats) -> FamilyBounds {
+        let arch = self.build();
+        let op = self.op(b_adc_min);
+        FamilyBounds {
+            energy_lb_j: arch.energy(&op, AdcCriterion::Fixed(b_adc_min), w, x).total(),
+            delay_lb_s: arch.delay(&op),
+            snr_ub_db: crate::quant::sqnr_qiy_db(self.n, self.bw, self.bx, w, x),
+        }
+    }
+
+    /// Canonical ordering key (total order over families): architecture,
+    /// node, knobs, then shape. Positive-float knob bits order like the
+    /// values themselves.
+    pub fn key(&self) -> FamilyKey {
+        (
+            match self.arch {
+                ArchChoice::Qs => 0,
+                ArchChoice::Qr => 1,
+                ArchChoice::Cm => 2,
+            },
+            self.node.node_nm,
+            self.v_wl.unwrap_or(0.0).to_bits(),
+            self.c_ff.unwrap_or(0.0).to_bits(),
+            self.n,
+            self.bx,
+            self.bw,
+        )
+    }
+
+    /// Sweep-style label fragment, e.g. `arch=qs/node=65/vwl=0.7/n=128/bx=6/bw=6`.
+    pub fn label(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = format!("arch={}/node={}", self.arch.name(), self.node.node_nm);
+        if let Some(v) = self.v_wl {
+            let _ = write!(s, "/vwl={v}");
+        }
+        if let Some(c) = self.c_ff {
+            let _ = write!(s, "/co={c}");
+        }
+        let _ = write!(s, "/n={}/bx={}/bw={}", self.n, self.bx, self.bw);
+        s
+    }
+}
+
+/// Family-level bounds used by the branch-and-bound search.
+#[derive(Clone, Copy, Debug)]
+pub struct FamilyBounds {
+    /// Lower bound on every member's energy/DP [J].
+    pub energy_lb_j: f64,
+    /// Lower bound on every member's delay/DP [s].
+    pub delay_lb_s: f64,
+    /// Strict upper bound on every member's SNR_T [dB] (the input
+    /// quantization limit SQNR_qiy).
+    pub snr_ub_db: f64,
+}
+
+/// A family with its (expensive, B_ADC-independent) noise decomposition
+/// evaluated once; design points for every B_ADC choice are then cheap.
+pub struct FamilyEval {
+    pub family: Family,
+    arch: Box<dyn ImcArch>,
+    /// Closed-form pre-ADC SNR_A [dB] (eq. 10).
+    pub snr_a_total_db: f64,
+    /// MPC ADC-precision assignment (Table III row B_ADC).
+    pub b_adc_mpc: u32,
+}
+
+impl FamilyEval {
+    pub fn new(family: Family, w: &SignalStats, x: &SignalStats) -> Self {
+        let arch = family.build();
+        let op = family.op(1); // noise and MPC assignment ignore B_ADC
+        let snr_a_total_db = arch.noise(&op, w, x).snr_a_total_db();
+        let b_adc_mpc = arch.b_adc_min(&op, w, x);
+        Self {
+            family,
+            arch,
+            snr_a_total_db,
+            b_adc_mpc,
+        }
+    }
+
+    /// Cost one member of the family: closed-form SNR_T (eq. 11 + 14),
+    /// energy under `AdcCriterion::Fixed(b_adc)` and delay at `b_adc`.
+    pub fn design_point(&self, b_adc: u32, w: &SignalStats, x: &SignalStats) -> DesignPoint {
+        let op = self.family.op(b_adc);
+        DesignPoint {
+            family: self.family.clone(),
+            b_adc,
+            b_adc_mpc: self.b_adc_mpc,
+            snr_a_total_db: self.snr_a_total_db,
+            snr_t_db: snr_t_with_mpc_adc_db(self.snr_a_total_db, b_adc),
+            energy_j: self
+                .arch
+                .energy(&op, AdcCriterion::Fixed(b_adc), w, x)
+                .total(),
+            delay_s: self.arch.delay(&op),
+        }
+    }
+}
+
+/// One fully-costed candidate design.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    pub family: Family,
+    pub b_adc: u32,
+    /// What MPC would assign for this family (eq. 15 / Table III).
+    pub b_adc_mpc: u32,
+    pub snr_a_total_db: f64,
+    pub snr_t_db: f64,
+    pub energy_j: f64,
+    pub delay_s: f64,
+}
+
+impl DesignPoint {
+    /// Pareto dominance over (max SNR_T, min energy, min delay): no
+    /// worse on every objective and strictly better on at least one.
+    pub fn dominates(&self, other: &DesignPoint) -> bool {
+        self.snr_t_db >= other.snr_t_db
+            && self.energy_j <= other.energy_j
+            && self.delay_s <= other.delay_s
+            && (self.snr_t_db > other.snr_t_db
+                || self.energy_j < other.energy_j
+                || self.delay_s < other.delay_s)
+    }
+
+    /// Canonical total order over candidates (family key, then B_ADC).
+    pub fn key(&self) -> PointKey {
+        (self.family.key(), self.b_adc)
+    }
+
+    /// Sweep-style label, e.g. `arch=qs/node=65/vwl=0.7/n=128/bx=6/bw=6/badc=7`.
+    pub fn label(&self) -> String {
+        format!("{}/badc={}", self.family.label(), self.b_adc)
+    }
+
+    pub fn delay_ns(&self) -> f64 {
+        self.delay_s * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::uniform_stats;
+
+    fn small_domain() -> Domain {
+        Domain {
+            archs: vec![ArchChoice::Qr, ArchChoice::Qs],
+            nodes: vec![TechNode::n65()],
+            vwls: vec![0.8, 0.6],
+            cos: vec![3.0],
+            ns: vec![128, 64],
+            bxs: vec![6],
+            bws: vec![6],
+            b_adcs: vec![8, 4, 6],
+        }
+        .normalized()
+        .unwrap()
+    }
+
+    #[test]
+    fn normalization_sorts_dedups_and_validates() {
+        let d = small_domain();
+        assert_eq!(d.archs, vec![ArchChoice::Qs, ArchChoice::Qr]);
+        assert_eq!(d.vwls, vec![0.6, 0.8]);
+        assert_eq!(d.ns, vec![64, 128]);
+        assert_eq!(d.b_adcs, vec![4, 6, 8]);
+        // QS: 2 vwl x 2 n; QR: 1 co x 2 n
+        assert_eq!(d.families().len(), 6);
+        assert_eq!(d.point_count(), 18);
+        // V_WL below V_t is rejected
+        let bad = Domain {
+            vwls: vec![0.3],
+            ..small_domain()
+        };
+        assert!(bad.normalized().is_err());
+        // ... and so is V_WL above the node's supply rail
+        let bad_hi = Domain {
+            nodes: vec![TechNode::n22()],
+            vwls: vec![0.9],
+            ..small_domain()
+        };
+        assert!(bad_hi.normalized().is_err());
+        // a QR-only domain needs no V_WL axis at all
+        let qr_only = Domain {
+            archs: vec![ArchChoice::Qr],
+            vwls: vec![],
+            ..small_domain()
+        };
+        assert!(qr_only.normalized().is_ok());
+    }
+
+    #[test]
+    fn family_eval_matches_direct_closed_forms() {
+        let (w, x) = uniform_stats();
+        let fam = Family {
+            arch: ArchChoice::Qs,
+            node: TechNode::n65(),
+            v_wl: Some(0.8),
+            c_ff: None,
+            n: 128,
+            bx: 6,
+            bw: 6,
+        };
+        let eval = FamilyEval::new(fam.clone(), &w, &x);
+        let arch = fam.build();
+        let op = OpPoint::new(128, 6, 6, 8);
+        let nb = arch.noise(&op, &w, &x);
+        assert_eq!(eval.snr_a_total_db, nb.snr_a_total_db());
+        assert_eq!(eval.b_adc_mpc, arch.b_adc_min(&op, &w, &x));
+        let p = eval.design_point(8, &w, &x);
+        assert_eq!(p.energy_j, arch.energy(&op, AdcCriterion::Fixed(8), &w, &x).total());
+        assert_eq!(p.delay_s, arch.delay(&op));
+        assert!(p.snr_t_db < p.snr_a_total_db);
+        assert!(p.label().contains("arch=qs/node=65/vwl=0.8/n=128"));
+    }
+
+    #[test]
+    fn bounds_hold_over_the_b_adc_axis() {
+        let (w, x) = uniform_stats();
+        let d = small_domain();
+        for fam in d.families() {
+            let bounds = fam.bounds(d.b_adcs[0], &w, &x);
+            let eval = FamilyEval::new(fam, &w, &x);
+            let mut prev_e = f64::MIN;
+            let mut prev_d = f64::MIN;
+            let mut prev_s = f64::MIN;
+            for &b in &d.b_adcs {
+                let p = eval.design_point(b, &w, &x);
+                assert!(p.energy_j >= bounds.energy_lb_j);
+                assert!(p.delay_s >= bounds.delay_lb_s);
+                assert!(p.snr_t_db < bounds.snr_ub_db, "SNR_T below SQNR_qiy");
+                // monotonicity the branch-and-bound relies on
+                assert!(p.energy_j > prev_e, "energy strictly grows with B_ADC");
+                assert!(p.delay_s >= prev_d, "delay non-decreasing with B_ADC");
+                assert!(p.snr_t_db > prev_s, "SNR_T strictly grows with B_ADC");
+                prev_e = p.energy_j;
+                prev_d = p.delay_s;
+                prev_s = p.snr_t_db;
+            }
+        }
+    }
+
+    #[test]
+    fn dominance_is_irreflexive_and_directional() {
+        let (w, x) = uniform_stats();
+        let d = small_domain();
+        let pts = d.all_points(&w, &x);
+        assert_eq!(pts.len(), d.point_count());
+        for p in &pts {
+            assert!(!p.dominates(p), "no self-domination");
+        }
+        // within one family, no B_ADC choice dominates another (energy
+        // and SNR_T move together)
+        for a in &pts {
+            for b in &pts {
+                if a.family.key() == b.family.key() && a.b_adc != b.b_adc {
+                    assert!(!a.dominates(b), "{} vs {}", a.label(), b.label());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Design-space optimizer: multi-objective exploration of the
+//! closed-form noise/energy/delay models.
+//!
+//! The paper's headline results are optima over the design space, not
+//! individual sweep points: the maximum achievable SNR_a under
+//! energy/area/swing constraints, the minimal ADC precision via MPC,
+//! and the QS-vs-QR preference flip of conclusion 3. This subsystem
+//! answers those query shapes directly:
+//!
+//! * [`domain`] — search domains ([`Domain`]), family enumeration
+//!   ([`Family`]) and candidate costing ([`FamilyEval`],
+//!   [`DesignPoint`]): SNR_T from eqs. (11)+(14) with the B_ADC axis as
+//!   a free dimension over the MPC conversion range
+//!   (`AdcCriterion::Fixed`), energy/delay from Table III;
+//! * [`pareto`] — the dominance-pruned (max SNR_T, min energy, min
+//!   delay) frontier extractor, branch-and-bound over family corners
+//!   instead of brute-force enumeration, shardable across threads with
+//!   bit-identical results;
+//! * [`optimize`] — constrained single-objective search (`min energy` /
+//!   `min delay` / `max SNR_T` subject to SNR_T/energy/delay bounds)
+//!   whose lexicographic winner provably lies on the domain frontier,
+//!   with the MPC assignment (`b_adc_mpc`) reported alongside every
+//!   answer;
+//! * [`crossover`] — the QS-vs-QR crossover report that machine-checks
+//!   conclusion 3 by locating the target SNR where the cheaper
+//!   architecture flips.
+//!
+//! The CLI exposes the subsystem as `imclim pareto` and `imclim
+//! optimize` (same grid-string axis syntax as `imclim sweep`); Monte-
+//! Carlo validation of frontier points runs through `engine::Engine`,
+//! so the content-addressed cache, `--shard i/k` sweeps and `imclim
+//! merge` compose unchanged — a cache populated by a sharded sweep over
+//! the same axes serves `pareto --validate` without recomputation.
+
+pub mod crossover;
+pub mod domain;
+pub mod optimize;
+pub mod pareto;
+
+pub use crossover::{crossover, CrossoverReport, CrossoverRow};
+pub use domain::{ArchChoice, DesignPoint, Domain, Family, FamilyBounds, FamilyEval};
+pub use optimize::{optimize, Constraints, Objective, OptReport};
+pub use pareto::{frontier, frontier_of_families, Frontier};

@@ -1,0 +1,343 @@
+//! Constrained single-objective search over a design domain:
+//! `min energy` / `min delay` / `max SNR_T`, subject to SNR_T, energy
+//! and delay bounds, by family-level branch-and-bound.
+//!
+//! Families are processed in ascending order of their objective bound
+//! (energy/delay lower bound, or SNR upper bound for `max-snr`);
+//! constraint-infeasible families are pruned by the same cheap bounds
+//! before their noise decomposition is ever computed, and the scan
+//! stops outright once the bound can no longer beat the incumbent —
+//! the monotone structure described in `opt::pareto`.
+//!
+//! The winner is the *lexicographic* optimum (objective first, then the
+//! remaining objectives, then the canonical key), which makes every
+//! answer a Pareto point of its own domain: a dominating design would
+//! also satisfy the constraints (they are all dominance-aligned) and
+//! precede it lexicographically.
+
+use anyhow::{bail, Result};
+
+use super::domain::{DesignPoint, Domain, Family, FamilyBounds, FamilyEval};
+use crate::quant::SignalStats;
+
+/// Optimization objective of `imclim optimize`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    MinEnergy,
+    MinDelay,
+    MaxSnr,
+}
+
+impl Objective {
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "min-energy" => Objective::MinEnergy,
+            "min-delay" => Objective::MinDelay,
+            "max-snr" | "max-snr-t" => Objective::MaxSnr,
+            other => bail!("unknown objective '{other}' (min-energy, min-delay or max-snr)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::MinEnergy => "min-energy",
+            Objective::MinDelay => "min-delay",
+            Objective::MaxSnr => "max-snr",
+        }
+    }
+
+    /// Lexicographic preference: does `a` beat `b` under this objective?
+    /// The comparison chain starts with the objective and covers all
+    /// three metrics, so the optimum is always Pareto-optimal; the
+    /// canonical key breaks exact metric ties deterministically.
+    pub fn better(self, a: &DesignPoint, b: &DesignPoint) -> bool {
+        let ord = match self {
+            Objective::MinEnergy => a
+                .energy_j
+                .total_cmp(&b.energy_j)
+                .then_with(|| b.snr_t_db.total_cmp(&a.snr_t_db))
+                .then_with(|| a.delay_s.total_cmp(&b.delay_s)),
+            Objective::MinDelay => a
+                .delay_s
+                .total_cmp(&b.delay_s)
+                .then_with(|| a.energy_j.total_cmp(&b.energy_j))
+                .then_with(|| b.snr_t_db.total_cmp(&a.snr_t_db)),
+            Objective::MaxSnr => b
+                .snr_t_db
+                .total_cmp(&a.snr_t_db)
+                .then_with(|| a.energy_j.total_cmp(&b.energy_j))
+                .then_with(|| a.delay_s.total_cmp(&b.delay_s)),
+        };
+        ord.then_with(|| a.key().cmp(&b.key())).is_lt()
+    }
+}
+
+/// Dominance-aligned constraint set: a design that dominates a feasible
+/// design is itself feasible.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Constraints {
+    /// SNR_T >= this many dB.
+    pub snr_t_min_db: Option<f64>,
+    /// Energy/DP <= this many joules.
+    pub energy_max_j: Option<f64>,
+    /// Delay/DP <= this many seconds.
+    pub delay_max_s: Option<f64>,
+}
+
+impl Constraints {
+    pub fn admits(&self, p: &DesignPoint) -> bool {
+        self.snr_t_min_db.is_none_or(|v| p.snr_t_db >= v)
+            && self.energy_max_j.is_none_or(|v| p.energy_j <= v)
+            && self.delay_max_s.is_none_or(|v| p.delay_s <= v)
+    }
+
+    /// Can any member of a family with these bounds be feasible?
+    fn family_may_be_feasible(&self, b: &FamilyBounds) -> bool {
+        self.snr_t_min_db.is_none_or(|v| b.snr_ub_db > v)
+            && self.energy_max_j.is_none_or(|v| b.energy_lb_j <= v)
+            && self.delay_max_s.is_none_or(|v| b.delay_lb_s <= v)
+    }
+}
+
+/// Outcome of one constrained search.
+#[derive(Debug, Default)]
+pub struct OptReport {
+    /// The optimum, if the constraint set is feasible at all.
+    pub best: Option<DesignPoint>,
+    pub families: usize,
+    /// Families rejected by constraint bounds (no evaluation).
+    pub families_pruned: usize,
+    /// Families behind the incumbent cut-off (no evaluation).
+    pub families_cut: usize,
+    pub families_evaluated: usize,
+    pub points_evaluated: usize,
+}
+
+/// Search a (normalized) domain for the constrained optimum.
+pub fn optimize(
+    domain: &Domain,
+    objective: Objective,
+    constraints: &Constraints,
+    w: &SignalStats,
+    x: &SignalStats,
+) -> OptReport {
+    let families = domain.families();
+    let mut report = OptReport {
+        families: families.len(),
+        ..OptReport::default()
+    };
+    if families.is_empty() || domain.b_adcs.is_empty() {
+        return report;
+    }
+    let b_min = domain.b_adcs[0];
+
+    let mut bounded: Vec<(Family, FamilyBounds)> = families
+        .into_iter()
+        .map(|f| {
+            let b = f.bounds(b_min, w, x);
+            (f, b)
+        })
+        .collect();
+    // ascending objective bound, canonical tiebreak
+    bounded.sort_by(|(fa, ba), (fb, bb)| {
+        let ord = match objective {
+            Objective::MinEnergy => ba.energy_lb_j.total_cmp(&bb.energy_lb_j),
+            Objective::MinDelay => ba.delay_lb_s.total_cmp(&bb.delay_lb_s),
+            Objective::MaxSnr => bb.snr_ub_db.total_cmp(&ba.snr_ub_db),
+        };
+        ord.then_with(|| fa.key().cmp(&fb.key()))
+    });
+
+    let mut best: Option<DesignPoint> = None;
+    for (i, (family, bounds)) in bounded.iter().enumerate() {
+        if let Some(incumbent) = &best {
+            // the bound is monotone along the scan: once it cannot beat
+            // the incumbent, nothing later can either.
+            let cut = match objective {
+                Objective::MinEnergy => bounds.energy_lb_j > incumbent.energy_j,
+                Objective::MinDelay => bounds.delay_lb_s > incumbent.delay_s,
+                // SNR_T < snr_ub strictly, so equality cannot improve
+                Objective::MaxSnr => bounds.snr_ub_db <= incumbent.snr_t_db,
+            };
+            if cut {
+                report.families_cut = bounded.len() - i;
+                break;
+            }
+        }
+        if !constraints.family_may_be_feasible(bounds) {
+            report.families_pruned += 1;
+            continue;
+        }
+        let eval = FamilyEval::new(family.clone(), w, x);
+        report.families_evaluated += 1;
+        for &b in &domain.b_adcs {
+            let p = eval.design_point(b, w, x);
+            report.points_evaluated += 1;
+            if !constraints.admits(&p) {
+                continue;
+            }
+            if best.as_ref().is_none_or(|cur| objective.better(&p, cur)) {
+                best = Some(p);
+            }
+        }
+    }
+    report.best = best;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::uniform_stats;
+    use crate::opt::domain::ArchChoice;
+    use crate::opt::pareto::frontier;
+    use crate::tech::TechNode;
+
+    fn domain() -> Domain {
+        Domain {
+            archs: vec![ArchChoice::Qs, ArchChoice::Qr, ArchChoice::Cm],
+            nodes: vec![TechNode::n65()],
+            vwls: vec![0.6, 0.7, 0.8],
+            cos: vec![1.0, 3.0],
+            ns: vec![64, 128],
+            bxs: vec![4, 6],
+            bws: vec![4, 6],
+            b_adcs: vec![3, 4, 5, 6, 7, 8, 9],
+        }
+        .normalized()
+        .unwrap()
+    }
+
+    /// Brute-force reference optimum by the same lexicographic rule.
+    fn reference(
+        d: &Domain,
+        objective: Objective,
+        constraints: &Constraints,
+    ) -> Option<DesignPoint> {
+        let (w, x) = uniform_stats();
+        let mut best: Option<DesignPoint> = None;
+        for p in d.all_points(&w, &x) {
+            if !constraints.admits(&p) {
+                continue;
+            }
+            if best.as_ref().is_none_or(|cur| objective.better(&p, cur)) {
+                best = Some(p);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn branch_and_bound_matches_brute_force() {
+        let (w, x) = uniform_stats();
+        let d = domain();
+        let cases = [
+            (Objective::MinEnergy, Constraints::default()),
+            (
+                Objective::MinEnergy,
+                Constraints {
+                    snr_t_min_db: Some(15.0),
+                    ..Constraints::default()
+                },
+            ),
+            (
+                Objective::MinDelay,
+                Constraints {
+                    snr_t_min_db: Some(12.0),
+                    energy_max_j: Some(2e-11),
+                    ..Constraints::default()
+                },
+            ),
+            (
+                Objective::MaxSnr,
+                Constraints {
+                    energy_max_j: Some(1e-11),
+                    delay_max_s: Some(5e-9),
+                    ..Constraints::default()
+                },
+            ),
+        ];
+        for (objective, constraints) in cases {
+            let got = optimize(&d, objective, &constraints, &w, &x);
+            let want = reference(&d, objective, &constraints);
+            match (&got.best, &want) {
+                (Some(g), Some(r)) => {
+                    assert_eq!(g.key(), r.key(), "{objective:?}");
+                    assert_eq!(g.energy_j.to_bits(), r.energy_j.to_bits());
+                }
+                (None, None) => {}
+                other => panic!("{objective:?}: {other:?}"),
+            }
+            assert!(got.families_evaluated <= got.families);
+        }
+    }
+
+    #[test]
+    fn infeasible_constraints_return_none() {
+        let (w, x) = uniform_stats();
+        let d = domain();
+        let got = optimize(
+            &d,
+            Objective::MinEnergy,
+            &Constraints {
+                snr_t_min_db: Some(90.0),
+                ..Constraints::default()
+            },
+            &w,
+            &x,
+        );
+        assert!(got.best.is_none());
+        assert_eq!(
+            got.families_pruned,
+            got.families,
+            "90 dB exceeds every SQNR_qiy bound: all pruned cheaply"
+        );
+    }
+
+    #[test]
+    fn every_answer_lies_on_the_domain_frontier() {
+        let (w, x) = uniform_stats();
+        let d = domain();
+        let fr = frontier(&d, 1, &w, &x);
+        let cases = [
+            (Objective::MinEnergy, Some(10.0), None, None),
+            (Objective::MinEnergy, Some(18.0), None, None),
+            (Objective::MinDelay, Some(15.0), None, None),
+            (Objective::MaxSnr, None, Some(2e-11), None),
+            (Objective::MaxSnr, None, None, Some(4e-9)),
+            (Objective::MinEnergy, None, None, None),
+        ];
+        for (objective, snr, e, dmax) in cases {
+            let constraints = Constraints {
+                snr_t_min_db: snr,
+                energy_max_j: e,
+                delay_max_s: dmax,
+            };
+            let got = optimize(&d, objective, &constraints, &w, &x);
+            let Some(best) = got.best else {
+                panic!("{objective:?} {constraints:?} infeasible");
+            };
+            assert!(
+                fr.points.iter().any(|p| p.key() == best.key()),
+                "{objective:?} answer {} not on the frontier",
+                best.label()
+            );
+        }
+    }
+
+    #[test]
+    fn incumbent_cut_skips_tail_families() {
+        let (w, x) = uniform_stats();
+        // unconstrained min-energy on a domain with many families: the
+        // scan should stop long before evaluating everything.
+        let got = optimize(
+            &domain(),
+            Objective::MinEnergy,
+            &Constraints::default(),
+            &w,
+            &x,
+        );
+        assert!(got.best.is_some());
+        assert!(got.families_cut > 0, "expected an incumbent cut: {got:?}");
+    }
+}

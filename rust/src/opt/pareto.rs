@@ -1,0 +1,287 @@
+//! Pareto-frontier extraction over (max SNR_T, min energy, min delay),
+//! with branch-and-bound pruning instead of brute-force enumeration.
+//!
+//! Pruning exploits the monotone structure of the closed forms:
+//!
+//! * the noise decomposition is B_ADC-independent, so each family is
+//!   evaluated once and its B_ADC column costed from that single
+//!   decomposition;
+//! * along the B_ADC axis energy strictly grows and SNR_T strictly
+//!   grows (delay is non-decreasing), so within a family only the
+//!   accuracy-improving prefix survives — a B_ADC choice whose SNR_T
+//!   does not improve on a smaller one is dominated by it;
+//! * every family is bounded by a cheap corner (energy/delay at the
+//!   smallest grid B_ADC, SQNR_qiy as a strict SNR_T upper bound,
+//!   none of which need the noise decomposition): a family whose
+//!   corner is dominated by an already-kept point contains no frontier
+//!   point and is skipped without evaluating its noise.
+//!
+//! The pruning order (families ascending by energy lower bound) only
+//! affects how much is skipped, never the result: a final exact
+//! dominance pass runs over the surviving pool, so the frontier is
+//! invariant under axis permutations and shard counts (tested in
+//! `rust/tests/opt_pareto.rs`).
+
+use super::domain::{DesignPoint, Domain, Family, FamilyBounds, FamilyEval};
+use crate::quant::SignalStats;
+
+/// An extracted frontier plus search statistics.
+#[derive(Debug, Default)]
+pub struct Frontier {
+    /// Non-dominated points, sorted by (energy asc, delay asc, SNR_T
+    /// desc, canonical key).
+    pub points: Vec<DesignPoint>,
+    /// Families in the search domain.
+    pub families: usize,
+    /// Families skipped by the corner bound (noise never evaluated).
+    pub families_pruned: usize,
+    /// Candidates actually costed.
+    pub points_evaluated: usize,
+    /// Candidates in the full domain (families x B_ADC grid).
+    pub points_total: usize,
+}
+
+/// Extract the Pareto frontier of a (normalized) domain. `shards > 1`
+/// splits the family list round-robin across that many worker threads;
+/// the merged result is identical to a single-shard run.
+pub fn frontier(domain: &Domain, shards: usize, w: &SignalStats, x: &SignalStats) -> Frontier {
+    frontier_of_families(&domain.families(), &domain.b_adcs, shards, w, x)
+}
+
+/// Frontier over an explicit family list (the lower-level entry point:
+/// `figures::fig13` drives per-node scans through this).
+pub fn frontier_of_families(
+    families: &[Family],
+    b_adcs: &[u32],
+    shards: usize,
+    w: &SignalStats,
+    x: &SignalStats,
+) -> Frontier {
+    // The pruning invariants below need the B_ADC axis ascending and
+    // duplicate-free (Domain::normalized guarantees it, direct callers
+    // may not): canonicalize locally rather than trusting the caller.
+    let mut b_adcs = b_adcs.to_vec();
+    b_adcs.sort_unstable();
+    b_adcs.dedup();
+    let b_adcs = b_adcs.as_slice();
+
+    let mut out = Frontier {
+        families: families.len(),
+        points_total: families.len() * b_adcs.len(),
+        ..Frontier::default()
+    };
+    if families.is_empty() || b_adcs.is_empty() {
+        return out;
+    }
+
+    // Bound every family cheaply, then order by ascending energy lower
+    // bound so likely dominators are pooled before the families they
+    // prune (ties broken canonically for determinism).
+    let mut bounded: Vec<(Family, FamilyBounds)> = families
+        .iter()
+        .map(|f| {
+            let b = f.bounds(b_adcs[0], w, x);
+            (f.clone(), b)
+        })
+        .collect();
+    bounded.sort_by(|(fa, ba), (fb, bb)| {
+        ba.energy_lb_j
+            .total_cmp(&bb.energy_lb_j)
+            .then_with(|| fa.key().cmp(&fb.key()))
+    });
+
+    let shards = shards.max(1).min(bounded.len());
+    let mut pool: Vec<DesignPoint> = Vec::new();
+    if shards <= 1 {
+        let (p, evaluated, pruned) = extract_pool(&bounded, 0, 1, b_adcs, w, x);
+        pool = p;
+        out.points_evaluated = evaluated;
+        out.families_pruned = pruned;
+    } else {
+        let results = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..shards)
+                .map(|i| {
+                    let bounded = &bounded;
+                    scope.spawn(move || extract_pool(bounded, i, shards, b_adcs, w, x))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("frontier shard thread panicked"))
+                .collect::<Vec<_>>()
+        });
+        for (p, evaluated, pruned) in results {
+            pool.extend(p);
+            out.points_evaluated += evaluated;
+            out.families_pruned += pruned;
+        }
+    }
+
+    out.points = prune(pool);
+    out
+}
+
+/// Evaluate one round-robin shard of the bounded family list into a
+/// candidate pool (within-family and corner pruning applied); returns
+/// (pool, points evaluated, families corner-pruned).
+fn extract_pool(
+    bounded: &[(Family, FamilyBounds)],
+    offset: usize,
+    stride: usize,
+    b_adcs: &[u32],
+    w: &SignalStats,
+    x: &SignalStats,
+) -> (Vec<DesignPoint>, usize, usize) {
+    let mut pool: Vec<DesignPoint> = Vec::new();
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+    for (family, bounds) in bounded.iter().skip(offset).step_by(stride) {
+        // corner bound: any kept point at least as good as the family's
+        // best corner dominates the whole family (SNR_T < snr_ub is
+        // strict, so the domination is strict).
+        let dominated = pool.iter().any(|p| {
+            p.snr_t_db >= bounds.snr_ub_db
+                && p.energy_j <= bounds.energy_lb_j
+                && p.delay_s <= bounds.delay_lb_s
+        });
+        if dominated {
+            pruned += 1;
+            continue;
+        }
+        let eval = FamilyEval::new(family.clone(), w, x);
+        let mut best_snr = f64::NEG_INFINITY;
+        for &b in b_adcs {
+            let p = eval.design_point(b, w, x);
+            evaluated += 1;
+            // monotone within-family prune: energy strictly grows with
+            // B_ADC, so a non-improving SNR_T is dominated by the
+            // previous kept member.
+            if p.snr_t_db > best_snr {
+                best_snr = p.snr_t_db;
+                pool.push(p);
+            }
+        }
+    }
+    (pool, evaluated, pruned)
+}
+
+/// Exact dominance filter: sort so that every potential dominator
+/// precedes what it dominates, then keep the non-dominated prefix
+/// survivors. Order-independent result.
+pub fn prune(mut pool: Vec<DesignPoint>) -> Vec<DesignPoint> {
+    pool.sort_by(|a, b| {
+        a.energy_j
+            .total_cmp(&b.energy_j)
+            .then_with(|| a.delay_s.total_cmp(&b.delay_s))
+            .then_with(|| b.snr_t_db.total_cmp(&a.snr_t_db))
+            .then_with(|| a.key().cmp(&b.key()))
+    });
+    let mut kept: Vec<DesignPoint> = Vec::new();
+    for p in pool {
+        if !kept.iter().any(|k| k.dominates(&p)) {
+            kept.push(p);
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::uniform_stats;
+    use crate::opt::domain::ArchChoice;
+    use crate::tech::TechNode;
+
+    fn domain() -> Domain {
+        Domain {
+            archs: vec![ArchChoice::Qs, ArchChoice::Qr],
+            nodes: vec![TechNode::n65()],
+            vwls: vec![0.6, 0.7, 0.8],
+            cos: vec![1.0, 3.0],
+            ns: vec![64, 128, 256],
+            bxs: vec![4, 6],
+            bws: vec![6],
+            b_adcs: vec![3, 4, 5, 6, 7, 8],
+        }
+        .normalized()
+        .unwrap()
+    }
+
+    #[test]
+    fn frontier_matches_brute_force() {
+        let (w, x) = uniform_stats();
+        let d = domain();
+        let fr = frontier(&d, 1, &w, &x);
+        // reference: full enumeration + quadratic dominance filter
+        let all = d.all_points(&w, &x);
+        let mut reference: Vec<&DesignPoint> = all
+            .iter()
+            .filter(|p| !all.iter().any(|q| q.dominates(p)))
+            .collect();
+        reference.sort_by_key(|p| p.key());
+        let mut got: Vec<&DesignPoint> = fr.points.iter().collect();
+        got.sort_by_key(|p| p.key());
+        assert_eq!(got.len(), reference.len(), "frontier size");
+        for (g, r) in got.iter().zip(&reference) {
+            assert_eq!(g.key(), r.key());
+            assert_eq!(g.energy_j.to_bits(), r.energy_j.to_bits());
+            assert_eq!(g.snr_t_db.to_bits(), r.snr_t_db.to_bits());
+            assert_eq!(g.delay_s.to_bits(), r.delay_s.to_bits());
+        }
+        assert_eq!(fr.points_total, all.len());
+        assert!(fr.points_evaluated <= fr.points_total);
+    }
+
+    #[test]
+    fn no_frontier_point_is_dominated_and_order_is_canonical() {
+        let (w, x) = uniform_stats();
+        let fr = frontier(&domain(), 1, &w, &x);
+        assert!(!fr.points.is_empty());
+        for a in &fr.points {
+            for b in &fr.points {
+                assert!(!a.dominates(b), "{} dominates {}", a.label(), b.label());
+            }
+        }
+        for pair in fr.points.windows(2) {
+            assert!(pair[0].energy_j <= pair[1].energy_j, "ascending energy");
+        }
+    }
+
+    #[test]
+    fn sharded_extraction_is_identical() {
+        let (w, x) = uniform_stats();
+        let d = domain();
+        let one = frontier(&d, 1, &w, &x);
+        for shards in [2, 3, 4, 7] {
+            let many = frontier(&d, shards, &w, &x);
+            assert_eq!(one.points.len(), many.points.len(), "{shards} shards");
+            for (a, b) in one.points.iter().zip(&many.points) {
+                assert_eq!(a.key(), b.key());
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+                assert_eq!(a.snr_t_db.to_bits(), b.snr_t_db.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn unsorted_b_adc_axis_is_canonicalized() {
+        let (w, x) = uniform_stats();
+        let d = domain();
+        let fams = d.families();
+        let sorted = frontier_of_families(&fams, &[3, 4, 5, 6, 7, 8], 1, &w, &x);
+        let shuffled = frontier_of_families(&fams, &[8, 4, 6, 3, 7, 5, 4], 1, &w, &x);
+        assert_eq!(sorted.points.len(), shuffled.points.len());
+        for (a, b) in sorted.points.iter().zip(&shuffled.points) {
+            assert_eq!(a.key(), b.key());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_domain_inputs_yield_empty_frontier() {
+        let (w, x) = uniform_stats();
+        let fr = frontier_of_families(&[], &[4, 5], 4, &w, &x);
+        assert!(fr.points.is_empty());
+        assert_eq!(fr.families, 0);
+    }
+}

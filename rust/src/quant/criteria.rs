@@ -77,6 +77,15 @@ pub fn mpc_min_bits(snr_a_db: f64, gamma_db: f64) -> u32 {
     (t / 6.0).ceil().max(1.0) as u32
 }
 
+/// Closed-form SNR_T of an analog core at `snr_a_total_db` digitized by
+/// a `by`-bit MPC output quantizer (4-sigma clipped uniform levels):
+/// eq. (11) composed with eq. (14). This is the per-point accuracy
+/// metric of the design-space explorer (`crate::opt`), where B_ADC is a
+/// search axis and MPC fixes the conversion range.
+pub fn snr_t_with_mpc_adc_db(snr_a_total_db: f64, by: u32) -> f64 {
+    crate::snr::snr_t_db(snr_a_total_db, mpc_sqnr_db(by, MPC_ZETA))
+}
+
 /// Required digitization SQNR margin: SQNR_qy >= SNR_A + margin ensures
 /// SNR_T within gamma of SNR_A (Sec. III-B: margin 9 dB -> gamma 0.5 dB).
 pub fn required_sqnr_db(snr_a_db: f64, gamma_db: f64) -> f64 {
@@ -209,6 +218,25 @@ mod tests {
     fn required_margin_is_9db_for_half_db() {
         let m = required_sqnr_db(30.0, 0.5) - 30.0;
         assert!((m - 9.1).abs() < 0.3, "{m}");
+    }
+
+    #[test]
+    fn snr_t_with_mpc_adc_is_monotone_and_approaches_snr_a() {
+        // eq. (11): SNR_T < SNR_A always, strictly improving in B_y and
+        // converging onto SNR_A once SQNR_qy clears the 9 dB margin.
+        let snr_a = 21.99;
+        let mut prev = f64::MIN;
+        for by in 1..=14 {
+            let st = snr_t_with_mpc_adc_db(snr_a, by);
+            assert!(st < snr_a, "B_y={by}: {st}");
+            assert!(st > prev, "monotone in B_y: {prev} -> {st}");
+            prev = st;
+        }
+        assert!(snr_a - snr_t_with_mpc_adc_db(snr_a, 14) < 0.1);
+        // within 0.5 dB exactly at the eq. (15) MPC bit count
+        let by = mpc_min_bits(snr_a, 0.5);
+        assert!(snr_a - snr_t_with_mpc_adc_db(snr_a, by) <= 0.5);
+        assert!(snr_a - snr_t_with_mpc_adc_db(snr_a, by - 1) > 0.5);
     }
 
     #[test]

@@ -34,6 +34,63 @@ pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
+/// Stable fingerprint of a compiled artifact set: a 64-bit FNV-1a hash
+/// over the raw `manifest.json` bytes *and* the HLO artifact payloads
+/// (`*.hlo.txt`, name + bytes, in sorted order) — the manifest alone
+/// only carries names and shapes, so a recompile that changes the
+/// simulator math without changing any signature would otherwise hash
+/// identically. Folded into `Backend::cache_id`, this keeps results
+/// computed against one artifact build from aliasing the engine's
+/// content-addressed cache records of another. An unreadable or absent
+/// manifest — e.g. the offline-stubbed PJRT runtime — yields the
+/// `"unmanifested"` placeholder rather than an error, matching the
+/// runtime's fail-at-execute (not at startup) contract. The snapshot is
+/// taken once at service spawn; swapping artifact files under a running
+/// service is outside the contract (re-spawn to pick up a new build).
+pub fn fingerprint(dir: &Path) -> String {
+    fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        // length separator: distinct chunkings hash differently
+        h ^= bytes.len() as u64;
+        h.wrapping_mul(0x0000_0100_0000_01B3)
+    }
+    let Ok(manifest) = std::fs::read(dir.join("manifest.json")) else {
+        return "unmanifested".to_string();
+    };
+    let mut h = fnv(0xCBF2_9CE4_8422_2325, &manifest);
+    let mut artifacts: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map(|entries| {
+            entries
+                .flatten()
+                .map(|e| e.path())
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| n.ends_with(".hlo.txt"))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    artifacts.sort();
+    for path in artifacts {
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        h = fnv(h, name.as_bytes());
+        match std::fs::read(&path) {
+            Ok(bytes) => h = fnv(h, &bytes),
+            // an unreadable payload must not hash like an absent one —
+            // fold a marker so the damaged set gets its own id (which
+            // changes again once the file is readable: never aliases)
+            Err(_) => h = fnv(h, b"\xffunreadable"),
+        }
+    }
+    format!("{h:016x}")
+}
+
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
@@ -151,5 +208,32 @@ mod tests {
         assert!(Manifest::parse("{}").is_err());
         assert!(Manifest::parse("not json").is_err());
         assert!(Manifest::parse(r#"{"m_trials": 1}"#).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_manifest_and_artifact_bytes() {
+        let dir = std::env::temp_dir().join("imclim-manifest-fp");
+        let _ = std::fs::remove_dir_all(&dir);
+        // absent manifest: the stubbed-runtime placeholder
+        assert_eq!(fingerprint(&dir), "unmanifested");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let a = fingerprint(&dir);
+        assert_eq!(a.len(), 16, "64-bit hex digest: {a}");
+        assert_eq!(a, fingerprint(&dir), "stable across reads");
+        // a recompile that changes only an artifact payload (same
+        // manifest: names and shapes unchanged) must change the id
+        std::fs::write(dir.join("qs_arch.hlo.txt"), "HloModule v1").unwrap();
+        let b = fingerprint(&dir);
+        assert_ne!(a, b, "artifact bytes participate");
+        std::fs::write(dir.join("qs_arch.hlo.txt"), "HloModule v2").unwrap();
+        let c = fingerprint(&dir);
+        assert_ne!(b, c, "recompiled payload, unchanged manifest");
+        // non-artifact files are ignored
+        std::fs::write(dir.join("notes.txt"), "irrelevant").unwrap();
+        assert_eq!(c, fingerprint(&dir));
+        // and a manifest change alone still changes the id
+        std::fs::write(dir.join("manifest.json"), format!("{SAMPLE} ")).unwrap();
+        assert_ne!(c, fingerprint(&dir));
     }
 }

@@ -17,7 +17,7 @@ pub mod manifest;
 /// bindings to execute artifacts (see its module docs).
 mod xla;
 
-pub use manifest::{ArtifactSpec, Manifest};
+pub use manifest::{fingerprint as artifact_fingerprint, ArtifactSpec, Manifest};
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -85,7 +85,7 @@ fn merged_shard_dirs_are_byte_identical_to_single_run() {
     assert_eq!(report.copied, 8);
     assert_eq!(report.identical, 0);
     assert!(report.collisions.is_empty());
-    assert_eq!(report.backends, vec!["native".to_string()]);
+    assert_eq!(report.backends, vec![Backend::Native.cache_id()]);
 
     let a = dir_bytes(&single);
     let b = dir_bytes(&merged);
@@ -132,7 +132,7 @@ fn truncated_record_degrades_to_recompute() {
     let (cold, s0) = e.run_with_stats(mk());
     assert_eq!(s0.misses, 1);
 
-    let record = dir.join(format!("{}.json", cache_key(&mk()[0], "native")));
+    let record = dir.join(format!("{}.json", cache_key(&mk()[0], &Backend::Native.cache_id())));
     let bytes = std::fs::read(&record).unwrap();
     for keep in [bytes.len() / 2, 1, 0] {
         std::fs::write(&record, &bytes[..keep]).unwrap();

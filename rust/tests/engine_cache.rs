@@ -151,7 +151,7 @@ fn corrupted_record_falls_back_to_recompute() {
     let mk = || vec![qs_point("c0", 48, 3, 128)];
     let (cold, _) = e.run_with_stats(mk());
 
-    let key = cache_key(&mk()[0], "native");
+    let key = cache_key(&mk()[0], &Backend::Native.cache_id());
     let record = dir.join(format!("{key}.json"));
     assert!(record.exists(), "record written at {}", record.display());
     std::fs::write(&record, "{ definitely not json").unwrap();

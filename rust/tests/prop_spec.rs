@@ -141,6 +141,45 @@ fn ranges_expand_inclusively_and_roundtrip() {
 }
 
 #[test]
+fn float_range_endpoints_are_deterministic() {
+    // The endpoint rule: hi is included iff (hi-lo)/step is within 1e-9
+    // *relative* tolerance of an integer, and when included the last
+    // value is exactly the hi that was typed — never lo + k*step with
+    // its accumulated representation error.
+    let v = parse_grid_f64("0.55:0.9:0.05").unwrap();
+    assert_eq!(v.len(), 8);
+    assert_eq!(v[0].to_bits(), 0.55f64.to_bits());
+    assert_eq!(v[7].to_bits(), 0.9f64.to_bits(), "snapped to the literal hi");
+    let v = parse_grid_f64("0:0.3:0.1").unwrap();
+    assert_eq!(v.len(), 4);
+    assert_eq!(v[3].to_bits(), 0.3f64.to_bits());
+    // interior values are lo + i*step (multiplication, no accumulation)
+    assert_eq!(v[2].to_bits(), (0.1f64 * 2.0).to_bits());
+    // absolute-epsilon would misjudge large-magnitude ranges; the
+    // relative rule keeps the endpoint: (1000.3-1000)/0.1 = 3 + 8e-14
+    let v = parse_grid_f64("1000:1000.3:0.1").unwrap();
+    assert_eq!(v.len(), 4);
+    assert_eq!(v[3].to_bits(), 1000.3f64.to_bits());
+}
+
+#[test]
+fn float_range_non_dividing_steps_stop_in_range() {
+    // a step that does not divide the span stops at the last in-range
+    // value; the endpoint is excluded deterministically
+    let v = parse_grid_f64("1:10:4").unwrap();
+    assert_eq!(v, vec![1.0, 5.0, 9.0]);
+    let v = parse_grid_f64("0:1:0.3").unwrap();
+    assert_eq!(v.len(), 4);
+    assert!(v[3] < 1.0, "endpoint excluded: {v:?}");
+    assert_eq!(v[3].to_bits(), (0.3f64 * 3.0).to_bits());
+    // just short of dividing (rel err ~3e-4 >> 1e-9): excluded
+    let v = parse_grid_f64("0:2.999:1").unwrap();
+    assert_eq!(v, vec![0.0, 1.0, 2.0]);
+    // oversize float ranges still error out
+    assert!(parse_grid_f64("0:1000000:0.1").is_err());
+}
+
+#[test]
 fn degenerate_ranges() {
     assert_eq!(parse_grid_usize("7:7").unwrap(), vec![7]);
     assert_eq!(parse_grid_usize("7:7:3").unwrap(), vec![7]);
