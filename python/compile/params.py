@@ -56,6 +56,14 @@ CM_IDX_INJ_B = 8  # charge injection slope
 CM_IDX_SIGMA_THETA = 9  # per-cap thermal (QR stage)
 CM_IDX_V_C = 10  # ADC range in normalized DP-mean units (Table III V_c)
 
+# Multi-bank DP (Sec. VI), shared across architectures. 0.0 is the
+# single-bank (legacy) encoding; a value >= 2 means the arch-specific
+# slots are *per-bank* (IDX_N_ACTIVE holds ceil(N / banks)) and the DP
+# is the sum of that many independent per-bank ensembles. Interpreted by
+# the native Rust simulator only — the AOT artifacts model one array,
+# and the Rust coordinator rejects banked points on the PJRT backend.
+IDX_BANKS = 15
+
 # MLP (Fig. 2 workload) static shapes.
 MLP_BATCH = 256
 MLP_DIMS = (64, 128, 64, 10)  # D0 -> D1 -> D2 -> D3

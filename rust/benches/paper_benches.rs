@@ -150,6 +150,7 @@ fn main() {
             bxs: vec![4, 6, 8],
             bws: vec![4, 6, 8],
             b_adcs: vec![2, 4, 6, 8, 10, 12],
+            banks: vec![1],
         }
         .normalized()
         .unwrap();
@@ -166,6 +167,31 @@ fn main() {
                 Objective::MinEnergy,
                 &Constraints {
                     snr_t_min_db: Some(18.0),
+                    ..Constraints::default()
+                },
+                &w,
+                &x,
+            ));
+        });
+
+        // area objective + banked families: the four-objective frontier
+        // over a banks axis, and the min-area constrained search
+        let banked_domain = Domain {
+            banks: vec![1, 2, 4],
+            ..domain.clone()
+        }
+        .normalized()
+        .unwrap();
+        let banked_candidates = banked_domain.point_count() as f64;
+        suite.bench("opt_area_frontier_banked", banked_candidates, || {
+            black_box(frontier(&banked_domain, 1, &w, &x));
+        });
+        suite.bench("opt_area_min_area_constrained", banked_candidates, || {
+            black_box(optimize(
+                &banked_domain,
+                Objective::MinArea,
+                &Constraints {
+                    snr_t_min_db: Some(15.0),
                     ..Constraints::default()
                 },
                 &w,

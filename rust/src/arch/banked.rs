@@ -1,37 +1,101 @@
-//! Multi-bank IMC (the paper's conclusion bullet 4): a high-dimensional
-//! DP split across `banks` arrays of N/banks rows each, partial DPs
-//! digitized per bank and summed digitally.
+//! Multi-bank IMC (the paper's conclusion bullet 4, Sec. VI): a
+//! high-dimensional DP split across `banks` arrays of ceil(N/banks)
+//! rows each, partial DPs digitized per bank and summed digitally.
 //!
 //! Banking restores SNR for N > N_max: each bank stays inside its
 //! headroom (clipping noise vanishes), electrical noise still grows with
-//! total N but the *signal* does too, and the energy cost is `banks`
-//! ADC conversions plus the same total analog work.
+//! total N but the *signal* does too, and the cost is `banks` ADC
+//! conversions, a `banks - 1`-slice digital adder tree
+//! (`TechNode::e_bank_add` / `TechNode::t_bank_add`), and `banks` copies
+//! of the per-bank silicon.
+//!
+//! [`Banked`] is a full [`ImcArch`]: it composes any inner architecture
+//! into its banked variant, so it flows through the design-space
+//! optimizer (`opt::Family` with `banks > 1`), the sweep engine (the
+//! bank count rides in parameter-vector slot [`pvec::IDX_BANKS`], which
+//! the native Monte-Carlo simulator interprets by summing independent
+//! per-bank ensembles) and the CLI (`--banks`) like any other design.
+//!
+//! Contract (property-tested in `tests/prop_banked.rs`):
+//! `Banked::new(inner, 1)` is *bit-identical* to the bare inner
+//! architecture for noise, energy, delay, area and the parameter vector
+//! — slot `IDX_BANKS` stays `0.0` at one bank, so single-bank cache
+//! keys are unchanged too. For `banks >= 2` every noise variance is
+//! exactly `banks x` the per-bank decomposition.
 
-use super::{AdcCriterion, EnergyBreakdown, ImcArch, NoiseBreakdown, OpPoint};
+use super::{pvec, AdcCriterion, EnergyBreakdown, ImcArch, NoiseBreakdown, OpPoint};
+use crate::area::AreaBreakdown;
 use crate::quant::SignalStats;
+use crate::tech::TechNode;
 
 /// An architecture partitioned over equally-sized banks.
-pub struct Banked<'a> {
-    pub inner: &'a dyn ImcArch,
+pub struct Banked {
+    pub inner: Box<dyn ImcArch>,
     pub banks: usize,
 }
 
-impl<'a> Banked<'a> {
-    pub fn new(inner: &'a dyn ImcArch, banks: usize) -> Self {
+impl Banked {
+    pub fn new(inner: Box<dyn ImcArch>, banks: usize) -> Self {
         assert!(banks >= 1);
         Self { inner, banks }
     }
 
-    fn bank_op(&self, op: &OpPoint) -> OpPoint {
+    /// The per-bank operating point: `ceil(N / banks)` rows, one bank.
+    pub fn bank_op(&self, op: &OpPoint) -> OpPoint {
         OpPoint {
             n: op.n.div_ceil(self.banks),
+            banks: 1,
             ..*op
         }
     }
 
+    /// Number of adder-tree stages: ceil(log2(banks)).
+    fn tree_stages(&self) -> f64 {
+        (self.banks as f64).log2().ceil()
+    }
+
+    /// Smallest bank count that keeps each bank's clipping noise below
+    /// its electrical noise (the Fig. 9(a) plateau condition). Both
+    /// sides of the comparison scale by `banks`, so the per-bank
+    /// decomposition decides it directly.
+    pub fn min_banks_for_plateau(
+        inner: &dyn ImcArch,
+        op: &OpPoint,
+        w: &SignalStats,
+        x: &SignalStats,
+    ) -> usize {
+        for banks in 1..=op.n {
+            let bank_op = OpPoint {
+                n: op.n.div_ceil(banks),
+                banks: 1,
+                ..*op
+            };
+            let nb = inner.noise(&bank_op, w, x);
+            if nb.sigma_eta_h2 <= nb.sigma_eta_e2 {
+                return banks;
+            }
+        }
+        op.n
+    }
+}
+
+impl ImcArch for Banked {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn artifact_name(&self) -> &'static str {
+        self.inner.artifact_name()
+    }
+
+    fn tech(&self) -> TechNode {
+        self.inner.tech()
+    }
+
     /// Noise of the banked DP: per-bank noise variances add (independent
-    /// banks), signal variances add too.
-    pub fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown {
+    /// banks), signal variances add too — so every SNR ratio equals the
+    /// per-bank one, which is how banking escapes the SNR_a ceiling.
+    fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown {
         let sub = self.inner.noise(&self.bank_op(op), w, x);
         NoiseBreakdown {
             sigma_yo2: sub.sigma_yo2 * self.banks as f64,
@@ -41,9 +105,30 @@ impl<'a> Banked<'a> {
         }
     }
 
-    /// Energy: `banks` x the per-bank cost (analog + ADC), one shared
-    /// digital recombination.
-    pub fn energy(
+    fn v_c_volts(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> f64 {
+        self.inner.v_c_volts(&self.bank_op(op), w, x)
+    }
+
+    fn v_c_full_volts(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> f64 {
+        self.inner.v_c_full_volts(&self.bank_op(op), w, x)
+    }
+
+    fn b_adc_bgc(&self, op: &OpPoint) -> u32 {
+        self.inner.b_adc_bgc(&self.bank_op(op))
+    }
+
+    /// MPC assignment per bank ADC. The banked pre-ADC SNR equals the
+    /// per-bank one (both signal and noise scale by `banks`), so the
+    /// per-bank assignment is the banked assignment.
+    fn b_adc_min(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> u32 {
+        self.inner.b_adc_min(&self.bank_op(op), w, x)
+    }
+
+    /// Energy: `banks` x the per-bank cost (analog + ADC), plus the
+    /// `banks - 1` adds of the digital recombination tree
+    /// (`TechNode::e_bank_add`, node-scaled; zero at one bank, so a
+    /// single-bank wrapper costs exactly the bare architecture).
+    fn energy(
         &self,
         op: &OpPoint,
         crit: AdcCriterion,
@@ -51,36 +136,47 @@ impl<'a> Banked<'a> {
         x: &SignalStats,
     ) -> EnergyBreakdown {
         let sub = self.inner.energy(&self.bank_op(op), crit, w, x);
+        let tree = (self.banks - 1) as f64 * self.tech().e_bank_add;
         EnergyBreakdown {
             analog: sub.analog * self.banks as f64,
             adc: sub.adc * self.banks as f64,
-            misc: sub.misc + 5e-15 * self.banks as f64, // bank adder tree
+            misc: sub.misc + tree,
         }
     }
 
-    /// Delay: banks operate in parallel; the adder tree adds log2(banks)
-    /// stages.
-    pub fn delay(&self, op: &OpPoint) -> f64 {
-        self.inner.delay(&self.bank_op(op))
-            + (self.banks as f64).log2().ceil() * 50e-12
+    /// Delay: banks operate in parallel; the adder tree adds
+    /// ceil(log2(banks)) stages of `TechNode::t_bank_add` (zero at one
+    /// bank).
+    fn delay(&self, op: &OpPoint) -> f64 {
+        self.inner.delay(&self.bank_op(op)) + self.tree_stages() * self.tech().t_bank_add()
     }
 
-    /// Smallest bank count that keeps each bank's clipping noise below
-    /// its electrical noise (the Fig. 9(a) plateau condition).
-    pub fn min_banks_for_plateau(
-        inner: &dyn ImcArch,
+    /// Area: `banks` copies of the per-bank geometry plus the adder
+    /// tree (counted as periphery).
+    fn area(&self, op: &OpPoint) -> AreaBreakdown {
+        let sub = self.inner.area(&self.bank_op(op)).scaled(self.banks as f64);
+        AreaBreakdown {
+            periphery_mm2: sub.periphery_mm2
+                + crate::area::bank_adder_mm2(&self.tech(), self.banks),
+            ..sub
+        }
+    }
+
+    /// Per-bank parameter vector; the bank count rides in slot
+    /// [`pvec::IDX_BANKS`] *only when banks >= 2* (see the pvec docs:
+    /// `0.0` is the single-bank encoding, keeping single-bank cache
+    /// keys bit-identical to the unbanked layout).
+    fn pjrt_params(
+        &self,
         op: &OpPoint,
         w: &SignalStats,
         x: &SignalStats,
-    ) -> usize {
-        for banks in 1..=op.n {
-            let b = Banked::new(inner, banks);
-            let nb = b.noise(op, w, x);
-            if nb.sigma_eta_h2 <= nb.sigma_eta_e2 {
-                return banks;
-            }
+    ) -> [f64; pvec::P] {
+        let mut p = self.inner.pjrt_params(&self.bank_op(op), w, x);
+        if self.banks >= 2 {
+            p[pvec::IDX_BANKS] = self.banks as f64;
         }
-        op.n
+        p
     }
 }
 
@@ -99,32 +195,61 @@ mod tests {
         )
     }
 
+    fn banked(banks: usize) -> Banked {
+        let (arch, _, _) = setup();
+        Banked::new(Box::new(arch), banks)
+    }
+
     #[test]
     fn banking_restores_snr_beyond_n_max() {
-        let (arch, w, x) = setup();
+        let (_, w, x) = setup();
         let op = OpPoint::new(512, 6, 6, 8);
-        let single = Banked::new(&arch, 1).noise(&op, &w, &x).snr_a_total_db();
-        let banked = Banked::new(&arch, 8).noise(&op, &w, &x).snr_a_total_db();
+        let single = banked(1).noise(&op, &w, &x).snr_a_total_db();
+        let eight = banked(8).noise(&op, &w, &x).snr_a_total_db();
         assert!(single < 5.0, "N=512 single-bank collapses: {single}");
-        assert!(banked > 15.0, "8 banks restore the plateau: {banked}");
+        assert!(eight > 15.0, "8 banks restore the plateau: {eight}");
     }
 
     #[test]
     fn banking_below_n_max_changes_little() {
-        let (arch, w, x) = setup();
+        let (_, w, x) = setup();
         let op = OpPoint::new(64, 6, 6, 8);
-        let single = Banked::new(&arch, 1).noise(&op, &w, &x).snr_a_total_db();
-        let banked = Banked::new(&arch, 2).noise(&op, &w, &x).snr_a_total_db();
-        assert!((single - banked).abs() < 1.5, "{single} {banked}");
+        let single = banked(1).noise(&op, &w, &x).snr_a_total_db();
+        let two = banked(2).noise(&op, &w, &x).snr_a_total_db();
+        assert!((single - two).abs() < 1.5, "{single} {two}");
     }
 
     #[test]
-    fn banking_costs_adc_energy() {
+    fn banking_costs_adc_energy_and_adder_tree() {
         let (arch, w, x) = setup();
         let op = OpPoint::new(512, 6, 6, 8);
-        let e1 = Banked::new(&arch, 1).energy(&op, AdcCriterion::Mpc, &w, &x);
-        let e8 = Banked::new(&arch, 8).energy(&op, AdcCriterion::Mpc, &w, &x);
+        let e1 = banked(1).energy(&op, AdcCriterion::Mpc, &w, &x);
+        let e8 = banked(8).energy(&op, AdcCriterion::Mpc, &w, &x);
         assert!(e8.adc > e1.adc, "{} {}", e8.adc, e1.adc);
+        // the tree is (banks - 1) node-scaled adds on top of misc
+        let bare = arch.energy(&banked(8).bank_op(&op), AdcCriterion::Mpc, &w, &x);
+        assert_eq!(
+            e8.misc.to_bits(),
+            (bare.misc + 7.0 * TechNode::n65().e_bank_add).to_bits()
+        );
+        assert_eq!(e1.misc.to_bits(), bare.misc.to_bits(), "no tree at 1 bank");
+    }
+
+    #[test]
+    fn banking_replicates_area_and_adds_tree() {
+        let (arch, _, _) = setup();
+        let op = OpPoint::new(512, 6, 6, 8);
+        let b4 = banked(4);
+        let a4 = b4.area(&op);
+        let per_bank = arch.area(&b4.bank_op(&op));
+        assert_eq!(a4.array_mm2.to_bits(), (per_bank.array_mm2 * 4.0).to_bits());
+        assert_eq!(a4.adc_mm2.to_bits(), (per_bank.adc_mm2 * 4.0).to_bits());
+        let tree = crate::area::bank_adder_mm2(&TechNode::n65(), 4);
+        assert!((a4.periphery_mm2 - (per_bank.periphery_mm2 * 4.0 + tree)).abs() < 1e-18);
+        // 4 banks of N/4 rows hold the same cell count as one N-row array
+        let whole = arch.area(&op);
+        assert_eq!(a4.array_mm2.to_bits(), whole.array_mm2.to_bits());
+        assert!(a4.adc_mm2 > whole.adc_mm2, "4x the column ADCs");
     }
 
     #[test]
@@ -140,51 +265,50 @@ mod tests {
 
     #[test]
     fn delay_adds_adder_tree() {
-        let (arch, _, _) = setup();
         let op = OpPoint::new(512, 6, 6, 8);
-        let d1 = Banked::new(&arch, 1).delay(&op);
-        let d8 = Banked::new(&arch, 8).delay(&op);
+        let d1 = banked(1).delay(&op);
+        let d8 = banked(8).delay(&op);
         // per-bank compute is the same cycle count; only the tree adds
         assert!(d8 - d1 < 1e-9);
         assert!(d8 > d1);
+        assert!(
+            (d8 - d1 - 3.0 * TechNode::n65().t_bank_add()).abs() < 1e-15,
+            "3 tree stages for 8 banks"
+        );
     }
 
-    /// Monte-Carlo cross-check: simulate 8 banks natively and verify the
-    /// closed-form banked SNR.
+    #[test]
+    fn params_carry_the_bank_count_only_when_banked() {
+        let (arch, w, x) = setup();
+        let op = OpPoint::new(512, 6, 6, 8);
+        let p1 = banked(1).pjrt_params(&op, &w, &x);
+        assert_eq!(p1[pvec::IDX_BANKS], 0.0, "single-bank keeps slot 15 at 0");
+        assert_eq!(p1, arch.pjrt_params(&op, &w, &x), "bit-identical at 1 bank");
+        let p8 = banked(8).pjrt_params(&op, &w, &x);
+        assert_eq!(p8[pvec::IDX_BANKS], 8.0);
+        assert_eq!(p8[pvec::IDX_N_ACTIVE], 64.0, "per-bank rows in slot 0");
+    }
+
+    /// Monte-Carlo cross-check: the native simulator's banked path (sum
+    /// of `banks` independent per-bank ensembles, driven by the
+    /// `IDX_BANKS` slot) must agree with the closed-form banked SNR.
     #[test]
     fn banked_mc_matches_closed_form() {
-        let (arch, w, x) = setup();
+        let (_, w, x) = setup();
         let op = OpPoint::new(512, 6, 6, 14);
-        let banks = 8;
-        let bank_op = OpPoint::new(64, 6, 6, 14);
-        let params = arch.pjrt_params(&bank_op, &w, &x);
-        // sum of 8 independent bank DPs == banked DP of N=512
+        let b = banked(8);
+        let params = b.pjrt_params(&op, &w, &x);
+        let out = crate::mc::simulate(
+            crate::mc::ArchKind::Qs,
+            &params,
+            2000,
+            100,
+            crate::mc::InputDist::Uniform,
+        );
         let mut acc = crate::mc::SnrAccumulator::new();
-        let mut outs = Vec::new();
-        for b in 0..banks {
-            outs.push(crate::mc::simulate(
-                crate::mc::ArchKind::Qs,
-                &params,
-                2000,
-                100 + b as u64,
-                crate::mc::InputDist::Uniform,
-            ));
-        }
-        let mut combined = crate::mc::McOutput::default();
-        for i in 0..2000 {
-            let sum = |f: fn(&crate::mc::McOutput) -> &Vec<f64>| -> f64 {
-                outs.iter().map(|o| f(o)[i]).sum()
-            };
-            combined.push(
-                sum(|o| &o.y_ideal),
-                sum(|o| &o.y_fx),
-                sum(|o| &o.y_a),
-                sum(|o| &o.y_hat),
-            );
-        }
-        acc.push_chunk(&combined);
+        acc.push_chunk(&out);
         let measured = acc.finalize();
-        let closed = Banked::new(&arch, banks).noise(&op, &w, &x);
+        let closed = b.noise(&op, &w, &x);
         assert!(
             (measured.snr_a_total_db - closed.snr_a_total_db()).abs() < 1.0,
             "mc {} vs closed {}",

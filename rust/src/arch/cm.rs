@@ -62,6 +62,14 @@ impl ImcArch for CmArch {
         "cm_arch"
     }
 
+    fn tech(&self) -> crate::tech::TechNode {
+        self.qs.tech
+    }
+
+    fn area(&self, op: &OpPoint) -> crate::area::AreaBreakdown {
+        crate::area::cm_area(&self.qs.tech, self.qr.c_o_ff(), op)
+    }
+
     fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown {
         let n = op.n as f64;
         let sigma_yo2 = crate::quant::dp_signal_variance(op.n, w, x);

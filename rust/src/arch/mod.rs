@@ -48,6 +48,15 @@ pub mod pvec {
     pub const CM_IDX_INJ_B: usize = 8;
     pub const CM_IDX_SIGMA_THETA: usize = 9;
     pub const CM_IDX_V_C: usize = 10;
+
+    /// Bank count of a multi-bank DP (shared across architectures; the
+    /// arch-specific slots stay per-bank). Encoding contract: `0.0`
+    /// means single-bank — the pre-banking parameter layout — and
+    /// [`crate::arch::Banked::pjrt_params`] writes the bank count only
+    /// when it is >= 2, so every single-bank parameter vector (and
+    /// therefore every existing result-cache key, which hashes this
+    /// vector) is bit-identical to the unbanked encoding.
+    pub const IDX_BANKS: usize = 15;
 }
 
 /// One operating point of a DP engine.
@@ -61,11 +70,30 @@ pub struct OpPoint {
     pub bw: u32,
     /// Column-ADC precision B_ADC.
     pub b_adc: u32,
+    /// Bank count (Sec. VI): the N-dimensional DP is split across
+    /// `banks` arrays of `ceil(N / banks)` rows each. The bare
+    /// architecture models describe a single array and ignore this
+    /// field; callers route multi-bank points through [`Banked`], which
+    /// is the one interpreter of the bank count. Declarative carrier
+    /// for the `--banks` sweep/domain axis.
+    pub banks: usize,
 }
 
 impl OpPoint {
     pub fn new(n: usize, bx: u32, bw: u32, b_adc: u32) -> Self {
-        Self { n, bx, bw, b_adc }
+        Self {
+            n,
+            bx,
+            bw,
+            b_adc,
+            banks: 1,
+        }
+    }
+
+    pub fn with_banks(mut self, banks: usize) -> Self {
+        assert!(banks >= 1, "bank count must be >= 1");
+        self.banks = banks;
+        self
     }
 }
 
@@ -142,6 +170,13 @@ impl EnergyBreakdown {
 /// A full IMC architecture: Table III closed forms + runtime param vector.
 pub trait ImcArch {
     fn name(&self) -> &'static str;
+
+    /// The technology node the model is instantiated on.
+    fn tech(&self) -> crate::tech::TechNode;
+
+    /// Closed-form per-DP silicon area (Table III array geometry; see
+    /// `crate::area` for the per-block constants and scaling rules).
+    fn area(&self, op: &OpPoint) -> crate::area::AreaBreakdown;
 
     /// Closed-form noise decomposition (Table III).
     fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown;

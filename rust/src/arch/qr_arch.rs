@@ -79,6 +79,14 @@ impl ImcArch for QrArch {
         "qr_arch"
     }
 
+    fn tech(&self) -> crate::tech::TechNode {
+        self.qr.tech
+    }
+
+    fn area(&self, op: &OpPoint) -> crate::area::AreaBreakdown {
+        crate::area::qr_area(&self.qr.tech, self.qr.c_o_ff(), op)
+    }
+
     fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown {
         let n = op.n as f64;
         let sigma_yo2 = crate::quant::dp_signal_variance(op.n, w, x);

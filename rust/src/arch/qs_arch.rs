@@ -62,6 +62,14 @@ impl ImcArch for QsArch {
         "qs_arch"
     }
 
+    fn tech(&self) -> crate::tech::TechNode {
+        self.qs.tech
+    }
+
+    fn area(&self, op: &OpPoint) -> crate::area::AreaBreakdown {
+        crate::area::qs_area(&self.qs.tech, op)
+    }
+
     fn noise(&self, op: &OpPoint, w: &SignalStats, x: &SignalStats) -> NoiseBreakdown {
         let n = op.n;
         let sigma_yo2 = crate::quant::dp_signal_variance(n, w, x);

@@ -1,0 +1,245 @@
+//! Silicon-area closed forms (the ROADMAP's fourth objective): per-DP
+//! mm² for each architecture from the Table III array geometry, scaling
+//! with technology node, DP dimension N, precision (B_x, B_w, B_ADC)
+//! and bank count.
+//!
+//! Geometry per Table III / Fig. 7:
+//!
+//! * **QS-Arch** — an N-row x B_w-column 6T SRAM array (one bit plane
+//!   per column), one SAR ADC per column, N word-line drivers and
+//!   B_w·B_x digital POT recombination slices.
+//! * **QR-Arch** — a B_w-row x N-column array of capacitor-augmented
+//!   bitcells (unit cap C_o each), one SAR ADC per row, a B_x-bit DAC
+//!   slice per column.
+//! * **CM** — an N-column x B_w-row array, one sampling cap and one
+//!   mixed-signal multiplier per column, a single DP-level SAR ADC.
+//! * **Banked** — `banks` copies of the N/banks-row geometry plus a
+//!   `banks - 1`-slice digital adder tree (`arch::Banked` composes this
+//!   from the per-bank breakdown).
+//!
+//! Digital/bitcell blocks scale with F² (F = feature size); MOM caps
+//! and the SAR cap-DAC are matching-limited and therefore roughly
+//! node-independent — which is why cap-heavy QR arrays stop shrinking
+//! with scaling while QS arrays keep pace (the area-side counterpart of
+//! the Fig. 13 energy story).
+//!
+//! All block constants below are layout-typical standard-cell numbers,
+//! not extracted from any one chip; the closed forms are pinned by
+//! `tests/golden_snr.rs` and exercised as the fourth Pareto objective
+//! throughout `crate::opt`.
+
+use crate::arch::OpPoint;
+use crate::tech::TechNode;
+
+/// MOM (lateral-flux) capacitor density [fF/µm²], node-independent.
+pub const MOM_CAP_DENSITY_FF_UM2: f64 = 2.0;
+/// SAR cap-DAC unit capacitor [fF] (matching-limited).
+pub const ADC_UNIT_CAP_FF: f64 = 0.5;
+/// 6T SRAM bitcell [F²] (QS-Arch array).
+pub const SRAM_6T_F2: f64 = 150.0;
+/// Capacitor-augmented 8T compute bitcell [F²] (QR-Arch / CM array),
+/// excluding its unit cap (costed separately at MOM density).
+pub const CELL_8T_F2: f64 = 190.0;
+/// Word-line driver slice per row [F²].
+pub const WL_DRIVER_F2: f64 = 40.0;
+/// Digital POT recombination slice per (weight, input) bit plane [F²]
+/// (QS-Arch).
+pub const POT_LOGIC_F2: f64 = 60.0;
+/// Per-column activation-DAC slice per input bit [F²] (QR-Arch).
+pub const DAC_SLICE_F2: f64 = 80.0;
+/// Mixed-signal multiplier per column [F²] (CM).
+pub const MULT_F2: f64 = 350.0;
+/// Comparator + SAR logic per ADC bit [F²].
+pub const ADC_LOGIC_F2: f64 = 900.0;
+/// One two-input adder slice of the bank recombination tree [F²].
+pub const BANK_ADDER_F2: f64 = 2000.0;
+
+const UM2_TO_MM2: f64 = 1e-6;
+
+/// Feature size in µm.
+pub fn f_um(node: &TechNode) -> f64 {
+    node.node_nm as f64 * 1e-3
+}
+
+/// Area of `f2` squared-feature units at this node, in µm².
+pub fn f2_um2(node: &TechNode, f2: f64) -> f64 {
+    let f = f_um(node);
+    f2 * f * f
+}
+
+/// One SAR column/row ADC [µm²]: per-bit comparator/logic slices (scale
+/// with F²) plus a binary-weighted cap-DAC of 2^B unit caps (matching-
+/// limited, node-independent). Strictly increasing in `b_adc` — the
+/// monotonicity the branch-and-bound area bound relies on.
+pub fn adc_um2(node: &TechNode, b_adc: u32) -> f64 {
+    f2_um2(node, ADC_LOGIC_F2) * b_adc as f64
+        + 2f64.powi(b_adc as i32) * ADC_UNIT_CAP_FF / MOM_CAP_DENSITY_FF_UM2
+}
+
+/// The `banks - 1` adder slices of a bank recombination tree [µm²].
+pub fn bank_adder_um2(node: &TechNode, banks: usize) -> f64 {
+    banks.saturating_sub(1) as f64 * f2_um2(node, BANK_ADDER_F2)
+}
+
+/// The adder tree in mm² — the unit `arch::Banked` composes into its
+/// [`AreaBreakdown`], so the µm²->mm² conversion lives in one place.
+pub fn bank_adder_mm2(node: &TechNode, banks: usize) -> f64 {
+    bank_adder_um2(node, banks) * UM2_TO_MM2
+}
+
+/// Per-DP area decomposition [mm²] (the area analogue of
+/// `arch::EnergyBreakdown`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AreaBreakdown {
+    /// Bitcell array [mm²].
+    pub array_mm2: f64,
+    /// MOM sampling/unit capacitors [mm²] (QR/CM only).
+    pub caps_mm2: f64,
+    /// Column/row/DP ADCs [mm²].
+    pub adc_mm2: f64,
+    /// Drivers, DACs, multipliers, recombination logic, bank adder
+    /// tree [mm²].
+    pub periphery_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.array_mm2 + self.caps_mm2 + self.adc_mm2 + self.periphery_mm2
+    }
+
+    /// Every component scaled by `k` (banking replicates the per-bank
+    /// geometry `banks` times).
+    pub fn scaled(&self, k: f64) -> AreaBreakdown {
+        AreaBreakdown {
+            array_mm2: self.array_mm2 * k,
+            caps_mm2: self.caps_mm2 * k,
+            adc_mm2: self.adc_mm2 * k,
+            periphery_mm2: self.periphery_mm2 * k,
+        }
+    }
+}
+
+/// QS-Arch per-DP area (N x B_w 6T array, B_w column ADCs).
+pub fn qs_area(node: &TechNode, op: &OpPoint) -> AreaBreakdown {
+    let n = op.n as f64;
+    let bw = op.bw as f64;
+    let bx = op.bx as f64;
+    AreaBreakdown {
+        array_mm2: n * bw * f2_um2(node, SRAM_6T_F2) * UM2_TO_MM2,
+        caps_mm2: 0.0,
+        adc_mm2: bw * adc_um2(node, op.b_adc) * UM2_TO_MM2,
+        periphery_mm2: (n * f2_um2(node, WL_DRIVER_F2)
+            + bw * bx * f2_um2(node, POT_LOGIC_F2))
+            * UM2_TO_MM2,
+    }
+}
+
+/// QR-Arch per-DP area (B_w x N cap-augmented array with a C_o unit cap
+/// per cell, B_w row ADCs, a B_x-bit DAC slice per column).
+pub fn qr_area(node: &TechNode, c_o_ff: f64, op: &OpPoint) -> AreaBreakdown {
+    let n = op.n as f64;
+    let bw = op.bw as f64;
+    let bx = op.bx as f64;
+    AreaBreakdown {
+        array_mm2: n * bw * f2_um2(node, CELL_8T_F2) * UM2_TO_MM2,
+        caps_mm2: n * bw * c_o_ff / MOM_CAP_DENSITY_FF_UM2 * UM2_TO_MM2,
+        adc_mm2: bw * adc_um2(node, op.b_adc) * UM2_TO_MM2,
+        periphery_mm2: n * bx * f2_um2(node, DAC_SLICE_F2) * UM2_TO_MM2,
+    }
+}
+
+/// CM per-DP area (N x B_w array, one sampling cap + multiplier per
+/// column, a single DP ADC).
+pub fn cm_area(node: &TechNode, c_o_ff: f64, op: &OpPoint) -> AreaBreakdown {
+    let n = op.n as f64;
+    let bw = op.bw as f64;
+    AreaBreakdown {
+        array_mm2: n * bw * f2_um2(node, CELL_8T_F2) * UM2_TO_MM2,
+        caps_mm2: n * c_o_ff / MOM_CAP_DENSITY_FF_UM2 * UM2_TO_MM2,
+        adc_mm2: adc_um2(node, op.b_adc) * UM2_TO_MM2,
+        periphery_mm2: n
+            * (f2_um2(node, WL_DRIVER_F2) + f2_um2(node, MULT_F2))
+            * UM2_TO_MM2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(n: usize, b_adc: u32) -> OpPoint {
+        OpPoint::new(n, 6, 6, b_adc)
+    }
+
+    #[test]
+    fn magnitudes_are_plausible_at_65nm() {
+        // a 512x6 QS macro slice: a few thousand µm², dominated by cells
+        let t = TechNode::n65();
+        let a = qs_area(&t, &op(512, 8));
+        assert!(a.total_mm2() > 1e-3 && a.total_mm2() < 1e-2, "{a:?}");
+        assert!(a.array_mm2 > a.adc_mm2, "cells dominate ADCs");
+        assert_eq!(a.caps_mm2, 0.0, "QS has no MOM caps");
+    }
+
+    #[test]
+    fn qr_caps_dominate_and_resist_scaling() {
+        let big = TechNode::n65();
+        let small = TechNode::n7();
+        let o = op(512, 8);
+        let a65 = qr_area(&big, 3.0, &o);
+        let a7 = qr_area(&small, 3.0, &o);
+        assert!(a65.caps_mm2 > a65.array_mm2, "3 fF caps outweigh cells");
+        // digital shrinks ~(65/7)^2, caps not at all
+        assert!(a7.array_mm2 < a65.array_mm2 / 50.0);
+        assert_eq!(a7.caps_mm2, a65.caps_mm2, "MOM density is node-flat");
+        assert!(a7.total_mm2() > a65.total_mm2() * 0.3);
+    }
+
+    #[test]
+    fn adc_area_strictly_grows_with_bits() {
+        let t = TechNode::n65();
+        for b in 1..14 {
+            assert!(adc_um2(&t, b + 1) > adc_um2(&t, b));
+        }
+        // cap-DAC takes over at high resolution
+        assert!(adc_um2(&t, 14) > 4.0 * adc_um2(&t, 8));
+    }
+
+    #[test]
+    fn per_arch_ordering_at_reference_shape() {
+        // same cell count everywhere; QR adds N*Bw caps, CM N caps — so
+        // area orders QS < CM < QR at the 512-row reference.
+        let t = TechNode::n65();
+        let o = op(512, 8);
+        let qs = qs_area(&t, &o).total_mm2();
+        let cm = cm_area(&t, 3.0, &o).total_mm2();
+        let qr = qr_area(&t, 3.0, &o).total_mm2();
+        assert!(qs < cm, "{qs} {cm}");
+        assert!(cm < qr, "{cm} {qr}");
+    }
+
+    #[test]
+    fn bank_adder_is_zero_for_one_bank() {
+        let t = TechNode::n65();
+        assert_eq!(bank_adder_um2(&t, 1), 0.0);
+        assert_eq!(bank_adder_um2(&t, 0), 0.0);
+        assert!(bank_adder_um2(&t, 4) > bank_adder_um2(&t, 2));
+        assert_eq!(bank_adder_mm2(&t, 1), 0.0);
+        assert_eq!(
+            bank_adder_mm2(&t, 4).to_bits(),
+            (bank_adder_um2(&t, 4) * 1e-6).to_bits()
+        );
+    }
+
+    #[test]
+    fn scaled_breakdown_scales_every_component() {
+        let t = TechNode::n65();
+        let a = qr_area(&t, 3.0, &op(128, 6));
+        let b = a.scaled(4.0);
+        assert_eq!(b.array_mm2, a.array_mm2 * 4.0);
+        assert_eq!(b.caps_mm2, a.caps_mm2 * 4.0);
+        assert_eq!(b.adc_mm2, a.adc_mm2 * 4.0);
+        assert_eq!(b.periphery_mm2, a.periphery_mm2 * 4.0);
+        assert!((b.total_mm2() - 4.0 * a.total_mm2()).abs() < 1e-15);
+    }
+}

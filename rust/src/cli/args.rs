@@ -82,6 +82,14 @@ EXAMPLES:
   # highest-accuracy design under an energy budget
   imclim optimize --objective max-snr --energy-max 5e-12 --delay-max 2.5
 
+  # banked ceiling escape (conclusion 4): let the optimizer split large
+  # arrays into banks, with silicon area as the fourth frontier axis
+  imclim pareto --arch qs,qr --n 64:512:64 --banks 1,2,4 --b-adc 4:10
+
+  # smallest design reaching 18 dB, and a hard area budget variant
+  imclim optimize --objective min-area --snr-t-min 18
+  imclim optimize --objective min-energy --snr-t-min 18 --area-max 5e-3
+
   # machine-check conclusion 3: the QS->QR preference flip appears once
   # Bx/Bw scale with the target (precision assignment), N held at 512
   imclim pareto --crossover --n 512 --bx 1:8 --bw 1:8 --b-adc 1:14 \\

@@ -39,7 +39,7 @@ use crate::figures::FigCtx;
 use crate::mc::{ArchKind, InputDist};
 use crate::tech::TechNode;
 use crate::util::csv::CsvWriter;
-use crate::util::table::{fmt_db, fmt_energy, Table};
+use crate::util::table::{fmt_area, fmt_db, fmt_energy, Table};
 use args::{parse_bytes, parse_duration_secs, Args};
 
 const USAGE: &str = "\
@@ -50,15 +50,19 @@ USAGE: imclim <command> [options]
 COMMANDS:
   figure <name|all>   regenerate a figure/table (fig2 fig4a fig4b fig9a
                       fig9b fig10a fig10b fig11a fig11b fig12 fig13
-                      table1 table2 table3)
+                      banked table1 table2 table3)
   table <1|2|3>       shorthand for table1/table2/table3
   sweep               design-space grid through the cached engine; every
                       axis takes lists \"a,b,c\" and ranges \"lo:hi[:step]\":
                       --arch qs,qr,cm --n 64,128 --bx 6 --bw 6
                       --b-adc 4:10 --vwl 0.6:0.8:0.1 --co 1,3,9
-                      --node 65,7 --dist uniform,gauss [--seed S]
-                      emits <out-dir>/sweep.csv; repeated points are
-                      served from the cache under <out-dir>/cache
+                      --node 65,7 --banks 1,2,4 --dist uniform,gauss
+                      [--seed S]
+                      emits <out-dir>/sweep.csv (closed forms incl. the
+                      Table III area model per point); repeated points
+                      are served from the cache under <out-dir>/cache;
+                      --banks K splits each DP over K arrays of N/K rows
+                      (Sec. VI ceiling escape; native backend only)
                         --procs K    distribute over K shard subprocesses,
                                      merge their caches, then emit the
                                      canonical CSV from the merged cache
@@ -66,13 +70,15 @@ COMMANDS:
                                      --keep-shards keeps shard-i/ dirs
                         --shard i/K  run only shard i of a K-way split
                                      (point ids and cache keys unchanged)
-  pareto              Pareto frontier (max SNR_T, min energy, min delay)
-                      of a design domain, from the closed-form models by
-                      dominance-pruned branch-and-bound; same axis syntax
-                      as sweep plus QS/CM knob --vwl and QR knob --co
-                      (irrelevant knobs are dropped per architecture):
+  pareto              four-objective Pareto frontier (max SNR_T, min
+                      energy, min delay, min area) of a design domain,
+                      from the closed-form models by dominance-pruned
+                      branch-and-bound; same axis syntax as sweep plus
+                      QS/CM knob --vwl and QR knob --co (irrelevant
+                      knobs are dropped per architecture):
                       --arch qs,qr --node 65 --vwl 0.6:0.9:0.1 --co 3
                       --n 64:512:64 --bx 6 --bw 6 --b-adc 4:10
+                      --banks 1,2,4
                       emits <out-dir>/pareto.csv (no row is dominated)
                         --procs K     extract over K worker threads
                                       (round-robin family shards merged
@@ -87,10 +93,11 @@ COMMANDS:
                                       report over --targets (default
                                       1:28:1 dB), emitting crossover.csv
   optimize            constrained optimum over the same domain axes:
-                      --objective min-energy|min-delay|max-snr with any
-                      of --snr-t-min DB, --energy-max J, --delay-max NS;
-                      prints the winning design (always a Pareto point
-                      of its domain) + its MPC ADC assignment, and emits
+                      --objective min-energy|min-delay|max-snr|min-area
+                      with any of --snr-t-min DB, --energy-max J,
+                      --delay-max NS, --area-max MM2; prints the winning
+                      design (always a Pareto point of its domain) + its
+                      MPC ADC assignment, and emits
                       <out-dir>/optimize.csv
   merge <dir>...      union shard cache dirs (or their out-dirs) into
                       <out-dir>/cache, rebuilding the manifest; reports
@@ -229,13 +236,15 @@ fn cmd_table(args: &Args) -> anyhow::Result<()> {
 /// `opt::Family::build`, the same constructor the design-space
 /// optimizer uses, so `imclim sweep` and `pareto --validate` produce
 /// identical `pjrt_params` (and therefore share cache records) by
-/// construction. The shape fields of the throwaway family are dummies:
-/// only (arch, node, knobs) feed the model.
+/// construction. A bank count > 1 yields the `arch::Banked` variant.
+/// The shape fields of the throwaway family are dummies: only (arch,
+/// node, knobs, banks) feed the model.
 fn build_arch(
     name: &str,
     node: TechNode,
     v_wl: f64,
     c_ff: f64,
+    banks: usize,
 ) -> anyhow::Result<(Box<dyn ImcArch>, ArchKind)> {
     let arch = crate::opt::ArchChoice::parse(name)?;
     let family = crate::opt::Family {
@@ -246,6 +255,7 @@ fn build_arch(
         n: 1,
         bx: 1,
         bw: 1,
+        banks,
     };
     Ok((family.build(), arch.kind()))
 }
@@ -261,11 +271,13 @@ struct SweepMeta {
     bx: u32,
     bw: u32,
     b_adc: u32,
+    banks: usize,
     dist: String,
     nb: crate::arch::NoiseBreakdown,
     b_adc_min: u32,
     energy_mpc_j: f64,
     delay_ns: f64,
+    area_mm2: f64,
 }
 
 fn csv_list(raw: &str) -> Vec<String> {
@@ -400,6 +412,20 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
     let bxs = parse_grid_u32(args.opt("bx").unwrap_or("6"))?;
     let bws = parse_grid_u32(args.opt("bw").unwrap_or("6"))?;
     let b_adcs = parse_grid_u32(args.opt("b-adc").unwrap_or("8"))?;
+    let banks_axis = parse_grid_usize(args.opt("banks").unwrap_or("1"))?;
+    for &k in &banks_axis {
+        anyhow::ensure!(k >= 1, "bank count must be >= 1, got {k}");
+        // the sweep grid is a cartesian product, so every bank count
+        // pairs with every N: splitting an N-row DP into more than N
+        // banks would mislabel a larger machine as that N
+        if let Some(&n_min) = ns.iter().min() {
+            anyhow::ensure!(
+                k <= n_min,
+                "bank count {k} exceeds the smallest N in the grid ({n_min}): \
+                 every --banks value must divide into every --n value's rows"
+            );
+        }
+    }
     let seed = args.opt_parse("seed", 7u64);
 
     let arch_refs: Vec<&str> = archs.iter().map(String::as_str).collect();
@@ -414,6 +440,7 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
         .axis_u32("bx", &bxs)
         .axis_u32("bw", &bws)
         .axis_u32("badc", &b_adcs)
+        .axis_usize("banks", &banks_axis)
         .axis_strs("dist", &dist_refs);
     // the *full* grid must be non-empty; an individual shard may still
     // be (more shards than points), which is fine — it emits zero rows.
@@ -436,9 +463,10 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
         let bx = gp.int(5) as u32;
         let bw = gp.int(6) as u32;
         let b_adc = gp.int(7) as u32;
-        let dist = gp.text(8).to_string();
-        let (arch, kind) = build_arch(&arch_name, node, v_wl, c_ff)?;
-        let op = OpPoint::new(n, bx, bw, b_adc);
+        let banks = gp.int(8) as usize;
+        let dist = gp.text(9).to_string();
+        let (arch, kind) = build_arch(&arch_name, node, v_wl, c_ff, banks)?;
+        let op = OpPoint::new(n, bx, bw, b_adc).with_banks(banks);
         let mut point =
             crate::figures::sweep_point(arch.as_ref(), kind, gp.id.clone(), &op, ctx.trials, seed);
         if dist == "gauss" {
@@ -453,11 +481,13 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
             bx,
             bw,
             b_adc,
+            banks,
             dist,
             nb: arch.noise(&op, &w, &x),
             b_adc_min: arch.b_adc_min(&op, &w, &x),
             energy_mpc_j: arch.energy(&op, AdcCriterion::Mpc, &w, &x).total(),
             delay_ns: arch.delay(&op) * 1e9,
+            area_mm2: arch.area(&op).total_mm2(),
         });
         points.push(point);
     }
@@ -473,6 +503,7 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
         "bx",
         "bw",
         "b_adc",
+        "banks",
         "dist",
         "snr_a_closed_db",
         "snr_a_sim_db",
@@ -480,6 +511,7 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
         "b_adc_min_mpc",
         "energy_mpc_j",
         "delay_ns",
+        "area_mm2",
         "error",
     ]);
     for (m, r) in meta.iter().zip(&results) {
@@ -492,6 +524,7 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
             m.bx.to_string(),
             m.bw.to_string(),
             m.b_adc.to_string(),
+            m.banks.to_string(),
             m.dist.clone(),
             format!("{:.4}", m.nb.snr_a_total_db()),
             format!("{:.4}", r.measured.snr_a_total_db),
@@ -499,6 +532,7 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
             m.b_adc_min.to_string(),
             format!("{:.6e}", m.energy_mpc_j),
             format!("{:.4}", m.delay_ns),
+            format!("{:.6e}", m.area_mm2),
             r.error.clone().unwrap_or_default(),
         ]);
     }
@@ -512,8 +546,18 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
             anyhow::bail!("sweep point failed: {e}");
         }
         let mut t = Table::new(&["metric", "closed form", "simulated"]).with_title(&format!(
-            "{} at N={} Bx={} Bw={} B_ADC={} ({} nm)",
-            m.arch, m.n, m.bx, m.bw, m.b_adc, m.node_nm
+            "{} at N={} Bx={} Bw={} B_ADC={}{} ({} nm)",
+            m.arch,
+            m.n,
+            m.bx,
+            m.bw,
+            m.b_adc,
+            if m.banks > 1 {
+                format!(" banks={}", m.banks)
+            } else {
+                String::new()
+            },
+            m.node_nm
         ));
         t.row(vec![
             "SQNR_qiy (dB)".into(),
@@ -550,6 +594,7 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
             format!("{:.2} ns", m.delay_ns),
             "-".into(),
         ]);
+        t.row(vec!["area".into(), fmt_area(m.area_mm2), "-".into()]);
         println!("{}", t.render());
     } else {
         let shown = results.len().min(10);
@@ -614,6 +659,7 @@ fn parse_opt_domain(args: &Args) -> anyhow::Result<crate::opt::Domain> {
         bxs: parse_grid_u32(args.opt("bx").unwrap_or("6"))?,
         bws: parse_grid_u32(args.opt("bw").unwrap_or("6"))?,
         b_adcs: parse_grid_u32(args.opt("b-adc").unwrap_or("4:10"))?,
+        banks: parse_grid_usize(args.opt("banks").unwrap_or("1"))?,
     }
     .normalized()
 }
@@ -629,12 +675,14 @@ fn design_point_csv() -> CsvWriter {
         "n",
         "bx",
         "bw",
+        "banks",
         "b_adc",
         "b_adc_mpc",
         "snr_a_db",
         "snr_t_db",
         "energy_j",
         "delay_ns",
+        "area_mm2",
         "snr_t_sim_db",
         "sim_error",
     ])
@@ -649,12 +697,14 @@ fn design_point_row(csv: &mut CsvWriter, p: &crate::opt::DesignPoint, sim: &str,
         p.family.n.to_string(),
         p.family.bx.to_string(),
         p.family.bw.to_string(),
+        p.family.banks.to_string(),
         p.b_adc.to_string(),
         p.b_adc_mpc.to_string(),
         format!("{:.4}", p.snr_a_total_db),
         format!("{:.4}", p.snr_t_db),
         format!("{:.6e}", p.energy_j),
         format!("{:.4}", p.delay_ns()),
+        format!("{:.6e}", p.area_mm2),
         sim.to_string(),
         err.to_string(),
     ]);
@@ -683,8 +733,12 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
             .points
             .iter()
             .map(|p| {
+                // `Family::build` yields the Banked wrapper for banked
+                // families, so the parameter vector carries the bank
+                // count and the native simulator runs the banked
+                // ensemble (pjrt rejects such points).
                 let arch = p.family.build();
-                let op = OpPoint::new(p.family.n, p.family.bx, p.family.bw, p.b_adc);
+                let op = p.family.op(p.b_adc);
                 crate::coordinator::SweepPoint::new(
                     format!("pareto/{}", p.label()),
                     p.family.arch.kind(),
@@ -732,17 +786,20 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     );
 
     let shown = frontier.points.len().min(10);
-    let mut t = Table::new(&["design", "SNR_T (dB)", "energy/DP", "delay"]).with_title(&format!(
-        "Pareto frontier: {} of {} candidates survive",
-        frontier.points.len(),
-        frontier.points_total
-    ));
+    let mut t = Table::new(&["design", "SNR_T (dB)", "energy/DP", "delay", "area"]).with_title(
+        &format!(
+            "Pareto frontier: {} of {} candidates survive",
+            frontier.points.len(),
+            frontier.points_total
+        ),
+    );
     for p in frontier.points.iter().take(shown) {
         t.row(vec![
             p.label(),
             fmt_db(p.snr_t_db),
             fmt_energy(p.energy_j),
             format!("{:.2} ns", p.delay_ns()),
+            fmt_area(p.area_mm2),
         ]);
     }
     println!("{}", t.render());
@@ -823,6 +880,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         snr_t_min_db: parse_f64_opt("snr-t-min")?,
         energy_max_j: parse_f64_opt("energy-max")?,
         delay_max_s: parse_f64_opt("delay-max")?.map(|ns| ns * 1e-9),
+        area_max_mm2: parse_f64_opt("area-max")?,
     };
     let (ctx, _service) = make_ctx(args)?;
     std::fs::create_dir_all(&ctx.out_dir)?;
@@ -853,6 +911,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     t.row(vec!["SNR_T (dB)".into(), fmt_db(best.snr_t_db)]);
     t.row(vec!["energy/DP".into(), fmt_energy(best.energy_j)]);
     t.row(vec!["delay/DP".into(), format!("{:.2} ns", best.delay_ns())]);
+    t.row(vec!["area".into(), fmt_area(best.area_mm2)]);
     t.row(vec![
         "B_ADC".into(),
         if best.b_adc == best.b_adc_mpc {
@@ -1062,7 +1121,7 @@ fn cmd_smoke(args: &Args) -> anyhow::Result<()> {
 fn cmd_info() -> anyhow::Result<()> {
     let (w, x) = crate::figures::uniform_stats();
     let mut t = Table::new(&[
-        "arch", "knob", "SNR_a (dB)", "B_ADC", "energy/DP", "delay",
+        "arch", "knob", "SNR_a (dB)", "B_ADC", "energy/DP", "delay", "area",
     ])
     .with_title("Design space at N=128, Bx=Bw=6 (65 nm)");
     let op = OpPoint::new(128, 6, 6, 8);
@@ -1101,6 +1160,7 @@ fn cmd_info() -> anyhow::Result<()> {
             a.b_adc_min(&op, &w, &x).to_string(),
             fmt_energy(e.total()),
             format!("{:.1} ns", a.delay(&op) * 1e9),
+            fmt_area(a.area(&op).total_mm2()),
         ]);
     }
     println!("{}", t.render());

@@ -224,6 +224,15 @@ pub fn run_point(point: &SweepPoint, backend: &Backend) -> anyhow::Result<Measur
             Ok(crate::mc::measure(&out))
         }
         Backend::Pjrt { handle, suffix } => {
+            // Banked points are native-only: the AOT artifacts model a
+            // single array and would silently ignore the bank slot.
+            anyhow::ensure!(
+                point.params[pvec::IDX_BANKS] < 2.0,
+                "point {} is banked (banks={}): multi-bank simulation is \
+                 native-only, rerun with --backend native",
+                point.id,
+                point.params[pvec::IDX_BANKS]
+            );
             // QS correlated-mismatch mode is a separate (heavier) artifact
             let corr = point.kind == ArchKind::Qs
                 && point.params[pvec::QS_IDX_MODE] >= 0.5;

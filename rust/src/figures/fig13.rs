@@ -30,6 +30,7 @@ fn family(arch: ArchChoice, node: TechNode, v_wl: Option<f64>, c_ff: Option<f64>
         n: 100,
         bx: 3,
         bw: 4,
+        banks: 1,
     }
 }
 

@@ -11,6 +11,7 @@
 //! recomputes nothing and reproduces the cold run byte-for-byte.
 
 pub mod ablation;
+pub mod banked;
 pub mod fig12;
 pub mod fig13;
 pub mod fig2;
@@ -135,7 +136,8 @@ pub fn uniform_stats() -> (crate::quant::SignalStats, crate::quant::SignalStats)
 /// All figure names, in paper order.
 pub const ALL_FIGURES: &[&str] = &[
     "fig2", "fig4a", "fig4b", "fig9a", "fig9b", "fig10a", "fig10b", "fig11a",
-    "fig11b", "fig12", "fig13", "table1", "table2", "table3", "ablation",
+    "fig11b", "fig12", "fig13", "banked", "table1", "table2", "table3",
+    "ablation",
 ];
 
 /// Dispatch by name ("all" runs everything).
@@ -159,6 +161,7 @@ pub fn run(name: &str, ctx: &FigCtx) -> anyhow::Result<Vec<FigSummary>> {
             "fig11b" => fig11::run_b(ctx)?,
             "fig12" => fig12::run(ctx)?,
             "fig13" => fig13::run(ctx)?,
+            "banked" => banked::run(ctx)?,
             "table1" => tables::table1(ctx)?,
             "table2" => tables::table2(ctx)?,
             "table3" => tables::table3(ctx)?,

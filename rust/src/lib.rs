@@ -27,6 +27,7 @@
 //! Python invocation; everything else is this binary.
 
 pub mod arch;
+pub mod area;
 pub mod bench;
 pub mod cli;
 pub mod compute;

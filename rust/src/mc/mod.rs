@@ -111,7 +111,23 @@ impl McOutput {
     }
 }
 
+/// Derive the RNG seed of one bank's sub-ensemble: a SplitMix64-style
+/// odd-constant mix (offset by one so even bank 0 moves off the raw
+/// seed) keeps bank streams disjoint from each other *and* from a
+/// single-bank run at the same user seed.
+fn bank_seed(seed: u64, bank: u64) -> u64 {
+    seed.wrapping_add((bank + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
 /// Run `trials` Monte-Carlo trials of the given architecture.
+///
+/// A parameter vector with `pvec::IDX_BANKS >= 2` describes a banked DP
+/// (Sec. VI): the arch-specific slots are *per-bank* (slot 0 holds the
+/// per-bank row count), and the banked ensemble is the per-trial sum of
+/// `banks` independent per-bank ensembles — partial DPs digitized per
+/// bank and recombined digitally, exactly the `arch::Banked` closed
+/// form's decomposition. Slot values 0.0 and 1.0 both mean single-bank
+/// (0.0 is the legacy encoding that keeps existing cache keys).
 pub fn simulate(
     kind: ArchKind,
     params: &[f64; pvec::P],
@@ -119,6 +135,28 @@ pub fn simulate(
     seed: u64,
     dist: InputDist,
 ) -> McOutput {
+    let banks = params[pvec::IDX_BANKS] as usize;
+    if banks >= 2 {
+        let mut bank_params = *params;
+        bank_params[pvec::IDX_BANKS] = 0.0;
+        let mut out = simulate(kind, &bank_params, trials, bank_seed(seed, 0), dist);
+        for b in 1..banks {
+            let sub = simulate(kind, &bank_params, trials, bank_seed(seed, b as u64), dist);
+            for (acc, v) in out.y_ideal.iter_mut().zip(&sub.y_ideal) {
+                *acc += v;
+            }
+            for (acc, v) in out.y_fx.iter_mut().zip(&sub.y_fx) {
+                *acc += v;
+            }
+            for (acc, v) in out.y_a.iter_mut().zip(&sub.y_a) {
+                *acc += v;
+            }
+            for (acc, v) in out.y_hat.iter_mut().zip(&sub.y_hat) {
+                *acc += v;
+            }
+        }
+        return out;
+    }
     let mut out = McOutput::with_capacity(trials);
     let mut rng = Pcg64::new(seed);
     let n = params[pvec::IDX_N_ACTIVE] as usize;
@@ -500,6 +538,50 @@ mod tests {
         assert_eq!(a.y_hat, b.y_hat);
         let c = simulate(ArchKind::Qs, &p, 16, 10, InputDist::Uniform);
         assert_ne!(a.y_hat, c.y_hat);
+    }
+
+    #[test]
+    fn banked_params_sum_independent_bank_ensembles() {
+        // banks = 4 with per-bank params must equal the hand-built sum
+        // of 4 independent per-bank simulations on the derived seeds.
+        let mut p = base_params(64, 6, 6);
+        p[pvec::QS_IDX_SIGMA_D] = 0.1;
+        p[pvec::QS_IDX_K_H] = 50.0;
+        p[pvec::QS_IDX_V_C] = 50.0;
+        let mut banked = p;
+        banked[pvec::IDX_BANKS] = 4.0;
+        let got = simulate(ArchKind::Qs, &banked, 32, 9, InputDist::Uniform);
+        let mut want = vec![0.0; 32];
+        for b in 0..4u64 {
+            let sub = simulate(ArchKind::Qs, &p, 32, super::bank_seed(9, b), InputDist::Uniform);
+            for (acc, v) in want.iter_mut().zip(&sub.y_hat) {
+                *acc += v;
+            }
+        }
+        assert_eq!(got.y_hat, want);
+        assert_eq!(got.len(), 32);
+        // a banks slot of 1.0 is single-bank, same as the 0.0 encoding
+        let mut one = p;
+        one[pvec::IDX_BANKS] = 1.0;
+        let a = simulate(ArchKind::Qs, &one, 16, 3, InputDist::Uniform);
+        let b = simulate(ArchKind::Qs, &p, 16, 3, InputDist::Uniform);
+        assert_eq!(a.y_hat, b.y_hat);
+    }
+
+    #[test]
+    fn bank_streams_are_disjoint() {
+        let mut p = base_params(32, 4, 4);
+        p[pvec::QS_IDX_SIGMA_D] = 0.1;
+        p[pvec::QS_IDX_K_H] = 40.0;
+        p[pvec::QS_IDX_V_C] = 40.0;
+        let a = simulate(ArchKind::Qs, &p, 8, super::bank_seed(7, 0), InputDist::Uniform);
+        let b = simulate(ArchKind::Qs, &p, 8, super::bank_seed(7, 1), InputDist::Uniform);
+        assert_ne!(a.y_hat, b.y_hat, "banks draw independent ensembles");
+        // and bank 0 must not alias a single-bank run at the raw seed:
+        // the same per-bank params at user seed 7 are a legitimate
+        // stand-alone point whose ensemble stays uncorrelated
+        let raw = simulate(ArchKind::Qs, &p, 8, 7, InputDist::Uniform);
+        assert_ne!(a.y_hat, raw.y_hat, "bank 0 is mixed off the user seed");
     }
 
     #[test]

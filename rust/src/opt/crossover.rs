@@ -145,6 +145,7 @@ mod tests {
             bxs: vec![2, 4, 6],
             bws: vec![2, 4, 6],
             b_adcs: vec![2, 4, 6, 8],
+            banks: vec![1],
         }
         .normalized()
         .unwrap();
@@ -180,6 +181,7 @@ mod tests {
             bxs: vec![6],
             bws: vec![6],
             b_adcs: vec![8],
+            banks: vec![1],
         }
         .normalized()
         .unwrap();

@@ -12,7 +12,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::arch::{AdcCriterion, CmArch, ImcArch, OpPoint, QrArch, QsArch};
+use crate::arch::{AdcCriterion, Banked, CmArch, ImcArch, OpPoint, QrArch, QsArch};
 use crate::compute::{qr::QrModel, qs::QsModel};
 use crate::mc::ArchKind;
 use crate::quant::criteria::snr_t_with_mpc_adc_db;
@@ -78,6 +78,11 @@ pub struct Domain {
     pub bxs: Vec<u32>,
     pub bws: Vec<u32>,
     pub b_adcs: Vec<u32>,
+    /// Bank counts (Sec. VI): each family's DP is split across `banks`
+    /// arrays of ceil(N/banks) rows (`arch::Banked`). An empty axis
+    /// normalizes to the single-bank `[1]`, so pre-banking domain
+    /// literals keep their meaning.
+    pub banks: Vec<usize>,
 }
 
 impl Domain {
@@ -98,6 +103,11 @@ impl Domain {
             axis.sort_unstable();
             axis.dedup();
         }
+        if self.banks.is_empty() {
+            self.banks.push(1);
+        }
+        self.banks.sort_unstable();
+        self.banks.dedup();
         ensure!(!self.archs.is_empty(), "domain needs at least one arch");
         ensure!(!self.nodes.is_empty(), "domain needs at least one node");
         ensure!(!self.ns.is_empty(), "domain needs an N axis");
@@ -133,13 +143,25 @@ impl Domain {
         for &b in self.bxs.iter().chain(&self.bws).chain(&self.b_adcs) {
             ensure!((1..=30).contains(&b), "precision {b} out of range 1..=30");
         }
+        for &k in &self.banks {
+            ensure!(k >= 1, "bank count must be >= 1, got {k}");
+            ensure!(
+                k <= *self.ns.iter().max().expect("ns checked non-empty"),
+                "bank count {k} exceeds every N in the domain"
+            );
+        }
         Ok(self)
     }
 
     /// All families of the domain (every analog configuration, B_ADC
     /// excluded), in canonical order. Architecture-irrelevant knobs are
     /// dropped: QS families span `vwls` only, QR families `cos` only, CM
-    /// families the full `vwls x cos` product.
+    /// families the full `vwls x cos` product. Bank counts exceeding a
+    /// family's own N are dropped too — splitting an N-row DP into more
+    /// than N banks describes a different, larger machine than the
+    /// family's label, so such combinations are not members of the
+    /// design set (normalization already guarantees every bank count
+    /// fits at least one N).
     pub fn families(&self) -> Vec<Family> {
         let mut out = Vec::new();
         for &arch in &self.archs {
@@ -157,15 +179,21 @@ impl Domain {
                     for &n in &self.ns {
                         for &bx in &self.bxs {
                             for &bw in &self.bws {
-                                out.push(Family {
-                                    arch,
-                                    node: *node,
-                                    v_wl,
-                                    c_ff,
-                                    n,
-                                    bx,
-                                    bw,
-                                });
+                                for &banks in &self.banks {
+                                    if banks > n {
+                                        continue;
+                                    }
+                                    out.push(Family {
+                                        arch,
+                                        node: *node,
+                                        v_wl,
+                                        c_ff,
+                                        n,
+                                        bx,
+                                        bw,
+                                        banks,
+                                    });
+                                }
                             }
                         }
                     }
@@ -203,15 +231,17 @@ impl Domain {
     }
 }
 
-/// Canonical family ordering key: architecture, node, knob bits, shape.
-pub type FamilyKey = (u8, u32, u64, u64, usize, u32, u32);
+/// Canonical family ordering key: architecture, node, knob bits, shape,
+/// bank count.
+pub type FamilyKey = (u8, u32, u64, u64, usize, u32, u32, usize);
 
 /// Canonical candidate ordering key: family key, then B_ADC.
 pub type PointKey = (FamilyKey, u32);
 
 /// One analog configuration: everything except the B_ADC axis. The
 /// knob options follow the architecture: `v_wl` is `Some` for QS/CM,
-/// `c_ff` for QR/CM.
+/// `c_ff` for QR/CM. `banks > 1` makes the family the `arch::Banked`
+/// variant of its architecture.
 #[derive(Clone, Debug)]
 pub struct Family {
     pub arch: ArchChoice,
@@ -221,12 +251,16 @@ pub struct Family {
     pub n: usize,
     pub bx: u32,
     pub bw: u32,
+    pub banks: usize,
 }
 
 impl Family {
-    /// Instantiate the closed-form architecture model.
+    /// Instantiate the closed-form architecture model; `banks > 1`
+    /// wraps it in [`Banked`] (a single-bank family stays the bare
+    /// architecture — `Banked(·, 1)` is bit-identical anyway, this just
+    /// skips the indirection).
     pub fn build(&self) -> Box<dyn ImcArch> {
-        match self.arch {
+        let bare: Box<dyn ImcArch> = match self.arch {
             ArchChoice::Qs => Box::new(QsArch::new(QsModel::new(
                 self.node,
                 self.v_wl.expect("QS family needs v_wl"),
@@ -239,32 +273,49 @@ impl Family {
                 QsModel::new(self.node, self.v_wl.expect("CM family needs v_wl")),
                 QrModel::new(self.node, self.c_ff.expect("CM family needs c_ff")),
             )),
+        };
+        if self.banks > 1 {
+            Box::new(Banked::new(bare, self.banks))
+        } else {
+            bare
         }
     }
 
-    fn op(&self, b_adc: u32) -> OpPoint {
-        OpPoint::new(self.n, self.bx, self.bw, b_adc)
+    /// The family's operating point at an ADC precision (bank count
+    /// included — `Banked` divides N internally).
+    pub fn op(&self, b_adc: u32) -> OpPoint {
+        OpPoint::new(self.n, self.bx, self.bw, b_adc).with_banks(self.banks)
     }
 
     /// Cheap bounds over the whole family, computable *without* the
-    /// noise decomposition (no `binomial_clip_moment`): energy and delay
-    /// are monotone non-decreasing in B_ADC, so their values at the
-    /// smallest grid B_ADC bound every family member from below, and
-    /// SNR_T < SNR_A < SQNR_qiy bounds accuracy from above. These are
-    /// the branch-and-bound tests of `opt::pareto` / `opt::optimize`.
+    /// noise decomposition (no `binomial_clip_moment`): energy, delay
+    /// and area are monotone non-decreasing in B_ADC, so their values at
+    /// the smallest grid B_ADC bound every family member from below, and
+    /// SNR_T < SNR_A < SQNR_qiy bounds accuracy from above. For a banked
+    /// family the SNR bound uses the *per-bank* dimension — the banked
+    /// ratio equals the per-bank one (signal and noise both scale by
+    /// `banks`), so the bound stays exact and the branch-and-bound of
+    /// `opt::pareto` / `opt::optimize` never prunes a frontier point.
     pub fn bounds(&self, b_adc_min: u32, w: &SignalStats, x: &SignalStats) -> FamilyBounds {
         let arch = self.build();
         let op = self.op(b_adc_min);
         FamilyBounds {
             energy_lb_j: arch.energy(&op, AdcCriterion::Fixed(b_adc_min), w, x).total(),
             delay_lb_s: arch.delay(&op),
-            snr_ub_db: crate::quant::sqnr_qiy_db(self.n, self.bw, self.bx, w, x),
+            area_lb_mm2: arch.area(&op).total_mm2(),
+            snr_ub_db: crate::quant::sqnr_qiy_db(
+                self.n.div_ceil(self.banks),
+                self.bw,
+                self.bx,
+                w,
+                x,
+            ),
         }
     }
 
     /// Canonical ordering key (total order over families): architecture,
-    /// node, knobs, then shape. Positive-float knob bits order like the
-    /// values themselves.
+    /// node, knobs, shape, then bank count. Positive-float knob bits
+    /// order like the values themselves.
     pub fn key(&self) -> FamilyKey {
         (
             match self.arch {
@@ -278,10 +329,13 @@ impl Family {
             self.n,
             self.bx,
             self.bw,
+            self.banks,
         )
     }
 
-    /// Sweep-style label fragment, e.g. `arch=qs/node=65/vwl=0.7/n=128/bx=6/bw=6`.
+    /// Sweep-style label fragment, e.g. `arch=qs/node=65/vwl=0.7/n=128/bx=6/bw=6`
+    /// (a `/banks=K` suffix appears only for banked families, keeping
+    /// single-bank labels identical to the pre-banking scheme).
     pub fn label(&self) -> String {
         use std::fmt::Write as _;
         let mut s = format!("arch={}/node={}", self.arch.name(), self.node.node_nm);
@@ -292,6 +346,9 @@ impl Family {
             let _ = write!(s, "/co={c}");
         }
         let _ = write!(s, "/n={}/bx={}/bw={}", self.n, self.bx, self.bw);
+        if self.banks > 1 {
+            let _ = write!(s, "/banks={}", self.banks);
+        }
         s
     }
 }
@@ -303,8 +360,11 @@ pub struct FamilyBounds {
     pub energy_lb_j: f64,
     /// Lower bound on every member's delay/DP [s].
     pub delay_lb_s: f64,
+    /// Lower bound on every member's silicon area [mm²] (the ADC block
+    /// grows strictly with B_ADC; everything else is B_ADC-flat).
+    pub area_lb_mm2: f64,
     /// Strict upper bound on every member's SNR_T [dB] (the input
-    /// quantization limit SQNR_qiy).
+    /// quantization limit SQNR_qiy at the per-bank dimension).
     pub snr_ub_db: f64,
 }
 
@@ -334,7 +394,8 @@ impl FamilyEval {
     }
 
     /// Cost one member of the family: closed-form SNR_T (eq. 11 + 14),
-    /// energy under `AdcCriterion::Fixed(b_adc)` and delay at `b_adc`.
+    /// energy under `AdcCriterion::Fixed(b_adc)`, delay and silicon
+    /// area at `b_adc`.
     pub fn design_point(&self, b_adc: u32, w: &SignalStats, x: &SignalStats) -> DesignPoint {
         let op = self.family.op(b_adc);
         DesignPoint {
@@ -348,6 +409,7 @@ impl FamilyEval {
                 .energy(&op, AdcCriterion::Fixed(b_adc), w, x)
                 .total(),
             delay_s: self.arch.delay(&op),
+            area_mm2: self.arch.area(&op).total_mm2(),
         }
     }
 }
@@ -363,18 +425,23 @@ pub struct DesignPoint {
     pub snr_t_db: f64,
     pub energy_j: f64,
     pub delay_s: f64,
+    /// Per-DP silicon area [mm²] (Table III geometry; `crate::area`).
+    pub area_mm2: f64,
 }
 
 impl DesignPoint {
-    /// Pareto dominance over (max SNR_T, min energy, min delay): no
-    /// worse on every objective and strictly better on at least one.
+    /// Pareto dominance over the four objectives (max SNR_T, min
+    /// energy, min delay, min area): no worse on every objective and
+    /// strictly better on at least one.
     pub fn dominates(&self, other: &DesignPoint) -> bool {
         self.snr_t_db >= other.snr_t_db
             && self.energy_j <= other.energy_j
             && self.delay_s <= other.delay_s
+            && self.area_mm2 <= other.area_mm2
             && (self.snr_t_db > other.snr_t_db
                 || self.energy_j < other.energy_j
-                || self.delay_s < other.delay_s)
+                || self.delay_s < other.delay_s
+                || self.area_mm2 < other.area_mm2)
     }
 
     /// Canonical total order over candidates (family key, then B_ADC).
@@ -407,6 +474,7 @@ mod tests {
             bxs: vec![6],
             bws: vec![6],
             b_adcs: vec![8, 4, 6],
+            banks: vec![1],
         }
         .normalized()
         .unwrap()
@@ -422,6 +490,46 @@ mod tests {
         // QS: 2 vwl x 2 n; QR: 1 co x 2 n
         assert_eq!(d.families().len(), 6);
         assert_eq!(d.point_count(), 18);
+        // an empty banks axis normalizes to single-bank
+        let defaulted = Domain {
+            banks: vec![],
+            ..small_domain()
+        }
+        .normalized()
+        .unwrap();
+        assert_eq!(defaulted.banks, vec![1]);
+        assert_eq!(defaulted.point_count(), 18);
+        // a banks axis multiplies the family count
+        let banked = Domain {
+            banks: vec![4, 1, 2],
+            ..small_domain()
+        }
+        .normalized()
+        .unwrap();
+        assert_eq!(banked.banks, vec![1, 2, 4]);
+        assert_eq!(banked.families().len(), 18);
+        // a bank count larger than a family's own N is not a member of
+        // that family's column (it would describe a bigger machine than
+        // the label): only the N values that fit keep it
+        let oversplit = Domain {
+            banks: vec![1, 96],
+            ..small_domain()
+        }
+        .normalized()
+        .unwrap();
+        // banks=96 exists only for the n=128 families: 6 + 3
+        assert_eq!(oversplit.families().len(), 9);
+        assert!(oversplit
+            .families()
+            .iter()
+            .all(|f| f.banks <= f.n), "no family is split past its rows");
+        // bank counts beyond every N are rejected
+        assert!(Domain {
+            banks: vec![256],
+            ..small_domain()
+        }
+        .normalized()
+        .is_err());
         // V_WL below V_t is rejected
         let bad = Domain {
             vwls: vec![0.3],
@@ -455,6 +563,7 @@ mod tests {
             n: 128,
             bx: 6,
             bw: 6,
+            banks: 1,
         };
         let eval = FamilyEval::new(fam.clone(), &w, &x);
         let arch = fam.build();
@@ -465,32 +574,54 @@ mod tests {
         let p = eval.design_point(8, &w, &x);
         assert_eq!(p.energy_j, arch.energy(&op, AdcCriterion::Fixed(8), &w, &x).total());
         assert_eq!(p.delay_s, arch.delay(&op));
+        assert_eq!(p.area_mm2, arch.area(&op).total_mm2());
         assert!(p.snr_t_db < p.snr_a_total_db);
         assert!(p.label().contains("arch=qs/node=65/vwl=0.8/n=128"));
+        assert!(!p.label().contains("banks"), "single-bank label unchanged");
+        // a banked sibling costs the Banked closed forms and labels itself
+        let banked = Family { banks: 4, ..fam };
+        let beval = FamilyEval::new(banked.clone(), &w, &x);
+        let barch = banked.build();
+        let bop = OpPoint::new(128, 6, 6, 8).with_banks(4);
+        assert_eq!(beval.snr_a_total_db, barch.noise(&bop, &w, &x).snr_a_total_db());
+        let bp = beval.design_point(8, &w, &x);
+        assert_eq!(bp.area_mm2, barch.area(&bop).total_mm2());
+        assert!(bp.label().ends_with("/banks=4/badc=8"), "{}", bp.label());
+        assert_ne!(banked.key(), fam.key(), "bank count is part of the key");
     }
 
     #[test]
     fn bounds_hold_over_the_b_adc_axis() {
         let (w, x) = uniform_stats();
-        let d = small_domain();
+        // include banked families: the bounds must stay exact for them
+        let d = Domain {
+            banks: vec![1, 2, 4],
+            ..small_domain()
+        }
+        .normalized()
+        .unwrap();
         for fam in d.families() {
             let bounds = fam.bounds(d.b_adcs[0], &w, &x);
             let eval = FamilyEval::new(fam, &w, &x);
             let mut prev_e = f64::MIN;
             let mut prev_d = f64::MIN;
             let mut prev_s = f64::MIN;
+            let mut prev_a = f64::MIN;
             for &b in &d.b_adcs {
                 let p = eval.design_point(b, &w, &x);
                 assert!(p.energy_j >= bounds.energy_lb_j);
                 assert!(p.delay_s >= bounds.delay_lb_s);
+                assert!(p.area_mm2 >= bounds.area_lb_mm2);
                 assert!(p.snr_t_db < bounds.snr_ub_db, "SNR_T below SQNR_qiy");
                 // monotonicity the branch-and-bound relies on
                 assert!(p.energy_j > prev_e, "energy strictly grows with B_ADC");
                 assert!(p.delay_s >= prev_d, "delay non-decreasing with B_ADC");
                 assert!(p.snr_t_db > prev_s, "SNR_T strictly grows with B_ADC");
+                assert!(p.area_mm2 > prev_a, "area strictly grows with B_ADC");
                 prev_e = p.energy_j;
                 prev_d = p.delay_s;
                 prev_s = p.snr_t_db;
+                prev_a = p.area_mm2;
             }
         }
     }

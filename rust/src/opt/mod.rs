@@ -8,19 +8,21 @@
 //! answers those query shapes directly:
 //!
 //! * [`domain`] — search domains ([`Domain`]), family enumeration
-//!   ([`Family`]) and candidate costing ([`FamilyEval`],
-//!   [`DesignPoint`]): SNR_T from eqs. (11)+(14) with the B_ADC axis as
-//!   a free dimension over the MPC conversion range
-//!   (`AdcCriterion::Fixed`), energy/delay from Table III;
-//! * [`pareto`] — the dominance-pruned (max SNR_T, min energy, min
-//!   delay) frontier extractor, branch-and-bound over family corners
-//!   instead of brute-force enumeration, shardable across threads with
-//!   bit-identical results;
+//!   ([`Family`], including banked variants via the `banks` axis) and
+//!   candidate costing ([`FamilyEval`], [`DesignPoint`]): SNR_T from
+//!   eqs. (11)+(14) with the B_ADC axis as a free dimension over the
+//!   MPC conversion range (`AdcCriterion::Fixed`), energy/delay from
+//!   Table III, silicon area from the Table III geometry
+//!   (`crate::area`);
+//! * [`pareto`] — the dominance-pruned four-objective (max SNR_T, min
+//!   energy, min delay, min area) frontier extractor, branch-and-bound
+//!   over family corners instead of brute-force enumeration, shardable
+//!   across threads with bit-identical results;
 //! * [`optimize`] — constrained single-objective search (`min energy` /
-//!   `min delay` / `max SNR_T` subject to SNR_T/energy/delay bounds)
-//!   whose lexicographic winner provably lies on the domain frontier,
-//!   with the MPC assignment (`b_adc_mpc`) reported alongside every
-//!   answer;
+//!   `min delay` / `max SNR_T` / `min area` subject to
+//!   SNR_T/energy/delay/area bounds) whose lexicographic winner
+//!   provably lies on the domain frontier, with the MPC assignment
+//!   (`b_adc_mpc`) reported alongside every answer;
 //! * [`crossover`] — the QS-vs-QR crossover report that machine-checks
 //!   conclusion 3 by locating the target SNR where the cheaper
 //!   architecture flips.

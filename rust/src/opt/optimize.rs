@@ -1,9 +1,10 @@
 //! Constrained single-objective search over a design domain:
-//! `min energy` / `min delay` / `max SNR_T`, subject to SNR_T, energy
-//! and delay bounds, by family-level branch-and-bound.
+//! `min energy` / `min delay` / `max SNR_T` / `min area`, subject to
+//! SNR_T, energy, delay and area bounds, by family-level
+//! branch-and-bound.
 //!
 //! Families are processed in ascending order of their objective bound
-//! (energy/delay lower bound, or SNR upper bound for `max-snr`);
+//! (energy/delay/area lower bound, or SNR upper bound for `max-snr`);
 //! constraint-infeasible families are pruned by the same cheap bounds
 //! before their noise decomposition is ever computed, and the scan
 //! stops outright once the bound can no longer beat the incumbent —
@@ -13,7 +14,8 @@
 //! remaining objectives, then the canonical key), which makes every
 //! answer a Pareto point of its own domain: a dominating design would
 //! also satisfy the constraints (they are all dominance-aligned) and
-//! precede it lexicographically.
+//! precede it lexicographically. The comparison chains cover all four
+//! metrics, so this holds for the four-objective frontier too.
 
 use anyhow::{bail, Result};
 
@@ -26,6 +28,7 @@ pub enum Objective {
     MinEnergy,
     MinDelay,
     MaxSnr,
+    MinArea,
 }
 
 impl Objective {
@@ -34,7 +37,10 @@ impl Objective {
             "min-energy" => Objective::MinEnergy,
             "min-delay" => Objective::MinDelay,
             "max-snr" | "max-snr-t" => Objective::MaxSnr,
-            other => bail!("unknown objective '{other}' (min-energy, min-delay or max-snr)"),
+            "min-area" => Objective::MinArea,
+            other => bail!(
+                "unknown objective '{other}' (min-energy, min-delay, max-snr or min-area)"
+            ),
         })
     }
 
@@ -43,29 +49,41 @@ impl Objective {
             Objective::MinEnergy => "min-energy",
             Objective::MinDelay => "min-delay",
             Objective::MaxSnr => "max-snr",
+            Objective::MinArea => "min-area",
         }
     }
 
     /// Lexicographic preference: does `a` beat `b` under this objective?
     /// The comparison chain starts with the objective and covers all
-    /// three metrics, so the optimum is always Pareto-optimal; the
-    /// canonical key breaks exact metric ties deterministically.
+    /// four metrics, so the optimum is always Pareto-optimal; the
+    /// canonical key breaks exact metric ties deterministically. Area
+    /// sits last in the pre-existing chains, so three-objective answers
+    /// are unchanged except on exact three-way metric ties.
     pub fn better(self, a: &DesignPoint, b: &DesignPoint) -> bool {
         let ord = match self {
             Objective::MinEnergy => a
                 .energy_j
                 .total_cmp(&b.energy_j)
                 .then_with(|| b.snr_t_db.total_cmp(&a.snr_t_db))
-                .then_with(|| a.delay_s.total_cmp(&b.delay_s)),
+                .then_with(|| a.delay_s.total_cmp(&b.delay_s))
+                .then_with(|| a.area_mm2.total_cmp(&b.area_mm2)),
             Objective::MinDelay => a
                 .delay_s
                 .total_cmp(&b.delay_s)
                 .then_with(|| a.energy_j.total_cmp(&b.energy_j))
-                .then_with(|| b.snr_t_db.total_cmp(&a.snr_t_db)),
+                .then_with(|| b.snr_t_db.total_cmp(&a.snr_t_db))
+                .then_with(|| a.area_mm2.total_cmp(&b.area_mm2)),
             Objective::MaxSnr => b
                 .snr_t_db
                 .total_cmp(&a.snr_t_db)
                 .then_with(|| a.energy_j.total_cmp(&b.energy_j))
+                .then_with(|| a.delay_s.total_cmp(&b.delay_s))
+                .then_with(|| a.area_mm2.total_cmp(&b.area_mm2)),
+            Objective::MinArea => a
+                .area_mm2
+                .total_cmp(&b.area_mm2)
+                .then_with(|| a.energy_j.total_cmp(&b.energy_j))
+                .then_with(|| b.snr_t_db.total_cmp(&a.snr_t_db))
                 .then_with(|| a.delay_s.total_cmp(&b.delay_s)),
         };
         ord.then_with(|| a.key().cmp(&b.key())).is_lt()
@@ -82,6 +100,8 @@ pub struct Constraints {
     pub energy_max_j: Option<f64>,
     /// Delay/DP <= this many seconds.
     pub delay_max_s: Option<f64>,
+    /// Silicon area <= this many mm².
+    pub area_max_mm2: Option<f64>,
 }
 
 impl Constraints {
@@ -89,6 +109,7 @@ impl Constraints {
         self.snr_t_min_db.is_none_or(|v| p.snr_t_db >= v)
             && self.energy_max_j.is_none_or(|v| p.energy_j <= v)
             && self.delay_max_s.is_none_or(|v| p.delay_s <= v)
+            && self.area_max_mm2.is_none_or(|v| p.area_mm2 <= v)
     }
 
     /// Can any member of a family with these bounds be feasible?
@@ -96,6 +117,7 @@ impl Constraints {
         self.snr_t_min_db.is_none_or(|v| b.snr_ub_db > v)
             && self.energy_max_j.is_none_or(|v| b.energy_lb_j <= v)
             && self.delay_max_s.is_none_or(|v| b.delay_lb_s <= v)
+            && self.area_max_mm2.is_none_or(|v| b.area_lb_mm2 <= v)
     }
 }
 
@@ -144,6 +166,7 @@ pub fn optimize(
             Objective::MinEnergy => ba.energy_lb_j.total_cmp(&bb.energy_lb_j),
             Objective::MinDelay => ba.delay_lb_s.total_cmp(&bb.delay_lb_s),
             Objective::MaxSnr => bb.snr_ub_db.total_cmp(&ba.snr_ub_db),
+            Objective::MinArea => ba.area_lb_mm2.total_cmp(&bb.area_lb_mm2),
         };
         ord.then_with(|| fa.key().cmp(&fb.key()))
     });
@@ -158,6 +181,7 @@ pub fn optimize(
                 Objective::MinDelay => bounds.delay_lb_s > incumbent.delay_s,
                 // SNR_T < snr_ub strictly, so equality cannot improve
                 Objective::MaxSnr => bounds.snr_ub_db <= incumbent.snr_t_db,
+                Objective::MinArea => bounds.area_lb_mm2 > incumbent.area_mm2,
             };
             if cut {
                 report.families_cut = bounded.len() - i;
@@ -203,6 +227,7 @@ mod tests {
             bxs: vec![4, 6],
             bws: vec![4, 6],
             b_adcs: vec![3, 4, 5, 6, 7, 8, 9],
+            banks: vec![1, 2],
         }
         .normalized()
         .unwrap()
@@ -256,6 +281,21 @@ mod tests {
                     ..Constraints::default()
                 },
             ),
+            (
+                Objective::MinArea,
+                Constraints {
+                    snr_t_min_db: Some(12.0),
+                    ..Constraints::default()
+                },
+            ),
+            (
+                Objective::MinEnergy,
+                Constraints {
+                    snr_t_min_db: Some(15.0),
+                    area_max_mm2: Some(3e-3),
+                    ..Constraints::default()
+                },
+            ),
         ];
         for (objective, constraints) in cases {
             let got = optimize(&d, objective, &constraints, &w, &x);
@@ -306,12 +346,15 @@ mod tests {
             (Objective::MaxSnr, None, Some(2e-11), None),
             (Objective::MaxSnr, None, None, Some(4e-9)),
             (Objective::MinEnergy, None, None, None),
+            (Objective::MinArea, None, None, None),
+            (Objective::MinArea, Some(14.0), None, None),
         ];
         for (objective, snr, e, dmax) in cases {
             let constraints = Constraints {
                 snr_t_min_db: snr,
                 energy_max_j: e,
                 delay_max_s: dmax,
+                area_max_mm2: None,
             };
             let got = optimize(&d, objective, &constraints, &w, &x);
             let Some(best) = got.best else {

@@ -1,18 +1,20 @@
-//! Pareto-frontier extraction over (max SNR_T, min energy, min delay),
-//! with branch-and-bound pruning instead of brute-force enumeration.
+//! Pareto-frontier extraction over the four objectives (max SNR_T, min
+//! energy, min delay, min area), with branch-and-bound pruning instead
+//! of brute-force enumeration.
 //!
 //! Pruning exploits the monotone structure of the closed forms:
 //!
 //! * the noise decomposition is B_ADC-independent, so each family is
 //!   evaluated once and its B_ADC column costed from that single
 //!   decomposition;
-//! * along the B_ADC axis energy strictly grows and SNR_T strictly
-//!   grows (delay is non-decreasing), so within a family only the
-//!   accuracy-improving prefix survives — a B_ADC choice whose SNR_T
-//!   does not improve on a smaller one is dominated by it;
-//! * every family is bounded by a cheap corner (energy/delay at the
-//!   smallest grid B_ADC, SQNR_qiy as a strict SNR_T upper bound,
-//!   none of which need the noise decomposition): a family whose
+//! * along the B_ADC axis energy strictly grows, area strictly grows
+//!   (the SAR cap-DAC) and SNR_T strictly grows (delay is
+//!   non-decreasing), so within a family only the accuracy-improving
+//!   prefix survives — a B_ADC choice whose SNR_T does not improve on a
+//!   smaller one is dominated by it on all four objectives;
+//! * every family is bounded by a cheap corner (energy/delay/area at
+//!   the smallest grid B_ADC, per-bank SQNR_qiy as a strict SNR_T upper
+//!   bound, none of which need the noise decomposition): a family whose
 //!   corner is dominated by an already-kept point contains no frontier
 //!   point and is skipped without evaluating its noise.
 //!
@@ -20,7 +22,9 @@
 //! affects how much is skipped, never the result: a final exact
 //! dominance pass runs over the surviving pool, so the frontier is
 //! invariant under axis permutations and shard counts (tested in
-//! `rust/tests/opt_pareto.rs`).
+//! `rust/tests/opt_pareto.rs`). Banked families (`Domain::banks`) flow
+//! through unchanged — their bounds come from the `arch::Banked` closed
+//! forms, so the search stays exact.
 
 use super::domain::{DesignPoint, Domain, Family, FamilyBounds, FamilyEval};
 use crate::quant::SignalStats;
@@ -29,7 +33,7 @@ use crate::quant::SignalStats;
 #[derive(Debug, Default)]
 pub struct Frontier {
     /// Non-dominated points, sorted by (energy asc, delay asc, SNR_T
-    /// desc, canonical key).
+    /// desc, area asc, canonical key).
     pub points: Vec<DesignPoint>,
     /// Families in the search domain.
     pub families: usize,
@@ -143,6 +147,7 @@ fn extract_pool(
             p.snr_t_db >= bounds.snr_ub_db
                 && p.energy_j <= bounds.energy_lb_j
                 && p.delay_s <= bounds.delay_lb_s
+                && p.area_mm2 <= bounds.area_lb_mm2
         });
         if dominated {
             pruned += 1;
@@ -153,9 +158,9 @@ fn extract_pool(
         for &b in b_adcs {
             let p = eval.design_point(b, w, x);
             evaluated += 1;
-            // monotone within-family prune: energy strictly grows with
-            // B_ADC, so a non-improving SNR_T is dominated by the
-            // previous kept member.
+            // monotone within-family prune: energy and area strictly
+            // grow with B_ADC, so a non-improving SNR_T is dominated by
+            // the previous kept member on all four objectives.
             if p.snr_t_db > best_snr {
                 best_snr = p.snr_t_db;
                 pool.push(p);
@@ -166,14 +171,17 @@ fn extract_pool(
 }
 
 /// Exact dominance filter: sort so that every potential dominator
-/// precedes what it dominates, then keep the non-dominated prefix
-/// survivors. Order-independent result.
+/// precedes what it dominates (area joins the chain after SNR_T, so
+/// ties through the first three metrics are decided by the smaller
+/// area — the direction dominance requires), then keep the
+/// non-dominated prefix survivors. Order-independent result.
 pub fn prune(mut pool: Vec<DesignPoint>) -> Vec<DesignPoint> {
     pool.sort_by(|a, b| {
         a.energy_j
             .total_cmp(&b.energy_j)
             .then_with(|| a.delay_s.total_cmp(&b.delay_s))
             .then_with(|| b.snr_t_db.total_cmp(&a.snr_t_db))
+            .then_with(|| a.area_mm2.total_cmp(&b.area_mm2))
             .then_with(|| a.key().cmp(&b.key()))
     });
     let mut kept: Vec<DesignPoint> = Vec::new();
@@ -202,6 +210,8 @@ mod tests {
             bxs: vec![4, 6],
             bws: vec![6],
             b_adcs: vec![3, 4, 5, 6, 7, 8],
+            // banked families participate in every frontier property
+            banks: vec![1, 2],
         }
         .normalized()
         .unwrap()
@@ -227,6 +237,7 @@ mod tests {
             assert_eq!(g.energy_j.to_bits(), r.energy_j.to_bits());
             assert_eq!(g.snr_t_db.to_bits(), r.snr_t_db.to_bits());
             assert_eq!(g.delay_s.to_bits(), r.delay_s.to_bits());
+            assert_eq!(g.area_mm2.to_bits(), r.area_mm2.to_bits());
         }
         assert_eq!(fr.points_total, all.len());
         assert!(fr.points_evaluated <= fr.points_total);

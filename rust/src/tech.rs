@@ -46,6 +46,11 @@ pub struct TechNode {
     pub kappa_ff: f64,
     /// Charge-injection layout constant p in [0, 1].
     pub p_inj: f64,
+    /// Energy of one two-input digital adder slice of the multi-bank
+    /// recombination tree [J] (Sec. VI banking): a banked DP performs
+    /// `banks - 1` of these adds. Scales roughly as C V_dd^2 — wire/gate
+    /// capacitance shrinks with the node, supply with V_dd.
+    pub e_bank_add: f64,
 }
 
 impl TechNode {
@@ -67,6 +72,7 @@ impl TechNode {
             wl_cox: 0.31e-15,
             kappa_ff: 0.08,
             p_inj: 0.5,
+            e_bank_add: 5e-15,
         }
     }
 
@@ -84,6 +90,7 @@ impl TechNode {
             dv_bl_max: 0.85,
             g_m: 75e-6,
             wl_cox: 0.24e-15,
+            e_bank_add: 3.1e-15,
             ..Self::n65()
         }
     }
@@ -102,6 +109,7 @@ impl TechNode {
             dv_bl_max: 0.8,
             g_m: 85e-6,
             wl_cox: 0.18e-15,
+            e_bank_add: 2.0e-15,
             ..Self::n65()
         }
     }
@@ -122,6 +130,7 @@ impl TechNode {
             g_m: 100e-6,
             wl_cox: 0.14e-15,
             kappa_ff: 0.07,
+            e_bank_add: 1.1e-15,
             ..Self::n65()
         }
     }
@@ -141,6 +150,7 @@ impl TechNode {
             g_m: 120e-6,
             wl_cox: 0.08e-15,
             kappa_ff: 0.065,
+            e_bank_add: 0.44e-15,
             ..Self::n65()
         }
     }
@@ -160,6 +170,7 @@ impl TechNode {
             g_m: 140e-6,
             wl_cox: 0.06e-15,
             kappa_ff: 0.06,
+            e_bank_add: 0.23e-15,
             ..Self::n65()
         }
     }
@@ -210,6 +221,14 @@ impl TechNode {
         assert!(vov > 0.0, "V_WL {} must exceed V_t {}", v_wl, self.v_t);
         self.alpha * self.sigma_vt / vov
     }
+
+    /// Stage delay of one bank-adder tree level [s]: a banked DP adds
+    /// `ceil(log2(banks))` of these on top of the per-bank conversion
+    /// (see `arch::Banked`). Tracks the node's unit gate delay (half a
+    /// WL-driver stage), so banking overhead scales with technology.
+    pub fn t_bank_add(&self) -> f64 {
+        self.t0 / 2.0
+    }
 }
 
 #[cfg(test)]
@@ -259,7 +278,20 @@ mod tests {
             assert!(b.t0 < a.t0, "gates get faster");
             // V_dd/V_t headroom ratio shrinks with scaling
             assert!(b.v_dd / b.v_t < a.v_dd / a.v_t + 1e-9);
+            // digital bank-recombination cost shrinks with scaling too
+            assert!(b.e_bank_add < a.e_bank_add, "bank adds get cheaper");
+            assert!(b.t_bank_add() < a.t_bank_add(), "bank adds get faster");
         }
+    }
+
+    #[test]
+    fn bank_adder_constants_at_65nm() {
+        // The values the pre-parameterization code hard-coded in
+        // arch::Banked (5 fJ per add, 50 ps per tree stage) are now the
+        // 65 nm tech parameters; golden_snr.rs pins them too.
+        let t = TechNode::n65();
+        assert_eq!(t.e_bank_add, 5e-15);
+        assert_eq!(t.t_bank_add(), 50e-12);
     }
 
     #[test]

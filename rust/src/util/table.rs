@@ -71,6 +71,15 @@ pub fn fmt_db(x: f64) -> String {
     }
 }
 
+/// Format a silicon area given in mm²: small macros read better in µm².
+pub fn fmt_area(mm2: f64) -> String {
+    if mm2.abs() < 0.01 {
+        format!("{:.1} um2", mm2 * 1e6)
+    } else {
+        format!("{mm2:.4} mm2")
+    }
+}
+
 /// Format an energy in joules with an SI prefix (fJ/pJ/nJ).
 pub fn fmt_energy(x: f64) -> String {
     let ax = x.abs();
@@ -106,5 +115,11 @@ mod tests {
         assert_eq!(fmt_energy(3.2e-15), "3.20 fJ");
         assert_eq!(fmt_energy(4.5e-12), "4.50 pJ");
         assert_eq!(fmt_energy(7.0e-9), "7.00 nJ");
+    }
+
+    #[test]
+    fn area_units_switch_at_macro_scale() {
+        assert_eq!(fmt_area(2.6e-3), "2600.0 um2");
+        assert_eq!(fmt_area(0.25), "0.2500 mm2");
     }
 }

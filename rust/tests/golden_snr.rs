@@ -9,7 +9,9 @@
 //! physics regression that moves any of these quantities fails loudly
 //! instead of silently shifting every figure.
 
-use imclim::arch::{binomial_clip_moment, ImcArch, OpPoint, QrArch, QsArch};
+use imclim::arch::{
+    binomial_clip_moment, AdcCriterion, Banked, CmArch, ImcArch, OpPoint, QrArch, QsArch,
+};
 use imclim::compute::is_model::IsModel;
 use imclim::compute::qr::QrModel;
 use imclim::compute::qs::QsModel;
@@ -185,6 +187,65 @@ fn golden_qs_arch_noise_decomposition() {
         nb.snr_a_total_db(),
         -17.474_110_544_030_94,
         1e-9,
+    );
+}
+
+#[test]
+fn golden_bank_adder_tech_parameters() {
+    // The bank recombination constants the pre-parameterization code
+    // hard-coded in arch::Banked: 5 fJ per two-input add and 50 ps per
+    // tree stage at 65 nm, now TechNode parameters that scale with the
+    // node (pinned exactly — they feed every banked energy/delay form).
+    assert_eq!(TechNode::n65().e_bank_add, 5e-15);
+    assert_eq!(TechNode::n65().t_bank_add(), 50e-12);
+    pin("e_bank_add_22", TechNode::n22().e_bank_add, 1.1e-15, 1e-12);
+    pin("t_bank_add_7", TechNode::n7().t_bank_add(), 11e-12, 1e-12);
+}
+
+#[test]
+fn golden_banked_512_row_4_bank_reference() {
+    // QS-Arch at the 512-row reference (V_WL = 0.8, Bx = Bw = 6) split
+    // over 4 banks of 128 rows: the banked SNR_A equals the 128-row
+    // pin (both signal and noise scale by the bank count), the MPC
+    // assignment is the per-bank one, and energy/delay/area carry the
+    // 4x replication plus the adder tree.
+    let (w, x) = uni();
+    let arch = Banked::new(Box::new(QsArch::new(QsModel::new(TechNode::n65(), 0.8))), 4);
+    let op = OpPoint::new(512, 6, 6, 8).with_banks(4);
+    let nb = arch.noise(&op, &w, &x);
+    pin("banked512_4_snr_a_total", nb.snr_a_total_db(), 18.568_060_899_934_242, 1e-9);
+    assert_eq!(arch.b_adc_min(&op, &w, &x), 6, "per-bank MPC assignment");
+    pin(
+        "banked512_4_energy_fixed8",
+        arch.energy(&op, AdcCriterion::Fixed(8), &w, &x).total(),
+        1.546_130_088_567_185_4e-10,
+        1e-9,
+    );
+    pin("banked512_4_delay", arch.delay(&op), 4.9e-9, 1e-9);
+    pin("banked512_4_area", arch.area(&op).total_mm2(), 4.361_342e-3, 1e-9);
+}
+
+#[test]
+fn golden_area_closed_forms_at_reference() {
+    // Table III geometry -> mm² at the 512-row reference shape
+    // (Bx = Bw = 6, B_ADC = 8, 65 nm; C_o = 3 fF for QR/CM).
+    let op = OpPoint::new(512, 6, 6, 8);
+    let qs = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+    let qr = QrArch::new(QrModel::new(TechNode::n65(), 3.0));
+    let cm = CmArch::new(
+        QsModel::new(TechNode::n65(), 0.8),
+        QrModel::new(TechNode::n65(), 3.0),
+    );
+    pin("qs_area_512", qs.area(&op).total_mm2(), 2.609_054e-3, 1e-9);
+    pin("qr_area_512", qr.area(&op).total_mm2(), 8.678_904e-3, 1e-9);
+    pin("cm_area_512", cm.area(&op).total_mm2(), 4.172_116e-3, 1e-9);
+    // the SAR slice itself (per-bit logic + 2^B cap-DAC)
+    pin("adc_um2_8b_65nm", imclim::area::adc_um2(&TechNode::n65(), 8), 94.42, 1e-9);
+    // area is V_WL/C_o-knob-independent except through the caps
+    let qs_lo = QsArch::new(QsModel::new(TechNode::n65(), 0.6));
+    assert_eq!(
+        qs.area(&op).total_mm2().to_bits(),
+        qs_lo.area(&op).total_mm2().to_bits()
     );
 }
 

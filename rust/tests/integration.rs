@@ -84,6 +84,24 @@ fn table3_e_vs_s_within_2db() {
 }
 
 #[test]
+fn banked_figure_shows_the_ceiling_escape() {
+    // Conclusion bullet 4 through the figure driver: 8 banks rescue the
+    // N = 512 DP by tens of dB in both the closed form and the
+    // simulation, at a bounded area premium, and closed form tracks MC
+    // on the plateau.
+    let s = figures::run("banked", &ctx("banked")).unwrap().remove(0);
+    assert!(s.check("escape_closed_db").unwrap() > 30.0);
+    assert!(s.check("escape_sim_db").unwrap() > 25.0);
+    assert!(s.check("max_e_s_gap_db").unwrap() < 1.5);
+    let area_ratio = s.check("area_ratio_512_8").unwrap();
+    assert!(
+        area_ratio > 1.0 && area_ratio < 3.0,
+        "banking multiplies ADCs and periphery, not cells: {area_ratio}"
+    );
+    assert!(s.check("energy_ratio_512_8").unwrap() > 1.0, "banking costs energy");
+}
+
+#[test]
 fn qr_reaches_high_snr_qs_cannot() {
     // Conclusion bullet 3, the robust half: QR-based architectures are
     // the ones that can deliver high compute SNR — QS-Arch has a hard

@@ -2,13 +2,18 @@
 //! AOT JAX/Pallas artifacts through PJRT — the central validation that
 //! the three independent implementations describe the same physics.
 //! Uses the *_small artifacts (16 trials x 64 cells) for speed.
+//!
+//! The banked cross-check at the bottom needs no artifacts: it drives
+//! the native simulator through `engine::Engine` (cache and all) and
+//! proves the Sec. VI ceiling-escape claim numerically.
 
 use std::path::PathBuf;
 
-use imclim::arch::{pvec, ImcArch, OpPoint};
+use imclim::arch::{pvec, Banked, ImcArch, OpPoint};
 use imclim::arch::{CmArch, QrArch, QsArch};
 use imclim::compute::{qr::QrModel, qs::QsModel};
-use imclim::coordinator::{run_point, Backend, PjrtService, SweepPoint};
+use imclim::coordinator::{run_point, Backend, PjrtService, SweepOptions, SweepPoint};
+use imclim::engine::Engine;
 use imclim::mc::ArchKind;
 use imclim::quant::SignalStats;
 use imclim::tech::TechNode;
@@ -136,6 +141,106 @@ fn three_way_agreement_all_architectures() {
             &format!("{} closed-vs-pjrt SNR_A", c.name),
         );
     }
+}
+
+/// Differential test (no artifacts needed): banked closed forms vs the
+/// native Monte-Carlo, executed *through the engine* so the banked
+/// parameter vectors exercise the real cache/scheduler path. Banks in
+/// {2, 4} at N = 512 and 1024 — on-plateau points agree within the MC
+/// ensemble error, and the banked designs clear ceilings their
+/// single-bank versions collapse under (conclusion 4).
+#[test]
+fn banked_closed_form_matches_engine_mc_and_escapes_ceiling() {
+    let (w, x) = stats();
+    struct Case {
+        label: &'static str,
+        v_wl: f64,
+        n: usize,
+        banks: usize,
+        /// single-bank SNR_A must sit at least this far below banked
+        /// (0.0: banking is a no-op on the plateau, the control case)
+        min_escape_db: f64,
+    }
+    let cases = [
+        Case {
+            label: "b2/n512",
+            v_wl: 0.6,
+            n: 512,
+            banks: 2,
+            min_escape_db: 0.0,
+        },
+        Case {
+            label: "b2/n1024",
+            v_wl: 0.6,
+            n: 1024,
+            banks: 2,
+            min_escape_db: 25.0,
+        },
+        Case {
+            label: "b4/n512",
+            v_wl: 0.8,
+            n: 512,
+            banks: 4,
+            min_escape_db: 30.0,
+        },
+    ];
+
+    let dir = std::env::temp_dir().join("imclim-banked-xcheck");
+    let _ = std::fs::remove_dir_all(&dir);
+    let engine = Engine::new(
+        Backend::Native,
+        SweepOptions {
+            workers: 4,
+            verbose: false,
+        },
+    )
+    .with_cache(dir.clone());
+
+    let mut points = Vec::new();
+    let mut closed = Vec::new();
+    for c in &cases {
+        let inner = QsArch::new(QsModel::new(TechNode::n65(), c.v_wl));
+        let banked = Banked::new(Box::new(inner), c.banks);
+        let op = OpPoint::new(c.n, 6, 6, 14).with_banks(c.banks);
+        let banked_db = banked.noise(&op, &w, &x).snr_a_total_db();
+        let single_db = inner.noise(&op, &w, &x).snr_a_total_db();
+        assert!(
+            banked_db - single_db >= c.min_escape_db,
+            "{}: closed-form escape {banked_db} vs {single_db}",
+            c.label
+        );
+        closed.push(banked_db);
+        points.push(
+            SweepPoint::new(
+                format!("xcheck-banked/{}", c.label),
+                ArchKind::Qs,
+                banked.pjrt_params(&op, &w, &x),
+            )
+            .with_trials(2048)
+            .with_seed(0xBA2C),
+        );
+    }
+    let (results, stats_cold) = engine.run_with_stats(points.clone());
+    assert_eq!(stats_cold.errors, 0, "banked points run natively");
+    for ((c, closed_db), r) in cases.iter().zip(&closed).zip(&results) {
+        assert_db_close(
+            *closed_db,
+            r.measured.snr_a_total_db,
+            1.2,
+            &format!("{} closed-vs-engine-MC banked SNR_A", c.label),
+        );
+    }
+    // warm rerun: banked records hit the cache bit-exactly
+    let (warm, stats_warm) = engine.run_with_stats(points);
+    assert_eq!(stats_warm.hits, cases.len(), "banked cache keys round-trip");
+    assert_eq!(stats_warm.misses, 0);
+    for (a, b) in results.iter().zip(&warm) {
+        assert_eq!(
+            a.measured.snr_a_total_db.to_bits(),
+            b.measured.snr_a_total_db.to_bits()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,9 +1,11 @@
-//! Design-space optimizer regression suite: golden frontier pins at the
-//! 512-row reference configuration, optimizer/frontier consistency
-//! properties (no dominated rows, axis-permutation and shard-count
-//! invariance, every constrained answer on its domain frontier, MPC
-//! agreement), the QS-vs-QR crossover of conclusion 3, and CLI-level
-//! warm-vs-cold / multi-thread byte determinism of `imclim pareto`.
+//! Design-space optimizer regression suite: golden four-objective
+//! frontier pins at the 512-row reference configuration (including the
+//! banked slice), optimizer/frontier consistency properties (no
+//! dominated rows, axis-permutation and shard-count invariance, every
+//! constrained answer on its domain frontier, MPC agreement),
+//! brute-force frontier equality with the area objective, the QS-vs-QR
+//! crossover of conclusion 3, and CLI-level warm-vs-cold /
+//! multi-thread byte determinism of `imclim pareto` with `--banks`.
 
 use imclim::engine::{parse_grid_f64, parse_grid_u32, parse_grid_usize};
 use imclim::figures::uniform_stats;
@@ -33,6 +35,7 @@ fn acceptance_domain() -> Domain {
         bxs: vec![6],
         bws: vec![6],
         b_adcs: parse_grid_u32("4:10").unwrap(),
+        banks: vec![1],
     }
     .normalized()
     .unwrap()
@@ -49,11 +52,15 @@ fn reference_frontier(points: &[DesignPoint]) -> Vec<&DesignPoint> {
 #[test]
 fn golden_frontier_at_512_row_reference() {
     // n = 512 restriction of the acceptance domain: the 512-row
-    // reference configuration of golden_snr.rs. Hand-derived outcome:
-    // every QS family collapses (headroom clipping at V_WL >= 0.7,
-    // mismatch at 0.6 capping SNR_A at ~13.3 dB) at higher energy than
-    // QR, so the frontier is exactly the QR C_o = 3 fF column, one
-    // point per B_ADC (energy and SNR_T both strictly grow with bits).
+    // reference configuration of golden_snr.rs, now under all four
+    // objectives. Hand-derived outcome: the QR C_o = 3 fF column (one
+    // point per B_ADC — energy, area and SNR_T all strictly grow with
+    // bits) survives exactly as in the three-objective frontier, and
+    // the V_WL = 0.6 QS column joins it on the area axis — QS arrays
+    // carry no MOM caps, so despite collapsing to ~13.3 dB they are
+    // the smallest designs at 512 rows and nothing dominates them.
+    // Higher-V_WL QS families stay off the frontier (same area, more
+    // energy, less SNR than the 0.6 V column).
     let (w, x) = uniform_stats();
     let d = Domain {
         ns: vec![512],
@@ -62,24 +69,54 @@ fn golden_frontier_at_512_row_reference() {
     .normalized()
     .unwrap();
     let fr = frontier(&d, 1, &w, &x);
-    assert_eq!(fr.points.len(), 7, "one frontier point per B_ADC in 4..=10");
-    for (i, p) in fr.points.iter().enumerate() {
-        assert_eq!(p.family.arch, ArchChoice::Qr);
+    assert_eq!(fr.points.len(), 14, "QR column + area-admitted QS column");
+
+    let qr: Vec<_> = fr
+        .points
+        .iter()
+        .filter(|p| p.family.arch == ArchChoice::Qr)
+        .collect();
+    assert_eq!(qr.len(), 7, "one QR frontier point per B_ADC in 4..=10");
+    for (i, p) in qr.iter().enumerate() {
         assert_eq!(p.family.n, 512);
         assert_eq!(p.family.c_ff, Some(3.0));
         assert_eq!(p.b_adc, 4 + i as u32, "sorted by energy == by B_ADC");
         assert_eq!(p.b_adc_mpc, 7, "eq. (15) assignment at SNR_A ~22 dB");
         pin("qr512_snr_a", p.snr_a_total_db, 21.990_261_132_279_12, 1e-9);
     }
-    // exact closed-form pins (hand-derived from Table III + eqs. 11/14/25/26)
-    pin("b4_snr_t", fr.points[0].snr_t_db, 15.657_330_402_719_50, 1e-9);
-    pin("b4_energy", fr.points[0].energy_j, 1.364_407_512_175_014e-11, 1e-9);
-    pin("b4_delay_ns", fr.points[0].delay_ns(), 0.9, 1e-9);
-    pin("b7_snr_t", fr.points[3].snr_t_db, 21.767_634_095_714_89, 1e-9);
-    pin("b7_energy", fr.points[3].energy_j, 2.287_585_752_175_014e-11, 1e-9);
-    pin("b10_snr_t", fr.points[6].snr_t_db, 21.982_172_187_853_56, 1e-9);
-    pin("b10_energy", fr.points[6].energy_j, 5.003_099_311_217_504e-10, 1e-9);
-    pin("b10_delay_ns", fr.points[6].delay_ns(), 1.5, 1e-9);
+    // exact closed-form pins (hand-derived from Table III + eqs.
+    // 11/14/25/26) — identical to the pre-area frontier values
+    pin("b4_snr_t", qr[0].snr_t_db, 15.657_330_402_719_50, 1e-9);
+    pin("b4_energy", qr[0].energy_j, 1.364_407_512_175_014e-11, 1e-9);
+    pin("b4_delay_ns", qr[0].delay_ns(), 0.9, 1e-9);
+    pin("b7_snr_t", qr[3].snr_t_db, 21.767_634_095_714_89, 1e-9);
+    pin("b7_energy", qr[3].energy_j, 2.287_585_752_175_014e-11, 1e-9);
+    pin("b10_snr_t", qr[6].snr_t_db, 21.982_172_187_853_56, 1e-9);
+    pin("b10_energy", qr[6].energy_j, 5.003_099_311_217_504e-10, 1e-9);
+    pin("b10_delay_ns", qr[6].delay_ns(), 1.5, 1e-9);
+    // area pins for the same column (Table III geometry: cells + caps +
+    // row ADCs + DACs)
+    pin("b4_area", qr[0].area_mm2, 8.227_644e-3, 1e-9);
+    pin("b10_area", qr[6].area_mm2, 9.876_534e-3, 1e-9);
+
+    let qs: Vec<_> = fr
+        .points
+        .iter()
+        .filter(|p| p.family.arch == ArchChoice::Qs)
+        .collect();
+    assert_eq!(qs.len(), 7, "the area-admitted QS column");
+    for (i, p) in qs.iter().enumerate() {
+        assert_eq!(p.family.v_wl, Some(0.6), "largest-headroom QS family");
+        assert_eq!(p.b_adc, 4 + i as u32);
+        assert!(
+            p.area_mm2 < qr[0].area_mm2,
+            "every QS frontier point undercuts the smallest QR area"
+        );
+    }
+    pin("qs512_b4_snr_t", qs[0].snr_t_db, 11.689_223_773_254_469, 1e-9);
+    pin("qs512_b4_energy", qs[0].energy_j, 2.213_145_746_292_378_4e-11, 1e-9);
+    pin("qs512_b4_area", qs[0].area_mm2, 2.157_794e-3, 1e-9);
+    pin("qs512_b8_area", qs[4].area_mm2, 2.609_054e-3, 1e-9);
 }
 
 #[test]
@@ -108,6 +145,7 @@ fn acceptance_frontier_matches_brute_force_with_no_dominated_row() {
         assert_eq!(g.energy_j.to_bits(), r.energy_j.to_bits());
         assert_eq!(g.snr_t_db.to_bits(), r.snr_t_db.to_bits());
         assert_eq!(g.delay_s.to_bits(), r.delay_s.to_bits());
+        assert_eq!(g.area_mm2.to_bits(), r.area_mm2.to_bits());
     }
     // the cheapest frontier design: QR at the smallest array and B_ADC
     let first = &fr.points[0];
@@ -115,6 +153,75 @@ fn acceptance_frontier_matches_brute_force_with_no_dominated_row() {
     assert_eq!(first.family.n, 64);
     assert_eq!(first.b_adc, 4);
     pin("acc_min_energy", first.energy_j, 4.576_855_921_750_138e-12, 1e-9);
+}
+
+#[test]
+fn golden_banked_frontier_slice_escapes_the_ceiling() {
+    // The acceptance slice at n = 512 with --banks 1,2,4: banked QS
+    // families join the four-objective frontier (their per-bank arrays
+    // stay inside the headroom, and QS silicon remains smaller than
+    // QR's cap-heavy arrays even 4x replicated), and the best banked
+    // QS design clears the single-bank QS SNR ceiling by over 5 dB —
+    // conclusion 4's escape, visible in the frontier itself.
+    let (w, x) = uniform_stats();
+    let d = Domain {
+        ns: vec![512],
+        banks: vec![1, 2, 4],
+        ..acceptance_domain()
+    }
+    .normalized()
+    .unwrap();
+    let fr = frontier(&d, 1, &w, &x);
+    assert_eq!(fr.points.len(), 28, "banked golden slice size");
+    let banked_qs: Vec<_> = fr
+        .points
+        .iter()
+        .filter(|p| p.family.arch == ArchChoice::Qs && p.family.banks > 1)
+        .collect();
+    assert_eq!(banked_qs.len(), 15, "banked QS designs on the frontier");
+    let single_qs_best = fr
+        .points
+        .iter()
+        .filter(|p| p.family.arch == ArchChoice::Qs && p.family.banks == 1)
+        .map(|p| p.snr_t_db)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let banked_qs_best = banked_qs
+        .iter()
+        .map(|p| p.snr_t_db)
+        .fold(f64::NEG_INFINITY, f64::max);
+    // (the single-bank B_ADC = 10 point is itself dominated by a
+    // 2-bank design with fewer bits — banking beats bit-buying at the
+    // ceiling — so the best surviving single-bank point is B_ADC = 9)
+    pin("single_qs_ceiling", single_qs_best, 13.284_016_300_301_701, 1e-9);
+    pin("banked_qs_best", banked_qs_best, 18.559_614_907_136_893, 1e-9);
+    assert!(
+        banked_qs_best > single_qs_best + 5.0,
+        "banking escapes the SNR ceiling on the frontier: {banked_qs_best} vs {single_qs_best}"
+    );
+    // golden pins for one banked frontier point: V_WL = 0.6, 2 banks,
+    // B_ADC = 4 (per-bank arrays of 256 rows)
+    let p = banked_qs
+        .iter()
+        .find(|p| p.family.v_wl == Some(0.6) && p.family.banks == 2 && p.b_adc == 4)
+        .expect("banked reference point on frontier");
+    pin("banked2_b4_snr_t", p.snr_t_db, 11.702_731_094_624_25, 1e-9);
+    pin("banked2_b4_energy", p.energy_j, 4.075_739_445_190_053_5e-11, 1e-9);
+    pin("banked2_b4_delay_ns", p.delay_ns(), 2.45, 1e-9);
+    pin("banked2_b4_area", p.area_mm2, 2.290_63e-3, 1e-9);
+    // brute-force equality on the banked slice (the area objective and
+    // the banks axis together, re-proving extractor exactness)
+    let all = d.all_points(&w, &x);
+    assert_eq!(all.len(), 105, "(4 QS + 1 QR families) x 3 banks x 7 B_ADC");
+    let mut want = reference_frontier(&all);
+    want.sort_by_key(|p| p.key());
+    let mut got: Vec<&DesignPoint> = fr.points.iter().collect();
+    got.sort_by_key(|p| p.key());
+    assert_eq!(got.len(), want.len());
+    for (g, r) in got.iter().zip(&want) {
+        assert_eq!(g.key(), r.key());
+        assert_eq!(g.energy_j.to_bits(), r.energy_j.to_bits());
+        assert_eq!(g.area_mm2.to_bits(), r.area_mm2.to_bits());
+    }
 }
 
 #[test]
@@ -129,6 +236,7 @@ fn frontier_invariant_under_axis_permutation_and_shards() {
         bxs: vec![4, 6],
         bws: vec![6],
         b_adcs: vec![4, 6, 8],
+        banks: vec![1, 2],
     };
     let permuted = Domain {
         archs: vec![ArchChoice::Cm, ArchChoice::Qr, ArchChoice::Qs],
@@ -139,6 +247,7 @@ fn frontier_invariant_under_axis_permutation_and_shards() {
         bxs: vec![6, 4],
         bws: vec![6],
         b_adcs: vec![8, 4, 6],
+        banks: vec![2, 1],
     };
     let base = frontier(&canonical.clone().normalized().unwrap(), 1, &w, &x);
     assert!(!base.points.is_empty());
@@ -148,6 +257,7 @@ fn frontier_invariant_under_axis_permutation_and_shards() {
             && a.energy_j.to_bits() == b.energy_j.to_bits()
             && a.snr_t_db.to_bits() == b.snr_t_db.to_bits()
             && a.delay_s.to_bits() == b.delay_s.to_bits()
+            && a.area_mm2.to_bits() == b.area_mm2.to_bits()
     };
     assert_eq!(base.points.len(), perm.points.len(), "axis permutation");
     for (a, b) in base.points.iter().zip(&perm.points) {
@@ -204,12 +314,28 @@ fn constrained_answers_always_lie_on_their_domain_frontier() {
         bxs: vec![4, 6],
         bws: vec![4, 6],
         b_adcs: vec![3, 4, 5, 6, 7, 8, 9, 10],
+        banks: vec![1, 2],
     }
     .normalized()
     .unwrap();
     let fr = frontier(&d, 1, &w, &x);
     let cases: Vec<(Objective, Constraints)> = vec![
         (Objective::MinEnergy, Constraints::default()),
+        (
+            Objective::MinArea,
+            Constraints {
+                snr_t_min_db: Some(15.0),
+                ..Constraints::default()
+            },
+        ),
+        (
+            Objective::MinEnergy,
+            Constraints {
+                snr_t_min_db: Some(15.0),
+                area_max_mm2: Some(2e-3),
+                ..Constraints::default()
+            },
+        ),
         (
             Objective::MinEnergy,
             Constraints {
@@ -281,6 +407,7 @@ fn crossover_reproduces_conclusion_3() {
         bxs: parse_grid_u32("1:8").unwrap(),
         bws: parse_grid_u32("1:8").unwrap(),
         b_adcs: parse_grid_u32("1:14").unwrap(),
+        banks: vec![1],
     }
     .normalized()
     .unwrap();
@@ -309,7 +436,7 @@ fn pareto_cli_is_byte_identical_warm_vs_cold_and_across_procs() {
     let exe = env!("CARGO_BIN_EXE_imclim");
     let base = [
         "pareto", "--arch", "qs,qr", "--n", "32,64", "--b-adc", "4:6", "--vwl", "0.7", "--co",
-        "3", "--validate", "--trials", "48", "--workers", "2",
+        "3", "--banks", "1,2", "--validate", "--trials", "48", "--workers", "2",
     ];
     let tmp = |name: &str| {
         let dir = std::env::temp_dir().join(format!("imclim-opt-cli-{name}"));
@@ -335,9 +462,10 @@ fn pareto_cli_is_byte_identical_warm_vs_cold_and_across_procs() {
     let procs_dir = tmp("procs");
     let sharded = run(&procs_dir, &["--procs", "3"]);
     assert_eq!(cold, sharded, "--procs 3 output matches --procs 1");
-    // frontier CSV really is dominance-free: SNR_T strictly increases
-    // along the energy-sorted rows (3-objective check is in-library;
-    // with one delay profile per arch this is the CSV-level shadow)
+    // the CSV carries the four-objective columns (banks + area) and is
+    // non-degenerate; the in-library tests own the dominance checks
     let text = String::from_utf8(cold).unwrap();
     assert!(text.lines().count() >= 2, "header + at least one row");
+    let header = text.lines().next().unwrap();
+    assert!(header.contains("banks") && header.contains("area_mm2"));
 }

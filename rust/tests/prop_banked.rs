@@ -1,0 +1,240 @@
+//! Property tests for the banked-architecture layer (Sec. VI /
+//! conclusion 4), locking down the two contracts everything else leans
+//! on:
+//!
+//! 1. `Banked::new(inner, 1)` is *bit-identical* to the bare inner
+//!    architecture — noise, energy, delay, area, parameter vector and
+//!    (therefore) result-cache keys — across randomized operating
+//!    points of both QS and QR, so admitting banking into the sweep
+//!    engine and optimizer cannot perturb a single pre-existing value.
+//! 2. For banks >= 2 the banked noise decomposition is *exactly*
+//!    `banks x` the per-bank one, and energy/delay/area decompose into
+//!    per-bank replication plus the closed-form adder tree.
+
+use imclim::arch::{pvec, AdcCriterion, Banked, ImcArch, OpPoint, QrArch, QsArch};
+use imclim::compute::{qr::QrModel, qs::QsModel};
+use imclim::coordinator::SweepPoint;
+use imclim::engine::cache_key;
+use imclim::mc::ArchKind;
+use imclim::quant::SignalStats;
+use imclim::tech::TechNode;
+use imclim::util::rng::Pcg64;
+
+fn stats() -> (SignalStats, SignalStats) {
+    (
+        SignalStats::uniform_signed(1.0),
+        SignalStats::uniform_unsigned(1.0),
+    )
+}
+
+/// Randomized operating points spanning both sides of the N_max cliff.
+fn random_ops(rng: &mut Pcg64, count: usize) -> Vec<OpPoint> {
+    (0..count)
+        .map(|_| {
+            OpPoint::new(
+                8 + rng.below(600) as usize,
+                2 + rng.below(7) as u32,
+                2 + rng.below(7) as u32,
+                2 + rng.below(11) as u32,
+            )
+        })
+        .collect()
+}
+
+/// (bare architecture, identical twin, simulator kind).
+type ArchPair = (Box<dyn ImcArch>, Box<dyn ImcArch>, ArchKind);
+
+/// The two architecture families under test, as (bare, identical twin,
+/// kind): QS across the V_WL range, QR across the C_o range. Both
+/// models are `Copy`, so the twin is bit-identical to the bare one —
+/// the twin gets consumed by the `Banked` wrapper under test.
+fn arch_pool(rng: &mut Pcg64) -> Vec<ArchPair> {
+    let v_wl = 0.55 + rng.uniform() * 0.35;
+    let c_ff = 0.5 + rng.uniform() * 8.5;
+    let qs = QsArch::new(QsModel::new(TechNode::n65(), v_wl));
+    let qr = QrArch::new(QrModel::new(TechNode::n65(), c_ff));
+    vec![
+        (Box::new(qs), Box::new(qs), ArchKind::Qs),
+        (Box::new(qr), Box::new(qr), ArchKind::Qr),
+    ]
+}
+
+#[test]
+fn one_bank_wrapper_is_bit_identical_to_the_bare_architecture() {
+    let (w, x) = stats();
+    let mut rng = Pcg64::new(0xBA2C);
+    for round in 0..20 {
+        for (bare, twin, kind) in arch_pool(&mut rng) {
+            let wrapped = Banked::new(twin, 1);
+            for op in random_ops(&mut rng, 8) {
+                let a = bare.noise(&op, &w, &x);
+                let b = wrapped.noise(&op, &w, &x);
+                assert_eq!(a.sigma_yo2.to_bits(), b.sigma_yo2.to_bits(), "round {round}");
+                assert_eq!(a.sigma_qiy2.to_bits(), b.sigma_qiy2.to_bits());
+                assert_eq!(a.sigma_eta_h2.to_bits(), b.sigma_eta_h2.to_bits());
+                assert_eq!(a.sigma_eta_e2.to_bits(), b.sigma_eta_e2.to_bits());
+                for crit in [
+                    AdcCriterion::Mpc,
+                    AdcCriterion::Bgc,
+                    AdcCriterion::Fixed(op.b_adc),
+                ] {
+                    let ea = bare.energy(&op, crit, &w, &x);
+                    let eb = wrapped.energy(&op, crit, &w, &x);
+                    assert_eq!(ea.analog.to_bits(), eb.analog.to_bits());
+                    assert_eq!(ea.adc.to_bits(), eb.adc.to_bits());
+                    assert_eq!(ea.misc.to_bits(), eb.misc.to_bits(), "no tree at 1 bank");
+                }
+                assert_eq!(bare.delay(&op).to_bits(), wrapped.delay(&op).to_bits());
+                let aa = bare.area(&op);
+                let ab = wrapped.area(&op);
+                assert_eq!(aa.array_mm2.to_bits(), ab.array_mm2.to_bits());
+                assert_eq!(aa.caps_mm2.to_bits(), ab.caps_mm2.to_bits());
+                assert_eq!(aa.adc_mm2.to_bits(), ab.adc_mm2.to_bits());
+                assert_eq!(aa.periphery_mm2.to_bits(), ab.periphery_mm2.to_bits());
+                assert_eq!(bare.b_adc_min(&op, &w, &x), wrapped.b_adc_min(&op, &w, &x));
+                assert_eq!(
+                    bare.v_c_volts(&op, &w, &x).to_bits(),
+                    wrapped.v_c_volts(&op, &w, &x).to_bits()
+                );
+                // the parameter vector is bit-identical, so the
+                // result-cache key is unchanged: a banks=1 sweep row
+                // aliases (correctly) with the pre-banking records
+                let pa = bare.pjrt_params(&op, &w, &x);
+                let pb = wrapped.pjrt_params(&op, &w, &x);
+                assert_eq!(pa, pb);
+                assert_eq!(pb[pvec::IDX_BANKS], 0.0, "legacy single-bank slot");
+                let key_a = cache_key(
+                    &SweepPoint::new("a", kind, pa).with_trials(64).with_seed(1),
+                    "native@test",
+                );
+                let key_b = cache_key(
+                    &SweepPoint::new("b-different-label", kind, pb)
+                        .with_trials(64)
+                        .with_seed(1),
+                    "native@test",
+                );
+                assert_eq!(key_a, key_b, "banks=1 cache keys are unchanged");
+            }
+        }
+    }
+}
+
+#[test]
+fn banked_noise_is_exactly_banks_times_the_per_bank_decomposition() {
+    let (w, x) = stats();
+    let mut rng = Pcg64::new(0xBA2D);
+    for _ in 0..15 {
+        for &banks in &[2usize, 3, 4, 8] {
+            for (bare, twin, _kind) in arch_pool(&mut rng) {
+                let wrapped = Banked::new(twin, banks);
+                for op in random_ops(&mut rng, 4) {
+                    let bank_op = OpPoint {
+                        n: op.n.div_ceil(banks),
+                        banks: 1,
+                        ..op
+                    };
+                    let per = bare.noise(&bank_op, &w, &x);
+                    let tot = wrapped.noise(&op, &w, &x);
+                    let k = banks as f64;
+                    assert_eq!(tot.sigma_yo2.to_bits(), (per.sigma_yo2 * k).to_bits());
+                    assert_eq!(tot.sigma_qiy2.to_bits(), (per.sigma_qiy2 * k).to_bits());
+                    assert_eq!(
+                        tot.sigma_eta_h2.to_bits(),
+                        (per.sigma_eta_h2 * k).to_bits()
+                    );
+                    assert_eq!(
+                        tot.sigma_eta_e2.to_bits(),
+                        (per.sigma_eta_e2 * k).to_bits()
+                    );
+                    // every SNR ratio is bank-count-invariant (the
+                    // escape mechanism: per-bank physics at total-N
+                    // signal), up to the multiplication round-off
+                    let d = (tot.snr_a_total_db() - per.snr_a_total_db()).abs();
+                    assert!(d < 1e-9, "ratio preserved: {d}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn banked_energy_delay_area_decompose_into_replication_plus_tree() {
+    let (w, x) = stats();
+    let mut rng = Pcg64::new(0xBA2E);
+    let tech = TechNode::n65();
+    for _ in 0..15 {
+        for &banks in &[2usize, 4, 8] {
+            for (bare, twin, _kind) in arch_pool(&mut rng) {
+                let wrapped = Banked::new(twin, banks);
+                for op in random_ops(&mut rng, 4) {
+                    let bank_op = OpPoint {
+                        n: op.n.div_ceil(banks),
+                        banks: 1,
+                        ..op
+                    };
+                    let per = bare.energy(&bank_op, AdcCriterion::Mpc, &w, &x);
+                    let tot = wrapped.energy(&op, AdcCriterion::Mpc, &w, &x);
+                    let k = banks as f64;
+                    assert_eq!(tot.analog.to_bits(), (per.analog * k).to_bits());
+                    assert_eq!(tot.adc.to_bits(), (per.adc * k).to_bits());
+                    assert_eq!(
+                        tot.misc.to_bits(),
+                        (per.misc + (banks - 1) as f64 * tech.e_bank_add).to_bits()
+                    );
+                    let stages = (banks as f64).log2().ceil();
+                    assert_eq!(
+                        wrapped.delay(&op).to_bits(),
+                        (bare.delay(&bank_op) + stages * tech.t_bank_add()).to_bits()
+                    );
+                    let pa = bare.area(&bank_op);
+                    let ta = wrapped.area(&op);
+                    assert_eq!(ta.array_mm2.to_bits(), (pa.array_mm2 * k).to_bits());
+                    assert_eq!(ta.caps_mm2.to_bits(), (pa.caps_mm2 * k).to_bits());
+                    assert_eq!(ta.adc_mm2.to_bits(), (pa.adc_mm2 * k).to_bits());
+                    let tree = imclim::area::bank_adder_mm2(&tech, banks);
+                    assert_eq!(
+                        ta.periphery_mm2.to_bits(),
+                        (pa.periphery_mm2 * k + tree).to_bits()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn banked_parameter_vectors_key_apart_from_single_bank() {
+    // banks >= 2 changes the cache key (slot 15), and different bank
+    // counts key apart from each other — banked results can never
+    // alias single-bank records.
+    let (w, x) = stats();
+    let arch = QsArch::new(QsModel::new(TechNode::n65(), 0.8));
+    let op = OpPoint::new(512, 6, 6, 8);
+    let keys: Vec<String> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&banks| {
+            let b = Banked::new(Box::new(arch), banks);
+            cache_key(
+                &SweepPoint::new("p", ArchKind::Qs, b.pjrt_params(&op, &w, &x))
+                    .with_trials(128)
+                    .with_seed(7),
+                "native@test",
+            )
+        })
+        .collect();
+    for (i, a) in keys.iter().enumerate() {
+        for (j, b) in keys.iter().enumerate() {
+            if i != j {
+                assert_ne!(a, b, "banks variants share a cache key");
+            }
+        }
+    }
+    // note banks=2 and banks=4 at n=512 have different per-bank N too,
+    // but even same-bank-N variants differ through slot 15:
+    let b2 = Banked::new(Box::new(arch), 2);
+    let b4 = Banked::new(Box::new(arch), 4);
+    let p2 = b2.pjrt_params(&OpPoint::new(256, 6, 6, 8), &w, &x);
+    let p4 = b4.pjrt_params(&OpPoint::new(512, 6, 6, 8), &w, &x);
+    assert_eq!(p2[pvec::IDX_N_ACTIVE], p4[pvec::IDX_N_ACTIVE]);
+    assert_ne!(p2[pvec::IDX_BANKS], p4[pvec::IDX_BANKS]);
+}
