@@ -94,6 +94,23 @@ EXAMPLES:
   # Bx/Bw scale with the target (precision assignment), N held at 512
   imclim pareto --crossover --n 512 --bx 1:8 --bw 1:8 --b-adc 1:14 \\
       --vwl 0.55:0.9:0.05 --co 0.5,1,2,3,6,9 --targets 1:28:1
+
+  # share Monte-Carlo results: snapshot the cache as a verifiable
+  # artifact (per-record sha256 + deterministic tarball) and publish it
+  imclim sweep --arch qs --n 64,128 --b-adc 4:8 --out-dir results
+  imclim cache pack --out-dir results
+  imclim cache verify --out-dir results
+  imclim cache push file:///shared/imclim-registry --out-dir results
+
+  # warm a fresh machine from the registry: pull fetches + verifies +
+  # merges, so the re-run below does zero Monte-Carlo and its sweep.csv
+  # is byte-identical to the publisher's
+  imclim cache pull file:///shared/imclim-registry --out-dir fresh
+  imclim sweep --arch qs --n 64,128 --b-adc 4:8 --out-dir fresh
+
+  # strict mode for CI: any differing-payload collision is a failure
+  imclim merge shard-0 shard-1 --strict --out-dir results
+  imclim cache pull http://reg.internal/imclim --strict --out-dir results
 ";
 
 /// Parse a byte size with optional binary-unit suffix: `"4096"`,

@@ -15,7 +15,10 @@
 //!                        min-delay / max-snr subject to SNR_T, energy
 //!                        and delay bounds
 //!   merge                union shard cache directories into one
-//!   cache                cache maintenance: gc (size/age LRU), stats
+//!                        (--strict exits nonzero on payload collisions)
+//!   cache                cache maintenance: gc (size/age LRU), stats;
+//!                        portable artifacts + registry exchange:
+//!                        pack / verify / push <url> / pull <url>
 //!   dnn                  train the Fig. 2 MLP and report accuracy/SNR
 //!   smoke                PJRT round-trip smoke test
 //!   assign               precision assignment for a target SNR (Sec. III-B)
@@ -37,6 +40,7 @@ use crate::engine::{
 };
 use crate::figures::FigCtx;
 use crate::mc::{ArchKind, InputDist};
+use crate::registry;
 use crate::tech::TechNode;
 use crate::util::csv::CsvWriter;
 use crate::util::table::{fmt_area, fmt_db, fmt_energy, Table};
@@ -101,11 +105,31 @@ COMMANDS:
                       <out-dir>/optimize.csv
   merge <dir>...      union shard cache dirs (or their out-dirs) into
                       <out-dir>/cache, rebuilding the manifest; reports
-                      key collisions with differing payloads
+                      key collisions with differing payloads (--strict
+                      exits nonzero and lists every colliding key)
   cache gc            evict cache records: --max-bytes N[k|m|g] (LRU to
                       fit) and/or --max-age T[s|m|h|d] (expire older;
                       newer records are never evicted); --dry-run
-  cache stats         record count / size / age summary of the cache
+  cache stats         record count / size / age summary of the cache,
+                      plus the backend cache id and — when an artifact
+                      has been packed — its schema/provenance line
+  cache pack          snapshot <out-dir>/cache into a portable artifact
+                      (<out-dir>/artifact/{artifact.json,payload.tar.gz}
+                      or --artifact-dir DIR): per-record sha256 manifest
+                      + deterministic tarball, content-addressed so
+                      identical caches pack to identical artifacts
+  cache verify        re-hash every record of a packed artifact against
+                      its manifest; tampered, truncated or mislabeled
+                      payloads exit nonzero
+  cache push <url>    publish the packed artifact to a registry
+                      (file:///path or http://host/base) under its
+                      content address; re-pushing identical content is
+                      a no-op
+  cache pull <url>    fetch artifacts (all in the registry index, or
+                      one via --id), verify, then merge their records
+                      into <out-dir>/cache under the same collision
+                      rules as `merge` (--strict exits nonzero on any
+                      differing-payload collision)
   assign              precision assignment: --snr-a DB [--margin DB]
   dnn                 train the Fig. 2 MLP: [--epochs E]
   smoke               PJRT artifact round-trip check
@@ -969,6 +993,16 @@ fn cmd_merge(args: &Args) -> anyhow::Result<()> {
         );
     }
     if !report.collisions.is_empty() {
+        if args.has("strict") {
+            eprintln!("keys with differing payloads (existing copy kept):");
+            for k in &report.collisions {
+                eprintln!("  {k}");
+            }
+            anyhow::bail!(
+                "merge --strict: {} key(s) collided with differing payloads",
+                report.collisions.len()
+            );
+        }
         println!("warning: keys with differing payloads (existing copy kept):");
         for k in report.collisions.iter().take(20) {
             println!("  {k}");
@@ -978,6 +1012,15 @@ fn cmd_merge(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Artifact directory for `cache pack/verify/push/pull`: `--artifact-dir`
+/// or `<out-dir>/artifact` (sibling of the cache dir).
+fn cache_artifact_dir(args: &Args) -> PathBuf {
+    match args.opt("artifact-dir") {
+        Some(d) => d.into(),
+        None => PathBuf::from(args.opt("out-dir").unwrap_or("results")).join("artifact"),
+    }
 }
 
 fn cmd_cache(args: &Args) -> anyhow::Result<()> {
@@ -1031,9 +1074,112 @@ fn cmd_cache(args: &Args) -> anyhow::Result<()> {
                 total,
                 oldest
             );
+            if let Some(backend) = crate::engine::manifest_backend(&dir) {
+                println!("backend: {backend}");
+            }
+            let artifact_dir = cache_artifact_dir(args);
+            if artifact_dir.join(registry::ARTIFACT_FILE).is_file() {
+                let artifact = registry::read_manifest(&artifact_dir)?;
+                println!("artifact: {}", artifact.provenance_line());
+            }
             Ok(())
         }
-        other => anyhow::bail!("unknown cache subcommand {other:?} (gc or stats)"),
+        Some("pack") => {
+            let artifact_dir = cache_artifact_dir(args);
+            let params = format!("cache pack --dir {}", dir.display());
+            let report = registry::pack(&dir, &artifact_dir, &params)?;
+            println!(
+                "packed {} records ({} payload bytes) from {} into {}",
+                report.records,
+                report.payload_bytes,
+                dir.display(),
+                artifact_dir.display()
+            );
+            println!("artifact id: {}", report.id);
+            Ok(())
+        }
+        Some("verify") => {
+            let artifact_dir = cache_artifact_dir(args);
+            let report = registry::verify(&artifact_dir)?;
+            println!(
+                "verified artifact {} ({}): backend {}, {} records, {} payload bytes — OK",
+                report.id,
+                artifact_dir.display(),
+                report.backend,
+                report.records,
+                report.payload_bytes
+            );
+            Ok(())
+        }
+        Some("push") => {
+            let url = args
+                .pos(2)
+                .context("usage: imclim cache push <url> [--artifact-dir DIR]")?;
+            let store = registry::open_store(url)?;
+            let report = registry::push(&cache_artifact_dir(args), store.as_ref())?;
+            if report.already_present {
+                println!(
+                    "artifact {} already present at {} ({} records) — nothing to do",
+                    report.id,
+                    store.describe(),
+                    report.records
+                );
+            } else {
+                println!(
+                    "pushed artifact {} ({} records, {} payload bytes) to {}",
+                    report.id,
+                    report.records,
+                    report.payload_bytes,
+                    store.describe()
+                );
+            }
+            Ok(())
+        }
+        Some("pull") => {
+            let url = args
+                .pos(2)
+                .context("usage: imclim cache pull <url> [--id ID] [--strict]")?;
+            let store = registry::open_store(url)?;
+            let report = registry::pull(store.as_ref(), &dir, args.opt("id"))?;
+            println!(
+                "pulled {} artifact(s) from {} into {}: {} new records, {} identical, {} collisions",
+                report.artifacts.len(),
+                store.describe(),
+                dir.display(),
+                report.copied,
+                report.identical,
+                report.collisions.len()
+            );
+            if report.backends.len() > 1 {
+                println!(
+                    "warning: mixed backends across pulled caches: {:?}",
+                    report.backends
+                );
+            }
+            if !report.collisions.is_empty() {
+                if args.has("strict") {
+                    eprintln!("keys with differing payloads (existing copy kept):");
+                    for k in &report.collisions {
+                        eprintln!("  {k}");
+                    }
+                    anyhow::bail!(
+                        "pull --strict: {} key(s) collided with differing payloads",
+                        report.collisions.len()
+                    );
+                }
+                println!("warning: keys with differing payloads (existing copy kept):");
+                for k in report.collisions.iter().take(20) {
+                    println!("  {k}");
+                }
+                if report.collisions.len() > 20 {
+                    println!("  ... and {} more", report.collisions.len() - 20);
+                }
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown cache subcommand {other:?} (gc, stats, pack, verify, push or pull)"
+        ),
     }
 }
 

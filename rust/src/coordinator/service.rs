@@ -196,6 +196,14 @@ fn clone_err(e: &anyhow::Error) -> anyhow::Error {
 
 // ---------------------------------------------------------------------
 // Shard-subprocess orchestration (distributed sweeps).
+//
+// Each shard writes an ordinary out-dir whose `cache/` is a complete,
+// self-contained cache directory. That makes shard results portable
+// *before* the parent merges them: `imclim cache pack --dir
+// shard-i/cache` snapshots one shard into a registry artifact
+// (`registry::artifact`), so distributed runs can publish per-shard
+// and let any consumer `cache pull` + merge instead of shipping raw
+// directories.
 // ---------------------------------------------------------------------
 
 /// One shard subprocess of a distributed sweep: a display label (used to

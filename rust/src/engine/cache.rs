@@ -43,7 +43,9 @@ use crate::util::json::{num, obj, s, Json};
 
 const CACHE_VERSION: f64 = 1.0;
 
-const MANIFEST_FILE: &str = "manifest.json";
+/// Cache index filename (`key -> label`), also carried verbatim inside
+/// registry artifact payloads so a pulled cache keeps its labels.
+pub const MANIFEST_FILE: &str = "manifest.json";
 
 /// Domain-separation prefix: bump alongside `CACHE_VERSION` whenever the
 /// key encoding *or the simulator's semantics* change — the key covers a
@@ -247,6 +249,23 @@ fn read_manifest_entries(dir: &Path) -> BTreeMap<String, Json> {
         .unwrap_or_default()
 }
 
+/// The `key -> label` index of a directory's manifest as plain strings
+/// (empty on missing/corrupt). The registry packer embeds these labels
+/// in `artifact.json` so published records stay human-identifiable.
+pub fn manifest_labels(dir: &Path) -> BTreeMap<String, String> {
+    read_manifest_entries(dir)
+        .into_iter()
+        .filter_map(|(k, v)| v.as_str().map(|s| (k, s.to_string())))
+        .collect()
+}
+
+/// `backend` field of a directory's manifest, if readable. Public for
+/// the registry (artifacts record which backend produced their cache)
+/// and `cache stats`.
+pub fn manifest_backend(dir: &Path) -> Option<String> {
+    read_manifest_backend(dir)
+}
+
 /// `backend` field of a directory's manifest, if readable.
 fn read_manifest_backend(dir: &Path) -> Option<String> {
     std::fs::read_to_string(dir.join(MANIFEST_FILE))
@@ -419,8 +438,10 @@ pub fn merge_cache_dirs(dst: &Path, sources: &[PathBuf]) -> Result<MergeReport> 
 
 /// All `(key, path)` record files in a cache dir (manifest excluded).
 /// Sorted by key for deterministic iteration; an absent directory is
-/// just empty.
-fn list_record_files(dir: &Path) -> Result<Vec<(String, PathBuf)>> {
+/// just empty. This is the enumeration hook the registry packer and
+/// verifier share with `merge`/`gc`: anything it lists is a record an
+/// artifact must carry and checksum.
+pub fn list_record_files(dir: &Path) -> Result<Vec<(String, PathBuf)>> {
     let mut out = Vec::new();
     let entries = match std::fs::read_dir(dir) {
         Ok(e) => e,

@@ -25,8 +25,9 @@ pub mod report;
 pub mod spec;
 
 pub use cache::{
-    cache_key, gc, memo_key, merge_cache_dirs, scan_records, GcOptions, GcReport, MergeReport,
-    RecordInfo, ResultCache,
+    cache_key, gc, list_record_files, manifest_backend, manifest_labels, memo_key,
+    merge_cache_dirs, scan_records, GcOptions, GcReport, MergeReport, RecordInfo, ResultCache,
+    MANIFEST_FILE,
 };
 pub use report::{BoundReport, EsReport};
 pub use spec::{

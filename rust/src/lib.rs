@@ -40,6 +40,7 @@ pub mod mc;
 pub mod opt;
 pub mod prop;
 pub mod quant;
+pub mod registry;
 pub mod runtime;
 pub mod snr;
 pub mod taxonomy;

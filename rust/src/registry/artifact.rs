@@ -1,0 +1,693 @@
+//! The portable cache artifact format: `artifact.json` + `payload.tar.gz`.
+//!
+//! An artifact is a self-describing, verifiable snapshot of one
+//! content-addressed cache directory (RFC-0005-style manifest+tarball):
+//!
+//! * `artifact.json` — schema version, the backend `cache_id` that
+//!   produced the records, per-record SHA-256 / size / label, record
+//!   count, a grid/axis summary decoded from the records themselves,
+//!   and provenance (crate version + the creating invocation);
+//! * `payload.tar.gz` — the record files (plus the cache's
+//!   `manifest.json` label index when present), packed deterministically
+//!   (`registry::targz`), so identical cache contents produce
+//!   byte-identical artifacts and therefore the same content address.
+//!
+//! The artifact **id** is a SHA-256 over the sorted `(key, sha256)`
+//! record pairs, the backend id and the label-index hash — a pure
+//! content address: *what* results, not when/where/why they were packed
+//! (provenance deliberately does not participate, so re-packing the
+//! same cache from a different invocation dedupes in the registry).
+//!
+//! [`verify`] re-hashes every record against the manifest and rejects
+//! tampered, truncated, reordered, padded or mislabeled payloads;
+//! [`load_verified`] additionally hands back the payload entries for
+//! unpacking (the `pull` path), so nothing unverified ever reaches a
+//! cache directory.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::arch::pvec;
+use crate::engine::{list_record_files, manifest_backend, manifest_labels, MANIFEST_FILE};
+use crate::registry::targz::{self, Entry};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::sha256::{sha256_hex, Sha256};
+
+/// Artifact schema version; bump on any incompatible layout change.
+pub const ARTIFACT_SCHEMA: f64 = 1.0;
+/// Manifest filename inside an artifact directory.
+pub const ARTIFACT_FILE: &str = "artifact.json";
+/// Payload tarball filename inside an artifact directory.
+pub const PAYLOAD_FILE: &str = "payload.tar.gz";
+
+/// Domain-separation prefix for the artifact content address.
+const ID_PREFIX: &str = "imclim-artifact-v1";
+
+/// One record as listed in `artifact.json`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecordEntry {
+    pub sha256: String,
+    pub bytes: u64,
+    /// Human label from the cache manifest (may be empty).
+    pub label: String,
+}
+
+/// Decoded `artifact.json`.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub schema: f64,
+    /// Content address: SHA-256 over the sorted record hashes + backend.
+    pub id: String,
+    /// Backend `cache_id` of the packed cache (e.g. `native@0.2.0`).
+    pub backend: String,
+    /// Crate version that packed the artifact.
+    pub crate_version: String,
+    /// The creating invocation (`imclim cache pack ...`), free-form.
+    pub creation_params: String,
+    pub record_count: usize,
+    pub records: BTreeMap<String, RecordEntry>,
+    /// SHA-256 of the embedded cache `manifest.json`, when present.
+    pub cache_manifest_sha256: Option<String>,
+    pub payload_sha256: String,
+    pub payload_bytes: u64,
+    /// Grid/axis summary decoded from the records (informational).
+    pub summary: Json,
+}
+
+impl Artifact {
+    /// One-line provenance for `cache stats` and reports.
+    pub fn provenance_line(&self) -> String {
+        format!(
+            "schema {}, id {}..., backend {}, {} records, packed by imclim {}{}",
+            self.schema as u64,
+            &self.id[..12.min(self.id.len())],
+            self.backend,
+            self.record_count,
+            self.crate_version,
+            if self.creation_params.is_empty() {
+                String::new()
+            } else {
+                format!(" ({})", self.creation_params)
+            }
+        )
+    }
+}
+
+/// What [`pack`] did.
+#[derive(Clone, Debug)]
+pub struct PackReport {
+    pub id: String,
+    pub records: usize,
+    pub payload_bytes: u64,
+}
+
+/// What [`verify`] established.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub id: String,
+    pub backend: String,
+    pub records: usize,
+    pub payload_bytes: u64,
+}
+
+/// Compute the content address over sorted record hashes, the backend
+/// id, and the label-index hash.
+fn artifact_id(
+    backend: &str,
+    records: &BTreeMap<String, RecordEntry>,
+    cache_manifest_sha256: Option<&str>,
+) -> String {
+    let mut h = Sha256::new();
+    h.update(ID_PREFIX.as_bytes());
+    h.update(b"\nbackend:");
+    h.update(backend.as_bytes());
+    for (key, r) in records {
+        // BTreeMap iterates sorted by key
+        h.update(b"\nrecord:");
+        h.update(key.as_bytes());
+        h.update(b":");
+        h.update(r.sha256.as_bytes());
+    }
+    if let Some(m) = cache_manifest_sha256 {
+        h.update(b"\nmanifest:");
+        h.update(m.as_bytes());
+    }
+    h.finish_hex()
+}
+
+/// Pack `cache_dir` into `artifact_dir/{artifact.json,payload.tar.gz}`.
+/// `creation_params` is recorded as provenance (it does not affect the
+/// content address). Deterministic: identical cache contents produce
+/// byte-identical payloads and ids.
+pub fn pack(cache_dir: &Path, artifact_dir: &Path, creation_params: &str) -> Result<PackReport> {
+    let files = list_record_files(cache_dir)?;
+    ensure!(
+        !files.is_empty(),
+        "nothing to pack: no cache records in {}",
+        cache_dir.display()
+    );
+    let labels = manifest_labels(cache_dir);
+    let backend = manifest_backend(cache_dir).unwrap_or_else(|| "unknown".into());
+
+    let mut records: BTreeMap<String, RecordEntry> = BTreeMap::new();
+    let mut entries: Vec<Entry> = Vec::with_capacity(files.len() + 1);
+    let mut parsed: Vec<Json> = Vec::with_capacity(files.len());
+    for (key, path) in &files {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if let Ok(j) = Json::parse(&String::from_utf8_lossy(&bytes)) {
+            parsed.push(j);
+        }
+        records.insert(
+            key.clone(),
+            RecordEntry {
+                sha256: sha256_hex(&bytes),
+                bytes: bytes.len() as u64,
+                label: labels.get(key).cloned().unwrap_or_default(),
+            },
+        );
+        entries.push(Entry {
+            name: format!("{key}.json"),
+            data: bytes,
+        });
+    }
+    let cache_manifest_sha256 = match std::fs::read(cache_dir.join(MANIFEST_FILE)) {
+        Ok(bytes) => {
+            let hash = sha256_hex(&bytes);
+            entries.push(Entry {
+                name: MANIFEST_FILE.to_string(),
+                data: bytes,
+            });
+            Some(hash)
+        }
+        Err(_) => None,
+    };
+
+    let payload = targz::gzip(&targz::tar_pack(&entries)?);
+    let id = artifact_id(&backend, &records, cache_manifest_sha256.as_deref());
+    let artifact = Artifact {
+        schema: ARTIFACT_SCHEMA,
+        id: id.clone(),
+        backend,
+        crate_version: env!("CARGO_PKG_VERSION").to_string(),
+        creation_params: creation_params.to_string(),
+        record_count: records.len(),
+        records,
+        cache_manifest_sha256,
+        payload_sha256: sha256_hex(&payload),
+        payload_bytes: payload.len() as u64,
+        summary: summarize(&parsed),
+    };
+
+    std::fs::create_dir_all(artifact_dir)
+        .with_context(|| format!("creating {}", artifact_dir.display()))?;
+    let payload_path = artifact_dir.join(PAYLOAD_FILE);
+    std::fs::write(&payload_path, &payload)
+        .with_context(|| format!("writing {}", payload_path.display()))?;
+    let manifest_path = artifact_dir.join(ARTIFACT_FILE);
+    std::fs::write(&manifest_path, encode(&artifact).to_string())
+        .with_context(|| format!("writing {}", manifest_path.display()))?;
+    Ok(PackReport {
+        id: artifact.id,
+        records: artifact.record_count,
+        payload_bytes: artifact.payload_bytes,
+    })
+}
+
+/// Grid/axis summary decoded from the record JSONs: how many sweep vs
+/// memo records, which architectures, the distinct trial counts, and
+/// the N range. Informational only — never trusted by `verify`.
+fn summarize(parsed: &[Json]) -> Json {
+    let mut kinds: BTreeMap<String, usize> = BTreeMap::new();
+    let mut trials: Vec<u64> = Vec::new();
+    let mut memo = 0usize;
+    let mut sweep = 0usize;
+    let (mut n_min, mut n_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for j in parsed {
+        if j.get("tag").is_some() {
+            memo += 1;
+            continue;
+        }
+        let Some(kind) = j.get("kind").and_then(|k| k.as_str()) else {
+            continue;
+        };
+        sweep += 1;
+        *kinds.entry(kind.to_string()).or_insert(0) += 1;
+        if let Some(t) = j.get("trials").and_then(|t| t.as_f64()) {
+            let t = t as u64;
+            if !trials.contains(&t) {
+                trials.push(t);
+            }
+        }
+        // params are stored as IEEE-754 hex strings; slot 0 is N
+        if let Some(hex) = j
+            .get("params")
+            .and_then(|p| p.idx(pvec::IDX_N_ACTIVE))
+            .and_then(|v| v.as_str())
+        {
+            if let Ok(bits) = u64::from_str_radix(hex, 16) {
+                let n = f64::from_bits(bits);
+                n_min = n_min.min(n);
+                n_max = n_max.max(n);
+            }
+        }
+    }
+    trials.sort_unstable();
+    let mut fields = vec![
+        ("sweep_records", num(sweep as f64)),
+        ("memo_records", num(memo as f64)),
+        (
+            "kinds",
+            Json::Obj(
+                kinds
+                    .into_iter()
+                    .map(|(k, v)| (k, num(v as f64)))
+                    .collect(),
+            ),
+        ),
+        (
+            "trials",
+            Json::Arr(trials.into_iter().map(|t| num(t as f64)).collect()),
+        ),
+    ];
+    if n_min.is_finite() {
+        fields.push(("n_min", num(n_min)));
+        fields.push(("n_max", num(n_max)));
+    }
+    obj(fields)
+}
+
+fn encode(a: &Artifact) -> Json {
+    let records = Json::Obj(
+        a.records
+            .iter()
+            .map(|(k, r)| {
+                (
+                    k.clone(),
+                    obj(vec![
+                        ("sha256", s(&r.sha256)),
+                        ("bytes", num(r.bytes as f64)),
+                        ("label", s(&r.label)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let mut fields = vec![
+        ("schema", num(a.schema)),
+        ("id", s(&a.id)),
+        ("backend", s(&a.backend)),
+        (
+            "provenance",
+            obj(vec![
+                ("crate_version", s(&a.crate_version)),
+                ("creation_params", s(&a.creation_params)),
+            ]),
+        ),
+        ("record_count", num(a.record_count as f64)),
+        ("records", records),
+        (
+            "payload",
+            obj(vec![
+                ("file", s(PAYLOAD_FILE)),
+                ("sha256", s(&a.payload_sha256)),
+                ("bytes", num(a.payload_bytes as f64)),
+            ]),
+        ),
+        ("summary", a.summary.clone()),
+    ];
+    if let Some(m) = &a.cache_manifest_sha256 {
+        fields.push(("cache_manifest_sha256", s(m)));
+    }
+    obj(fields)
+}
+
+/// Decode `artifact.json` text. Structural defects are hard errors here
+/// (unlike cache records, an artifact is an exchange format: silently
+/// degrading a bad manifest to "empty" would defeat verification).
+pub fn decode(text: &str) -> Result<Artifact> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("artifact.json is not JSON: {e}"))?;
+    let schema = j
+        .get("schema")
+        .and_then(|v| v.as_f64())
+        .context("artifact.json: missing schema")?;
+    ensure!(
+        schema == ARTIFACT_SCHEMA,
+        "unsupported artifact schema {schema} (this build reads schema {ARTIFACT_SCHEMA})"
+    );
+    let str_field = |name: &str| -> Result<String> {
+        j.get(name)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .with_context(|| format!("artifact.json: missing {name}"))
+    };
+    let provenance = j.get("provenance").context("artifact.json: missing provenance")?;
+    let payload = j.get("payload").context("artifact.json: missing payload")?;
+    let mut records = BTreeMap::new();
+    for (key, v) in j
+        .get("records")
+        .and_then(|r| r.as_obj())
+        .context("artifact.json: missing records")?
+    {
+        records.insert(
+            key.clone(),
+            RecordEntry {
+                sha256: v
+                    .get("sha256")
+                    .and_then(|x| x.as_str())
+                    .with_context(|| format!("record {key}: missing sha256"))?
+                    .to_string(),
+                bytes: v
+                    .get("bytes")
+                    .and_then(|x| x.as_f64())
+                    .with_context(|| format!("record {key}: missing bytes"))? as u64,
+                label: v
+                    .get("label")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            },
+        );
+    }
+    Ok(Artifact {
+        schema,
+        id: str_field("id")?,
+        backend: str_field("backend")?,
+        crate_version: provenance
+            .get("crate_version")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string(),
+        creation_params: provenance
+            .get("creation_params")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string(),
+        record_count: j
+            .get("record_count")
+            .and_then(|v| v.as_f64())
+            .context("artifact.json: missing record_count")? as usize,
+        records,
+        cache_manifest_sha256: j
+            .get("cache_manifest_sha256")
+            .and_then(|v| v.as_str())
+            .map(str::to_string),
+        payload_sha256: payload
+            .get("sha256")
+            .and_then(|v| v.as_str())
+            .context("artifact.json: payload missing sha256")?
+            .to_string(),
+        payload_bytes: payload
+            .get("bytes")
+            .and_then(|v| v.as_f64())
+            .context("artifact.json: payload missing bytes")? as u64,
+        summary: j.get("summary").cloned().unwrap_or(Json::Null),
+    })
+}
+
+/// Read an artifact directory's manifest without verifying the payload
+/// (for `cache stats` and listings).
+pub fn read_manifest(artifact_dir: &Path) -> Result<Artifact> {
+    let path = artifact_dir.join(ARTIFACT_FILE);
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+    decode(&text)
+}
+
+/// Verify manifest+payload from raw bytes and hand back the verified
+/// payload entries. Every check is a hard error: payload hash/size,
+/// per-record hash/size, record-count agreement, extra or missing
+/// payload members, label-index hash, and the recomputed content
+/// address.
+pub fn verify_bytes(manifest_text: &str, payload: &[u8]) -> Result<(Artifact, Vec<Entry>)> {
+    let artifact = decode(manifest_text)?;
+    ensure!(
+        artifact.record_count == artifact.records.len(),
+        "record count mismatch: artifact.json claims {} records but lists {}",
+        artifact.record_count,
+        artifact.records.len()
+    );
+    ensure!(
+        artifact.payload_bytes == payload.len() as u64,
+        "payload size mismatch: artifact.json says {} bytes, payload is {} (truncated?)",
+        artifact.payload_bytes,
+        payload.len()
+    );
+    let payload_hash = sha256_hex(payload);
+    ensure!(
+        payload_hash == artifact.payload_sha256,
+        "payload sha256 mismatch: expected {}, got {payload_hash} (payload tampered)",
+        artifact.payload_sha256
+    );
+    let entries = targz::tar_unpack(&targz::gunzip(payload)?)?;
+
+    let mut seen: BTreeMap<&str, &Entry> = BTreeMap::new();
+    let mut cache_manifest: Option<&Entry> = None;
+    for e in &entries {
+        if e.name == MANIFEST_FILE {
+            ensure!(
+                cache_manifest.is_none(),
+                "payload carries duplicate {MANIFEST_FILE}"
+            );
+            cache_manifest = Some(e);
+            continue;
+        }
+        let key = e
+            .name
+            .strip_suffix(".json")
+            .with_context(|| format!("unexpected payload member '{}'", e.name))?;
+        let listed = artifact
+            .records
+            .get(key)
+            .with_context(|| format!("payload member '{}' is not in artifact.json", e.name))?;
+        let hash = sha256_hex(&e.data);
+        ensure!(
+            hash == listed.sha256,
+            "record {key} sha256 mismatch: expected {}, got {hash} (record tampered)",
+            listed.sha256
+        );
+        ensure!(
+            e.data.len() as u64 == listed.bytes,
+            "record {key} size mismatch: expected {} bytes, got {}",
+            listed.bytes,
+            e.data.len()
+        );
+        ensure!(
+            seen.insert(key, e).is_none(),
+            "payload carries duplicate record {key}"
+        );
+    }
+    for key in artifact.records.keys() {
+        ensure!(
+            seen.contains_key(key.as_str()),
+            "record {key} listed in artifact.json is missing from the payload"
+        );
+    }
+    match (&artifact.cache_manifest_sha256, cache_manifest) {
+        (Some(expect), Some(e)) => {
+            let hash = sha256_hex(&e.data);
+            ensure!(
+                &hash == expect,
+                "cache manifest sha256 mismatch: expected {expect}, got {hash}"
+            );
+        }
+        (Some(_), None) => bail!("cache manifest listed in artifact.json is missing"),
+        (None, Some(_)) => bail!("payload carries an unlisted cache manifest"),
+        (None, None) => {}
+    }
+    let recomputed = artifact_id(
+        &artifact.backend,
+        &artifact.records,
+        artifact.cache_manifest_sha256.as_deref(),
+    );
+    ensure!(
+        recomputed == artifact.id,
+        "artifact id mismatch: manifest claims {}, content hashes to {recomputed}",
+        artifact.id
+    );
+    Ok((artifact, entries))
+}
+
+/// Verify an artifact directory and hand back the verified entries.
+pub fn load_verified(artifact_dir: &Path) -> Result<(Artifact, Vec<Entry>)> {
+    let manifest_path = artifact_dir.join(ARTIFACT_FILE);
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let payload_path = artifact_dir.join(PAYLOAD_FILE);
+    let payload =
+        std::fs::read(&payload_path).with_context(|| format!("reading {}", payload_path.display()))?;
+    verify_bytes(&text, &payload)
+}
+
+/// Verify an artifact directory: re-hash every record against the
+/// manifest, rejecting tampered/truncated payloads.
+pub fn verify(artifact_dir: &Path) -> Result<VerifyReport> {
+    let (artifact, _) = load_verified(artifact_dir)?;
+    Ok(VerifyReport {
+        id: artifact.id,
+        backend: artifact.backend,
+        records: artifact.record_count,
+        payload_bytes: artifact.payload_bytes,
+    })
+}
+
+/// Write verified payload entries out as a cache directory (records +
+/// label index). The result is a plain cache dir, ready for
+/// `merge_cache_dirs`.
+pub fn unpack_entries(entries: &[Entry], cache_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(cache_dir)
+        .with_context(|| format!("creating {}", cache_dir.display()))?;
+    for e in entries {
+        ensure!(
+            !e.name.contains('/') && !e.name.contains('\\') && !e.name.starts_with('.'),
+            "refusing payload member with path component: '{}'",
+            e.name
+        );
+        let path = cache_dir.join(&e.name);
+        std::fs::write(&path, &e.data).with_context(|| format!("writing {}", path.display()))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("imclim-artifact-unit-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A minimal fake cache dir: two records + a manifest.
+    fn fake_cache(name: &str) -> std::path::PathBuf {
+        let dir = tmp(name);
+        std::fs::write(dir.join("aaaa.json"), b"{\"version\": 1, \"v\": 1}").unwrap();
+        std::fs::write(dir.join("bbbb.json"), b"{\"version\": 1, \"v\": 2}").unwrap();
+        std::fs::write(
+            dir.join(MANIFEST_FILE),
+            b"{\"version\":1,\"backend\":\"native@test\",\"entries\":{\"aaaa\":\"lbl/a\",\"bbbb\":\"lbl/b\"}}",
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn pack_verify_roundtrip_and_determinism() {
+        let cache = fake_cache("roundtrip");
+        let art1 = tmp("roundtrip-art1");
+        let art2 = tmp("roundtrip-art2");
+        let r1 = pack(&cache, &art1, "cache pack --out-dir x").unwrap();
+        assert_eq!(r1.records, 2);
+        let report = verify(&art1).unwrap();
+        assert_eq!(report.records, 2);
+        assert_eq!(report.backend, "native@test");
+        assert_eq!(report.id, r1.id);
+        // packing the same cache again is byte-identical (same address)
+        let r2 = pack(&cache, &art2, "cache pack --out-dir x").unwrap();
+        assert_eq!(r1.id, r2.id);
+        assert_eq!(
+            std::fs::read(art1.join(PAYLOAD_FILE)).unwrap(),
+            std::fs::read(art2.join(PAYLOAD_FILE)).unwrap()
+        );
+        assert_eq!(
+            std::fs::read(art1.join(ARTIFACT_FILE)).unwrap(),
+            std::fs::read(art2.join(ARTIFACT_FILE)).unwrap()
+        );
+        // labels rode along
+        let a = read_manifest(&art1).unwrap();
+        assert_eq!(a.records["aaaa"].label, "lbl/a");
+        // ...but provenance does not move the content address
+        let art3 = tmp("roundtrip-art3");
+        let r3 = pack(&cache, &art3, "some other invocation").unwrap();
+        assert_eq!(r1.id, r3.id);
+    }
+
+    #[test]
+    fn unpack_restores_the_cache_byte_identically() {
+        let cache = fake_cache("unpack");
+        let art = tmp("unpack-art");
+        pack(&cache, &art, "").unwrap();
+        let (_, entries) = load_verified(&art).unwrap();
+        let restored = tmp("unpack-restored");
+        unpack_entries(&entries, &restored).unwrap();
+        for f in ["aaaa.json", "bbbb.json", MANIFEST_FILE] {
+            assert_eq!(
+                std::fs::read(cache.join(f)).unwrap(),
+                std::fs::read(restored.join(f)).unwrap(),
+                "{f}"
+            );
+        }
+    }
+
+    #[test]
+    fn verify_rejects_payload_tamper_and_truncation() {
+        let cache = fake_cache("tamper");
+        let art = tmp("tamper-art");
+        pack(&cache, &art, "").unwrap();
+        let payload = std::fs::read(art.join(PAYLOAD_FILE)).unwrap();
+        // flip one byte at several offsets
+        for idx in [0, payload.len() / 2, payload.len() - 1] {
+            let mut bad = payload.clone();
+            bad[idx] ^= 1;
+            std::fs::write(art.join(PAYLOAD_FILE), &bad).unwrap();
+            assert!(verify(&art).is_err(), "tamper at byte {idx} must fail");
+        }
+        // truncation
+        std::fs::write(art.join(PAYLOAD_FILE), &payload[..payload.len() - 7]).unwrap();
+        assert!(verify(&art).is_err(), "truncated payload must fail");
+        // restore -> verifies again
+        std::fs::write(art.join(PAYLOAD_FILE), &payload).unwrap();
+        verify(&art).unwrap();
+    }
+
+    #[test]
+    fn verify_rejects_manifest_defects() {
+        let cache = fake_cache("manifest-defects");
+        let art = tmp("manifest-defects-art");
+        pack(&cache, &art, "").unwrap();
+        let text = std::fs::read_to_string(art.join(ARTIFACT_FILE)).unwrap();
+        // record-count mismatch
+        let bad = text.replace("\"record_count\":2", "\"record_count\":3");
+        assert_ne!(bad, text);
+        std::fs::write(art.join(ARTIFACT_FILE), &bad).unwrap();
+        let err = verify(&art).unwrap_err().to_string();
+        assert!(err.contains("record count mismatch"), "{err}");
+        // tampered record hash
+        let a = decode(&text).unwrap();
+        let victim = a.records["aaaa"].sha256.clone();
+        let head = if victim.starts_with('0') { "1" } else { "0" };
+        let forged = format!("{head}{}", &victim[1..]);
+        assert_ne!(forged, victim);
+        let bad = text.replace(&victim, &forged);
+        std::fs::write(art.join(ARTIFACT_FILE), &bad).unwrap();
+        assert!(verify(&art).is_err(), "forged record hash must fail");
+        // unsupported schema
+        let bad = text.replace("\"schema\":1", "\"schema\":99");
+        std::fs::write(art.join(ARTIFACT_FILE), &bad).unwrap();
+        let err = verify(&art).unwrap_err().to_string();
+        assert!(err.contains("unsupported artifact schema"), "{err}");
+        // garbage manifest is a hard error, not an empty artifact
+        std::fs::write(art.join(ARTIFACT_FILE), "{ not json").unwrap();
+        assert!(verify(&art).is_err());
+    }
+
+    #[test]
+    fn pack_refuses_an_empty_cache() {
+        let dir = tmp("empty");
+        let art = tmp("empty-art");
+        assert!(pack(&dir, &art, "").is_err());
+    }
+
+    #[test]
+    fn unpack_refuses_path_traversal() {
+        let dst = tmp("traversal");
+        let evil = vec![Entry {
+            name: "../evil.json".into(),
+            data: vec![],
+        }];
+        assert!(unpack_entries(&evil, &dst).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Minimal HTTP/1.1 client for dumb registries (offline build: no
+//! reqwest/hyper, no TLS).
+//!
+//! A registry over HTTP is just files behind GET — any static file
+//! server works as a read-only registry; PUT support (webdav, a tiny
+//! upload handler) additionally enables `push`. This client speaks
+//! exactly that subset: `GET` and `PUT` with `Content-Length` (or
+//! chunked responses), over plain `http://`. `https://` is gated at
+//! URL-parse time with a clear error — the container has no TLS stack
+//! to link against, and silently downgrading would be worse.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A parsed `http://host[:port]/base` endpoint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpEndpoint {
+    pub host: String,
+    pub port: u16,
+    /// Base path, always starting with `/`, no trailing `/`.
+    pub base: String,
+}
+
+impl HttpEndpoint {
+    pub fn parse(url: &str) -> Result<Self> {
+        let rest = url
+            .strip_prefix("http://")
+            .context("not an http:// URL")?;
+        let (authority, path) = match rest.find('/') {
+            Some(i) => (&rest[..i], &rest[i..]),
+            None => (rest, "/"),
+        };
+        ensure!(!authority.is_empty(), "http URL '{url}' has no host");
+        let (host, port) = match authority.rsplit_once(':') {
+            Some((h, p)) => (
+                h.to_string(),
+                p.parse::<u16>()
+                    .map_err(|_| anyhow::anyhow!("bad port in '{url}'"))?,
+            ),
+            None => (authority.to_string(), 80),
+        };
+        Ok(Self {
+            host,
+            port,
+            base: path.trim_end_matches('/').to_string(),
+        })
+    }
+
+    pub fn url_for(&self, rel: &str) -> String {
+        format!("http://{}:{}{}/{rel}", self.host, self.port, self.base)
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        let stream = TcpStream::connect((self.host.as_str(), self.port))
+            .with_context(|| format!("connecting to {}:{}", self.host, self.port))?;
+        let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+        Ok(stream)
+    }
+
+    /// GET a path relative to the base. `Ok(None)` on 404/410 (a miss,
+    /// not an error); any other non-2xx status is an error.
+    pub fn get(&self, rel: &str) -> Result<Option<Vec<u8>>> {
+        let mut stream = self.connect()?;
+        let path = format!("{}/{rel}", self.base);
+        write!(
+            stream,
+            "GET {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\nAccept: */*\r\n\r\n",
+            self.host
+        )?;
+        stream.flush()?;
+        let (status, body) = read_response(&mut stream)
+            .with_context(|| format!("reading response for GET {}", self.url_for(rel)))?;
+        match status {
+            200..=299 => Ok(Some(body)),
+            404 | 410 => Ok(None),
+            s => bail!("GET {} failed with HTTP {s}", self.url_for(rel)),
+        }
+    }
+
+    /// PUT bytes to a path relative to the base.
+    pub fn put(&self, rel: &str, data: &[u8]) -> Result<()> {
+        let mut stream = self.connect()?;
+        let path = format!("{}/{rel}", self.base);
+        write!(
+            stream,
+            "PUT {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\
+             Content-Type: application/octet-stream\r\nContent-Length: {}\r\n\r\n",
+            self.host,
+            data.len()
+        )?;
+        stream.write_all(data)?;
+        stream.flush()?;
+        let (status, _) = read_response(&mut stream)
+            .with_context(|| format!("reading response for PUT {}", self.url_for(rel)))?;
+        match status {
+            200..=299 => Ok(()),
+            405 | 501 => bail!(
+                "PUT {} rejected (HTTP {status}): this registry is read-only — \
+                 push needs a server that accepts uploads",
+                self.url_for(rel)
+            ),
+            s => bail!("PUT {} failed with HTTP {s}", self.url_for(rel)),
+        }
+    }
+}
+
+/// Read a full HTTP/1.1 response: status code + body. Understands
+/// `Content-Length`, `Transfer-Encoding: chunked`, and close-delimited
+/// bodies; that covers every dumb file server worth pointing at.
+fn read_response(stream: &mut TcpStream) -> Result<(u16, Vec<u8>)> {
+    let mut raw = Vec::new();
+    let mut buf = [0u8; 8192];
+    // read until we have the full header block
+    let header_end = loop {
+        if let Some(i) = find_header_end(&raw) {
+            break i;
+        }
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            if raw.is_empty() {
+                bail!("empty HTTP response");
+            }
+            bail!("connection closed mid-header");
+        }
+        raw.extend_from_slice(&buf[..n]);
+    };
+    let head = std::str::from_utf8(&raw[..header_end]).context("non-UTF-8 response header")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad HTTP status line '{status_line}'"))?;
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value.parse().ok();
+        } else if name.eq_ignore_ascii_case("transfer-encoding")
+            && value.to_ascii_lowercase().contains("chunked")
+        {
+            chunked = true;
+        }
+    }
+    let mut body = raw[header_end + 4..].to_vec();
+    if chunked {
+        // drain the stream, then decode the chunked framing
+        read_to_end(stream, &mut body)?;
+        return Ok((status, decode_chunked(&body)?));
+    }
+    match content_length {
+        Some(len) => {
+            while body.len() < len {
+                let n = stream.read(&mut buf)?;
+                ensure!(n > 0, "connection closed mid-body ({}/{len} bytes)", body.len());
+                body.extend_from_slice(&buf[..n]);
+            }
+            body.truncate(len);
+        }
+        None => read_to_end(stream, &mut body)?,
+    }
+    Ok((status, body))
+}
+
+fn read_to_end(stream: &mut TcpStream, body: &mut Vec<u8>) -> Result<()> {
+    let mut buf = [0u8; 8192];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(()),
+            Ok(n) => body.extend_from_slice(&buf[..n]),
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+fn find_header_end(raw: &[u8]) -> Option<usize> {
+    raw.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn decode_chunked(data: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut pos = 0;
+    loop {
+        ensure!(pos <= data.len(), "truncated chunk stream");
+        let line_end = data[pos..]
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .context("truncated chunk header")?
+            + pos;
+        let size_str = std::str::from_utf8(&data[pos..line_end]).context("bad chunk size")?;
+        let size = usize::from_str_radix(size_str.trim().split(';').next().unwrap_or("").trim(), 16)
+            .with_context(|| format!("bad chunk size '{size_str}'"))?;
+        pos = line_end + 2;
+        if size == 0 {
+            return Ok(out);
+        }
+        ensure!(pos + size <= data.len(), "truncated chunk body");
+        out.extend_from_slice(&data[pos..pos + size]);
+        pos += size + 2; // skip trailing CRLF
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_urls() {
+        let e = HttpEndpoint::parse("http://reg.example.com/imclim/v1/").unwrap();
+        assert_eq!(e.host, "reg.example.com");
+        assert_eq!(e.port, 80);
+        assert_eq!(e.base, "/imclim/v1");
+        let e = HttpEndpoint::parse("http://127.0.0.1:8080").unwrap();
+        assert_eq!(e.port, 8080);
+        assert_eq!(e.base, "");
+        assert_eq!(e.url_for("index.json"), "http://127.0.0.1:8080/index.json");
+        assert!(HttpEndpoint::parse("https://x").is_err());
+        assert!(HttpEndpoint::parse("http://:80/x").is_err());
+        assert!(HttpEndpoint::parse("http://h:notaport/x").is_err());
+    }
+
+    #[test]
+    fn decodes_chunked_bodies() {
+        let body = b"4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        assert_eq!(decode_chunked(body).unwrap(), b"Wikipedia");
+        assert!(decode_chunked(b"zz\r\n").is_err());
+        assert!(decode_chunked(b"5\r\nab").is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! Portable cache artifacts and a shared result registry.
+//!
+//! The sweep engine's content-addressed result cache (`engine::cache`)
+//! makes warm re-runs byte-identical — but only on the machine that
+//! paid for the Monte-Carlo. This subsystem makes those results
+//! *portable*: a cache directory is packed into a self-verifying
+//! artifact (manifest + tarball), published to a dumb registry, and
+//! pulled back anywhere, so one person's (or one CI shard's)
+//! Monte-Carlo spend warms everyone else's cache.
+//!
+//! Three layers, bottom-up:
+//!
+//! * [`targz`] — deterministic ustar + gzip (stored DEFLATE blocks),
+//!   dependency-free both directions. Identical cache contents always
+//!   produce byte-identical payloads.
+//! * [`artifact`] — the artifact format: `artifact.json` (schema,
+//!   backend `cache_id`, per-record sha256, grid summary, provenance)
+//!   next to `payload.tar.gz`, content-addressed by the record set so
+//!   re-packs of the same results dedupe. `verify` re-hashes every
+//!   record and rejects tampered or truncated payloads.
+//! * [`store`] + [`http`] — the registry client: `push`/`pull` against
+//!   `file://` and plain-`http://` stores (any static file server is a
+//!   read-only registry). Pull verifies, then unions records into the
+//!   destination cache through [`engine::merge_cache_dirs`], so
+//!   collisions and corrupt records degrade exactly as `imclim merge`.
+//!
+//! Wired to the CLI as `imclim cache pack | verify | push | pull`.
+//!
+//! [`engine::merge_cache_dirs`]: crate::engine::merge_cache_dirs
+
+pub mod artifact;
+pub mod http;
+pub mod store;
+pub mod targz;
+
+pub use artifact::{
+    load_verified, pack, read_manifest, verify, Artifact, PackReport, RecordEntry, VerifyReport,
+    ARTIFACT_FILE, ARTIFACT_SCHEMA, PAYLOAD_FILE,
+};
+pub use store::{
+    list, open_store, pull, push, FileStore, IndexEntry, PullReport, PushReport, RegistryStore,
+    INDEX_FILE,
+};

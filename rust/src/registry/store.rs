@@ -1,0 +1,461 @@
+//! The registry client: publish and fetch cache artifacts against a
+//! *dumb* store — no server-side logic beyond GET (and PUT for push).
+//!
+//! Registry layout (package-repo-index style, cf. wolfpack's
+//! `packagesite` / `sum`+`path` metadata):
+//!
+//! ```text
+//!   <base>/index.json                       # id -> {backend, records, bytes}
+//!   <base>/artifacts/<id>/artifact.json     # the verifiable manifest
+//!   <base>/artifacts/<id>/payload.tar.gz    # the record tarball
+//! ```
+//!
+//! Artifacts live under their *content address* (`Artifact::id`), so a
+//! re-push of identical content is a no-op and two registries can be
+//! mirrored by plain file copy. `push` verifies locally before
+//! publishing (a registry never receives bytes that don't check out);
+//! `pull` verifies after fetching and then unions the records into the
+//! destination cache through the same [`merge_cache_dirs`] path a
+//! distributed sweep uses — collisions and corrupt records degrade
+//! exactly as they do for `imclim merge`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::engine::merge_cache_dirs;
+use crate::registry::artifact::{
+    load_verified, unpack_entries, verify_bytes, Artifact, ARTIFACT_FILE, PAYLOAD_FILE,
+};
+use crate::registry::http::HttpEndpoint;
+use crate::registry::targz::Entry;
+use crate::util::json::{num, obj, s, Json};
+
+/// Registry index filename.
+pub const INDEX_FILE: &str = "index.json";
+const INDEX_VERSION: f64 = 1.0;
+
+/// A dumb blob store addressed by relative `/`-separated paths.
+pub trait RegistryStore {
+    /// Fetch a blob; `Ok(None)` means "not there" (a miss, not an error).
+    fn get(&self, rel: &str) -> Result<Option<Vec<u8>>>;
+    /// Publish a blob (creating parents as needed).
+    fn put(&self, rel: &str, data: &[u8]) -> Result<()>;
+    /// Human-readable location for reports.
+    fn describe(&self) -> String;
+}
+
+/// `file://` (or bare-path) store: a registry is just a directory.
+pub struct FileStore {
+    root: PathBuf,
+}
+
+impl FileStore {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into() }
+    }
+}
+
+impl RegistryStore for FileStore {
+    fn get(&self, rel: &str) -> Result<Option<Vec<u8>>> {
+        let path = self.root.join(rel);
+        match std::fs::read(&path) {
+            Ok(b) => Ok(Some(b)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("reading {}", path.display())),
+        }
+    }
+
+    fn put(&self, rel: &str, data: &[u8]) -> Result<()> {
+        let path = self.root.join(rel);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        std::fs::write(&path, data).with_context(|| format!("writing {}", path.display()))
+    }
+
+    fn describe(&self) -> String {
+        format!("file://{}", self.root.display())
+    }
+}
+
+/// `http://` store backed by the minimal client in `registry::http`.
+pub struct HttpStore {
+    endpoint: HttpEndpoint,
+}
+
+impl RegistryStore for HttpStore {
+    fn get(&self, rel: &str) -> Result<Option<Vec<u8>>> {
+        self.endpoint.get(rel)
+    }
+
+    fn put(&self, rel: &str, data: &[u8]) -> Result<()> {
+        self.endpoint.put(rel, data)
+    }
+
+    fn describe(&self) -> String {
+        self.endpoint.url_for("")
+    }
+}
+
+/// Open a registry URL: `file:///path`, `http://host[:port]/base`, or a
+/// bare filesystem path. `https://` is gated (no TLS in the offline
+/// build) with an explicit error rather than a silent downgrade.
+pub fn open_store(url: &str) -> Result<Box<dyn RegistryStore>> {
+    if let Some(path) = url.strip_prefix("file://") {
+        ensure!(!path.is_empty(), "file:// URL '{url}' has no path");
+        return Ok(Box::new(FileStore::new(path)));
+    }
+    if url.starts_with("http://") {
+        return Ok(Box::new(HttpStore {
+            endpoint: HttpEndpoint::parse(url)?,
+        }));
+    }
+    if url.starts_with("https://") {
+        bail!(
+            "https:// registries are not supported in this offline build (no TLS stack); \
+             use http:// inside a trusted network or a file:// mirror"
+        );
+    }
+    if url.contains("://") {
+        bail!("unsupported registry URL scheme in '{url}' (file:// or http://)");
+    }
+    // bare path: treat as a file registry for convenience
+    Ok(Box::new(FileStore::new(url)))
+}
+
+fn artifact_path(id: &str, file: &str) -> String {
+    format!("artifacts/{id}/{file}")
+}
+
+/// One `index.json` row.
+#[derive(Clone, Debug)]
+pub struct IndexEntry {
+    pub id: String,
+    pub backend: String,
+    pub records: usize,
+    pub payload_bytes: u64,
+}
+
+/// Parse `index.json` (missing/corrupt tolerated as empty on push — the
+/// index is a convenience listing; artifacts themselves are the truth).
+fn parse_index(bytes: Option<&[u8]>) -> Vec<IndexEntry> {
+    let Some(bytes) = bytes else {
+        return Vec::new();
+    };
+    let Ok(text) = std::str::from_utf8(bytes) else {
+        return Vec::new();
+    };
+    let Ok(j) = Json::parse(text) else {
+        return Vec::new();
+    };
+    let Some(arts) = j.get("artifacts").and_then(|a| a.as_obj()) else {
+        return Vec::new();
+    };
+    arts.iter()
+        .map(|(id, v)| IndexEntry {
+            id: id.clone(),
+            backend: v
+                .get("backend")
+                .and_then(|b| b.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            records: v
+                .get("records")
+                .and_then(|r| r.as_f64())
+                .unwrap_or_default() as usize,
+            payload_bytes: v
+                .get("payload_bytes")
+                .and_then(|b| b.as_f64())
+                .unwrap_or_default() as u64,
+        })
+        .collect()
+}
+
+fn encode_index(entries: &[IndexEntry]) -> Json {
+    obj(vec![
+        ("version", num(INDEX_VERSION)),
+        (
+            "artifacts",
+            Json::Obj(
+                entries
+                    .iter()
+                    .map(|e| {
+                        (
+                            e.id.clone(),
+                            obj(vec![
+                                ("backend", s(&e.backend)),
+                                ("records", num(e.records as f64)),
+                                ("payload_bytes", num(e.payload_bytes as f64)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// List a registry's artifacts (sorted by id; empty registry is empty).
+pub fn list(store: &dyn RegistryStore) -> Result<Vec<IndexEntry>> {
+    let mut entries = parse_index(store.get(INDEX_FILE)?.as_deref());
+    entries.sort_by(|a, b| a.id.cmp(&b.id));
+    Ok(entries)
+}
+
+/// What [`push`] did.
+#[derive(Clone, Debug)]
+pub struct PushReport {
+    pub id: String,
+    pub records: usize,
+    pub payload_bytes: u64,
+    /// The artifact was already present under its content address.
+    pub already_present: bool,
+}
+
+/// Publish a packed artifact directory. The artifact is re-verified
+/// locally first, then written under its content address (payload
+/// before manifest, so a half-push is never listable), and the index is
+/// refreshed. Pushing content that is already present is a no-op.
+pub fn push(artifact_dir: &Path, store: &dyn RegistryStore) -> Result<PushReport> {
+    let (artifact, _) = load_verified(artifact_dir)
+        .with_context(|| format!("verifying {} before push", artifact_dir.display()))?;
+    let id = artifact.id.clone();
+    let already_present = store.get(&artifact_path(&id, ARTIFACT_FILE))?.is_some();
+    if !already_present {
+        let payload = std::fs::read(artifact_dir.join(PAYLOAD_FILE))?;
+        store.put(&artifact_path(&id, PAYLOAD_FILE), &payload)?;
+        let manifest = std::fs::read(artifact_dir.join(ARTIFACT_FILE))?;
+        store.put(&artifact_path(&id, ARTIFACT_FILE), &manifest)?;
+    }
+    // refresh the index either way (it may be missing or stale)
+    let mut entries = parse_index(store.get(INDEX_FILE)?.as_deref());
+    entries.retain(|e| e.id != id);
+    entries.push(IndexEntry {
+        id: id.clone(),
+        backend: artifact.backend,
+        records: artifact.record_count,
+        payload_bytes: artifact.payload_bytes,
+    });
+    entries.sort_by(|a, b| a.id.cmp(&b.id));
+    store.put(INDEX_FILE, encode_index(&entries).to_string().as_bytes())?;
+    Ok(PushReport {
+        id,
+        records: artifact.record_count,
+        payload_bytes: artifact.payload_bytes,
+        already_present,
+    })
+}
+
+/// What [`pull`] did.
+#[derive(Clone, Debug, Default)]
+pub struct PullReport {
+    /// Ids of the artifacts fetched and merged.
+    pub artifacts: Vec<String>,
+    /// Records newly copied into the destination cache.
+    pub copied: usize,
+    /// Records already present with byte-identical payloads.
+    pub identical: usize,
+    /// Keys whose incoming payload differed from the destination's
+    /// (destination kept — same rule as `imclim merge`).
+    pub collisions: Vec<String>,
+    /// Distinct backends across the pulled artifacts + destination.
+    pub backends: Vec<String>,
+}
+
+/// Fetch one artifact's manifest+payload and verify them together,
+/// handing back the verified payload entries for unpacking.
+fn fetch_verified(store: &dyn RegistryStore, id: &str) -> Result<(Artifact, Vec<Entry>)> {
+    let manifest = store
+        .get(&artifact_path(id, ARTIFACT_FILE))?
+        .with_context(|| format!("artifact {id} not found at {}", store.describe()))?;
+    let manifest_text = String::from_utf8(manifest).context("artifact.json is not UTF-8")?;
+    let payload = store
+        .get(&artifact_path(id, PAYLOAD_FILE))?
+        .with_context(|| format!("artifact {id} has no payload at {}", store.describe()))?;
+    let (artifact, entries) = verify_bytes(&manifest_text, &payload)
+        .with_context(|| format!("verifying artifact {id}"))?;
+    ensure!(
+        artifact.id == id,
+        "artifact at address {id} declares id {} (registry corrupt)",
+        artifact.id
+    );
+    Ok((artifact, entries))
+}
+
+/// Pull artifacts into `<cache_dst>`: fetch, verify, unpack to a
+/// scratch dir, then [`merge_cache_dirs`] into the destination so
+/// key collisions follow the exact `imclim merge` rules. With `id`
+/// only that artifact is pulled; otherwise every artifact in the index.
+pub fn pull(store: &dyn RegistryStore, cache_dst: &Path, id: Option<&str>) -> Result<PullReport> {
+    let ids: Vec<String> = match id {
+        Some(one) => vec![one.to_string()],
+        None => {
+            let entries = list(store)?;
+            ensure!(
+                !entries.is_empty(),
+                "registry {} has no index (or an empty one): nothing to pull \
+                 (push an artifact first, or pass --id)",
+                store.describe()
+            );
+            entries.into_iter().map(|e| e.id).collect()
+        }
+    };
+
+    let mut report = PullReport::default();
+    let scratch_root = cache_dst.with_extension("pull-tmp");
+    let _ = std::fs::remove_dir_all(&scratch_root);
+    for id in &ids {
+        let (artifact, entries) = fetch_verified(store, id)?;
+        let scratch = scratch_root.join(id);
+        unpack_entries(&entries, &scratch)?;
+        let merged = merge_cache_dirs(cache_dst, &[scratch.clone()])?;
+        report.copied += merged.copied;
+        report.identical += merged.identical;
+        report.collisions.extend(merged.collisions);
+        for b in merged.backends {
+            if !report.backends.contains(&b) {
+                report.backends.push(b);
+            }
+        }
+        if !report.backends.contains(&artifact.backend) {
+            report.backends.push(artifact.backend);
+        }
+        report.artifacts.push(id.clone());
+    }
+    let _ = std::fs::remove_dir_all(&scratch_root);
+    report.collisions.sort();
+    report.collisions.dedup();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::artifact::pack;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("imclim-store-unit-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fake_cache(name: &str) -> PathBuf {
+        let dir = tmp(name);
+        std::fs::write(dir.join("k1.json"), b"{\"r\": 1}").unwrap();
+        std::fs::write(dir.join("k2.json"), b"{\"r\": 2}").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            b"{\"version\":1,\"backend\":\"native@test\",\"entries\":{\"k1\":\"a\",\"k2\":\"b\"}}",
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn open_store_dispatches_schemes() {
+        assert!(open_store("file:///tmp/reg").is_ok());
+        assert!(open_store("/tmp/bare-path").is_ok());
+        assert!(open_store("http://localhost:1234/reg").is_ok());
+        let err = open_store("https://reg.example.com")
+            .err()
+            .expect("https must be gated")
+            .to_string();
+        assert!(err.contains("no TLS"), "{err}");
+        assert!(open_store("ftp://nope").is_err());
+        assert!(open_store("file://").is_err());
+    }
+
+    #[test]
+    fn push_pull_roundtrip_through_a_file_store() {
+        let cache = fake_cache("pp-cache");
+        let art = tmp("pp-art");
+        pack(&cache, &art, "test").unwrap();
+        let store = FileStore::new(tmp("pp-registry"));
+
+        let pushed = push(&art, &store).unwrap();
+        assert!(!pushed.already_present);
+        assert_eq!(pushed.records, 2);
+        // re-push of identical content is a no-op
+        let again = push(&art, &store).unwrap();
+        assert!(again.already_present);
+        assert_eq!(again.id, pushed.id);
+        let listed = list(&store).unwrap();
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].id, pushed.id);
+        assert_eq!(listed[0].backend, "native@test");
+
+        // pull into a fresh cache dir: byte-identical to the source
+        let dst = tmp("pp-dst").join("cache");
+        let report = pull(&store, &dst, None).unwrap();
+        assert_eq!(report.copied, 2);
+        assert_eq!(report.artifacts, vec![pushed.id.clone()]);
+        assert!(report.collisions.is_empty());
+        for f in ["k1.json", "k2.json"] {
+            assert_eq!(
+                std::fs::read(cache.join(f)).unwrap(),
+                std::fs::read(dst.join(f)).unwrap(),
+                "{f}"
+            );
+        }
+        // pulling again finds everything already present
+        let report = pull(&store, &dst, Some(&pushed.id)).unwrap();
+        assert_eq!(report.copied, 0);
+        assert_eq!(report.identical, 2);
+    }
+
+    #[test]
+    fn pull_applies_merge_collision_rules() {
+        let cache = fake_cache("coll-cache");
+        let art = tmp("coll-art");
+        pack(&cache, &art, "").unwrap();
+        let store = FileStore::new(tmp("coll-registry"));
+        push(&art, &store).unwrap();
+
+        // destination already holds k1 with a *different* payload
+        let dst = tmp("coll-dst").join("cache");
+        std::fs::create_dir_all(&dst).unwrap();
+        std::fs::write(dst.join("k1.json"), b"{\"r\": 111}").unwrap();
+        let report = pull(&store, &dst, None).unwrap();
+        assert_eq!(report.collisions, vec!["k1".to_string()]);
+        assert_eq!(report.copied, 1, "only k2 is new");
+        // existing record wins, exactly like imclim merge
+        assert_eq!(std::fs::read(dst.join("k1.json")).unwrap(), b"{\"r\": 111}");
+    }
+
+    #[test]
+    fn pull_rejects_a_tampered_registry() {
+        let cache = fake_cache("reg-tamper-cache");
+        let art = tmp("reg-tamper-art");
+        pack(&cache, &art, "").unwrap();
+        let root = tmp("reg-tamper-registry");
+        let store = FileStore::new(root.clone());
+        let pushed = push(&art, &store).unwrap();
+
+        // corrupt the published payload in place
+        let payload_path = root
+            .join("artifacts")
+            .join(&pushed.id)
+            .join(PAYLOAD_FILE);
+        let mut bytes = std::fs::read(&payload_path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&payload_path, &bytes).unwrap();
+
+        let dst = tmp("reg-tamper-dst").join("cache");
+        let err = pull(&store, &dst, None).unwrap_err().to_string();
+        assert!(err.contains(&pushed.id[..12]), "{err}");
+        // nothing landed in the destination cache
+        assert!(crate::engine::list_record_files(&dst).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pull_from_an_empty_registry_is_a_clear_error() {
+        let store = FileStore::new(tmp("empty-registry"));
+        let dst = tmp("empty-dst").join("cache");
+        let err = pull(&store, &dst, None).unwrap_err().to_string();
+        assert!(err.contains("nothing to pull"), "{err}");
+    }
+}

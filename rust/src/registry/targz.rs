@@ -1,0 +1,334 @@
+//! Deterministic tar + gzip codec for artifact payloads.
+//!
+//! `payload.tar.gz` must be *reproducible*: packing the same cache twice
+//! — on any machine, at any time — must emit identical bytes, so the
+//! artifact's content address is a pure function of the records it
+//! carries. To that end the writer pins every nondeterministic tar
+//! field (mtime 0, uid/gid 0, mode 0644, sorted entries) and the gzip
+//! layer emits *stored* (uncompressed) DEFLATE blocks: still a valid
+//! gzip stream any `gunzip` can read, but byte-stable and
+//! dependency-free in both directions. The reader checks the gzip CRC32
+//! and length trailer, so a truncated or bit-flipped payload fails
+//! before any record is even unpacked; it accepts only the stored
+//! blocks this writer emits (artifact payloads are always written by
+//! `imclim cache pack` — a compressed foreign gzip is rejected with a
+//! clear error, not mis-read).
+
+use anyhow::{bail, ensure, Result};
+
+/// One file in a payload archive.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    /// Path inside the archive (relative, `/`-separated).
+    pub name: String,
+    pub data: Vec<u8>,
+}
+
+// ---------------------------------------------------------------------
+// tar (ustar)
+// ---------------------------------------------------------------------
+
+const BLOCK: usize = 512;
+
+/// Serialize entries as a ustar archive. Entries are sorted by name and
+/// all metadata fields are pinned, so the output is deterministic.
+pub fn tar_pack(entries: &[Entry]) -> Result<Vec<u8>> {
+    let mut sorted: Vec<&Entry> = entries.iter().collect();
+    sorted.sort_by(|a, b| a.name.cmp(&b.name));
+    let mut out = Vec::new();
+    for e in sorted {
+        ensure!(
+            e.name.len() <= 100,
+            "tar entry name '{}' exceeds 100 bytes",
+            e.name
+        );
+        ensure!(!e.name.is_empty(), "empty tar entry name");
+        let mut hdr = [0u8; BLOCK];
+        hdr[..e.name.len()].copy_from_slice(e.name.as_bytes());
+        hdr[100..108].copy_from_slice(b"0000644\0"); // mode
+        hdr[108..116].copy_from_slice(b"0000000\0"); // uid
+        hdr[116..124].copy_from_slice(b"0000000\0"); // gid
+        let size = format!("{:011o}\0", e.data.len());
+        hdr[124..136].copy_from_slice(size.as_bytes());
+        hdr[136..148].copy_from_slice(b"00000000000\0"); // mtime 0
+        hdr[148..156].copy_from_slice(b"        "); // checksum placeholder
+        hdr[156] = b'0'; // regular file
+        hdr[257..263].copy_from_slice(b"ustar\0");
+        hdr[263..265].copy_from_slice(b"00");
+        let sum: u32 = hdr.iter().map(|&b| b as u32).sum();
+        let chk = format!("{sum:06o}\0 ");
+        hdr[148..156].copy_from_slice(chk.as_bytes());
+        out.extend_from_slice(&hdr);
+        out.extend_from_slice(&e.data);
+        let pad = (BLOCK - e.data.len() % BLOCK) % BLOCK;
+        out.resize(out.len() + pad, 0);
+    }
+    out.resize(out.len() + 2 * BLOCK, 0); // end-of-archive marker
+    Ok(out)
+}
+
+/// Parse a ustar archive produced by [`tar_pack`] (regular files only).
+pub fn tar_unpack(bytes: &[u8]) -> Result<Vec<Entry>> {
+    let mut out = Vec::new();
+    let mut pos = 0;
+    loop {
+        ensure!(pos + BLOCK <= bytes.len(), "truncated tar header");
+        let hdr = &bytes[pos..pos + BLOCK];
+        if hdr.iter().all(|&b| b == 0) {
+            break; // end-of-archive marker
+        }
+        let name_end = hdr[..100].iter().position(|&b| b == 0).unwrap_or(100);
+        let name = std::str::from_utf8(&hdr[..name_end])
+            .map_err(|_| anyhow::anyhow!("non-UTF-8 tar entry name"))?
+            .to_string();
+        let stored_chk = parse_octal(&hdr[148..156])?;
+        let mut summed = hdr.to_vec();
+        summed[148..156].copy_from_slice(b"        ");
+        let actual: u64 = summed.iter().map(|&b| b as u64).sum();
+        ensure!(
+            stored_chk == actual,
+            "tar header checksum mismatch for '{name}'"
+        );
+        let size = parse_octal(&hdr[124..136])? as usize;
+        let typeflag = hdr[156];
+        ensure!(
+            typeflag == b'0' || typeflag == 0,
+            "unsupported tar entry type {typeflag} for '{name}'"
+        );
+        pos += BLOCK;
+        ensure!(pos + size <= bytes.len(), "truncated tar data for '{name}'");
+        out.push(Entry {
+            name,
+            data: bytes[pos..pos + size].to_vec(),
+        });
+        pos += size + (BLOCK - size % BLOCK) % BLOCK;
+    }
+    Ok(out)
+}
+
+fn parse_octal(field: &[u8]) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut seen = false;
+    for &b in field {
+        match b {
+            b'0'..=b'7' => {
+                v = v
+                    .checked_mul(8)
+                    .and_then(|v| v.checked_add((b - b'0') as u64))
+                    .ok_or_else(|| anyhow::anyhow!("tar octal field overflows"))?;
+                seen = true;
+            }
+            0 | b' ' => {}
+            _ => bail!("bad tar octal field byte {b}"),
+        }
+    }
+    ensure!(seen, "empty tar octal field");
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------
+// gzip (stored DEFLATE blocks)
+// ---------------------------------------------------------------------
+
+/// Wrap bytes in a gzip stream of stored (uncompressed) DEFLATE blocks.
+/// Header mtime/OS are pinned, so the output is deterministic.
+pub fn gzip(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() + data.len() / 65_535 * 5 + 23);
+    out.extend_from_slice(&[0x1f, 0x8b, 8, 0, 0, 0, 0, 0, 0, 0xff]);
+    let mut chunks = data.chunks(65_535).peekable();
+    if data.is_empty() {
+        out.extend_from_slice(&[1, 0, 0, 0xff, 0xff]); // final empty stored block
+    }
+    while let Some(chunk) = chunks.next() {
+        out.push(if chunks.peek().is_none() { 1 } else { 0 }); // BFINAL, BTYPE=00
+        let len = chunk.len() as u16;
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&(!len).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+    out.extend_from_slice(&crc32(data).to_le_bytes());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out
+}
+
+/// Decode a gzip stream of stored DEFLATE blocks, verifying the CRC32
+/// and length trailer. Compressed (Huffman) blocks — which this codec
+/// never writes — are rejected, as is any truncation or corruption.
+pub fn gunzip(bytes: &[u8]) -> Result<Vec<u8>> {
+    ensure!(bytes.len() >= 18, "gzip stream too short");
+    ensure!(
+        bytes[0] == 0x1f && bytes[1] == 0x8b,
+        "not a gzip stream (bad magic)"
+    );
+    ensure!(bytes[2] == 8, "unsupported gzip compression method");
+    let flg = bytes[3];
+    let mut pos = 10;
+    if flg & 0x04 != 0 {
+        // FEXTRA
+        ensure!(pos + 2 <= bytes.len(), "truncated gzip FEXTRA");
+        let xlen = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
+        pos += 2 + xlen;
+    }
+    for bit in [0x08u8, 0x10] {
+        // FNAME, FCOMMENT: zero-terminated strings
+        if flg & bit != 0 {
+            while pos < bytes.len() && bytes[pos] != 0 {
+                pos += 1;
+            }
+            pos += 1;
+        }
+    }
+    if flg & 0x02 != 0 {
+        pos += 2; // FHCRC
+    }
+    ensure!(pos + 8 <= bytes.len(), "truncated gzip stream");
+
+    let mut out = Vec::new();
+    loop {
+        ensure!(pos < bytes.len() - 8, "gzip deflate stream ran off the end");
+        let hdr = bytes[pos];
+        let bfinal = hdr & 1;
+        let btype = (hdr >> 1) & 3;
+        ensure!(
+            btype == 0,
+            "unsupported deflate block type {btype} (artifact payloads use stored blocks)"
+        );
+        pos += 1;
+        ensure!(pos + 4 <= bytes.len() - 8, "truncated stored block header");
+        let len = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
+        let nlen = u16::from_le_bytes([bytes[pos + 2], bytes[pos + 3]]);
+        ensure!(
+            nlen == !(len as u16),
+            "stored block LEN/NLEN mismatch (corrupt payload)"
+        );
+        pos += 4;
+        ensure!(pos + len <= bytes.len() - 8, "truncated stored block data");
+        out.extend_from_slice(&bytes[pos..pos + len]);
+        pos += len;
+        if bfinal == 1 {
+            break;
+        }
+    }
+    let crc = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+    let isize = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+    ensure!(
+        crc == crc32(&out),
+        "gzip CRC32 mismatch (payload corrupt or truncated)"
+    );
+    ensure!(
+        isize == out.len() as u32,
+        "gzip length trailer mismatch (payload corrupt or truncated)"
+    );
+    Ok(out)
+}
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = !0;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries() -> Vec<Entry> {
+        vec![
+            Entry {
+                name: "b.json".into(),
+                data: b"{\"v\": 2}".to_vec(),
+            },
+            Entry {
+                name: "a.json".into(),
+                data: vec![0u8; 700], // spans two tar blocks
+            },
+            Entry {
+                name: "empty.json".into(),
+                data: Vec::new(),
+            },
+        ]
+    }
+
+    #[test]
+    fn tar_roundtrip_sorts_and_preserves_bytes() {
+        let packed = tar_pack(&entries()).unwrap();
+        assert_eq!(packed.len() % BLOCK, 0);
+        let got = tar_unpack(&packed).unwrap();
+        let names: Vec<&str> = got.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["a.json", "b.json", "empty.json"]);
+        assert_eq!(got[0].data, vec![0u8; 700]);
+        assert_eq!(got[1].data, b"{\"v\": 2}");
+        assert!(got[2].data.is_empty());
+    }
+
+    #[test]
+    fn tar_pack_is_deterministic_under_input_order() {
+        let a = tar_pack(&entries()).unwrap();
+        let mut rev = entries();
+        rev.reverse();
+        assert_eq!(a, tar_pack(&rev).unwrap());
+    }
+
+    #[test]
+    fn tar_rejects_damage() {
+        let packed = tar_pack(&entries()).unwrap();
+        // header corruption breaks the checksum
+        let mut bad = packed.clone();
+        bad[0] ^= 0xff;
+        assert!(tar_unpack(&bad).is_err());
+        // truncation inside a data block
+        assert!(tar_unpack(&packed[..600]).is_err());
+        assert!(tar_pack(&[Entry {
+            name: "x".repeat(101),
+            data: vec![],
+        }])
+        .is_err());
+    }
+
+    #[test]
+    fn gzip_roundtrip_all_sizes() {
+        for n in [0usize, 1, 100, 65_535, 65_536, 200_000] {
+            let data: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+            let z = gzip(&data);
+            assert_eq!(gunzip(&z).unwrap(), data, "size {n}");
+        }
+    }
+
+    #[test]
+    fn gzip_is_deterministic() {
+        let data = b"same bytes in, same bytes out".to_vec();
+        assert_eq!(gzip(&data), gzip(&data));
+    }
+
+    #[test]
+    fn gunzip_rejects_corruption_and_truncation() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 256) as u8).collect();
+        let z = gzip(&data);
+        // single-byte payload tamper -> CRC failure
+        for idx in [15, z.len() / 2, z.len() - 9] {
+            let mut bad = z.clone();
+            bad[idx] ^= 1;
+            assert!(gunzip(&bad).is_err(), "tamper at byte {idx}");
+        }
+        // truncation at several points
+        for keep in [0, 5, 17, z.len() / 2, z.len() - 1] {
+            assert!(gunzip(&z[..keep]).is_err(), "truncated to {keep}");
+        }
+        // not gzip at all
+        assert!(gunzip(b"definitely not gzip bytes").is_err());
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // the classic check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

@@ -1,4 +1,5 @@
-//! Dependency-free infrastructure: RNG, statistics, JSON, CSV, tables.
+//! Dependency-free infrastructure: RNG, statistics, JSON, CSV, tables,
+//! SHA-256.
 //!
 //! The offline build vendors only the `xla` crate closure, so everything a
 //! typical project would pull from crates.io lives here, each module with
@@ -7,5 +8,6 @@
 pub mod csv;
 pub mod json;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,389 @@
+//! Registry acceptance: a cache packed into a portable artifact,
+//! pushed through a `file://` or `http://` registry and pulled on the
+//! other side, is byte-identical to the source cache — so a warm sweep
+//! against the pulled cache performs zero Monte-Carlo and emits a
+//! byte-identical CSV. Tampered or truncated artifacts fail `verify`
+//! (and never reach a cache directory), and pulling into a non-empty
+//! cache follows exactly the `imclim merge` collision rules.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+
+use imclim::arch::pvec;
+use imclim::coordinator::{Backend, SweepOptions, SweepPoint};
+use imclim::engine::{Engine, MANIFEST_FILE};
+use imclim::mc::ArchKind;
+use imclim::registry::{
+    open_store, pack, pull, push, verify, FileStore, ARTIFACT_FILE, PAYLOAD_FILE,
+};
+
+fn qs_point(id: &str, n: usize, seed: u64) -> SweepPoint {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n as f64;
+    p[pvec::IDX_BX] = 5.0;
+    p[pvec::IDX_BW] = 5.0;
+    p[pvec::IDX_B_ADC] = 7.0;
+    p[pvec::QS_IDX_SIGMA_D] = 0.1;
+    p[pvec::QS_IDX_K_H] = 50.0;
+    p[pvec::QS_IDX_V_C] = 50.0;
+    SweepPoint::new(id, ArchKind::Qs, p)
+        .with_trials(96)
+        .with_seed(seed)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imclim-registry-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn engine(dir: &Path) -> Engine {
+    Engine::new(
+        Backend::Native,
+        SweepOptions {
+            workers: 2,
+            verbose: false,
+        },
+    )
+    .with_cache(dir.to_path_buf())
+}
+
+/// Every file in a directory, name -> bytes (non-recursive).
+fn dir_bytes(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).unwrap().flatten() {
+        if entry.path().is_file() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            out.insert(name, std::fs::read(entry.path()).unwrap());
+        }
+    }
+    out
+}
+
+/// A populated cache of real engine results.
+fn populated_cache(name: &str) -> (PathBuf, Vec<SweepPoint>) {
+    let dir = tmp_dir(name);
+    let points: Vec<SweepPoint> = (0..6)
+        .map(|i| qs_point(&format!("reg/{i}"), 16 + 4 * i, i as u64))
+        .collect();
+    engine(&dir).run(points.clone());
+    (dir, points)
+}
+
+#[test]
+fn pack_push_pull_roundtrip_is_byte_identical_and_serves_warm() {
+    let (cache, points) = populated_cache("roundtrip-src");
+    let artifact = tmp_dir("roundtrip-artifact");
+    let report = pack(&cache, &artifact, "test pack").unwrap();
+    assert_eq!(report.records, 6);
+    let v = verify(&artifact).unwrap();
+    assert_eq!(v.id, report.id);
+    assert_eq!(v.backend, Backend::Native.cache_id());
+
+    let store = FileStore::new(tmp_dir("roundtrip-registry"));
+    push(&artifact, &store).unwrap();
+
+    // pull into a fresh cache dir: the full record set plus the label
+    // manifest arrive byte-identical to the source cache
+    let fresh = tmp_dir("roundtrip-fresh");
+    let pulled = pull(&store, &fresh, None).unwrap();
+    assert_eq!(pulled.copied, 6);
+    assert!(pulled.collisions.is_empty());
+    assert_eq!(pulled.backends, vec![Backend::Native.cache_id()]);
+    let a = dir_bytes(&cache);
+    let b = dir_bytes(&fresh);
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>(),
+        "same file set (records + {MANIFEST_FILE})"
+    );
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "byte-identical: {name}");
+    }
+
+    // ...so a re-run against the pulled cache does zero Monte-Carlo
+    let (results, stats) = engine(&fresh).run_with_stats(points);
+    assert_eq!(stats.misses, 0, "warm run performs zero Monte-Carlo");
+    assert_eq!(stats.hits, 6);
+    assert!(results.iter().all(|r| r.error.is_none()));
+}
+
+#[test]
+fn single_byte_tamper_and_truncation_fail_verify() {
+    let (cache, _) = populated_cache("tamper-src");
+    let artifact = tmp_dir("tamper-artifact");
+    pack(&cache, &artifact, "").unwrap();
+    let payload = std::fs::read(artifact.join(PAYLOAD_FILE)).unwrap();
+
+    for idx in [11, payload.len() / 3, payload.len() / 2, payload.len() - 1] {
+        let mut bad = payload.clone();
+        bad[idx] ^= 0x01;
+        std::fs::write(artifact.join(PAYLOAD_FILE), &bad).unwrap();
+        assert!(verify(&artifact).is_err(), "flip at byte {idx} must fail");
+    }
+    for keep in [0, 10, payload.len() / 2, payload.len() - 1] {
+        std::fs::write(artifact.join(PAYLOAD_FILE), &payload[..keep]).unwrap();
+        assert!(verify(&artifact).is_err(), "truncation to {keep} must fail");
+    }
+    std::fs::write(artifact.join(PAYLOAD_FILE), &payload).unwrap();
+    verify(&artifact).unwrap();
+}
+
+#[test]
+fn manifest_record_count_mismatch_fails_verify() {
+    let (cache, _) = populated_cache("count-src");
+    let artifact = tmp_dir("count-artifact");
+    pack(&cache, &artifact, "").unwrap();
+    let text = std::fs::read_to_string(artifact.join(ARTIFACT_FILE)).unwrap();
+    let bad = text.replace("\"record_count\":6", "\"record_count\":7");
+    assert_ne!(bad, text, "fixture should contain the count field");
+    std::fs::write(artifact.join(ARTIFACT_FILE), &bad).unwrap();
+    let err = verify(&artifact).unwrap_err().to_string();
+    assert!(err.contains("record count mismatch"), "{err}");
+}
+
+#[test]
+fn pull_into_nonempty_cache_follows_merge_collision_rules() {
+    let (cache, points) = populated_cache("nonempty-src");
+    let artifact = tmp_dir("nonempty-artifact");
+    pack(&cache, &artifact, "").unwrap();
+    let store = FileStore::new(tmp_dir("nonempty-registry"));
+    push(&artifact, &store).unwrap();
+
+    // destination computed a subset itself (identical payloads) and
+    // additionally holds one record whose payload differs
+    let dst = tmp_dir("nonempty-dst");
+    engine(&dst).run(points[..2].to_vec());
+    let colliding = dir_bytes(&dst)
+        .keys()
+        .find(|k| k.ends_with(".json") && *k != MANIFEST_FILE)
+        .unwrap()
+        .clone();
+    std::fs::write(dst.join(&colliding), b"{\"v\": \"locally different\"}").unwrap();
+
+    let report = pull(&store, &dst, None).unwrap();
+    assert_eq!(report.copied, 4, "only the missing records are copied");
+    assert_eq!(report.identical, 1, "one locally-computed twin");
+    assert_eq!(report.collisions.len(), 1, "the doctored record collides");
+    // destination copy wins, exactly like `imclim merge`
+    assert_eq!(
+        std::fs::read(dst.join(&colliding)).unwrap(),
+        b"{\"v\": \"locally different\"}"
+    );
+}
+
+/// A minimal single-threaded HTTP file server over a temp dir: GET
+/// serves files (404 when absent), PUT stores them. Runs until the
+/// listener is dropped; good enough to exercise the real TCP client.
+fn spawn_http_registry(root: PathBuf) -> (u16, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let handle = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { break };
+            let mut raw = Vec::new();
+            let mut buf = [0u8; 8192];
+            let header_end = loop {
+                match raw.windows(4).position(|w| w == b"\r\n\r\n") {
+                    Some(i) => break i,
+                    None => match stream.read(&mut buf) {
+                        Ok(0) => break usize::MAX,
+                        Ok(n) => raw.extend_from_slice(&buf[..n]),
+                        Err(_) => break usize::MAX,
+                    },
+                }
+            };
+            if header_end == usize::MAX {
+                continue;
+            }
+            let head = String::from_utf8_lossy(&raw[..header_end]).into_owned();
+            let mut lines = head.split("\r\n");
+            let request = lines.next().unwrap_or("").to_string();
+            let mut parts = request.split_whitespace();
+            let (method, path) = (
+                parts.next().unwrap_or("").to_string(),
+                parts.next().unwrap_or("/").trim_start_matches('/').to_string(),
+            );
+            let content_length: usize = lines
+                .filter_map(|l| l.split_once(':'))
+                .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+                .and_then(|(_, v)| v.trim().parse().ok())
+                .unwrap_or(0);
+            let mut body = raw[header_end + 4..].to_vec();
+            while body.len() < content_length {
+                match stream.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => body.extend_from_slice(&buf[..n]),
+                }
+            }
+            let reply = match method.as_str() {
+                "GET" => match std::fs::read(root.join(&path)) {
+                    Ok(data) => {
+                        let mut r = format!(
+                            "HTTP/1.1 200 OK\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                            data.len()
+                        )
+                        .into_bytes();
+                        r.extend_from_slice(&data);
+                        r
+                    }
+                    Err(_) => b"HTTP/1.1 404 Not Found\r\nContent-Length: 0\r\nConnection: close\r\n\r\n".to_vec(),
+                },
+                "PUT" => {
+                    let target = root.join(&path);
+                    if let Some(parent) = target.parent() {
+                        let _ = std::fs::create_dir_all(parent);
+                    }
+                    std::fs::write(&target, &body).unwrap();
+                    b"HTTP/1.1 201 Created\r\nContent-Length: 0\r\nConnection: close\r\n\r\n".to_vec()
+                }
+                _ => b"HTTP/1.1 405 Method Not Allowed\r\nContent-Length: 0\r\nConnection: close\r\n\r\n".to_vec(),
+            };
+            let _ = stream.write_all(&reply);
+            let _ = stream.flush();
+        }
+    });
+    (port, handle)
+}
+
+#[test]
+fn http_registry_push_pull_roundtrip() {
+    let (cache, _) = populated_cache("http-src");
+    let artifact = tmp_dir("http-artifact");
+    pack(&cache, &artifact, "").unwrap();
+
+    let (port, _server) = spawn_http_registry(tmp_dir("http-registry-root"));
+    let store = open_store(&format!("http://127.0.0.1:{port}/")).unwrap();
+    let pushed = push(&artifact, store.as_ref()).unwrap();
+    assert!(!pushed.already_present);
+    // idempotent re-push over HTTP
+    assert!(push(&artifact, store.as_ref()).unwrap().already_present);
+
+    let fresh = tmp_dir("http-fresh");
+    let report = pull(store.as_ref(), &fresh, None).unwrap();
+    assert_eq!(report.copied, 6);
+    assert!(report.collisions.is_empty());
+    let a = dir_bytes(&cache);
+    let b = dir_bytes(&fresh);
+    assert_eq!(a.keys().collect::<Vec<_>>(), b.keys().collect::<Vec<_>>());
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "byte-identical over HTTP: {name}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end through the CLI binary.
+// ---------------------------------------------------------------------
+
+fn run_cli(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_imclim"))
+        .args(args)
+        .output()
+        .unwrap()
+}
+
+fn ok_stdout(args: &[&str]) -> String {
+    let out = run_cli(args);
+    assert!(
+        out.status.success(),
+        "imclim {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn cli_pack_push_pull_rerun_is_byte_identical_with_zero_monte_carlo() {
+    let src = tmp_dir("cli-src");
+    let src_s = src.to_str().unwrap();
+    let sweep = [
+        "sweep", "--arch", "qs", "--n", "8,12,16", "--b-adc", "4,5", "--trials", "48",
+        "--workers", "2",
+    ];
+    let mut cold = sweep.to_vec();
+    cold.extend(["--out-dir", src_s]);
+    ok_stdout(&cold);
+
+    ok_stdout(&["cache", "pack", "--out-dir", src_s]);
+    let verified = ok_stdout(&["cache", "verify", "--out-dir", src_s]);
+    assert!(verified.contains("OK"), "{verified}");
+
+    // stats reports the backend cache id and the artifact provenance
+    let stats = ok_stdout(&["cache", "stats", "--out-dir", src_s]);
+    assert!(stats.contains("backend: native@"), "{stats}");
+    assert!(stats.contains("artifact: schema 1"), "{stats}");
+    assert!(stats.contains("packed by imclim"), "{stats}");
+
+    let registry = tmp_dir("cli-registry");
+    let url = format!("file://{}", registry.display());
+    ok_stdout(&["cache", "push", &url, "--out-dir", src_s]);
+
+    // a different machine: pull, then re-run the same sweep warm
+    let dst = tmp_dir("cli-dst");
+    let dst_s = dst.to_str().unwrap();
+    let pulled = ok_stdout(&["cache", "pull", &url, "--out-dir", dst_s]);
+    assert!(pulled.contains("6 new records"), "{pulled}");
+    let mut warm = sweep.to_vec();
+    warm.extend(["--out-dir", dst_s]);
+    let warm_out = ok_stdout(&warm);
+    assert!(
+        warm_out.contains("(6 cache hits, 0 computed)"),
+        "pulled cache must serve the whole sweep: {warm_out}"
+    );
+    assert_eq!(
+        std::fs::read(src.join("sweep.csv")).unwrap(),
+        std::fs::read(dst.join("sweep.csv")).unwrap(),
+        "sweep.csv byte-identical across the registry round-trip"
+    );
+}
+
+#[test]
+fn cli_verify_exits_nonzero_on_tampered_payload() {
+    let (cache, _) = populated_cache("cli-tamper-src");
+    let artifact = tmp_dir("cli-tamper-artifact");
+    pack(&cache, &artifact, "").unwrap();
+    let payload_path = artifact.join(PAYLOAD_FILE);
+    let mut payload = std::fs::read(&payload_path).unwrap();
+    let mid = payload.len() / 2;
+    payload[mid] ^= 0xff;
+    std::fs::write(&payload_path, &payload).unwrap();
+    let out = run_cli(&["cache", "verify", "--artifact-dir", artifact.to_str().unwrap()]);
+    assert!(!out.status.success(), "tampered artifact must exit nonzero");
+}
+
+#[test]
+fn cli_merge_strict_exits_nonzero_and_lists_colliding_keys() {
+    let dst = tmp_dir("cli-strict-out");
+    let pre = dst.join("cache");
+    let src = tmp_dir("cli-strict-src");
+    std::fs::create_dir_all(&pre).unwrap();
+    std::fs::create_dir_all(&src).unwrap();
+    std::fs::write(pre.join("kboth.json"), b"{\"v\": 1}").unwrap();
+    std::fs::write(src.join("kboth.json"), b"{\"v\": 2}").unwrap();
+    std::fs::write(src.join("konly.json"), b"{\"v\": 3}").unwrap();
+
+    // without --strict: a warning, exit 0
+    let out = run_cli(&[
+        "merge",
+        src.to_str().unwrap(),
+        "--out-dir",
+        dst.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "plain merge stays a warning");
+
+    // put the collision back and re-merge strictly
+    std::fs::write(pre.join("kboth.json"), b"{\"v\": 1}").unwrap();
+    let out = run_cli(&[
+        "merge",
+        src.to_str().unwrap(),
+        "--strict",
+        "--out-dir",
+        dst.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success(), "--strict must exit nonzero");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("kboth"), "colliding key is listed: {err}");
+    assert!(err.contains("1 key(s) collided"), "{err}");
+}
