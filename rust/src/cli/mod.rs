@@ -124,7 +124,10 @@ COMMANDS:
   cache push <url>    publish the packed artifact to a registry
                       (file:///path or http://host/base) under its
                       content address; re-pushing identical content is
-                      a no-op
+                      a no-op. The registry index assumes one pusher at
+                      a time: concurrent pushes can drop each other's
+                      index rows (artifacts stay fetchable via --id;
+                      re-push the artifact to repair its index entry)
   cache pull <url>    fetch artifacts (all in the registry index, or
                       one via --id), verify, then merge their records
                       into <out-dir>/cache under the same collision

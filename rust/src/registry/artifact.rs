@@ -674,6 +674,61 @@ mod tests {
         assert!(verify(&art).is_err());
     }
 
+    fn rec(sha: &str) -> RecordEntry {
+        RecordEntry {
+            sha256: sha.to_string(),
+            bytes: 1,
+            label: String::new(),
+        }
+    }
+
+    /// The content address must be reproducible by external sha256
+    /// tooling over the documented preimage. The expected digest was
+    /// computed with `printf ... | sha256sum`, NOT with this crate.
+    #[test]
+    fn artifact_id_known_answer_matches_external_sha256() {
+        let mut records = BTreeMap::new();
+        records.insert("k1".to_string(), rec(&"1".repeat(64)));
+        records.insert("k2".to_string(), rec(&"2".repeat(64)));
+        let id = artifact_id("native@test", &records, Some(&"3".repeat(64)));
+        assert_eq!(
+            id,
+            "6b918653d47a0385403d5d846d2f9cd783ce9ef349b105f411188f71a38c3d29"
+        );
+        // and the streaming hash agrees with a one-shot over the
+        // concatenated preimage
+        let preimage = format!(
+            "imclim-artifact-v1\nbackend:native@test\nrecord:k1:{}\nrecord:k2:{}\nmanifest:{}",
+            "1".repeat(64),
+            "2".repeat(64),
+            "3".repeat(64)
+        );
+        assert_eq!(id, sha256_hex(preimage.as_bytes()));
+    }
+
+    /// The id commits to record *keys*, the backend, and the label
+    /// index — not just the record content hashes.
+    #[test]
+    fn artifact_id_changes_with_key_backend_or_manifest() {
+        let mut records = BTreeMap::new();
+        records.insert("k1".to_string(), rec(&"1".repeat(64)));
+        records.insert("k2".to_string(), rec(&"2".repeat(64)));
+        let base = artifact_id("native@test", &records, Some(&"3".repeat(64)));
+
+        // same record bytes under a different key
+        let mut renamed = records.clone();
+        let r = renamed.remove("k2").unwrap();
+        renamed.insert("k9".to_string(), r);
+        assert_ne!(base, artifact_id("native@test", &renamed, Some(&"3".repeat(64))));
+
+        // different backend, identical records
+        assert_ne!(base, artifact_id("pjrt@test", &records, Some(&"3".repeat(64))));
+
+        // different or absent label-index hash
+        assert_ne!(base, artifact_id("native@test", &records, Some(&"4".repeat(64))));
+        assert_ne!(base, artifact_id("native@test", &records, None));
+    }
+
     #[test]
     fn pack_refuses_an_empty_cache() {
         let dir = tmp("empty");

@@ -36,14 +36,37 @@ impl HttpEndpoint {
             None => (rest, "/"),
         };
         ensure!(!authority.is_empty(), "http URL '{url}' has no host");
-        let (host, port) = match authority.rsplit_once(':') {
-            Some((h, p)) => (
-                h.to_string(),
-                p.parse::<u16>()
+        let (host, port) = if let Some(rest6) = authority.strip_prefix('[') {
+            // bracketed IPv6 literal: [addr] or [addr]:port
+            let (addr, after) = rest6
+                .split_once(']')
+                .with_context(|| format!("unterminated IPv6 literal in '{url}'"))?;
+            ensure!(!addr.is_empty(), "empty IPv6 literal in '{url}'");
+            let port = match after.strip_prefix(':') {
+                Some(p) => p
+                    .parse::<u16>()
                     .map_err(|_| anyhow::anyhow!("bad port in '{url}'"))?,
-            ),
-            None => (authority.to_string(), 80),
+                None => {
+                    ensure!(after.is_empty(), "garbage after IPv6 literal in '{url}'");
+                    80
+                }
+            };
+            (addr.to_string(), port)
+        } else {
+            ensure!(
+                authority.matches(':').count() <= 1,
+                "IPv6 literals must be bracketed, e.g. http://[::1]:8080 (got '{url}')"
+            );
+            match authority.rsplit_once(':') {
+                Some((h, p)) => (
+                    h.to_string(),
+                    p.parse::<u16>()
+                        .map_err(|_| anyhow::anyhow!("bad port in '{url}'"))?,
+                ),
+                None => (authority.to_string(), 80),
+            }
         };
+        ensure!(!host.is_empty(), "http URL '{url}' has no host");
         Ok(Self {
             host,
             port,
@@ -51,8 +74,18 @@ impl HttpEndpoint {
         })
     }
 
+    /// Host as it appears in URLs and `Host:` headers (IPv6 literals
+    /// re-bracketed; `self.host` itself stays connect-ready).
+    fn host_display(&self) -> String {
+        if self.host.contains(':') {
+            format!("[{}]", self.host)
+        } else {
+            self.host.clone()
+        }
+    }
+
     pub fn url_for(&self, rel: &str) -> String {
-        format!("http://{}:{}{}/{rel}", self.host, self.port, self.base)
+        format!("http://{}:{}{}/{rel}", self.host_display(), self.port, self.base)
     }
 
     fn connect(&self) -> Result<TcpStream> {
@@ -71,7 +104,7 @@ impl HttpEndpoint {
         write!(
             stream,
             "GET {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\nAccept: */*\r\n\r\n",
-            self.host
+            self.host_display()
         )?;
         stream.flush()?;
         let (status, body) = read_response(&mut stream)
@@ -91,7 +124,7 @@ impl HttpEndpoint {
             stream,
             "PUT {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\
              Content-Type: application/octet-stream\r\nContent-Length: {}\r\n\r\n",
-            self.host,
+            self.host_display(),
             data.len()
         )?;
         stream.write_all(data)?;
@@ -203,11 +236,40 @@ fn decode_chunked(data: &[u8]) -> Result<Vec<u8>> {
             .with_context(|| format!("bad chunk size '{size_str}'"))?;
         pos = line_end + 2;
         if size == 0 {
+            // after the 0-size chunk: optional trailer headers, then a
+            // final CRLF. Anything else is malformed framing. (A server
+            // that closes right after `0\r\n` is tolerated.)
+            while pos < data.len() {
+                let line_end = data[pos..]
+                    .windows(2)
+                    .position(|w| w == b"\r\n")
+                    .context("garbage after final chunk (no CRLF)")?
+                    + pos;
+                let line = &data[pos..line_end];
+                pos = line_end + 2;
+                if line.is_empty() {
+                    ensure!(
+                        pos == data.len(),
+                        "{} trailing bytes after chunked body terminator",
+                        data.len() - pos
+                    );
+                    break;
+                }
+                ensure!(
+                    line.contains(&b':'),
+                    "malformed trailer after final chunk: '{}'",
+                    String::from_utf8_lossy(line)
+                );
+            }
             return Ok(out);
         }
-        ensure!(pos + size <= data.len(), "truncated chunk body");
+        ensure!(pos + size + 2 <= data.len(), "truncated chunk body");
+        ensure!(
+            &data[pos + size..pos + size + 2] == b"\r\n",
+            "chunk body not terminated by CRLF (malformed framing)"
+        );
         out.extend_from_slice(&data[pos..pos + size]);
-        pos += size + 2; // skip trailing CRLF
+        pos += size + 2;
     }
 }
 
@@ -231,10 +293,54 @@ mod tests {
     }
 
     #[test]
+    fn parses_ipv6_urls() {
+        let e = HttpEndpoint::parse("http://[::1]:8080/base").unwrap();
+        assert_eq!(e.host, "::1");
+        assert_eq!(e.port, 8080);
+        assert_eq!(e.base, "/base");
+        assert_eq!(e.url_for("index.json"), "http://[::1]:8080/base/index.json");
+        let e = HttpEndpoint::parse("http://[fe80::2]/x").unwrap();
+        assert_eq!(e.host, "fe80::2");
+        assert_eq!(e.port, 80);
+        // unbracketed IPv6 authorities are ambiguous — explicit error
+        let err = HttpEndpoint::parse("http://::1:8080/x").unwrap_err().to_string();
+        assert!(err.contains("bracketed"), "{err}");
+        assert!(HttpEndpoint::parse("http://[::1/x").is_err());
+        assert!(HttpEndpoint::parse("http://[]:80/x").is_err());
+        assert!(HttpEndpoint::parse("http://[::1]garbage/x").is_err());
+        assert!(HttpEndpoint::parse("http://[::1]:notaport/x").is_err());
+    }
+
+    #[test]
     fn decodes_chunked_bodies() {
         let body = b"4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n";
         assert_eq!(decode_chunked(body).unwrap(), b"Wikipedia");
         assert!(decode_chunked(b"zz\r\n").is_err());
         assert!(decode_chunked(b"5\r\nab").is_err());
+        // server closing right after the 0-size chunk is tolerated
+        assert_eq!(decode_chunked(b"3\r\nabc\r\n0\r\n").unwrap(), b"abc");
+        // optional trailers before the final CRLF are accepted
+        assert_eq!(
+            decode_chunked(b"3\r\nabc\r\n0\r\nX-Sum: 1\r\n\r\n").unwrap(),
+            b"abc"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_chunked_framing() {
+        // chunk body not followed by CRLF
+        let err = decode_chunked(b"4\r\nWikiXX5\r\npedia\r\n0\r\n\r\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("CRLF"), "{err}");
+        // trailing garbage after the terminator
+        let err = decode_chunked(b"4\r\nWiki\r\n0\r\n\r\ngarbage")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+        // non-header garbage where trailers belong
+        assert!(decode_chunked(b"4\r\nWiki\r\n0\r\ngarbage\r\n\r\n").is_err());
+        // chunk body truncated before its CRLF
+        assert!(decode_chunked(b"4\r\nWiki").is_err());
     }
 }

@@ -218,6 +218,14 @@ pub struct PushReport {
 /// locally first, then written under its content address (payload
 /// before manifest, so a half-push is never listable), and the index is
 /// refreshed. Pushing content that is already present is a no-op.
+///
+/// The index refresh is a read-modify-write with no locking — the dumb
+/// store contract has no conditional PUT to build one on. The registry
+/// therefore assumes a **single pusher at a time**: two concurrent
+/// pushes can lose each other's index row. The damage is bounded — the
+/// artifact itself stays fetchable by id (`pull --id`), only
+/// `list`/pull-everything misses it — and repair is a re-push of the
+/// dropped artifact, which is cheap because the content blobs dedupe.
 pub fn push(artifact_dir: &Path, store: &dyn RegistryStore) -> Result<PushReport> {
     let (artifact, _) = load_verified(artifact_dir)
         .with_context(|| format!("verifying {} before push", artifact_dir.display()))?;

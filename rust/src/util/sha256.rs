@@ -58,6 +58,12 @@ impl Sha256 {
                 self.compress(&block);
                 self.block_len = 0;
             }
+            // data exhausted into a still-partial block: the buffered
+            // bytes must survive; the tail copy below would reset
+            // block_len to 0 and drop them.
+            if data.is_empty() {
+                return;
+            }
         }
         while data.len() >= 64 {
             let mut block = [0u8; 64];
@@ -198,5 +204,48 @@ mod tests {
             h.update(&data[split..]);
             assert_eq!(h.finish_hex(), sha256_hex(&data), "split at {split}");
         }
+    }
+
+    #[test]
+    fn streaming_matches_oneshot_byte_at_a_time() {
+        let data: Vec<u8> = (0..300u32).map(|i| (i * 13 % 251) as u8).collect();
+        let mut h = Sha256::new();
+        for b in &data {
+            h.update(std::slice::from_ref(b));
+        }
+        assert_eq!(h.finish_hex(), sha256_hex(&data));
+    }
+
+    #[test]
+    fn streaming_matches_oneshot_with_mixed_small_chunks() {
+        // chunk sizes chosen to repeatedly leave a partial block, then
+        // extend it — exercises every branch of update(), including
+        // empty updates onto a partially-filled buffer.
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 31 % 251) as u8).collect();
+        let mut h = Sha256::new();
+        let mut pos = 0usize;
+        for size in [3usize, 0, 1, 61, 64, 0, 7, 130, 5].iter().cycle() {
+            let take = (*size).min(data.len() - pos);
+            h.update(&data[pos..pos + take]);
+            pos += take;
+            if pos == data.len() {
+                break;
+            }
+        }
+        assert_eq!(h.finish_hex(), sha256_hex(&data));
+    }
+
+    #[test]
+    fn empty_updates_are_noops() {
+        let mut h = Sha256::new();
+        h.update(b"");
+        h.update(b"ab");
+        h.update(b"");
+        h.update(b"c");
+        h.update(b"");
+        assert_eq!(
+            h.finish_hex(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
     }
 }
