@@ -13,7 +13,7 @@ use imclim::compute::qs::QsModel;
 use imclim::coordinator::{run_sweep, Backend, PjrtService, SweepOptions, SweepPoint};
 use imclim::engine::Engine;
 use imclim::figures::{self, FigCtx};
-use imclim::mc::{simulate, ArchKind, InputDist};
+use imclim::mc::{self, simulate, ArchKind, InputDist};
 use imclim::opt::{frontier, optimize, ArchChoice, Constraints, Domain, Objective};
 use imclim::tech::TechNode;
 use imclim::util::json::{arr, num, obj, s, Json};
@@ -68,6 +68,53 @@ fn main() {
         p[pvec::QS_IDX_MODE] = 1.0;
         suite.bench("mc_qs_n512_correlated", 256.0, || {
             black_box(simulate(ArchKind::Qs, &p, 256, 7, InputDist::Uniform));
+        });
+    }
+
+    // frozen scalar reference path on the same points: the denominator
+    // of the kernel-speedup trajectory in BENCH_mc.json (§Perf P5)
+    for (name, kind) in [
+        ("mc_qs_ref_n512", ArchKind::Qs),
+        ("mc_qr_ref_n512", ArchKind::Qr),
+        ("mc_cm_ref_n512", ArchKind::Cm),
+    ] {
+        let mut p = qs_params(512.0, 0.107);
+        if kind == ArchKind::Qr {
+            p[pvec::QR_IDX_SIGMA_C] = 0.08;
+            p[pvec::QR_IDX_V_C] = 1.0;
+        }
+        if kind == ArchKind::Cm {
+            p[pvec::CM_IDX_SIGMA_D] = 0.107;
+            p[pvec::CM_IDX_W_H] = 1.0;
+            p[pvec::CM_IDX_V_C] = 0.2;
+        }
+        let trials = 256;
+        let mut seed = 0u64;
+        suite.bench(name, trials as f64, || {
+            seed += 1;
+            black_box(mc::reference::simulate(kind, &p, trials, seed, InputDist::Uniform));
+        });
+    }
+
+    // single-point wall-clock: a lone default-sized 512-row point, the
+    // pareto --validate / figure shape that used to pin one core. The
+    // chunked variant goes through the real scheduler (per-chunk jobs
+    // over the default pool) vs the frozen serial path.
+    {
+        let p = qs_params(512.0, 0.107);
+        let trials = 2048;
+        suite.bench("mc_single_point_serial_n512", trials as f64, || {
+            black_box(mc::measure(&mc::reference::simulate(
+                ArchKind::Qs,
+                &p,
+                trials,
+                11,
+                InputDist::Uniform,
+            )));
+        });
+        let point = SweepPoint::new("solo", ArchKind::Qs, p).with_trials(trials).with_seed(11);
+        suite.bench("mc_single_point_chunked_n512", trials as f64, || {
+            black_box(run_sweep(vec![point.clone()], Backend::Native, SweepOptions::default()));
         });
     }
 
@@ -320,6 +367,146 @@ fn main() {
         match std::fs::write(&path, doc.to_string()) {
             Ok(()) => println!("opt bench records -> {}", path.display()),
             Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
+
+    // Monte-Carlo kernel trajectory: BENCH_mc.json ($BENCH_MC_JSON
+    // overrides the path) holds every mc_* bench plus derived speedups
+    // (batched kernels vs the frozen mc::reference path, chunked
+    // scheduler vs serial single-point) and the adaptive-vs-fixed trial
+    // counts. When $BENCH_MC_BASELINE names a *calibrated* baseline
+    // file, any matching bench that lost >30% throughput fails the run
+    // (the CI regression gate).
+    let mc_reports: Vec<&imclim::bench::BenchReport> = suite
+        .reports
+        .iter()
+        .filter(|r| r.name.starts_with("mc_"))
+        .collect();
+    if !mc_reports.is_empty() {
+        // read the baseline *before* the default output path overwrites it
+        let baseline = std::env::var_os("BENCH_MC_BASELINE").map(|p| {
+            (
+                std::path::PathBuf::from(&p),
+                std::fs::read_to_string(&p).ok().and_then(|t| Json::parse(&t).ok()),
+            )
+        });
+
+        let median_secs = |name: &str| -> Option<f64> {
+            suite
+                .reports
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.median.as_secs_f64())
+        };
+        let mut derived: Vec<(&str, Json)> = Vec::new();
+        for (label, new_name, ref_name) in [
+            ("qs_kernel_speedup", "mc_qs_n512", "mc_qs_ref_n512"),
+            ("qr_kernel_speedup", "mc_qr_n512", "mc_qr_ref_n512"),
+            ("cm_kernel_speedup", "mc_cm_n512", "mc_cm_ref_n512"),
+            (
+                "single_point_speedup",
+                "mc_single_point_chunked_n512",
+                "mc_single_point_serial_n512",
+            ),
+        ] {
+            if let (Some(new), Some(old)) = (median_secs(new_name), median_secs(ref_name)) {
+                derived.push((label, num(old / new)));
+            }
+        }
+        derived.push(("qs_kernel_speedup_floor", num(1.3)));
+        derived.push(("single_point_speedup_floor", num(2.0)));
+
+        // adaptive-precision economy at the 512-row reference point:
+        // trials the stopping rule spends at 0.5 dB vs the fixed default
+        {
+            let p = qs_params(512.0, 0.107);
+            let run = mc::simulate_adaptive(
+                ArchKind::Qs,
+                &p,
+                0.5,
+                11,
+                InputDist::Uniform,
+                mc::ADAPTIVE_MAX_TRIALS,
+            );
+            derived.push(("adaptive_trials_at_0p5db", num(run.measured.trials as f64)));
+            derived.push(("adaptive_half_width_db", num(run.half_width_db)));
+            derived.push(("adaptive_converged", Json::Bool(run.converged)));
+            derived.push(("fixed_default_trials", num(2048.0)));
+        }
+
+        let bench_rows: Vec<Json> = mc_reports
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", s(&r.name)),
+                    ("iters", num(r.iters as f64)),
+                    ("median_ns", num(r.median.as_nanos() as f64)),
+                    ("mad_ns", num(r.mad.as_nanos() as f64)),
+                    ("mean_ns", num(r.mean.as_nanos() as f64)),
+                    ("items_per_sec", num(r.items_per_sec())),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("suite", s("mc")),
+            // a measured run is a valid future baseline; the committed
+            // bootstrap file carries calibrated=false until CI numbers
+            // replace its placeholders
+            ("calibrated", Json::Bool(true)),
+            ("benches", arr(bench_rows)),
+            ("derived", obj(derived)),
+        ]);
+        let path = std::env::var_os("BENCH_MC_JSON")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("BENCH_mc.json"));
+        match std::fs::write(&path, doc.to_string()) {
+            Ok(()) => println!("mc bench records -> {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+
+        match baseline {
+            None => {}
+            Some((bp, None)) => {
+                eprintln!("warning: unreadable mc baseline {}", bp.display());
+            }
+            Some((bp, Some(base))) => {
+                if base.get("calibrated") != Some(&Json::Bool(true)) {
+                    println!(
+                        "mc baseline {} not calibrated; regression gate skipped",
+                        bp.display()
+                    );
+                } else {
+                    let mut failed = false;
+                    for b in base.get("benches").and_then(Json::as_arr).unwrap_or(&[]) {
+                        let (Some(name), Some(base_ips)) = (
+                            b.get("name").and_then(Json::as_str),
+                            b.get("items_per_sec").and_then(Json::as_f64),
+                        ) else {
+                            continue;
+                        };
+                        if base_ips <= 0.0 {
+                            continue;
+                        }
+                        let Some(r) = suite.reports.iter().find(|r| r.name == name) else {
+                            continue;
+                        };
+                        let ips = r.items_per_sec();
+                        if ips < 0.7 * base_ips {
+                            eprintln!(
+                                "PERF REGRESSION {name}: {ips:.1} items/s is {:.0}% below \
+                                 baseline {base_ips:.1}",
+                                (1.0 - ips / base_ips) * 100.0
+                            );
+                            failed = true;
+                        }
+                    }
+                    if failed {
+                        eprintln!("mc regression gate failed (>30% throughput loss)");
+                        std::process::exit(1);
+                    }
+                    println!("mc regression gate passed vs {}", bp.display());
+                }
+            }
         }
     }
 

@@ -111,6 +111,22 @@ EXAMPLES:
   # strict mode for CI: any differing-payload collision is a failure
   imclim merge shard-0 shard-1 --strict --out-dir results
   imclim cache pull http://reg.internal/imclim --strict --out-dir results
+
+  # adaptive-precision trials: grow each ensemble (256-trial chunks)
+  # until SNR_a and SNR_T are pinned to a 0.25 dB 95% CI half-width —
+  # noisy corners get more trials, clean corners stop early. Adaptive
+  # records are cached under their own keys, so they never shadow a
+  # fixed-trials sweep over the same grid (and vice versa)
+  imclim sweep --arch qs --n 64:512:64 --b-adc 4:10 --precision 0.25
+
+  # the same stopping rule on pareto frontier validation
+  imclim pareto --arch qs,qr --n 64:512:64 --b-adc 4:10 \\
+      --validate --precision 0.5
+
+  # intra-point parallelism: one 65536-trial point saturates the pool
+  # anyway — fixed-trials native points split into 256-trial chunk jobs
+  # whose merged result is bit-identical to a --workers 1 run
+  imclim sweep --arch qr --n 512 --b-adc 8 --trials 65536 --workers 8
 ";
 
 /// Parse a byte size with optional binary-unit suffix: `"4096"`,

@@ -151,8 +151,17 @@ COMMON OPTIONS:
   --out-dir DIR       output directory for CSVs (default: results)
   --backend B         native | pjrt (default: native)
   --artifacts DIR     artifact directory for pjrt (default: artifacts)
-  --trials N          MC trials per point (default: 2048)
-  --workers N         worker threads (default: all cores, max 16)
+  --trials N          MC trials per point (default: 2048); under
+                      --precision it is unavailable (mutually exclusive)
+  --precision DB      adaptive-precision trials: grow each native
+                      ensemble in 256-trial chunks until the 95% CI
+                      half-width of SNR_a and SNR_T is within DB
+                      (capped at 65536 trials; native backend only;
+                      cached separately from fixed-trials records)
+  --workers N         worker threads (default: all cores, max 16);
+                      fixed-trials native points are split into
+                      per-chunk jobs across the pool, merged in chunk
+                      order (bit-identical to --workers 1)
   --no-cache          bypass the content-addressed result cache
   --verbose           progress output
 ";
@@ -193,7 +202,32 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
 /// Build the figure context (and keep the PJRT service alive with it).
 fn make_ctx(args: &Args) -> anyhow::Result<(FigCtx, Option<PjrtService>)> {
     let out_dir: PathBuf = args.opt("out-dir").unwrap_or("results").into();
-    let trials = args.opt_parse("trials", 2048usize);
+    let precision = match args.opt("precision") {
+        None => None,
+        Some(raw) => {
+            anyhow::ensure!(
+                args.opt("trials").is_none(),
+                "--precision and --trials are mutually exclusive: --trials \
+                 fixes the ensemble size, --precision lets the stopping \
+                 rule choose it (the adaptive cap is {} trials)",
+                crate::mc::ADAPTIVE_MAX_TRIALS
+            );
+            let half_width_db: f64 = raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--precision expects a dB half-width, got '{raw}'"))?;
+            anyhow::ensure!(
+                half_width_db.is_finite() && half_width_db > 0.0,
+                "--precision must be a positive finite dB half-width, got {half_width_db}"
+            );
+            Some(half_width_db)
+        }
+    };
+    // under --precision, `trials` becomes the stopping rule's cap
+    let trials = if precision.is_some() {
+        crate::mc::ADAPTIVE_MAX_TRIALS
+    } else {
+        args.opt_parse("trials", 2048usize)
+    };
     let workers = args.opt_parse(
         "workers",
         crate::coordinator::SweepOptions::default().workers,
@@ -222,6 +256,7 @@ fn make_ctx(args: &Args) -> anyhow::Result<(FigCtx, Option<PjrtService>)> {
             backend,
             out_dir,
             trials,
+            precision,
             workers,
             verbose,
             cache: !args.has("no-cache"),
@@ -499,6 +534,7 @@ fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<
         if dist == "gauss" {
             point.dist = InputDist::ClippedGaussian { sx: 0.35, sw: 0.35 };
         }
+        point.precision = ctx.precision;
         meta.push(SweepMeta {
             arch: arch_name,
             node_nm: node.node_nm,
@@ -759,21 +795,7 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
         let points: Vec<crate::coordinator::SweepPoint> = frontier
             .points
             .iter()
-            .map(|p| {
-                // `Family::build` yields the Banked wrapper for banked
-                // families, so the parameter vector carries the bank
-                // count and the native simulator runs the banked
-                // ensemble (pjrt rejects such points).
-                let arch = p.family.build();
-                let op = p.family.op(p.b_adc);
-                crate::coordinator::SweepPoint::new(
-                    format!("pareto/{}", p.label()),
-                    p.family.arch.kind(),
-                    arch.pjrt_params(&op, &w, &x),
-                )
-                .with_trials(ctx.trials)
-                .with_seed(seed)
-            })
+            .map(|p| p.validation_point(&w, &x, ctx.trials, seed, ctx.precision))
             .collect();
         let (results, stats) = ctx.engine().run_with_stats(points);
         for (slot, r) in sims.iter_mut().zip(&results) {

@@ -3,10 +3,21 @@
 //! fixed-shape executor invocations, and aggregates ensemble statistics.
 //!
 //! Scheduling is lock-free: workers claim jobs with a single atomic
-//! fetch-add over the shared (immutable) point slice and collect their
+//! fetch-add over a shared (immutable) job slice and collect their
 //! results into per-worker buffers, which are merged back into input
 //! order after the pool joins. There is no job-queue mutex and no shared
 //! result-store mutex on the hot path.
+//!
+//! Jobs are finer than points: a fixed-trials point on the native
+//! backend fans out into one job per [`crate::mc::CHUNK_TRIALS`]-sized
+//! chunk (each on its own `chunk_seed`-derived RNG stream), so a
+//! 1-point `pareto --validate` or `figure` run saturates every worker
+//! instead of one. Chunk outputs are re-assembled in chunk order after
+//! the pool joins, which makes the pooled measurement bit-identical to
+//! a sequential `measure(simulate(..))` — worker count and completion
+//! order can't change a single bit of the result. Adaptive-precision
+//! points (`precision: Some(..)`) are inherently sequential (the
+//! stopping rule decides the trial count as it goes) and stay one job.
 //!
 //! Invariants (enforced by tests in rust/tests/prop_coordinator.rs):
 //!  * every submitted point produces exactly one result;
@@ -31,9 +42,18 @@ pub struct SweepPoint {
     pub id: String,
     pub kind: ArchKind,
     pub params: [f64; pvec::P],
+    /// For fixed-trials points: the exact ensemble size. For adaptive
+    /// points (`precision: Some(..)`): the trial *cap* the stopping rule
+    /// may not exceed.
     pub trials: usize,
     pub seed: u64,
     pub dist: InputDist,
+    /// `Some(half_width_db)`: run adaptively until the 95% CI of the
+    /// measured SNR estimators fits the target (see
+    /// `mc::simulate_adaptive`) instead of a fixed trial count. A new
+    /// cache-key dimension — adaptive records never alias fixed-trials
+    /// records (see `engine::cache::cache_key`).
+    pub precision: Option<f64>,
 }
 
 impl SweepPoint {
@@ -45,6 +65,7 @@ impl SweepPoint {
             trials: 1024,
             seed: 0xC0FFEE,
             dist: InputDist::Uniform,
+            precision: None,
         }
     }
 
@@ -55,6 +76,11 @@ impl SweepPoint {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_precision(mut self, half_width_db: f64) -> Self {
+        self.precision = Some(half_width_db);
         self
     }
 }
@@ -124,14 +150,46 @@ impl Default for SweepOptions {
     }
 }
 
+/// One schedulable unit of work: a whole point, or one chunk of a
+/// fixed-trials native point (intra-point parallelism).
+enum Job {
+    Point(usize),
+    Chunk {
+        point: usize,
+        chunk: usize,
+        trials: usize,
+        seed: u64,
+    },
+}
+
+/// What a worker hands back for one claimed job.
+enum WorkItem {
+    Result(SweepResult),
+    Chunk {
+        point: usize,
+        chunk: usize,
+        out: McOutput,
+    },
+}
+
+/// Does this point fan out into per-chunk jobs on this backend?
+/// Fixed-trials native points with 2+ chunks do; adaptive points are
+/// sequential by construction, and the PJRT path batches internally.
+fn fans_out(point: &SweepPoint, backend: &Backend) -> bool {
+    matches!(backend, Backend::Native)
+        && point.precision.is_none()
+        && crate::mc::n_chunks(point.trials) >= 2
+}
+
 /// Run all points; the returned vector is ordered like the input.
 ///
-/// Work distribution is an atomic-index claiming loop over the shared
-/// point slice: each worker does `next.fetch_add(1)` to claim the next
-/// unprocessed point and appends the result to its own buffer, so no
-/// lock is taken anywhere on the execution path. Per-point seeding is
-/// part of the point itself, so results are bit-identical regardless of
-/// worker count or completion order.
+/// Work distribution is an atomic-index claiming loop over a shared job
+/// slice: each worker does `next.fetch_add(1)` to claim the next
+/// unprocessed job and appends the result to its own buffer, so no
+/// lock is taken anywhere on the execution path. Per-point (and
+/// per-chunk) seeding is part of the job itself, and chunk outputs are
+/// merged in chunk order after the pool joins, so results are
+/// bit-identical regardless of worker count or completion order.
 pub fn run_sweep(
     points: Vec<SweepPoint>,
     backend: Backend,
@@ -141,50 +199,124 @@ pub fn run_sweep(
     if n_points == 0 {
         return Vec::new();
     }
+
+    let mut jobs: Vec<Job> = Vec::new();
+    for (i, point) in points.iter().enumerate() {
+        if fans_out(point, &backend) {
+            for c in 0..crate::mc::n_chunks(point.trials) {
+                let offset = c * crate::mc::CHUNK_TRIALS;
+                jobs.push(Job::Chunk {
+                    point: i,
+                    chunk: c,
+                    trials: crate::mc::CHUNK_TRIALS.min(point.trials - offset),
+                    seed: crate::mc::chunk_seed(point.seed, c as u64),
+                });
+            }
+        } else {
+            jobs.push(Job::Point(i));
+        }
+    }
+    let n_jobs = jobs.len();
+    let jobs_slice: &[Job] = &jobs;
+
     let next = AtomicUsize::new(0);
     let done = AtomicUsize::new(0);
+    // per-point outstanding-job counters, so the progress line fires
+    // exactly once per point no matter how its chunks interleave
+    let remaining: Vec<AtomicUsize> = points
+        .iter()
+        .map(|p| {
+            AtomicUsize::new(if fans_out(p, &backend) {
+                crate::mc::n_chunks(p.trials)
+            } else {
+                1
+            })
+        })
+        .collect();
+    let remaining_slice: &[AtomicUsize] = &remaining;
     let points_slice: &[SweepPoint] = &points;
 
-    let workers = opts.workers.clamp(1, n_points);
-    let buffers: Vec<Vec<SweepResult>> = std::thread::scope(|scope| {
+    let workers = opts.workers.clamp(1, n_jobs);
+    let buffers: Vec<Vec<WorkItem>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 let backend = backend.clone();
                 let next = &next;
                 let done = &done;
                 scope.spawn(move || {
-                    let mut local: Vec<SweepResult> = Vec::new();
+                    let mut local: Vec<WorkItem> = Vec::new();
                     loop {
-                        let index = next.fetch_add(1, Ordering::Relaxed);
-                        if index >= n_points {
+                        let job_index = next.fetch_add(1, Ordering::Relaxed);
+                        if job_index >= n_jobs {
                             break;
                         }
-                        let point = &points_slice[index];
-                        let res = run_point(point, &backend);
-                        let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
-                        if opts.verbose {
-                            eprintln!(
-                                "[{finished}/{n_points}] {} snr_t={:.2} dB",
-                                point.id,
-                                res.as_ref().map(|m| m.snr_t_db).unwrap_or(f64::NAN)
-                            );
+                        match jobs_slice[job_index] {
+                            Job::Point(index) => {
+                                let point = &points_slice[index];
+                                let res = run_point(point, &backend);
+                                let left = remaining_slice[index]
+                                    .fetch_sub(1, Ordering::Relaxed)
+                                    - 1;
+                                debug_assert_eq!(left, 0);
+                                let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                                if opts.verbose {
+                                    eprintln!(
+                                        "[{finished}/{n_points}] {} snr_t={:.2} dB",
+                                        point.id,
+                                        res.as_ref().map(|m| m.snr_t_db).unwrap_or(f64::NAN)
+                                    );
+                                }
+                                local.push(WorkItem::Result(match res {
+                                    Ok(measured) => SweepResult {
+                                        id: point.id.clone(),
+                                        index,
+                                        measured,
+                                        error: None,
+                                        cached: false,
+                                    },
+                                    Err(e) => SweepResult {
+                                        id: point.id.clone(),
+                                        index,
+                                        measured: MeasuredSnr::default(),
+                                        error: Some(e.to_string()),
+                                        cached: false,
+                                    },
+                                }));
+                            }
+                            Job::Chunk {
+                                point: index,
+                                chunk,
+                                trials,
+                                seed,
+                            } => {
+                                let point = &points_slice[index];
+                                let out = crate::mc::simulate_chunk(
+                                    point.kind,
+                                    &point.params,
+                                    trials,
+                                    seed,
+                                    point.dist,
+                                );
+                                let left = remaining_slice[index]
+                                    .fetch_sub(1, Ordering::Relaxed)
+                                    - 1;
+                                if left == 0 {
+                                    let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                                    if opts.verbose {
+                                        eprintln!(
+                                            "[{finished}/{n_points}] {} ({} chunks)",
+                                            point.id,
+                                            crate::mc::n_chunks(point.trials)
+                                        );
+                                    }
+                                }
+                                local.push(WorkItem::Chunk {
+                                    point: index,
+                                    chunk,
+                                    out,
+                                });
+                            }
                         }
-                        local.push(match res {
-                            Ok(measured) => SweepResult {
-                                id: point.id.clone(),
-                                index,
-                                measured,
-                                error: None,
-                                cached: false,
-                            },
-                            Err(e) => SweepResult {
-                                id: point.id.clone(),
-                                index,
-                                measured: MeasuredSnr::default(),
-                                error: Some(e.to_string()),
-                                cached: false,
-                            },
-                        });
                     }
                     local
                 })
@@ -196,13 +328,55 @@ pub fn run_sweep(
             .collect()
     });
 
+    // Re-assemble: whole-point results drop into their slot; chunked
+    // points gather their chunk outputs and are measured in chunk order
+    // (the exact push sequence of a sequential measure(simulate(..))).
     let mut slots: Vec<Option<SweepResult>> = vec![None; n_points];
+    let mut chunk_slots: Vec<Vec<Option<McOutput>>> = points
+        .iter()
+        .map(|p| {
+            if fans_out(p, &backend) {
+                let mut v = Vec::new();
+                v.resize_with(crate::mc::n_chunks(p.trials), || None);
+                v
+            } else {
+                Vec::new()
+            }
+        })
+        .collect();
     for buffer in buffers {
-        for result in buffer {
-            let index = result.index;
-            debug_assert!(slots[index].is_none(), "point {index} claimed twice");
-            slots[index] = Some(result);
+        for item in buffer {
+            match item {
+                WorkItem::Result(result) => {
+                    let index = result.index;
+                    debug_assert!(slots[index].is_none(), "point {index} claimed twice");
+                    slots[index] = Some(result);
+                }
+                WorkItem::Chunk { point, chunk, out } => {
+                    debug_assert!(
+                        chunk_slots[point][chunk].is_none(),
+                        "chunk {chunk} of point {point} claimed twice"
+                    );
+                    chunk_slots[point][chunk] = Some(out);
+                }
+            }
         }
+    }
+    for (index, chunks) in chunk_slots.into_iter().enumerate() {
+        if chunks.is_empty() {
+            continue;
+        }
+        let mut acc = SnrAccumulator::new();
+        for out in &chunks {
+            acc.push_chunk(out.as_ref().expect("every chunk produces an output"));
+        }
+        slots[index] = Some(SweepResult {
+            id: points[index].id.clone(),
+            index,
+            measured: acc.finalize(),
+            error: None,
+            cached: false,
+        });
     }
     slots
         .into_iter()
@@ -214,6 +388,17 @@ pub fn run_sweep(
 pub fn run_point(point: &SweepPoint, backend: &Backend) -> anyhow::Result<MeasuredSnr> {
     match backend {
         Backend::Native => {
+            if let Some(half_width_db) = point.precision {
+                let run = crate::mc::simulate_adaptive(
+                    point.kind,
+                    &point.params,
+                    half_width_db,
+                    point.seed,
+                    point.dist,
+                    point.trials,
+                );
+                return Ok(run.measured);
+            }
             let out = crate::mc::simulate(
                 point.kind,
                 &point.params,
@@ -224,6 +409,13 @@ pub fn run_point(point: &SweepPoint, backend: &Backend) -> anyhow::Result<Measur
             Ok(crate::mc::measure(&out))
         }
         Backend::Pjrt { handle, suffix } => {
+            anyhow::ensure!(
+                point.precision.is_none(),
+                "point {} requests adaptive --precision: the sequential \
+                 stopping rule is native-only, rerun with --backend native \
+                 or a fixed --trials count",
+                point.id
+            );
             // Banked points are native-only: the AOT artifacts model a
             // single array and would silently ignore the bank slot.
             anyhow::ensure!(
@@ -373,6 +565,71 @@ mod tests {
     fn empty_sweep_is_fine() {
         let res = run_sweep(Vec::new(), Backend::Native, SweepOptions::default());
         assert!(res.is_empty());
+    }
+
+    #[test]
+    fn single_point_fans_out_and_stays_bitwise_deterministic() {
+        // a 1-point fixed-trials run splits into chunks across the pool;
+        // the assembled measurement is bit-identical to the sequential
+        // run_point path for every worker count
+        let point = qs_point("solo", 64, 9).with_trials(1024);
+        let direct = run_point(&point, &Backend::Native).unwrap();
+        for workers in [1, 3, 8] {
+            let res = run_sweep(
+                vec![point.clone()],
+                Backend::Native,
+                SweepOptions { workers, verbose: false },
+            );
+            assert_eq!(res.len(), 1);
+            assert!(res[0].error.is_none());
+            assert_eq!(res[0].measured.trials, 1024);
+            assert_eq!(
+                res[0].measured.snr_t_db.to_bits(),
+                direct.snr_t_db.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(
+                res[0].measured.snr_a_total_db.to_bits(),
+                direct.snr_a_total_db.to_bits()
+            );
+            assert_eq!(
+                res[0].measured.sigma_eta_a2.to_bits(),
+                direct.sigma_eta_a2.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_point_runs_through_scheduler() {
+        let point = qs_point("adaptive", 64, 9)
+            .with_trials(1 << 14)
+            .with_precision(2.0);
+        let res = run_sweep(
+            vec![point],
+            Backend::Native,
+            SweepOptions { workers: 4, verbose: false },
+        );
+        assert_eq!(res.len(), 1);
+        assert!(res[0].error.is_none());
+        let trials = res[0].measured.trials as usize;
+        assert_eq!(trials % crate::mc::CHUNK_TRIALS, 0, "whole chunks only");
+        assert!(trials >= 4 * crate::mc::CHUNK_TRIALS, "min batch means");
+        assert!(trials <= 1 << 14, "cap respected");
+    }
+
+    #[test]
+    fn pjrt_rejects_adaptive_precision() {
+        let service = crate::coordinator::PjrtService::spawn(
+            std::env::temp_dir().join("imclim-no-artifacts-here"),
+            1,
+        );
+        let backend = Backend::Pjrt {
+            handle: service.handle(),
+            suffix: "",
+        };
+        let point = qs_point("ad-pjrt", 32, 1).with_precision(0.5);
+        let err = run_point(&point, &backend).unwrap_err().to_string();
+        assert!(err.contains("native-only"), "{err}");
     }
 
     #[test]

@@ -82,6 +82,15 @@ pub fn cache_key(point: &SweepPoint, backend_id: &str) -> String {
     for p in &point.params {
         bytes.extend_from_slice(&p.to_bits().to_le_bytes());
     }
+    // Adaptive-precision runs are a separate key dimension: the tagged
+    // block is appended *only* when present, so every fixed-trials key
+    // byte stream — and therefore every pre-existing record key — is
+    // untouched, while an adaptive record can never alias a fixed one
+    // (for adaptive points `trials` is the cap, not the ensemble size).
+    if let Some(half_width_db) = point.precision {
+        bytes.extend_from_slice(b"precision\0");
+        bytes.extend_from_slice(&half_width_db.to_bits().to_le_bytes());
+    }
     bytes.extend_from_slice(backend_id.as_bytes());
     format!(
         "{:016x}{:016x}",
@@ -293,7 +302,7 @@ fn encode_record(point: &SweepPoint, backend_id: &str, key: &str, m: &MeasuredSn
             format!("gauss:{:016x}:{:016x}", sx.to_bits(), sw.to_bits())
         }
     };
-    obj(vec![
+    let mut fields = vec![
         ("version", num(CACHE_VERSION)),
         ("key", s(key)),
         ("id", s(&point.id)),
@@ -302,6 +311,14 @@ fn encode_record(point: &SweepPoint, backend_id: &str, key: &str, m: &MeasuredSn
         ("trials", num(point.trials as f64)),
         ("seed", s(&format!("{:016x}", point.seed))),
         ("dist", s(&dist)),
+    ];
+    // present only on adaptive records (decode ignores unknown fields,
+    // and fixed-trials record bytes stay exactly as before this field
+    // existed — the warm-cache byte-identity contract)
+    if let Some(half_width_db) = point.precision {
+        fields.push(("precision_db", f64_hex(half_width_db)));
+    }
+    fields.extend([
         (
             "params",
             Json::Arr(point.params.iter().map(|&p| f64_hex(p)).collect()),
@@ -320,7 +337,8 @@ fn encode_record(point: &SweepPoint, backend_id: &str, key: &str, m: &MeasuredSn
                 ("snr_t_db", f64_hex(m.snr_t_db)),
             ]),
         ),
-    ])
+    ]);
+    obj(fields)
 }
 
 fn decode_record(text: &str, key: &str) -> Option<MeasuredSnr> {

@@ -30,8 +30,14 @@ use crate::engine::Engine;
 pub struct FigCtx {
     pub backend: Backend,
     pub out_dir: PathBuf,
-    /// MC trials per sweep point.
+    /// MC trials per sweep point (the trial *cap* when `precision` is
+    /// set).
     pub trials: usize,
+    /// Adaptive-precision target (95% CI half-width, dB) for the sweep
+    /// and pareto-validate drivers; `None` = fixed `trials` ensembles.
+    /// Figure drivers ignore it — their golden checks pin fixed-trials
+    /// ensembles.
+    pub precision: Option<f64>,
     pub workers: usize,
     pub verbose: bool,
     /// Serve repeated points from the content-addressed result cache
@@ -45,6 +51,7 @@ impl FigCtx {
             backend: Backend::Native,
             out_dir: out_dir.into(),
             trials: 2048,
+            precision: None,
             workers: crate::coordinator::SweepOptions::default().workers,
             verbose: false,
             cache: true,

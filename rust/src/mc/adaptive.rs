@@ -1,0 +1,196 @@
+//! Adaptive-precision Monte-Carlo: run chunks through a sequential
+//! stopping rule instead of a fixed trial count.
+//!
+//! The estimand is the ensemble SNR in dB (eq. 10/11). Each chunk is an
+//! independent sub-ensemble on its own [`super::chunk_seed`] stream, so
+//! the per-chunk `snr_a_total_db` / `snr_t_db` estimates are i.i.d.
+//! batch means; the rule runs chunks until the 95% confidence half-width
+//! of *both* batch-mean series fits the requested target (or the trial
+//! cap is reached). The reported measurement pools every trial into one
+//! [`SnrAccumulator`], which is strictly tighter than the batch-mean CI
+//! it stopped on.
+//!
+//! Adaptive runs are a separate cache-key dimension (see
+//! `engine::cache::cache_key`): a `--precision` record can never alias a
+//! fixed-`--trials` record, whose bit-exact contract stays untouched.
+
+use crate::arch::pvec;
+use crate::util::stats::Welford;
+
+use super::{
+    chunk_seed, measure, simulate_chunk, ArchKind, InputDist, MeasuredSnr, SnrAccumulator,
+    CHUNK_TRIALS,
+};
+
+/// Default trial cap for adaptive runs (32x the fixed default of 2048):
+/// the stopping rule gives up and reports the widest-case half-width if
+/// the target is unreachable within the cap.
+pub const ADAPTIVE_MAX_TRIALS: usize = 1 << 16;
+
+/// Minimum batch means before the CI is trusted at all.
+const MIN_CHUNKS: usize = 4;
+
+/// Two-sided 95% normal quantile.
+const Z_95: f64 = 1.959_963_984_540_054;
+
+/// Result of one adaptive run: pooled measurement plus the stopping
+/// rule's own accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveRun {
+    /// Pooled over all executed trials (`measured.trials` is the actual
+    /// count, a multiple of [`CHUNK_TRIALS`] up to the cap).
+    pub measured: MeasuredSnr,
+    /// Achieved 95% half-width (dB) of the worse of the two batch-mean
+    /// series (pre-ADC `snr_a_total_db`, total `snr_t_db`).
+    pub half_width_db: f64,
+    /// The requested target half-width (dB).
+    pub target_db: f64,
+    /// Chunks executed.
+    pub chunks: usize,
+    /// Whether the target was met before the trial cap.
+    pub converged: bool,
+}
+
+/// 95% half-width of a batch-mean series (0 until two finite means).
+fn ci_half_width(w: &Welford) -> f64 {
+    if w.count() < 2 {
+        0.0
+    } else {
+        Z_95 * w.std() / (w.count() as f64).sqrt()
+    }
+}
+
+/// Run chunks until both SNR estimators' 95% CIs fit `precision_db`, or
+/// `max_trials` is exhausted. `max_trials` is rounded up to a whole
+/// number of chunks and at least [`MIN_CHUNKS`] of them.
+pub fn simulate_adaptive(
+    kind: ArchKind,
+    params: &[f64; pvec::P],
+    precision_db: f64,
+    seed: u64,
+    dist: InputDist,
+    max_trials: usize,
+) -> AdaptiveRun {
+    assert!(
+        precision_db.is_finite() && precision_db > 0.0,
+        "precision half-width must be a positive finite dB value"
+    );
+    let max_chunks = super::n_chunks(max_trials).max(MIN_CHUNKS);
+    let mut pooled = SnrAccumulator::new();
+    let mut bm_a = Welford::new();
+    let mut bm_t = Welford::new();
+    let mut half_width = f64::INFINITY;
+    let mut chunks = 0;
+    let mut converged = false;
+    while chunks < max_chunks {
+        let out =
+            simulate_chunk(kind, params, CHUNK_TRIALS, chunk_seed(seed, chunks as u64), dist);
+        pooled.push_chunk(&out);
+        let m = measure(&out);
+        // noiseless corners measure infinite dB — a chunk mean that is
+        // not finite carries no CI information, so only finite batch
+        // means feed the rule (an all-infinite series stops at MIN_CHUNKS
+        // with half-width 0: the estimate cannot be tightened further)
+        if m.snr_a_total_db.is_finite() {
+            bm_a.push(m.snr_a_total_db);
+        }
+        if m.snr_t_db.is_finite() {
+            bm_t.push(m.snr_t_db);
+        }
+        chunks += 1;
+        if chunks >= MIN_CHUNKS {
+            half_width = ci_half_width(&bm_a).max(ci_half_width(&bm_t));
+            if half_width <= precision_db {
+                converged = true;
+                break;
+            }
+        }
+    }
+    AdaptiveRun {
+        measured: pooled.finalize(),
+        half_width_db: half_width,
+        target_db: precision_db,
+        chunks,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::pvec;
+
+    fn noisy_qs(n: usize) -> [f64; pvec::P] {
+        let mut p = [0.0; pvec::P];
+        p[pvec::IDX_N_ACTIVE] = n as f64;
+        p[pvec::IDX_BX] = 6.0;
+        p[pvec::IDX_BW] = 6.0;
+        p[pvec::IDX_B_ADC] = 8.0;
+        p[pvec::QS_IDX_SIGMA_D] = 0.107;
+        p[pvec::QS_IDX_K_H] = 55.0;
+        p[pvec::QS_IDX_V_C] = 55.0;
+        p
+    }
+
+    #[test]
+    fn loose_target_converges_below_cap() {
+        let p = noisy_qs(128);
+        let r = simulate_adaptive(ArchKind::Qs, &p, 2.0, 7, InputDist::Uniform, 1 << 14);
+        assert!(r.converged, "half_width={}", r.half_width_db);
+        assert!(r.half_width_db <= 2.0);
+        assert!(r.chunks >= 4);
+        assert_eq!(r.measured.trials as usize, r.chunks * CHUNK_TRIALS);
+        assert!((r.measured.trials as usize) < (1 << 14));
+    }
+
+    #[test]
+    fn unreachable_target_stops_at_cap() {
+        let p = noisy_qs(64);
+        let r = simulate_adaptive(ArchKind::Qs, &p, 1e-9, 7, InputDist::Uniform, 2048);
+        assert!(!r.converged);
+        assert_eq!(r.chunks, super::super::n_chunks(2048));
+        assert!(r.half_width_db > 1e-9);
+    }
+
+    #[test]
+    fn tighter_target_runs_more_chunks() {
+        let p = noisy_qs(64);
+        let loose = simulate_adaptive(ArchKind::Qs, &p, 2.0, 3, InputDist::Uniform, 1 << 15);
+        let tight = simulate_adaptive(ArchKind::Qs, &p, 0.2, 3, InputDist::Uniform, 1 << 15);
+        assert!(tight.chunks >= loose.chunks, "{} < {}", tight.chunks, loose.chunks);
+        assert!(tight.half_width_db <= loose.half_width_db);
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_target() {
+        let p = noisy_qs(64);
+        let a = simulate_adaptive(ArchKind::Qs, &p, 1.0, 5, InputDist::Uniform, 1 << 13);
+        let b = simulate_adaptive(ArchKind::Qs, &p, 1.0, 5, InputDist::Uniform, 1 << 13);
+        assert_eq!(a.chunks, b.chunks);
+        assert_eq!(a.measured.trials, b.measured.trials);
+        assert_eq!(a.measured.snr_t_db.to_bits(), b.measured.snr_t_db.to_bits());
+    }
+
+    #[test]
+    fn noiseless_corner_terminates() {
+        // infinite-dB chunk means carry no CI information; the run must
+        // still terminate (at MIN_CHUNKS) instead of spinning to the cap
+        let mut p = [0.0; pvec::P];
+        p[pvec::IDX_N_ACTIVE] = 32.0;
+        p[pvec::IDX_BX] = 4.0;
+        p[pvec::IDX_BW] = 4.0;
+        p[pvec::IDX_B_ADC] = 14.0;
+        p[pvec::QS_IDX_K_H] = 1e9;
+        p[pvec::QS_IDX_V_C] = 200.0;
+        let r = simulate_adaptive(ArchKind::Qs, &p, 0.5, 1, InputDist::Uniform, 1 << 13);
+        assert!(r.converged);
+        assert_eq!(r.chunks, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite")]
+    fn rejects_nonpositive_precision() {
+        let p = noisy_qs(16);
+        simulate_adaptive(ArchKind::Qs, &p, 0.0, 1, InputDist::Uniform, 1024);
+    }
+}

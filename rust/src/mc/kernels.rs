@@ -1,0 +1,381 @@
+//! Batched chunk kernels: the production Monte-Carlo trial loops,
+//! restructured around a chunk-of-trials layout.
+//!
+//! Where `mc::reference` re-derives every constant inside the trial (and
+//! allocates its code buffers per trial), these kernels build a per-point
+//! *plan* once per chunk — plane-weight products, hoisted `2^b` ADC
+//! levels/deltas, code scales, the CM per-code magnitude/mismatch table —
+//! and reuse one set of scratch buffers across all trials of the chunk.
+//! Inner loops are written branch-free over flat slices so LLVM
+//! auto-vectorizes the per-cell work (bit-plane extraction, plane
+//! counting, masked accumulation); the RNG draw *order within a trial*
+//! matches `mc::reference`, so the two paths sample identical
+//! distributions and differ only in float-summation association.
+//!
+//! Measured speedups are recorded in EXPERIMENTS.md §Perf P5 and tracked
+//! by the `mc_*` benches (BENCH_mc.json).
+
+use crate::arch::pvec;
+use crate::util::rng::Pcg64;
+
+use super::{w_plane_weight, ArchKind, InputDist, McOutput};
+
+/// Run one chunk of `trials` trials on a single-bank parameter vector.
+pub(super) fn run_chunk(
+    kind: ArchKind,
+    params: &[f64; pvec::P],
+    trials: usize,
+    seed: u64,
+    dist: InputDist,
+) -> McOutput {
+    let mut out = McOutput::with_capacity(trials);
+    let mut rng = Pcg64::new(seed);
+    match kind {
+        ArchKind::Qs => qs_chunk(params, trials, &mut rng, dist, &mut out),
+        ArchKind::Qr => qr_chunk(params, trials, &mut rng, dist, &mut out),
+        ArchKind::Cm => cm_chunk(params, trials, &mut rng, dist, &mut out),
+    }
+    out
+}
+
+/// Mid-tread ADC over [0, range] with hoisted step size.
+#[inline]
+fn adc_u(v: f64, delta: f64, levels_m1: f64) -> f64 {
+    (v / delta).round().clamp(0.0, levels_m1) * delta
+}
+
+// ---------------------------------------------------------------------
+// QS-Arch chunk (physics of model.py qs_arch; see mc::reference).
+// ---------------------------------------------------------------------
+
+fn qs_chunk(
+    p: &[f64; pvec::P],
+    trials: usize,
+    rng: &mut Pcg64,
+    dist: InputDist,
+    out: &mut McOutput,
+) {
+    let n = p[pvec::IDX_N_ACTIVE] as usize;
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let sigma_d = p[pvec::QS_IDX_SIGMA_D];
+    let sigma_t = p[pvec::QS_IDX_SIGMA_T];
+    let t_rf = p[pvec::QS_IDX_T_RF];
+    let sigma_theta = p[pvec::QS_IDX_SIGMA_THETA];
+    let k_h = p[pvec::QS_IDX_K_H];
+    let correlated = p[pvec::QS_IDX_MODE] >= 0.5;
+    let sigma_eff = (sigma_d * sigma_d + sigma_t * sigma_t).sqrt();
+
+    // plan: every power-of-two and plane weight the trial loop needs
+    let xs = (1u32 << bx) as f64;
+    let inv_xs = 1.0 / xs;
+    let w_half = (1u32 << (bw - 1)) as f64;
+    let wq_scale = 2f64.powi(1 - bw as i32);
+    let levels = 2f64.powf(p[pvec::IDX_B_ADC]);
+    let delta = p[pvec::QS_IDX_V_C] / levels;
+    let levels_m1 = levels - 1.0;
+    let mut pwpx = vec![0.0; (bw * bx) as usize];
+    for i in 1..=bw {
+        let pw = w_plane_weight(bw, i);
+        for j in 1..=bx {
+            pwpx[((i - 1) * bx + (j - 1)) as usize] = pw * 2f64.powi(-(j as i32));
+        }
+    }
+
+    // scratch, reused across all trials of the chunk
+    let mut x = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    let mut xc = vec![0u32; n];
+    let mut wc = vec![0u32; n];
+    let mut xb = vec![0u8; bx as usize * n];
+    let mut wb = vec![0u8; bw as usize * n];
+    let (mut g_cell, mut g_pulse) = if correlated {
+        (vec![0.0; n * bw as usize], vec![0.0; n * bx as usize])
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    for _ in 0..trials {
+        for v in x.iter_mut() {
+            *v = dist.draw_x(rng);
+        }
+        for v in w.iter_mut() {
+            *v = dist.draw_w(rng);
+        }
+        let mut y_ideal = 0.0;
+        let mut y_fx = 0.0;
+        for k in 0..n {
+            y_ideal += x[k] * w[k];
+            let xcode = (x[k] * xs + 0.5).floor().clamp(0.0, xs - 1.0);
+            let wcode = ((w[k] + 1.0) * w_half + 0.5).floor().clamp(0.0, 2.0 * w_half - 1.0);
+            xc[k] = xcode as u32;
+            wc[k] = wcode as u32;
+            y_fx += (xcode * inv_xs) * (wcode * wq_scale - 1.0);
+        }
+
+        // trial-local 0/1 bit-plane rows (plane-major over cells): the
+        // count below becomes a pure u8 AND-reduction over contiguous
+        // rows. NOTE (EXPERIMENTS.md §Perf P4, reverted): a bit-*packed*
+        // AND+popcount formulation measured 3.5x slower than letting
+        // LLVM vectorize these byte rows — the mask-packing pass
+        // defeated the vectorizer.
+        for j in 1..=bx {
+            let shift = bx - j;
+            let row = &mut xb[(j - 1) as usize * n..][..n];
+            for (r, &c) in row.iter_mut().zip(xc.iter()) {
+                *r = ((c >> shift) & 1) as u8;
+            }
+        }
+        for i in 1..=bw {
+            let shift = bw - i;
+            let comp = u32::from(i == 1); // sign plane is complemented
+            let row = &mut wb[(i - 1) as usize * n..][..n];
+            for (r, &c) in row.iter_mut().zip(wc.iter()) {
+                *r = (((c >> shift) & 1) ^ comp) as u8;
+            }
+        }
+
+        if correlated {
+            // spatial mismatch fixed across input cycles, pulse jitter
+            // shared across weight columns (same draw order as reference)
+            for g in g_cell.iter_mut() {
+                *g = rng.normal();
+            }
+            for g in g_pulse.iter_mut() {
+                *g = rng.normal();
+            }
+        }
+
+        let mut y_a = 0.0;
+        let mut y_hat = 0.0;
+        for i in 1..=bw {
+            let wrow = &wb[(i - 1) as usize * n..][..n];
+            for j in 1..=bx {
+                let xrow = &xb[(j - 1) as usize * n..][..n];
+                let pwx = pwpx[((i - 1) * bx + (j - 1)) as usize];
+                let (c, noisy) = if correlated {
+                    let gc = &g_cell[(i - 1) as usize * n..][..n];
+                    let gp = &g_pulse[(j - 1) as usize * n..][..n];
+                    let mut count = 0u32;
+                    let mut noisy = 0.0;
+                    for k in 0..n {
+                        if wrow[k] & xrow[k] == 1 {
+                            count += 1;
+                            noisy += sigma_d * gc[k] + sigma_t * gp[k];
+                        }
+                    }
+                    (count as f64, noisy)
+                } else {
+                    let count: u32 =
+                        wrow.iter().zip(xrow).map(|(a, b)| u32::from(a & b)).sum();
+                    (count as f64, 0.0)
+                };
+                let mut y_bl = if correlated {
+                    c + noisy
+                } else {
+                    c + c.sqrt() * sigma_eff * rng.normal()
+                };
+                y_bl -= t_rf * c;
+                let y_cl = y_bl.clamp(0.0, k_h);
+                let y_a_bl = y_cl + sigma_theta * rng.normal();
+                let y_hat_bl = adc_u(y_a_bl, delta, levels_m1);
+                y_a += pwx * y_a_bl;
+                y_hat += pwx * y_hat_bl;
+            }
+        }
+        out.push(y_ideal, y_fx, y_a, y_hat);
+    }
+}
+
+// ---------------------------------------------------------------------
+// QR-Arch chunk (aggregate (A, B, T) sampling, EXPERIMENTS.md §Perf P2).
+// ---------------------------------------------------------------------
+
+fn qr_chunk(
+    p: &[f64; pvec::P],
+    trials: usize,
+    rng: &mut Pcg64,
+    dist: InputDist,
+    out: &mut McOutput,
+) {
+    let n = p[pvec::IDX_N_ACTIVE] as usize;
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let sigma_c = p[pvec::QR_IDX_SIGMA_C];
+    let inj_a = p[pvec::QR_IDX_INJ_A];
+    let inj_b = p[pvec::QR_IDX_INJ_B];
+    let sigma_theta = p[pvec::QR_IDX_SIGMA_THETA];
+    let v_lo = p[pvec::QR_IDX_V_LO];
+
+    let xs = (1u32 << bx) as f64;
+    let inv_xs = 1.0 / xs;
+    let w_half = (1u32 << (bw - 1)) as f64;
+    let wq_scale = 2f64.powi(1 - bw as i32);
+    let levels = 2f64.powf(p[pvec::IDX_B_ADC]);
+    let delta = p[pvec::QR_IDX_V_C] / levels;
+    let levels_m1 = levels - 1.0;
+    let nf = n as f64;
+    let sqrt_n = nf.sqrt();
+    let th2_base = sigma_theta * sigma_theta;
+    // nf * pw hoisted per plane (exact: nf integer-valued, pw = ±2^k)
+    let pw_nf: Vec<f64> = (1..=bw).map(|i| nf * w_plane_weight(bw, i)).collect();
+
+    let mut x = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    let mut xq = vec![0.0; n];
+    let mut wc = vec![0u32; n];
+
+    for _ in 0..trials {
+        for v in x.iter_mut() {
+            *v = dist.draw_x(rng);
+        }
+        for v in w.iter_mut() {
+            *v = dist.draw_w(rng);
+        }
+        let mut y_ideal = 0.0;
+        let mut y_fx = 0.0;
+        for k in 0..n {
+            y_ideal += x[k] * w[k];
+            let xcode = (x[k] * xs + 0.5).floor().clamp(0.0, xs - 1.0);
+            let wcode = ((w[k] + 1.0) * w_half + 0.5).floor().clamp(0.0, 2.0 * w_half - 1.0);
+            xq[k] = xcode * inv_xs;
+            wc[k] = wcode as u32;
+            y_fx += xq[k] * (wcode * wq_scale - 1.0);
+        }
+
+        let mut y_a = 0.0;
+        let mut y_hat = 0.0;
+        for i in 1..=bw {
+            let shift = bw - i;
+            let comp = u32::from(i == 1);
+            // masked per-row sums in 4 independent lanes so the f64
+            // reduction vectorizes (association differs from reference
+            // by design; ensemble-equivalence is pinned in tests)
+            let mut sb = [0.0f64; 4];
+            let mut sb2 = [0.0f64; 4];
+            let whole = n - n % 4;
+            for k in (0..whole).step_by(4) {
+                for l in 0..4 {
+                    let m = f64::from(((wc[k + l] >> shift) & 1) ^ comp);
+                    let v = m * xq[k + l];
+                    let b = v + inj_a - inj_b * v;
+                    sb[l] += b;
+                    sb2[l] += b * b;
+                }
+            }
+            for k in whole..n {
+                let m = f64::from(((wc[k] >> shift) & 1) ^ comp);
+                let v = m * xq[k];
+                let b = v + inj_a - inj_b * v;
+                sb[0] += b;
+                sb2[0] += b * b;
+            }
+            let sum_b = (sb[0] + sb[1]) + (sb[2] + sb[3]);
+            let sum_b2 = (sb2[0] + sb2[1]) + (sb2[2] + sb2[3]);
+
+            let big_b = sigma_c * sqrt_n * rng.normal();
+            let resid_var = (sum_b2 - sum_b * sum_b / nf).max(0.0);
+            let big_a = (sum_b / nf) * big_b + sigma_c * resid_var.sqrt() * rng.normal();
+            let th_var = th2_base * (nf + 2.0 * big_b + nf * sigma_c * sigma_c).max(0.0);
+            let big_t = th_var.sqrt() * rng.normal();
+            let v_row = (sum_b + big_a + big_t) / (nf + big_b).max(1e-6);
+            let v_row_hat = v_lo + adc_u(v_row - v_lo, delta, levels_m1);
+            y_a += pw_nf[(i - 1) as usize] * v_row;
+            y_hat += pw_nf[(i - 1) as usize] * v_row_hat;
+        }
+        out.push(y_ideal, y_fx, y_a, y_hat);
+    }
+}
+
+// ---------------------------------------------------------------------
+// CM chunk (per-code magnitude/mismatch table, EXPERIMENTS.md §Perf P3).
+// ---------------------------------------------------------------------
+
+fn cm_chunk(
+    p: &[f64; pvec::P],
+    trials: usize,
+    rng: &mut Pcg64,
+    dist: InputDist,
+    out: &mut McOutput,
+) {
+    let n = p[pvec::IDX_N_ACTIVE] as usize;
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let sigma_d = p[pvec::CM_IDX_SIGMA_D];
+    let w_h = p[pvec::CM_IDX_W_H];
+    let sigma_c = p[pvec::CM_IDX_SIGMA_C];
+    let inj_a = p[pvec::CM_IDX_INJ_A];
+    let inj_b = p[pvec::CM_IDX_INJ_B];
+    let sigma_theta = p[pvec::CM_IDX_SIGMA_THETA];
+
+    let xs = (1u32 << bx) as f64;
+    let inv_xs = 1.0 / xs;
+    let half = (1u32 << (bw - 1)) as f64;
+    let inv_half = 1.0 / half;
+    // signed mid-tread ADC over [-v_c, v_c], hoisted
+    let levels = 2f64.powf(p[pvec::IDX_B_ADC]);
+    let delta = 2.0 * p[pvec::CM_IDX_V_C] / levels;
+    let clamp_lo = -levels / 2.0;
+    let clamp_hi = levels / 2.0 - 1.0;
+    let nf = n as f64;
+    let sqrt_n = nf.sqrt();
+    let th2_base = sigma_theta * sigma_theta;
+
+    // per-code plane table: magnitude and aggregated mismatch sigma of
+    // every sign-magnitude code t (<= 2^{B_MAX-1} = 128 entries), so the
+    // per-cell plane loop of the reference becomes two table lookups
+    let codes = 1usize << (bw - 1);
+    let mut mag_lut = vec![0.0; codes];
+    let mut vsq_lut = vec![0.0; codes];
+    for (t, (m, v)) in mag_lut.iter_mut().zip(vsq_lut.iter_mut()).enumerate() {
+        let mut mag = 0.0;
+        let mut var = 0.0;
+        for i in 1..=(bw - 1) {
+            if (t >> (bw - 1 - i)) & 1 == 1 {
+                let pm = 2f64.powi(-(i as i32));
+                mag += pm;
+                var += pm * pm;
+            }
+        }
+        *m = mag;
+        *v = var.sqrt();
+    }
+
+    let mut x = vec![0.0; n];
+    let mut w = vec![0.0; n];
+
+    for _ in 0..trials {
+        for v in x.iter_mut() {
+            *v = dist.draw_x(rng);
+        }
+        for v in w.iter_mut() {
+            *v = dist.draw_w(rng);
+        }
+        let mut y_ideal = 0.0;
+        let mut y_fx = 0.0;
+        let mut sum_b = 0.0;
+        let mut sum_b2 = 0.0;
+        for k in 0..n {
+            y_ideal += x[k] * w[k];
+            let xqk = (x[k] * xs + 0.5).floor().clamp(0.0, xs - 1.0) * inv_xs;
+            let sgn = if w[k] < 0.0 { -1.0 } else { 1.0 };
+            let t = ((w[k].abs() * half + 0.5).floor()).min(half - 1.0) as usize;
+            y_fx += xqk * (sgn * t as f64 * inv_half);
+
+            let w_eff = sgn * (mag_lut[t] + sigma_d * vsq_lut[t] * rng.normal());
+            let w_cl = w_eff.clamp(-w_h, w_h);
+            let u = w_cl * xqk;
+            let b = u + inj_a - inj_b * u.abs();
+            sum_b += b;
+            sum_b2 += b * b;
+        }
+        let big_b = sigma_c * sqrt_n * rng.normal();
+        let resid_var = (sum_b2 - sum_b * sum_b / nf).max(0.0);
+        let big_a = (sum_b / nf) * big_b + sigma_c * resid_var.sqrt() * rng.normal();
+        let th_var = th2_base * (nf + 2.0 * big_b + nf * sigma_c * sigma_c).max(0.0);
+        let big_t = th_var.sqrt() * rng.normal();
+        let v_out = (sum_b + big_a + big_t) / (nf + big_b).max(1e-6);
+        let v_hat = (v_out / delta).round().clamp(clamp_lo, clamp_hi) * delta;
+        out.push(y_ideal, y_fx, nf * v_out, nf * v_hat);
+    }
+}

@@ -9,14 +9,38 @@
 //!    assert ensemble-statistical agreement).
 //! 2. Validation target for the Table III closed forms (E-vs-S curves).
 //! 3. Fallback/base implementation when artifacts are not built.
+//!
+//! Execution is *chunked*: an ensemble of `trials` trials is the
+//! concatenation of [`CHUNK_TRIALS`]-sized chunks, each on its own
+//! deterministic RNG stream ([`chunk_seed`]). Chunks are the unit of
+//! three things at once — the batched kernels in [`kernels`] (reusable
+//! scratch + hoisted per-point plan), intra-point parallelism in the
+//! sweep scheduler (chunks of one point fan out across workers and are
+//! merged in chunk order, so same-build runs stay byte-deterministic),
+//! and the adaptive stopping rule in [`simulate_adaptive`] (the
+//! confidence interval is estimated over per-chunk SNR batch means).
+//! The frozen pre-chunking scalar path survives as [`reference`], the
+//! differential-test oracle for every kernel change.
 
+mod adaptive;
+mod kernels;
 mod measure;
+pub mod reference;
+
+pub use adaptive::{simulate_adaptive, AdaptiveRun, ADAPTIVE_MAX_TRIALS};
 pub use measure::{measure, MeasuredSnr, SnrAccumulator};
 
 use crate::arch::pvec;
 use crate::util::rng::Pcg64;
 
 pub const B_MAX: usize = 8;
+
+/// Trials per chunk: the scheduling, batching and stopping-rule unit.
+/// Large enough that per-chunk setup (plan + scratch allocation)
+/// amortizes to noise, small enough that single-point runs split into
+/// plenty of parallel work items and the adaptive rule gets enough
+/// batch means (2048 default trials = 8 chunks).
+pub const CHUNK_TRIALS: usize = 256;
 
 /// Which architecture a parameter vector drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -103,11 +127,30 @@ impl McOutput {
         self.y_hat.push(yh);
     }
 
+    /// Concatenate `other`'s trials after this ensemble's (chunk merge).
     pub fn extend(&mut self, other: &McOutput) {
         self.y_ideal.extend_from_slice(&other.y_ideal);
         self.y_fx.extend_from_slice(&other.y_fx);
         self.y_a.extend_from_slice(&other.y_a);
         self.y_hat.extend_from_slice(&other.y_hat);
+    }
+
+    /// Per-trial in-place sum with an equal-length ensemble (banked DP
+    /// recombination: partial dot products added digitally).
+    pub fn add_assign(&mut self, other: &McOutput) {
+        debug_assert_eq!(self.len(), other.len());
+        for (acc, v) in self.y_ideal.iter_mut().zip(&other.y_ideal) {
+            *acc += v;
+        }
+        for (acc, v) in self.y_fx.iter_mut().zip(&other.y_fx) {
+            *acc += v;
+        }
+        for (acc, v) in self.y_a.iter_mut().zip(&other.y_a) {
+            *acc += v;
+        }
+        for (acc, v) in self.y_hat.iter_mut().zip(&other.y_hat) {
+            *acc += v;
+        }
     }
 }
 
@@ -119,16 +162,39 @@ fn bank_seed(seed: u64, bank: u64) -> u64 {
     seed.wrapping_add((bank + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
-/// Run `trials` Monte-Carlo trials of the given architecture.
+/// Derive the RNG seed of one chunk's sub-ensemble. Same shape as
+/// [`bank_seed`] with a different odd constant; because both are
+/// wrapping *adds*, the two derivations commute —
+/// `chunk_seed(bank_seed(s, b), c) == bank_seed(chunk_seed(s, c), b)` —
+/// so the banked decomposition invariant (banked ensemble == per-trial
+/// sum of per-bank ensembles at `bank_seed`-derived seeds) holds
+/// chunk-by-chunk and for the whole concatenated ensemble alike.
+pub fn chunk_seed(seed: u64, chunk: u64) -> u64 {
+    seed.wrapping_add((chunk + 1).wrapping_mul(0xA24B_AED4_963E_E407))
+}
+
+/// Number of chunks an ensemble of `trials` splits into (0 for 0).
+pub fn n_chunks(trials: usize) -> usize {
+    trials.div_ceil(CHUNK_TRIALS)
+}
+
+/// Run one chunk of `trials` trials at an already chunk-derived seed.
+///
+/// This is the scheduler's work item: `simulate(kind, p, T, s, d)` is
+/// bit-identical to concatenating
+/// `simulate_chunk(kind, p, min(CHUNK_TRIALS, T - c*CHUNK_TRIALS),
+/// chunk_seed(s, c), d)` over `c in 0..n_chunks(T)` in chunk order,
+/// which is exactly how `coordinator::run_sweep` fans a single point
+/// out across workers.
 ///
 /// A parameter vector with `pvec::IDX_BANKS >= 2` describes a banked DP
 /// (Sec. VI): the arch-specific slots are *per-bank* (slot 0 holds the
-/// per-bank row count), and the banked ensemble is the per-trial sum of
-/// `banks` independent per-bank ensembles — partial DPs digitized per
-/// bank and recombined digitally, exactly the `arch::Banked` closed
-/// form's decomposition. Slot values 0.0 and 1.0 both mean single-bank
-/// (0.0 is the legacy encoding that keeps existing cache keys).
-pub fn simulate(
+/// per-bank row count), and the banked chunk is the per-trial sum of
+/// `banks` independent per-bank chunks — partial DPs digitized per bank
+/// and recombined digitally, exactly the `arch::Banked` closed form's
+/// decomposition. Slot values 0.0 and 1.0 both mean single-bank (0.0 is
+/// the legacy encoding that keeps existing cache keys).
+pub fn simulate_chunk(
     kind: ArchKind,
     params: &[f64; pvec::P],
     trials: usize,
@@ -139,49 +205,40 @@ pub fn simulate(
     if banks >= 2 {
         let mut bank_params = *params;
         bank_params[pvec::IDX_BANKS] = 0.0;
-        let mut out = simulate(kind, &bank_params, trials, bank_seed(seed, 0), dist);
+        let mut out = kernels::run_chunk(kind, &bank_params, trials, bank_seed(seed, 0), dist);
         for b in 1..banks {
-            let sub = simulate(kind, &bank_params, trials, bank_seed(seed, b as u64), dist);
-            for (acc, v) in out.y_ideal.iter_mut().zip(&sub.y_ideal) {
-                *acc += v;
-            }
-            for (acc, v) in out.y_fx.iter_mut().zip(&sub.y_fx) {
-                *acc += v;
-            }
-            for (acc, v) in out.y_a.iter_mut().zip(&sub.y_a) {
-                *acc += v;
-            }
-            for (acc, v) in out.y_hat.iter_mut().zip(&sub.y_hat) {
-                *acc += v;
-            }
+            let sub =
+                kernels::run_chunk(kind, &bank_params, trials, bank_seed(seed, b as u64), dist);
+            out.add_assign(&sub);
         }
         return out;
     }
+    kernels::run_chunk(kind, params, trials, seed, dist)
+}
+
+/// Run `trials` Monte-Carlo trials of the given architecture: the
+/// in-order concatenation of all chunks (see [`simulate_chunk`]).
+pub fn simulate(
+    kind: ArchKind,
+    params: &[f64; pvec::P],
+    trials: usize,
+    seed: u64,
+    dist: InputDist,
+) -> McOutput {
     let mut out = McOutput::with_capacity(trials);
-    let mut rng = Pcg64::new(seed);
-    let n = params[pvec::IDX_N_ACTIVE] as usize;
-    let mut x = vec![0.0; n];
-    let mut w = vec![0.0; n];
-    for _ in 0..trials {
-        for v in x.iter_mut() {
-            *v = dist.draw_x(&mut rng);
-        }
-        for v in w.iter_mut() {
-            *v = dist.draw_w(&mut rng);
-        }
-        let r = match kind {
-            ArchKind::Qs => qs_trial(params, &x, &w, &mut rng),
-            ArchKind::Qr => qr_trial(params, &x, &w, &mut rng),
-            ArchKind::Cm => cm_trial(params, &x, &w, &mut rng),
-        };
-        out.push(r.0, r.1, r.2, r.3);
+    for c in 0..n_chunks(trials) {
+        let done = c * CHUNK_TRIALS;
+        let t = CHUNK_TRIALS.min(trials - done);
+        let sub = simulate_chunk(kind, params, t, chunk_seed(seed, c as u64), dist);
+        out.extend(&sub);
     }
     out
 }
 
 // ---------------------------------------------------------------------
 // Shared bit-slicing (mirrors model.py unsigned_bits / signed_bits /
-// signed_mag_bits, round-to-nearest).
+// signed_mag_bits, round-to-nearest). The batched kernels inline these
+// per-plane; `mc::reference` and the PJRT cross-checks call them as-is.
 // ---------------------------------------------------------------------
 
 /// Unsigned activation code t in [0, 2^bx) and value t/2^bx.
@@ -248,222 +305,6 @@ fn adc_signed(v: f64, range: f64, b: f64) -> f64 {
     let levels = 2f64.powf(b);
     let delta = 2.0 * range / levels;
     (v / delta).round().clamp(-levels / 2.0, levels / 2.0 - 1.0) * delta
-}
-
-// ---------------------------------------------------------------------
-// QS-Arch trial (model.py qs_arch).
-// ---------------------------------------------------------------------
-
-fn qs_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
-    let n = x.len();
-    let bx = p[pvec::IDX_BX] as u32;
-    let bw = p[pvec::IDX_BW] as u32;
-    let b_adc = p[pvec::IDX_B_ADC];
-    let sigma_d = p[pvec::QS_IDX_SIGMA_D];
-    let sigma_t = p[pvec::QS_IDX_SIGMA_T];
-    let t_rf = p[pvec::QS_IDX_T_RF];
-    let sigma_theta = p[pvec::QS_IDX_SIGMA_THETA];
-    let k_h = p[pvec::QS_IDX_K_H];
-    let v_c = p[pvec::QS_IDX_V_C];
-    let correlated = p[pvec::QS_IDX_MODE] >= 0.5;
-
-    let mut y_ideal = 0.0;
-    let mut y_fx = 0.0;
-    let mut xc = vec![0u32; n];
-    let mut wc = vec![0u32; n];
-    for k in 0..n {
-        y_ideal += x[k] * w[k];
-        xc[k] = x_code(x[k], bx);
-        wc[k] = w_code(w[k], bw);
-        let xq = xc[k] as f64 / (1u32 << bx) as f64;
-        let wq = wc[k] as f64 * 2f64.powi(1 - bw as i32) - 1.0;
-        y_fx += xq * wq;
-    }
-
-    // Optional correlated per-cell noise (mode 1): spatial mismatch fixed
-    // across input cycles, pulse jitter shared across weight columns.
-    let g_cell: Vec<f64> = if correlated {
-        (0..n * bw as usize).map(|_| rng.normal()).collect()
-    } else {
-        Vec::new()
-    };
-    let g_pulse: Vec<f64> = if correlated {
-        (0..n * bx as usize).map(|_| rng.normal()).collect()
-    } else {
-        Vec::new()
-    };
-
-    // NOTE (EXPERIMENTS.md §Perf P4, reverted): a bit-packed AND+popcount
-    // formulation of the plane counts measured 3.5x *slower* than this
-    // plain per-cell loop — LLVM auto-vectorizes the shift/mask reduction
-    // over k, and the branchy mask-building pass defeated it.
-    let sigma_eff = (sigma_d * sigma_d + sigma_t * sigma_t).sqrt();
-    let mut y_a = 0.0;
-    let mut y_hat = 0.0;
-    for i in 1..=bw {
-        let pw = w_plane_weight(bw, i);
-        for j in 1..=bx {
-            let px = 2f64.powi(-(j as i32));
-            let mut count = 0u32;
-            let mut noisy = 0.0;
-            if correlated {
-                for k in 0..n {
-                    if w_bit(wc[k], bw, i) & x_bit(xc[k], bx, j) == 1 {
-                        count += 1;
-                        noisy += sigma_d * g_cell[(i as usize - 1) * n + k]
-                            + sigma_t * g_pulse[(j as usize - 1) * n + k];
-                    }
-                }
-            } else {
-                for k in 0..n {
-                    count += w_bit(wc[k], bw, i) & x_bit(xc[k], bx, j);
-                }
-            }
-            let c = count as f64;
-            let mut y_bl = if correlated {
-                c + noisy
-            } else {
-                c + c.sqrt() * sigma_eff * rng.normal()
-            };
-            y_bl -= t_rf * c;
-            let y_cl = y_bl.clamp(0.0, k_h);
-            let y_a_bl = y_cl + sigma_theta * rng.normal();
-            let y_hat_bl = adc_unsigned(y_a_bl, v_c, b_adc);
-            y_a += pw * px * y_a_bl;
-            y_hat += pw * px * y_hat_bl;
-        }
-    }
-    (y_ideal, y_fx, y_a, y_hat)
-}
-
-// ---------------------------------------------------------------------
-// QR-Arch trial (model.py qr_arch).
-// ---------------------------------------------------------------------
-
-fn qr_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
-    let n = x.len();
-    let bx = p[pvec::IDX_BX] as u32;
-    let bw = p[pvec::IDX_BW] as u32;
-    let b_adc = p[pvec::IDX_B_ADC];
-    let sigma_c = p[pvec::QR_IDX_SIGMA_C];
-    let inj_a = p[pvec::QR_IDX_INJ_A];
-    let inj_b = p[pvec::QR_IDX_INJ_B];
-    let sigma_theta = p[pvec::QR_IDX_SIGMA_THETA];
-    let v_c = p[pvec::QR_IDX_V_C];
-    let v_lo = p[pvec::QR_IDX_V_LO];
-
-    let mut y_ideal = 0.0;
-    let mut y_fx = 0.0;
-    let mut xq = vec![0.0; n];
-    let mut wc = vec![0u32; n];
-    for k in 0..n {
-        y_ideal += x[k] * w[k];
-        xq[k] = x_code(x[k], bx) as f64 / (1u32 << bx) as f64;
-        wc[k] = w_code(w[k], bw);
-        let wq = wc[k] as f64 * 2f64.powi(1 - bw as i32) - 1.0;
-        y_fx += xq[k] * wq;
-    }
-
-    // Aggregate noise sampling (EXPERIMENTS.md §Perf P2): with
-    // b_k = v_k + inj_k deterministic given the data, the charge-share
-    // numerator/denominator pair
-    //   num = sum (1 + c_k)(b_k + th_k),   den = sum (1 + c_k)
-    // is jointly Gaussian given the data:
-    //   B = sum c_k            ~ N(0, sigma_c^2 n)
-    //   A = sum c_k b_k        ~ N(0, sigma_c^2 sum b^2), Cov = sigma_c^2 sum b
-    //   T = sum (1 + c_k) th_k ~ N(0, sigma_th^2 (n + 2B + n sigma_c^2)) | B
-    // so 3 draws per row replace ~2N per-cell draws, distributionally
-    // exact up to the O(sigma_th^2 sigma_c^2) concentration of sum c^2.
-    let mut y_a = 0.0;
-    let mut y_hat = 0.0;
-    let nf = n as f64;
-    for i in 1..=bw {
-        let pw = w_plane_weight(bw, i);
-        let mut sum_b = 0.0;
-        let mut sum_b2 = 0.0;
-        for (k, &xqk) in xq.iter().enumerate() {
-            let v = if w_bit(wc[k], bw, i) == 1 { xqk } else { 0.0 };
-            let b = v + inj_a - inj_b * v;
-            sum_b += b;
-            sum_b2 += b * b;
-        }
-        let big_b = sigma_c * nf.sqrt() * rng.normal();
-        let resid_var = (sum_b2 - sum_b * sum_b / nf).max(0.0);
-        let big_a = (sum_b / nf) * big_b + sigma_c * resid_var.sqrt() * rng.normal();
-        let th_var = sigma_theta * sigma_theta
-            * (nf + 2.0 * big_b + nf * sigma_c * sigma_c).max(0.0);
-        let big_t = th_var.sqrt() * rng.normal();
-        let v_row = (sum_b + big_a + big_t) / (nf + big_b).max(1e-6);
-        let v_row_hat = v_lo + adc_unsigned(v_row - v_lo, v_c, b_adc);
-        y_a += nf * pw * v_row;
-        y_hat += nf * pw * v_row_hat;
-    }
-    (y_ideal, y_fx, y_a, y_hat)
-}
-
-// ---------------------------------------------------------------------
-// CM trial (model.py cm_arch; sign-magnitude weights).
-// ---------------------------------------------------------------------
-
-fn cm_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
-    let n = x.len();
-    let bx = p[pvec::IDX_BX] as u32;
-    let bw = p[pvec::IDX_BW] as u32;
-    let b_adc = p[pvec::IDX_B_ADC];
-    let sigma_d = p[pvec::CM_IDX_SIGMA_D];
-    let w_h = p[pvec::CM_IDX_W_H];
-    let sigma_c = p[pvec::CM_IDX_SIGMA_C];
-    let inj_a = p[pvec::CM_IDX_INJ_A];
-    let inj_b = p[pvec::CM_IDX_INJ_B];
-    let sigma_theta = p[pvec::CM_IDX_SIGMA_THETA];
-    let v_c = p[pvec::CM_IDX_V_C];
-
-    let half = (1u32 << (bw - 1)) as f64;
-    let mut y_ideal = 0.0;
-    let mut y_fx = 0.0;
-    // Aggregate sampling (EXPERIMENTS.md §Perf P3): the per-plane
-    // mismatch of a column sums to N(0, sigma_d^2 sum_i pm_i^2 mb_i) —
-    // one draw per column; clipping is applied after, exactly as in the
-    // per-plane formulation. The QR aggregation stage uses the same
-    // correlated (A, B, T) trick as qr_trial.
-    let nf = n as f64;
-    let mut sum_b = 0.0;
-    let mut sum_b2 = 0.0;
-    for k in 0..n {
-        y_ideal += x[k] * w[k];
-        let xqk = x_code(x[k], bx) as f64 / (1u32 << bx) as f64;
-        // sign-magnitude code: t in [0, 2^{bw-1})
-        let sgn = if w[k] < 0.0 { -1.0 } else { 1.0 };
-        let t = ((w[k].abs() * half + 0.5).floor()).min(half - 1.0) as u32;
-        let wq = sgn * t as f64 / half;
-        y_fx += xqk * wq;
-
-        // analog multi-bit weight: plane mismatch aggregated per column
-        let mut mag = 0.0;
-        let mut var = 0.0;
-        for i in 1..=(bw - 1) {
-            if (t >> (bw - 1 - i)) & 1 == 1 {
-                let pm = 2f64.powi(-(i as i32));
-                mag += pm;
-                var += pm * pm;
-            }
-        }
-        let w_eff = sgn * (mag + sigma_d * var.sqrt() * rng.normal());
-        let w_cl = w_eff.clamp(-w_h, w_h);
-        let u = w_cl * xqk;
-        let b = u + inj_a - inj_b * u.abs();
-        sum_b += b;
-        sum_b2 += b * b;
-    }
-    let big_b = sigma_c * nf.sqrt() * rng.normal();
-    let resid_var = (sum_b2 - sum_b * sum_b / nf).max(0.0);
-    let big_a = (sum_b / nf) * big_b + sigma_c * resid_var.sqrt() * rng.normal();
-    let th_var = sigma_theta * sigma_theta
-        * (nf + 2.0 * big_b + nf * sigma_c * sigma_c).max(0.0);
-    let big_t = th_var.sqrt() * rng.normal();
-    let v_out = (sum_b + big_a + big_t) / (nf + big_b).max(1e-6);
-    let v_hat = adc_signed(v_out, v_c, b_adc);
-    (y_ideal, y_fx, n as f64 * v_out, n as f64 * v_hat)
 }
 
 #[cfg(test)]
@@ -541,9 +382,47 @@ mod tests {
     }
 
     #[test]
+    fn simulate_is_chunk_concatenation() {
+        // the ensemble is bit-identical to hand-running every chunk at
+        // its chunk_seed-derived stream and concatenating in order —
+        // the invariant the intra-point scheduler relies on
+        let mut p = base_params(48, 5, 5);
+        p[pvec::QS_IDX_SIGMA_D] = 0.1;
+        p[pvec::QS_IDX_K_H] = 40.0;
+        p[pvec::QS_IDX_V_C] = 40.0;
+        let trials = 2 * CHUNK_TRIALS + 100;
+        let whole = simulate(ArchKind::Qs, &p, trials, 11, InputDist::Uniform);
+        assert_eq!(whole.len(), trials);
+        let mut cat = McOutput::with_capacity(trials);
+        for c in 0..n_chunks(trials) {
+            let t = CHUNK_TRIALS.min(trials - c * CHUNK_TRIALS);
+            let sub =
+                simulate_chunk(ArchKind::Qs, &p, t, chunk_seed(11, c as u64), InputDist::Uniform);
+            cat.extend(&sub);
+        }
+        assert_eq!(whole.y_ideal, cat.y_ideal);
+        assert_eq!(whole.y_fx, cat.y_fx);
+        assert_eq!(whole.y_a, cat.y_a);
+        assert_eq!(whole.y_hat, cat.y_hat);
+    }
+
+    #[test]
+    fn chunk_streams_are_disjoint() {
+        let mut p = base_params(32, 4, 4);
+        p[pvec::QS_IDX_SIGMA_D] = 0.1;
+        p[pvec::QS_IDX_K_H] = 40.0;
+        p[pvec::QS_IDX_V_C] = 40.0;
+        let a = simulate_chunk(ArchKind::Qs, &p, 8, chunk_seed(7, 0), InputDist::Uniform);
+        let b = simulate_chunk(ArchKind::Qs, &p, 8, chunk_seed(7, 1), InputDist::Uniform);
+        assert_ne!(a.y_hat, b.y_hat, "chunks draw independent sub-ensembles");
+    }
+
+    #[test]
     fn banked_params_sum_independent_bank_ensembles() {
         // banks = 4 with per-bank params must equal the hand-built sum
         // of 4 independent per-bank simulations on the derived seeds.
+        // (chunk_seed and bank_seed are both wrapping adds, so the
+        // decompositions commute and this holds chunk-by-chunk too.)
         let mut p = base_params(64, 6, 6);
         p[pvec::QS_IDX_SIGMA_D] = 0.1;
         p[pvec::QS_IDX_K_H] = 50.0;
@@ -582,6 +461,21 @@ mod tests {
         // stand-alone point whose ensemble stays uncorrelated
         let raw = simulate(ArchKind::Qs, &p, 8, 7, InputDist::Uniform);
         assert_ne!(a.y_hat, raw.y_hat, "bank 0 is mixed off the user seed");
+    }
+
+    #[test]
+    fn add_assign_sums_all_four_streams() {
+        let mut a = McOutput::default();
+        a.push(1.0, 2.0, 3.0, 4.0);
+        a.push(10.0, 20.0, 30.0, 40.0);
+        let mut b = McOutput::default();
+        b.push(0.5, 0.25, 0.125, 0.0625);
+        b.push(-1.0, -2.0, -3.0, -4.0);
+        a.add_assign(&b);
+        assert_eq!(a.y_ideal, vec![1.5, 9.0]);
+        assert_eq!(a.y_fx, vec![2.25, 18.0]);
+        assert_eq!(a.y_a, vec![3.125, 27.0]);
+        assert_eq!(a.y_hat, vec![4.0625, 36.0]);
     }
 
     #[test]

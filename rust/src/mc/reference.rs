@@ -1,0 +1,266 @@
+//! Frozen scalar Monte-Carlo path: the pre-batching per-trial
+//! implementation, kept verbatim as the differential-test oracle for the
+//! chunked kernels in `mc::kernels` (see `rust/tests/mc_kernels.rs` and
+//! EXPERIMENTS.md §Perf P5).
+//!
+//! This module is *not* a fallback — the production entry point is
+//! [`crate::mc::simulate`]. It exists so every kernel optimization can be
+//! pinned against an independent implementation of the same physics:
+//! the batched kernels must reproduce this module's ensemble statistics
+//! (same distributions, different RNG consumption order), and any drift
+//! is a bug in one of the two.
+//!
+//! Do not optimize this file. Its value is that it stays simple and
+//! obviously equal to `python/compile/model.py`.
+
+use crate::arch::pvec;
+use crate::util::rng::Pcg64;
+
+use super::{
+    adc_signed, adc_unsigned, bank_seed, w_bit, w_code, w_plane_weight, x_bit, x_code, ArchKind,
+    InputDist, McOutput,
+};
+
+/// Run `trials` strictly sequential scalar trials (pre-chunking
+/// semantics: one RNG stream for the whole ensemble, per-bank streams
+/// derived with [`bank_seed`] directly off the user seed).
+pub fn simulate(
+    kind: ArchKind,
+    params: &[f64; pvec::P],
+    trials: usize,
+    seed: u64,
+    dist: InputDist,
+) -> McOutput {
+    let banks = params[pvec::IDX_BANKS] as usize;
+    if banks >= 2 {
+        let mut bank_params = *params;
+        bank_params[pvec::IDX_BANKS] = 0.0;
+        let mut out = simulate(kind, &bank_params, trials, bank_seed(seed, 0), dist);
+        for b in 1..banks {
+            let sub = simulate(kind, &bank_params, trials, bank_seed(seed, b as u64), dist);
+            out.add_assign(&sub);
+        }
+        return out;
+    }
+    let mut out = McOutput::with_capacity(trials);
+    let mut rng = Pcg64::new(seed);
+    let n = params[pvec::IDX_N_ACTIVE] as usize;
+    let mut x = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    for _ in 0..trials {
+        for v in x.iter_mut() {
+            *v = dist.draw_x(&mut rng);
+        }
+        for v in w.iter_mut() {
+            *v = dist.draw_w(&mut rng);
+        }
+        let r = match kind {
+            ArchKind::Qs => qs_trial(params, &x, &w, &mut rng),
+            ArchKind::Qr => qr_trial(params, &x, &w, &mut rng),
+            ArchKind::Cm => cm_trial(params, &x, &w, &mut rng),
+        };
+        out.push(r.0, r.1, r.2, r.3);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// QS-Arch trial (model.py qs_arch).
+// ---------------------------------------------------------------------
+
+fn qs_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
+    let n = x.len();
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let b_adc = p[pvec::IDX_B_ADC];
+    let sigma_d = p[pvec::QS_IDX_SIGMA_D];
+    let sigma_t = p[pvec::QS_IDX_SIGMA_T];
+    let t_rf = p[pvec::QS_IDX_T_RF];
+    let sigma_theta = p[pvec::QS_IDX_SIGMA_THETA];
+    let k_h = p[pvec::QS_IDX_K_H];
+    let v_c = p[pvec::QS_IDX_V_C];
+    let correlated = p[pvec::QS_IDX_MODE] >= 0.5;
+
+    let mut y_ideal = 0.0;
+    let mut y_fx = 0.0;
+    let mut xc = vec![0u32; n];
+    let mut wc = vec![0u32; n];
+    for k in 0..n {
+        y_ideal += x[k] * w[k];
+        xc[k] = x_code(x[k], bx);
+        wc[k] = w_code(w[k], bw);
+        let xq = xc[k] as f64 / (1u32 << bx) as f64;
+        let wq = wc[k] as f64 * 2f64.powi(1 - bw as i32) - 1.0;
+        y_fx += xq * wq;
+    }
+
+    // Optional correlated per-cell noise (mode 1): spatial mismatch fixed
+    // across input cycles, pulse jitter shared across weight columns.
+    let g_cell: Vec<f64> = if correlated {
+        (0..n * bw as usize).map(|_| rng.normal()).collect()
+    } else {
+        Vec::new()
+    };
+    let g_pulse: Vec<f64> = if correlated {
+        (0..n * bx as usize).map(|_| rng.normal()).collect()
+    } else {
+        Vec::new()
+    };
+
+    let sigma_eff = (sigma_d * sigma_d + sigma_t * sigma_t).sqrt();
+    let mut y_a = 0.0;
+    let mut y_hat = 0.0;
+    for i in 1..=bw {
+        let pw = w_plane_weight(bw, i);
+        for j in 1..=bx {
+            let px = 2f64.powi(-(j as i32));
+            let mut count = 0u32;
+            let mut noisy = 0.0;
+            if correlated {
+                for k in 0..n {
+                    if w_bit(wc[k], bw, i) & x_bit(xc[k], bx, j) == 1 {
+                        count += 1;
+                        noisy += sigma_d * g_cell[(i as usize - 1) * n + k]
+                            + sigma_t * g_pulse[(j as usize - 1) * n + k];
+                    }
+                }
+            } else {
+                for k in 0..n {
+                    count += w_bit(wc[k], bw, i) & x_bit(xc[k], bx, j);
+                }
+            }
+            let c = count as f64;
+            let mut y_bl = if correlated {
+                c + noisy
+            } else {
+                c + c.sqrt() * sigma_eff * rng.normal()
+            };
+            y_bl -= t_rf * c;
+            let y_cl = y_bl.clamp(0.0, k_h);
+            let y_a_bl = y_cl + sigma_theta * rng.normal();
+            let y_hat_bl = adc_unsigned(y_a_bl, v_c, b_adc);
+            y_a += pw * px * y_a_bl;
+            y_hat += pw * px * y_hat_bl;
+        }
+    }
+    (y_ideal, y_fx, y_a, y_hat)
+}
+
+// ---------------------------------------------------------------------
+// QR-Arch trial (model.py qr_arch).
+// ---------------------------------------------------------------------
+
+fn qr_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
+    let n = x.len();
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let b_adc = p[pvec::IDX_B_ADC];
+    let sigma_c = p[pvec::QR_IDX_SIGMA_C];
+    let inj_a = p[pvec::QR_IDX_INJ_A];
+    let inj_b = p[pvec::QR_IDX_INJ_B];
+    let sigma_theta = p[pvec::QR_IDX_SIGMA_THETA];
+    let v_c = p[pvec::QR_IDX_V_C];
+    let v_lo = p[pvec::QR_IDX_V_LO];
+
+    let mut y_ideal = 0.0;
+    let mut y_fx = 0.0;
+    let mut xq = vec![0.0; n];
+    let mut wc = vec![0u32; n];
+    for k in 0..n {
+        y_ideal += x[k] * w[k];
+        xq[k] = x_code(x[k], bx) as f64 / (1u32 << bx) as f64;
+        wc[k] = w_code(w[k], bw);
+        let wq = wc[k] as f64 * 2f64.powi(1 - bw as i32) - 1.0;
+        y_fx += xq[k] * wq;
+    }
+
+    // Aggregate noise sampling (EXPERIMENTS.md §Perf P2): 3 draws per
+    // row replace ~2N per-cell draws via the jointly-Gaussian (A, B, T)
+    // decomposition of the charge-share numerator/denominator.
+    let mut y_a = 0.0;
+    let mut y_hat = 0.0;
+    let nf = n as f64;
+    for i in 1..=bw {
+        let pw = w_plane_weight(bw, i);
+        let mut sum_b = 0.0;
+        let mut sum_b2 = 0.0;
+        for (k, &xqk) in xq.iter().enumerate() {
+            let v = if w_bit(wc[k], bw, i) == 1 { xqk } else { 0.0 };
+            let b = v + inj_a - inj_b * v;
+            sum_b += b;
+            sum_b2 += b * b;
+        }
+        let big_b = sigma_c * nf.sqrt() * rng.normal();
+        let resid_var = (sum_b2 - sum_b * sum_b / nf).max(0.0);
+        let big_a = (sum_b / nf) * big_b + sigma_c * resid_var.sqrt() * rng.normal();
+        let th_var =
+            sigma_theta * sigma_theta * (nf + 2.0 * big_b + nf * sigma_c * sigma_c).max(0.0);
+        let big_t = th_var.sqrt() * rng.normal();
+        let v_row = (sum_b + big_a + big_t) / (nf + big_b).max(1e-6);
+        let v_row_hat = v_lo + adc_unsigned(v_row - v_lo, v_c, b_adc);
+        y_a += nf * pw * v_row;
+        y_hat += nf * pw * v_row_hat;
+    }
+    (y_ideal, y_fx, y_a, y_hat)
+}
+
+// ---------------------------------------------------------------------
+// CM trial (model.py cm_arch; sign-magnitude weights).
+// ---------------------------------------------------------------------
+
+fn cm_trial(p: &[f64; pvec::P], x: &[f64], w: &[f64], rng: &mut Pcg64) -> (f64, f64, f64, f64) {
+    let n = x.len();
+    let bx = p[pvec::IDX_BX] as u32;
+    let bw = p[pvec::IDX_BW] as u32;
+    let b_adc = p[pvec::IDX_B_ADC];
+    let sigma_d = p[pvec::CM_IDX_SIGMA_D];
+    let w_h = p[pvec::CM_IDX_W_H];
+    let sigma_c = p[pvec::CM_IDX_SIGMA_C];
+    let inj_a = p[pvec::CM_IDX_INJ_A];
+    let inj_b = p[pvec::CM_IDX_INJ_B];
+    let sigma_theta = p[pvec::CM_IDX_SIGMA_THETA];
+    let v_c = p[pvec::CM_IDX_V_C];
+
+    let half = (1u32 << (bw - 1)) as f64;
+    let mut y_ideal = 0.0;
+    let mut y_fx = 0.0;
+    // Aggregate sampling (EXPERIMENTS.md §Perf P3): per-column plane
+    // mismatch in one draw, then the same (A, B, T) trick as qr_trial.
+    let nf = n as f64;
+    let mut sum_b = 0.0;
+    let mut sum_b2 = 0.0;
+    for k in 0..n {
+        y_ideal += x[k] * w[k];
+        let xqk = x_code(x[k], bx) as f64 / (1u32 << bx) as f64;
+        // sign-magnitude code: t in [0, 2^{bw-1})
+        let sgn = if w[k] < 0.0 { -1.0 } else { 1.0 };
+        let t = ((w[k].abs() * half + 0.5).floor()).min(half - 1.0) as u32;
+        let wq = sgn * t as f64 / half;
+        y_fx += xqk * wq;
+
+        // analog multi-bit weight: plane mismatch aggregated per column
+        let mut mag = 0.0;
+        let mut var = 0.0;
+        for i in 1..=(bw - 1) {
+            if (t >> (bw - 1 - i)) & 1 == 1 {
+                let pm = 2f64.powi(-(i as i32));
+                mag += pm;
+                var += pm * pm;
+            }
+        }
+        let w_eff = sgn * (mag + sigma_d * var.sqrt() * rng.normal());
+        let w_cl = w_eff.clamp(-w_h, w_h);
+        let u = w_cl * xqk;
+        let b = u + inj_a - inj_b * u.abs();
+        sum_b += b;
+        sum_b2 += b * b;
+    }
+    let big_b = sigma_c * nf.sqrt() * rng.normal();
+    let resid_var = (sum_b2 - sum_b * sum_b / nf).max(0.0);
+    let big_a = (sum_b / nf) * big_b + sigma_c * resid_var.sqrt() * rng.normal();
+    let th_var = sigma_theta * sigma_theta * (nf + 2.0 * big_b + nf * sigma_c * sigma_c).max(0.0);
+    let big_t = th_var.sqrt() * rng.normal();
+    let v_out = (sum_b + big_a + big_t) / (nf + big_b).max(1e-6);
+    let v_hat = adc_signed(v_out, v_c, b_adc);
+    (y_ideal, y_fx, n as f64 * v_out, n as f64 * v_hat)
+}

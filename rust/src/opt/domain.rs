@@ -457,6 +457,35 @@ impl DesignPoint {
     pub fn delay_ns(&self) -> f64 {
         self.delay_s * 1e9
     }
+
+    /// Monte-Carlo validation job for this design (`pareto --validate`):
+    /// built through `Family::build`, the same constructor `imclim
+    /// sweep` uses, so both commands share engine cache records by
+    /// construction (banked families yield the `arch::Banked` parameter
+    /// vector, which the native simulator runs as a banked ensemble and
+    /// the PJRT backend rejects). `trials` is the ensemble size for
+    /// fixed runs, or the trial *cap* when an adaptive `precision`
+    /// half-width (dB) is requested.
+    pub fn validation_point(
+        &self,
+        w: &SignalStats,
+        x: &SignalStats,
+        trials: usize,
+        seed: u64,
+        precision: Option<f64>,
+    ) -> crate::coordinator::SweepPoint {
+        let arch = self.family.build();
+        let op = self.family.op(self.b_adc);
+        let mut point = crate::coordinator::SweepPoint::new(
+            format!("pareto/{}", self.label()),
+            self.family.arch.kind(),
+            arch.pjrt_params(&op, w, x),
+        )
+        .with_trials(trials)
+        .with_seed(seed);
+        point.precision = precision;
+        point
+    }
 }
 
 #[cfg(test)]

@@ -32,6 +32,12 @@ impl SplitMix64 {
 pub struct Pcg64 {
     state: u128,
     inc: u128,
+    /// Banked second output of the last polar-method pair: Marsaglia's
+    /// transform yields *two* independent N(0,1) samples per accepted
+    /// (u, v) draw, so [`Pcg64::normal`] serves the spare before
+    /// consuming fresh uniforms (halves the RNG + ln/sqrt cost of
+    /// Gaussian-heavy Monte-Carlo kernels).
+    spare_normal: Option<f64>,
 }
 
 const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
@@ -45,6 +51,7 @@ impl Pcg64 {
         let mut rng = Self {
             state: 0,
             inc: (i << 1) | 1,
+            spare_normal: None,
         };
         rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
         rng.state = rng.state.wrapping_add(s);
@@ -96,14 +103,21 @@ impl Pcg64 {
         }
     }
 
-    /// Standard normal via the polar (Marsaglia) method.
+    /// Standard normal via the polar (Marsaglia) method. Each accepted
+    /// (u, v) pair yields two independent samples; the second is banked
+    /// and served by the next call.
     pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
         loop {
             let u = 2.0 * self.uniform() - 1.0;
             let v = 2.0 * self.uniform() - 1.0;
             let s = u * u + v * v;
             if s > 0.0 && s < 1.0 {
-                return u * (-2.0 * s.ln() / s).sqrt();
+                let r = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * r);
+                return u * r;
             }
         }
     }

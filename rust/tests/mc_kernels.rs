@@ -1,0 +1,232 @@
+//! Differential tests pinning the batched chunk kernels (`mc::kernels`)
+//! against the frozen pre-batching scalar path (`mc::reference`), plus
+//! the intra-point scheduler's byte-determinism contract.
+//!
+//! Equality tiers (see the `mc::kernels` module docs):
+//!  * QS and CM preserve the reference's RNG draw order *and* its exact
+//!    float operations (every hoisted scaling is a power of two, so
+//!    multiply-by-reciprocal equals the reference's divide bit-for-bit)
+//!    — one chunk at the same seed is bit-identical to the reference.
+//!  * QR rewrites the masked per-row accumulation into 4 independent
+//!    lanes: same draws, different summation association. It is pinned
+//!    per-trial within FP-association noise and at ensemble level
+//!    within Monte-Carlo tolerance.
+
+use imclim::arch::pvec;
+use imclim::coordinator::{run_sweep, Backend, SweepOptions, SweepPoint};
+use imclim::mc::{self, ArchKind, InputDist};
+
+/// QS operating point with every noise term live (mismatch, pulse
+/// jitter, retention droop, comparator offset, finite clip, real ADC).
+fn qs_params(n: usize, correlated: bool) -> [f64; pvec::P] {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n as f64;
+    p[pvec::IDX_BX] = 6.0;
+    p[pvec::IDX_BW] = 6.0;
+    p[pvec::IDX_B_ADC] = 8.0;
+    p[pvec::QS_IDX_SIGMA_D] = 0.107;
+    p[pvec::QS_IDX_SIGMA_T] = 0.05;
+    p[pvec::QS_IDX_T_RF] = 0.01;
+    p[pvec::QS_IDX_SIGMA_THETA] = 0.2;
+    p[pvec::QS_IDX_K_H] = 60.0;
+    p[pvec::QS_IDX_V_C] = 60.0;
+    p[pvec::QS_IDX_MODE] = if correlated { 1.0 } else { 0.0 };
+    p
+}
+
+fn qr_params(n: usize) -> [f64; pvec::P] {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n as f64;
+    p[pvec::IDX_BX] = 6.0;
+    p[pvec::IDX_BW] = 7.0;
+    p[pvec::IDX_B_ADC] = 8.0;
+    p[pvec::QR_IDX_SIGMA_C] = 0.05;
+    p[pvec::QR_IDX_INJ_A] = 0.01;
+    p[pvec::QR_IDX_INJ_B] = 0.02;
+    p[pvec::QR_IDX_SIGMA_THETA] = 0.003;
+    p[pvec::QR_IDX_V_C] = 1.0;
+    p[pvec::QR_IDX_V_LO] = -0.1;
+    p
+}
+
+fn cm_params(n: usize) -> [f64; pvec::P] {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n as f64;
+    p[pvec::IDX_BX] = 6.0;
+    p[pvec::IDX_BW] = 6.0;
+    p[pvec::IDX_B_ADC] = 8.0;
+    p[pvec::CM_IDX_SIGMA_D] = 0.1;
+    p[pvec::CM_IDX_W_H] = 1.1;
+    p[pvec::CM_IDX_SIGMA_C] = 0.03;
+    p[pvec::CM_IDX_INJ_A] = 0.01;
+    p[pvec::CM_IDX_INJ_B] = 0.02;
+    p[pvec::CM_IDX_SIGMA_THETA] = 0.002;
+    p[pvec::CM_IDX_V_C] = 0.6;
+    p
+}
+
+/// One chunk at one seed is one RNG stream in both paths, so the
+/// kernels' output must match the reference bit-for-bit where the float
+/// operations are preserved (QS, CM).
+fn assert_bitwise_chunk(kind: ArchKind, p: &[f64; pvec::P], what: &str) {
+    let trials = 192; // < CHUNK_TRIALS: a single chunk in both paths
+    for seed in [1u64, 0x5EED, 0xDEAD_BEEF] {
+        for dist in [
+            InputDist::Uniform,
+            InputDist::ClippedGaussian { sx: 0.4, sw: 0.4 },
+        ] {
+            let new = mc::simulate_chunk(kind, p, trials, seed, dist);
+            let old = mc::reference::simulate(kind, p, trials, seed, dist);
+            assert_eq!(new.y_ideal, old.y_ideal, "{what} y_ideal seed={seed}");
+            assert_eq!(new.y_fx, old.y_fx, "{what} y_fx seed={seed}");
+            assert_eq!(new.y_a, old.y_a, "{what} y_a seed={seed}");
+            assert_eq!(new.y_hat, old.y_hat, "{what} y_hat seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn qs_kernel_is_bitwise_identical_to_reference_within_one_chunk() {
+    assert_bitwise_chunk(ArchKind::Qs, &qs_params(48, false), "qs");
+    // odd N exercises the tail of every vectorized row loop
+    assert_bitwise_chunk(ArchKind::Qs, &qs_params(37, false), "qs/odd-n");
+}
+
+#[test]
+fn qs_correlated_kernel_is_bitwise_identical_to_reference() {
+    assert_bitwise_chunk(ArchKind::Qs, &qs_params(48, true), "qs-corr");
+}
+
+#[test]
+fn cm_kernel_is_bitwise_identical_to_reference_within_one_chunk() {
+    assert_bitwise_chunk(ArchKind::Cm, &cm_params(64), "cm");
+    assert_bitwise_chunk(ArchKind::Cm, &cm_params(53), "cm/odd-n");
+}
+
+#[test]
+fn banked_kernel_is_bitwise_identical_to_reference_within_one_chunk() {
+    // the banked decomposition (per-bank sub-ensembles at bank_seed)
+    // is shared code shape but independent arithmetic in the two paths
+    let mut p = qs_params(64, false);
+    p[pvec::IDX_BANKS] = 4.0;
+    assert_bitwise_chunk(ArchKind::Qs, &p, "qs/banks=4");
+}
+
+#[test]
+fn qr_kernel_tracks_reference_within_fp_association_noise() {
+    // QR sums the masked rows in 4 lanes; same draws, different float
+    // association. Per-trial agreement is at rounding level, far below
+    // any physical noise term.
+    let p = qr_params(67); // odd N: remainder lane exercised
+    let trials = 192;
+    for seed in [3u64, 0x5EED] {
+        let new = mc::simulate_chunk(ArchKind::Qr, &p, trials, seed, InputDist::Uniform);
+        let old = mc::reference::simulate(ArchKind::Qr, &p, trials, seed, InputDist::Uniform);
+        assert_eq!(new.y_ideal, old.y_ideal, "same draws, same accumulation");
+        assert_eq!(new.y_fx, old.y_fx);
+        for i in 0..trials {
+            let scale = old.y_a[i].abs() + 1.0;
+            assert!(
+                (new.y_a[i] - old.y_a[i]).abs() <= 1e-9 * scale,
+                "trial {i}: y_a {} vs {}",
+                new.y_a[i],
+                old.y_a[i]
+            );
+            assert!(
+                (new.y_hat[i] - old.y_hat[i]).abs() <= 1e-9 * (old.y_hat[i].abs() + 1.0),
+                "trial {i}: y_hat {} vs {}",
+                new.y_hat[i],
+                old.y_hat[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_ensembles_match_reference_statistics() {
+    // Whole-ensemble cross-check: the production path draws per-chunk
+    // streams (chunk_seed) while the reference draws one stream, so the
+    // two 4096-trial ensembles are independent samples of the same
+    // physics — their measured SNRs agree within MC ensemble error
+    // (~0.4 dB at 4k trials; tolerance doubled for headroom).
+    let cases: [(ArchKind, [f64; pvec::P], &str); 4] = [
+        (ArchKind::Qs, qs_params(128, false), "qs"),
+        (ArchKind::Qs, qs_params(128, true), "qs-corr"),
+        (ArchKind::Qr, qr_params(128), "qr"),
+        (ArchKind::Cm, cm_params(128), "cm"),
+    ];
+    for (kind, p, what) in cases {
+        let trials = 4096;
+        let new = mc::measure(&mc::simulate(kind, &p, trials, 0xD1FF, InputDist::Uniform));
+        let old = mc::measure(&mc::reference::simulate(
+            kind,
+            &p,
+            trials,
+            0xD1FF,
+            InputDist::Uniform,
+        ));
+        for (a, b, name) in [
+            (new.snr_a_total_db, old.snr_a_total_db, "snr_a_total_db"),
+            (new.snr_t_db, old.snr_t_db, "snr_t_db"),
+            (new.sqnr_qiy_db, old.sqnr_qiy_db, "sqnr_qiy_db"),
+        ] {
+            assert!(
+                (a - b).abs() < 0.8,
+                "{what} {name}: {a:.3} dB vs {b:.3} dB"
+            );
+        }
+        let ratio = new.sigma_eta_a2 / old.sigma_eta_a2;
+        assert!((0.8..1.25).contains(&ratio), "{what} sigma_eta_a2 {ratio}");
+    }
+}
+
+#[test]
+fn mixed_grid_is_byte_deterministic_across_worker_counts() {
+    // The scheduler fans multi-chunk points into per-chunk jobs; chunk
+    // re-assembly in chunk order must make every measured field of
+    // every point bit-identical no matter how many workers raced.
+    let mk = || {
+        vec![
+            SweepPoint::new("qs/700", ArchKind::Qs, qs_params(64, false))
+                .with_trials(700)
+                .with_seed(11),
+            SweepPoint::new("qr/1024", ArchKind::Qr, qr_params(96))
+                .with_trials(1024)
+                .with_seed(12),
+            SweepPoint::new("cm/300", ArchKind::Cm, cm_params(48))
+                .with_trials(300)
+                .with_seed(13),
+            SweepPoint::new("qs/128-single-chunk", ArchKind::Qs, qs_params(32, false))
+                .with_trials(128)
+                .with_seed(14),
+        ]
+    };
+    let runs: Vec<_> = [1usize, 2, 8]
+        .iter()
+        .map(|&workers| {
+            run_sweep(
+                mk(),
+                Backend::Native,
+                SweepOptions {
+                    workers,
+                    verbose: false,
+                },
+            )
+        })
+        .collect();
+    for run in &runs[1..] {
+        for (a, b) in runs[0].iter().zip(run) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.measured.trials, b.measured.trials);
+            for (x, y, name) in [
+                (a.measured.sigma_yo2, b.measured.sigma_yo2, "sigma_yo2"),
+                (a.measured.sigma_eta_a2, b.measured.sigma_eta_a2, "sigma_eta_a2"),
+                (a.measured.sigma_qy2, b.measured.sigma_qy2, "sigma_qy2"),
+                (a.measured.snr_a_total_db, b.measured.snr_a_total_db, "snr_a_total_db"),
+                (a.measured.snr_t_db, b.measured.snr_t_db, "snr_t_db"),
+            ] {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}: {name}", a.id);
+            }
+        }
+    }
+}

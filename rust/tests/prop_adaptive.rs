@@ -1,0 +1,241 @@
+//! Adaptive-precision contract tests: cache-key separation from every
+//! fixed-trials record, record-format compatibility, the stopping
+//! rule's accuracy promise, and the CLI's mutual-exclusion guard.
+//!
+//! The load-bearing invariant: `--precision` is a *new* cache-key
+//! dimension. Fixed-trials keys (and record bytes) are byte-identical
+//! to what they were before adaptive runs existed, and an adaptive
+//! record can never be served for a fixed-trials request or vice versa.
+
+use imclim::arch::pvec;
+use imclim::coordinator::SweepPoint;
+use imclim::engine::{cache_key, ResultCache};
+use imclim::mc::{self, ArchKind, InputDist, ADAPTIVE_MAX_TRIALS};
+
+fn qs_params(n: usize) -> [f64; pvec::P] {
+    let mut p = [0.0; pvec::P];
+    p[pvec::IDX_N_ACTIVE] = n as f64;
+    p[pvec::IDX_BX] = 6.0;
+    p[pvec::IDX_BW] = 6.0;
+    p[pvec::IDX_B_ADC] = 8.0;
+    p[pvec::QS_IDX_SIGMA_D] = 0.107;
+    p[pvec::QS_IDX_K_H] = 55.0;
+    p[pvec::QS_IDX_V_C] = 55.0;
+    p
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("imclim-adaptive-{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn adaptive_keys_are_disjoint_from_every_fixed_trials_key() {
+    let p = qs_params(64);
+    let fixed: Vec<String> = [1usize, 64, 256, 2048, 65536, ADAPTIVE_MAX_TRIALS]
+        .iter()
+        .map(|&t| {
+            cache_key(
+                &SweepPoint::new("f", ArchKind::Qs, p).with_trials(t).with_seed(7),
+                "native@test",
+            )
+        })
+        .collect();
+    let adaptive: Vec<String> = [0.25f64, 0.5, 1.0]
+        .iter()
+        .map(|&pr| {
+            cache_key(
+                &SweepPoint::new("a", ArchKind::Qs, p)
+                    .with_trials(ADAPTIVE_MAX_TRIALS)
+                    .with_seed(7)
+                    .with_precision(pr),
+                "native@test",
+            )
+        })
+        .collect();
+    // every adaptive key differs from every fixed key — including the
+    // fixed key at exactly the adaptive cap's trial count
+    for (i, a) in adaptive.iter().enumerate() {
+        for (j, f) in fixed.iter().enumerate() {
+            assert_ne!(a, f, "adaptive[{i}] aliases fixed[{j}]");
+        }
+    }
+    // the precision value itself participates in the key
+    assert_ne!(adaptive[0], adaptive[1]);
+    assert_ne!(adaptive[1], adaptive[2]);
+    // and the key is a pure content address: same content, same key
+    let again = cache_key(
+        &SweepPoint::new("other-label", ArchKind::Qs, p)
+            .with_trials(ADAPTIVE_MAX_TRIALS)
+            .with_seed(7)
+            .with_precision(0.25),
+        "native@test",
+    );
+    assert_eq!(adaptive[0], again, "display id must not participate");
+}
+
+#[test]
+fn fixed_records_carry_no_precision_field_and_adaptive_records_do() {
+    let dir = tmp_dir("records");
+    let cache = ResultCache::new(&dir, "native@test");
+    let p = qs_params(32);
+
+    let fixed = SweepPoint::new("fixed", ArchKind::Qs, p).with_trials(512).with_seed(3);
+    let m_fixed = mc::measure(&mc::simulate(ArchKind::Qs, &p, 512, 3, InputDist::Uniform));
+    cache.store(&fixed, &m_fixed).unwrap();
+    let text = std::fs::read_to_string(dir.join(format!("{}.json", cache.key(&fixed)))).unwrap();
+    assert!(
+        !text.contains("precision_db"),
+        "fixed-trials record bytes must stay exactly as before adaptive \
+         runs existed: {text}"
+    );
+
+    let run = mc::simulate_adaptive(ArchKind::Qs, &p, 1.0, 3, InputDist::Uniform, 1 << 13);
+    let adaptive = SweepPoint::new("adaptive", ArchKind::Qs, p)
+        .with_trials(1 << 13)
+        .with_seed(3)
+        .with_precision(1.0);
+    cache.store(&adaptive, &run.measured).unwrap();
+    let text =
+        std::fs::read_to_string(dir.join(format!("{}.json", cache.key(&adaptive)))).unwrap();
+    assert!(text.contains("precision_db"), "{text}");
+
+    // both round-trip bit-exactly, each from its own record
+    let got_fixed = cache.load(&fixed).unwrap();
+    assert_eq!(got_fixed.snr_t_db.to_bits(), m_fixed.snr_t_db.to_bits());
+    assert_eq!(got_fixed.trials, 512);
+    let got_adaptive = cache.load(&adaptive).unwrap();
+    assert_eq!(
+        got_adaptive.snr_t_db.to_bits(),
+        run.measured.snr_t_db.to_bits()
+    );
+    assert_eq!(got_adaptive.trials, run.measured.trials);
+    assert_ne!(
+        got_adaptive.trials, 512,
+        "adaptive record reports the stopping rule's actual trial count"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn adaptive_run_brackets_the_large_fixed_ensemble_within_its_half_width() {
+    // Accuracy promise: the adaptive estimate agrees with a much larger
+    // fixed ensemble to within the half-width it reports — while
+    // spending fewer trials than the fixed default of 2048. The truth
+    // run shares the seed, so the adaptive ensemble is a prefix of it
+    // and the comparison is deterministic.
+    let p = qs_params(512);
+    let truth = mc::measure(&mc::simulate(
+        ArchKind::Qs,
+        &p,
+        1 << 14,
+        0xACC,
+        InputDist::Uniform,
+    ));
+    let run = mc::simulate_adaptive(
+        ArchKind::Qs,
+        &p,
+        1.0,
+        0xACC,
+        InputDist::Uniform,
+        ADAPTIVE_MAX_TRIALS,
+    );
+    assert!(run.converged, "half_width={}", run.half_width_db);
+    assert!(run.half_width_db <= 1.0);
+    let trials = run.measured.trials as usize;
+    assert_eq!(trials % mc::CHUNK_TRIALS, 0);
+    assert!(
+        trials < 2048,
+        "adaptive spent {trials} trials, fixed default is 2048"
+    );
+    // 0.25 dB slack: the 16k-trial truth has residual MC error of its own
+    for (a, t, name) in [
+        (run.measured.snr_a_total_db, truth.snr_a_total_db, "snr_a"),
+        (run.measured.snr_t_db, truth.snr_t_db, "snr_t"),
+    ] {
+        assert!(
+            (a - t).abs() <= run.half_width_db + 0.25,
+            "{name}: adaptive {a:.3} dB vs truth {t:.3} dB \
+             (half-width {:.3})",
+            run.half_width_db
+        );
+    }
+}
+
+#[test]
+fn cli_rejects_precision_combined_with_trials() {
+    let exe = env!("CARGO_BIN_EXE_imclim");
+    let out = std::process::Command::new(exe)
+        .args([
+            "sweep", "--arch", "qs", "--n", "16", "--b-adc", "6", "--precision", "0.5",
+            "--trials", "100",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "conflicting flags must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("mutually exclusive"), "stderr: {stderr}");
+}
+
+#[test]
+fn cli_rejects_nonpositive_or_garbage_precision() {
+    let exe = env!("CARGO_BIN_EXE_imclim");
+    for (bad, needle) in [("-1", "positive finite"), ("zero-ish", "dB half-width")] {
+        let out = std::process::Command::new(exe)
+            .args(["sweep", "--arch", "qs", "--n", "16", "--b-adc", "6", "--precision", bad])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "--precision {bad} must fail");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "--precision {bad}: {stderr}");
+    }
+}
+
+#[test]
+fn cli_adaptive_sweep_reruns_byte_identically_from_cache() {
+    let exe = env!("CARGO_BIN_EXE_imclim");
+    let dir = tmp_dir("cli-sweep");
+    let args = [
+        "sweep", "--arch", "qs", "--n", "16,24", "--b-adc", "5,6", "--precision", "2.0",
+        "--workers", "2",
+    ];
+    let mut csvs = Vec::new();
+    for pass in 0..2 {
+        let out = std::process::Command::new(exe)
+            .args(args)
+            .arg("--out-dir")
+            .arg(&dir)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "pass {pass}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        csvs.push(std::fs::read(dir.join("sweep.csv")).unwrap());
+    }
+    // adaptive records landed in the cache and the warm rerun (which
+    // served them) reproduced the cold CSV byte-for-byte
+    assert!(!csvs[0].is_empty());
+    assert_eq!(csvs[0], csvs[1], "warm adaptive rerun is byte-identical");
+    let records = std::fs::read_dir(dir.join("cache"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let name = e.file_name();
+            let name = name.to_string_lossy().into_owned();
+            name.ends_with(".json") && name != "manifest.json"
+        })
+        .count();
+    assert_eq!(records, 4, "one adaptive record per grid point");
+    for entry in std::fs::read_dir(dir.join("cache")).unwrap() {
+        let path = entry.unwrap().path();
+        if path.file_name().unwrap() == "manifest.json" {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("precision_db"), "{}", path.display());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
