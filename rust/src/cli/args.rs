@@ -127,6 +127,34 @@ EXAMPLES:
   # anyway — fixed-trials native points split into 256-trial chunk jobs
   # whose merged result is bit-identical to a --workers 1 run
   imclim sweep --arch qr --n 512 --b-adc 8 --trials 65536 --workers 8
+
+  # sweep-as-a-service: a long-running daemon that takes sweep/pareto/
+  # optimize jobs over HTTP and runs them through the exact CLI code
+  # paths against one shared cache — a served CSV is byte-identical to
+  # its CLI twin, and a repeated query recomputes nothing
+  imclim serve --addr 0.0.0.0:7878 --out-dir /srv/imclim
+
+  # submit a job: \"cmd\" is the CLI verb; \"options\"/\"switches\" are
+  # the CLI flags verbatim (string values; grids use the CLI grammar),
+  # so any sweep/pareto/optimize invocation translates 1:1
+  curl -s -X POST http://host:7878/jobs -d '{
+      \"cmd\": \"sweep\",
+      \"options\": {\"arch\": \"qs,qr\", \"n\": \"64:512:64\",
+                  \"b-adc\": \"4:10\", \"trials\": \"4096\"},
+      \"switches\": []
+    }'                                     # -> 202 {\"id\": 1, ...}
+
+  # poll, then fetch the CSV; per-job metrics prove warmth (a cache-hit
+  # job reports points_computed 0)
+  curl -s http://host:7878/jobs/1           # status + per-job metrics
+  curl -s http://host:7878/jobs/1/result    # the job's CSV (200 when done)
+  curl -s -X POST http://host:7878/jobs/1/cancel
+
+  # observability + graceful drain (SIGTERM does the same): the
+  # in-flight job completes, queued jobs are canceled, exit code 0
+  curl -s http://host:7878/healthz
+  curl -s http://host:7878/stats
+  curl -s -X POST http://host:7878/shutdown
 ";
 
 /// Parse a byte size with optional binary-unit suffix: `"4096"`,

@@ -19,12 +19,18 @@
 //!   cache                cache maintenance: gc (size/age LRU), stats;
 //!                        portable artifacts + registry exchange:
 //!                        pack / verify / push <url> / pull <url>
+//!   serve                sweep-as-a-service HTTP daemon: accepts
+//!                        sweep/pareto/optimize jobs as JSON POSTs,
+//!                        runs them through the same code paths as the
+//!                        CLI against one shared cache (warm queries
+//!                        answer with zero Monte-Carlo)
 //!   dnn                  train the Fig. 2 MLP and report accuracy/SNR
 //!   smoke                PJRT round-trip smoke test
 //!   assign               precision assignment for a target SNR (Sec. III-B)
 //!   info                 architecture/design-space summary
 
 pub mod args;
+pub mod serve;
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -133,6 +139,20 @@ COMMANDS:
                       into <out-dir>/cache under the same collision
                       rules as `merge` (--strict exits nonzero on any
                       differing-payload collision)
+  serve               sweep-as-a-service daemon: accept sweep / pareto /
+                      optimize jobs over HTTP and run them through the
+                      exact CLI code paths against one shared cache
+                      under <out-dir>/cache (served results are
+                      byte-identical to their CLI twins; warm queries
+                      recompute nothing). --addr HOST:PORT (default
+                      127.0.0.1:7878; port 0 picks a free port, printed
+                      on the \"listening on\" line), --queue-depth N
+                      (default 64; a full queue answers HTTP 429).
+                      Endpoints: GET /healthz, GET /stats,
+                      POST /jobs, GET /jobs/<id>, GET /jobs/<id>/result,
+                      POST /jobs/<id>/cancel, POST /shutdown. SIGTERM /
+                      SIGINT / POST /shutdown drain gracefully: the
+                      in-flight job completes, queued jobs are canceled
   assign              precision assignment: --snr-a DB [--margin DB]
   dnn                 train the Fig. 2 MLP: [--epochs E]
   smoke               PJRT artifact round-trip check
@@ -149,6 +169,9 @@ GRID SYNTAX (every axis):
 
 COMMON OPTIONS:
   --out-dir DIR       output directory for CSVs (default: results)
+  --cache-dir DIR     result cache root (default: <out-dir>/cache); lets
+                      many out-dirs share one cache, the way the serve
+                      daemon points every job at its shared cache
   --backend B         native | pjrt (default: native)
   --artifacts DIR     artifact directory for pjrt (default: artifacts)
   --trials N          MC trials per point (default: 2048); under
@@ -187,6 +210,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         Some("optimize") => cmd_optimize(args),
         Some("merge") => cmd_merge(args),
         Some("cache") => cmd_cache(args),
+        Some("serve") => serve::cmd_serve(args),
         Some("assign") => cmd_assign(args),
         Some("dnn") => cmd_dnn(args),
         Some("smoke") => cmd_smoke(args),
@@ -260,6 +284,7 @@ fn make_ctx(args: &Args) -> anyhow::Result<(FigCtx, Option<PjrtService>)> {
             workers,
             verbose,
             cache: !args.has("no-cache"),
+            cache_dir: args.opt("cache-dir").map(PathBuf::from),
         },
         service,
     ))
@@ -445,8 +470,10 @@ fn orchestrate_sharded_sweep(args: &Args, procs: usize) -> anyhow::Result<()> {
 }
 
 /// Run the sweep grid in-process (optionally restricted to one shard of
-/// a `--shard i/k` split) and emit `<out-dir>/sweep.csv`.
-fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<()> {
+/// a `--shard i/k` split) and emit `<out-dir>/sweep.csv`. `pub(crate)`
+/// so the serve daemon can execute submitted sweeps through the exact
+/// code path the CLI uses.
+pub(crate) fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyhow::Result<()> {
     let (ctx, _service) = make_ctx(args)?;
     std::fs::create_dir_all(&ctx.out_dir)?;
 
@@ -773,7 +800,7 @@ fn design_point_row(csv: &mut CsvWriter, p: &crate::opt::DesignPoint, sim: &str,
     ]);
 }
 
-fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
+pub(crate) fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     let domain = parse_opt_domain(args)?;
     let procs = args.opt_parse("procs", 1usize);
     anyhow::ensure!(procs >= 1, "--procs must be >= 1");
@@ -914,7 +941,7 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+pub(crate) fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     let domain = parse_opt_domain(args)?;
     let objective = crate::opt::Objective::parse(args.opt("objective").unwrap_or("min-energy"))?;
     let parse_f64_opt = |name: &str| -> anyhow::Result<Option<f64>> {

@@ -1,0 +1,502 @@
+//! `imclim serve` — sweep-as-a-service.
+//!
+//! A long-running HTTP daemon that accepts sweep/pareto/optimize
+//! submissions as JSON POSTs and runs them through the exact CLI code
+//! paths ([`super::run_sweep_grid`], [`super::cmd_pareto`],
+//! [`super::cmd_optimize`]) against one shared content-addressed cache,
+//! so a served query is byte-identical to its command-line twin and a
+//! warm submission performs zero Monte-Carlo.
+//!
+//! Layout under `--out-dir DIR`:
+//!   DIR/cache/       the shared result cache (every job reads/writes it)
+//!   DIR/jobs/<id>/   one out-dir per job (its CSV lands here)
+//!
+//! Endpoints:
+//!   GET  /healthz            liveness probe ("ok")
+//!   GET  /stats              process counters + per-state job counts
+//!   POST /jobs               submit {"cmd","options","switches"} → 202
+//!   GET  /jobs/<id>          job status JSON (state, per-job metrics)
+//!   GET  /jobs/<id>/result   the result CSV once the job is done
+//!   POST /jobs/<id>/cancel   cancel a queued job (in-flight ones finish)
+//!   POST /shutdown           graceful drain (same path as SIGTERM)
+//!
+//! Transport: the dependency-free HTTP/1.1 server half in
+//! `registry::http` — one request per connection, `Content-Length`
+//! bodies, thread per connection. Job execution itself is sequential
+//! (see `coordinator::jobs`), so concurrency lives entirely in the
+//! serving layer where it is cheap and safe.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Context as _;
+
+use crate::coordinator::jobs::{
+    CancelOutcome, JobManager, JobSpec, JobState, JobStatus, SubmitError,
+};
+use crate::coordinator::metrics;
+use crate::registry::http::{read_request, write_response, HttpRequest};
+use crate::util::json::{num, obj, s, Json};
+
+use super::args::Args;
+
+/// Set by the SIGTERM/SIGINT handler; every accept loop polls it, so a
+/// signal drains the daemon exactly like `POST /shutdown`.
+static SIGNAL_SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+const CONN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A running daemon. Used in-process by the integration tests; the CLI
+/// wraps it in [`cmd_serve`].
+pub struct ServeHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServeHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn base_url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Flag the daemon to drain (non-blocking).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the daemon has drained and stopped.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful stop: request the drain and wait for it.
+    pub fn shutdown(self) {
+        self.request_shutdown();
+        self.wait();
+    }
+}
+
+/// Bind `addr` and start serving. `queue_depth` bounds the submission
+/// queue (backpressure: an over-full queue answers HTTP 429).
+pub fn start(addr: &str, out_dir: PathBuf, queue_depth: usize) -> anyhow::Result<ServeHandle> {
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating out-dir {}", out_dir.display()))?;
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let manager = Arc::new(JobManager::new(queue_depth, job_runner(out_dir)));
+    let accept = {
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(listener, manager, shutdown))
+            .context("spawning the accept loop")?
+    };
+    Ok(ServeHandle {
+        addr: local,
+        shutdown,
+        accept: Some(accept),
+    })
+}
+
+/// `imclim serve --addr HOST:PORT --out-dir DIR [--queue-depth N]`.
+pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let addr = args.opt("addr").unwrap_or("127.0.0.1:7878");
+    let out_dir: PathBuf = args.opt("out-dir").unwrap_or("results").into();
+    let queue_depth = args.opt_parse("queue-depth", 64usize);
+    install_signal_handlers();
+    let handle = start(addr, out_dir.clone(), queue_depth)?;
+    // the "listening on" line is the daemon's readiness signal (tests
+    // and scripts parse it to learn a port-0 assignment)
+    println!("imclim serve: listening on {}", handle.base_url());
+    println!(
+        "imclim serve: jobs under {}, shared cache {}",
+        out_dir.join("jobs").display(),
+        out_dir.join("cache").display()
+    );
+    handle.wait();
+    println!("imclim serve: drained, shutting down");
+    Ok(())
+}
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        // only an atomic store: async-signal-safe by construction
+        SIGNAL_SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// The executor closure handed to the job manager: run the submitted
+/// verb through the CLI's own entry points, with the job's private
+/// out-dir and the daemon's shared cache, and return the result CSV.
+fn job_runner(out_dir: PathBuf) -> Box<crate::coordinator::jobs::JobRunner> {
+    let jobs_root = out_dir.join("jobs");
+    let cache_dir = out_dir.join("cache");
+    Box::new(move |id: u64, spec: &JobSpec| {
+        let job_dir = jobs_root.join(id.to_string());
+        let mut cli = Args {
+            positionals: vec![spec.verb.clone()],
+            options: spec.options.clone(),
+            switches: spec.switches.clone(),
+        };
+        cli.options.insert("out-dir".into(), job_dir.to_string_lossy().into_owned());
+        cli.options.insert("cache-dir".into(), cache_dir.to_string_lossy().into_owned());
+        let result_name = match spec.verb.as_str() {
+            "sweep" => {
+                super::run_sweep_grid(&cli, None)?;
+                "sweep.csv"
+            }
+            "pareto" => {
+                super::cmd_pareto(&cli)?;
+                "pareto.csv"
+            }
+            "optimize" => {
+                super::cmd_optimize(&cli)?;
+                "optimize.csv"
+            }
+            other => anyhow::bail!("unsupported job verb '{other}'"),
+        };
+        Ok(job_dir.join(result_name))
+    })
+}
+
+fn accept_loop(listener: TcpListener, manager: Arc<JobManager>, shutdown: Arc<AtomicBool>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) || SIGNAL_SHUTDOWN.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                let manager = Arc::clone(&manager);
+                let shutdown = Arc::clone(&shutdown);
+                let spawned = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || handle_connection(&mut stream, &manager, &shutdown));
+                if let Ok(h) = spawned {
+                    handlers.push(h);
+                }
+                handlers.retain(|h| !h.is_finished());
+            }
+            // nonblocking accept: poll the shutdown flag between waits
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    // graceful drain: finish open connections, then let the job manager
+    // complete its in-flight job and cancel the rest of the queue
+    for h in handlers {
+        let _ = h.join();
+    }
+    manager.shutdown();
+}
+
+fn handle_connection(stream: &mut TcpStream, manager: &JobManager, shutdown: &AtomicBool) {
+    let _ = stream.set_read_timeout(Some(CONN_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CONN_TIMEOUT));
+    let req = match read_request(stream) {
+        Ok(r) => r,
+        // a hung-up or garbled client costs nothing but this connection
+        Err(_) => return,
+    };
+    let _ = route(stream, &req, manager, shutdown);
+}
+
+fn route(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    manager: &JobManager,
+    shutdown: &AtomicBool,
+) -> anyhow::Result<()> {
+    let path = req.path.split('?').next().unwrap_or("");
+    let path = if path.len() > 1 {
+        path.trim_end_matches('/')
+    } else {
+        path
+    };
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => write_response(stream, 200, "text/plain", b"ok\n"),
+        ("GET", "/stats") => write_response(
+            stream,
+            200,
+            "application/json",
+            stats_json(manager).to_string().as_bytes(),
+        ),
+        ("POST", "/jobs") => match parse_job_spec(&req.body) {
+            Err(msg) => error_response(stream, 400, &msg),
+            Ok(spec) => match manager.submit(spec) {
+                Ok(id) => {
+                    let st = manager.status(id).expect("freshly submitted job exists");
+                    write_response(
+                        stream,
+                        202,
+                        "application/json",
+                        status_json(&st).to_string().as_bytes(),
+                    )
+                }
+                Err(SubmitError::QueueFull) => {
+                    error_response(stream, 429, "job queue is full — retry later")
+                }
+                Err(SubmitError::ShuttingDown) => {
+                    error_response(stream, 503, "daemon is draining — no new jobs")
+                }
+            },
+        },
+        ("POST", "/shutdown") => {
+            shutdown.store(true, Ordering::SeqCst);
+            write_response(stream, 200, "text/plain", b"draining\n")
+        }
+        (method, p) if p.starts_with("/jobs/") => job_route(stream, method, p, manager),
+        ("GET" | "POST", _) => error_response(stream, 404, "no such route"),
+        _ => error_response(stream, 405, "method not allowed"),
+    }
+}
+
+fn job_route(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    manager: &JobManager,
+) -> anyhow::Result<()> {
+    let rest = &path["/jobs/".len()..];
+    let (id_str, tail) = match rest.split_once('/') {
+        Some((a, b)) => (a, Some(b)),
+        None => (rest, None),
+    };
+    let Ok(id) = id_str.parse::<u64>() else {
+        return error_response(stream, 400, &format!("bad job id '{id_str}'"));
+    };
+    match (method, tail) {
+        ("GET", None) => match manager.status(id) {
+            Some(st) => write_response(
+                stream,
+                200,
+                "application/json",
+                status_json(&st).to_string().as_bytes(),
+            ),
+            None => error_response(stream, 404, "no such job"),
+        },
+        ("GET", Some("result")) => match manager.status(id) {
+            None => error_response(stream, 404, "no such job"),
+            Some(st) if st.state == JobState::Done => {
+                let path = st.result_path.expect("done jobs carry a result path");
+                match std::fs::read(&path) {
+                    Ok(bytes) => write_response(stream, 200, "text/csv", &bytes),
+                    Err(e) => error_response(stream, 500, &format!("reading result: {e}")),
+                }
+            }
+            Some(st) => error_response(
+                stream,
+                409,
+                &format!("job is {} — no result to serve", st.state.as_str()),
+            ),
+        },
+        ("POST", Some("cancel")) => match manager.cancel(id) {
+            CancelOutcome::Unknown => error_response(stream, 404, "no such job"),
+            outcome => {
+                let msg = match outcome {
+                    CancelOutcome::Canceled => "canceled",
+                    CancelOutcome::Running => "running — in-flight jobs complete",
+                    CancelOutcome::Finished => "already finished",
+                    CancelOutcome::Unknown => unreachable!(),
+                };
+                let body = obj(vec![("id", num(id as f64)), ("outcome", s(msg))]).to_string();
+                write_response(stream, 200, "application/json", body.as_bytes())
+            }
+        },
+        _ => error_response(stream, 404, "no such route"),
+    }
+}
+
+fn error_response(stream: &mut TcpStream, status: u16, msg: &str) -> anyhow::Result<()> {
+    let body = obj(vec![("error", s(msg))]).to_string();
+    write_response(stream, status, "application/json", body.as_bytes())
+}
+
+/// Parse a submission body:
+/// `{"cmd": "sweep", "options": {"arch": "qs", "n": "64:512:64"},
+///   "switches": ["validate"]}`.
+/// Option values are the exact strings the CLI takes, so the served
+/// grid grammar is the CLI's grid grammar by construction.
+fn parse_job_spec(body: &[u8]) -> Result<JobSpec, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let verb = json
+        .get("cmd")
+        .and_then(|j| j.as_str())
+        .ok_or_else(|| "missing 'cmd' (sweep | pareto | optimize)".to_string())?
+        .to_string();
+    if !matches!(verb.as_str(), "sweep" | "pareto" | "optimize") {
+        return Err(format!("unsupported cmd '{verb}' (sweep | pareto | optimize)"));
+    }
+    let mut options = BTreeMap::new();
+    if let Some(section) = json.get("options") {
+        let map = section
+            .as_obj()
+            .ok_or_else(|| "'options' must be an object of strings".to_string())?;
+        for (k, v) in map {
+            let v = v.as_str().ok_or_else(|| {
+                format!("option '{k}' must be a string (grids use the CLI grammar, e.g. \"4:10\")")
+            })?;
+            options.insert(k.clone(), v.to_string());
+        }
+    }
+    let mut switches = Vec::new();
+    if let Some(section) = json.get("switches") {
+        let list = section
+            .as_arr()
+            .ok_or_else(|| "'switches' must be an array of strings".to_string())?;
+        for sw in list {
+            let sw = sw
+                .as_str()
+                .ok_or_else(|| "'switches' must be an array of strings".to_string())?;
+            switches.push(sw.to_string());
+        }
+    }
+    for k in options.keys() {
+        if matches!(
+            k.as_str(),
+            "out-dir" | "cache-dir" | "procs" | "shard" | "backend" | "artifacts"
+        ) {
+            return Err(format!("option '--{k}' is reserved by the daemon"));
+        }
+    }
+    for sw in &switches {
+        if matches!(sw.as_str(), "no-cache" | "keep-shards") {
+            return Err(format!("switch '--{sw}' is not available under serve"));
+        }
+    }
+    Ok(JobSpec {
+        verb,
+        options,
+        switches,
+    })
+}
+
+fn status_json(st: &JobStatus) -> Json {
+    let mut fields = vec![
+        ("id", num(st.id as f64)),
+        ("cmd", s(&st.verb)),
+        ("state", s(st.state.as_str())),
+        ("cache_hits", num(st.metrics.cache_hits as f64)),
+        ("cache_misses", num(st.metrics.cache_misses as f64)),
+        ("points_computed", num(st.metrics.points_computed as f64)),
+        ("trials_completed", num(st.metrics.trials_completed as f64)),
+    ];
+    if let Some(e) = &st.error {
+        fields.push(("error", s(e)));
+    }
+    if st.state == JobState::Done {
+        fields.push(("result", s(&format!("/jobs/{}/result", st.id))));
+    }
+    obj(fields)
+}
+
+fn stats_json(manager: &JobManager) -> Json {
+    let m = metrics::snapshot();
+    let q = manager.queue_stats();
+    obj(vec![
+        ("cache_hits", num(m.cache_hits as f64)),
+        ("cache_misses", num(m.cache_misses as f64)),
+        ("points_computed", num(m.points_computed as f64)),
+        ("trials_completed", num(m.trials_completed as f64)),
+        ("mc_errors", num(m.mc_errors as f64)),
+        ("jobs_in_flight", num((q.queued + q.running) as f64)),
+        (
+            "jobs",
+            obj(vec![
+                ("queued", num(q.queued as f64)),
+                ("running", num(q.running as f64)),
+                ("done", num(q.done as f64)),
+                ("failed", num(q.failed as f64)),
+                ("canceled", num(q.canceled as f64)),
+            ]),
+        ),
+        ("draining", Json::Bool(manager.is_shutting_down())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_parsing_accepts_cli_grammar_and_rejects_reserved() {
+        let body = br#"{"cmd":"sweep","options":{"arch":"qs,qr","n":"8,16:64:16","trials":"48"},"switches":["verbose"]}"#;
+        let spec = parse_job_spec(body).unwrap();
+        assert_eq!(spec.verb, "sweep");
+        assert_eq!(spec.options["n"], "8,16:64:16");
+        assert_eq!(spec.switches, ["verbose"]);
+
+        // minimal body: options/switches are optional
+        let spec = parse_job_spec(br#"{"cmd":"optimize"}"#).unwrap();
+        assert_eq!(spec.verb, "optimize");
+        assert!(spec.options.is_empty());
+
+        for (body, needle) in [
+            (&br#"{"options":{}}"#[..], "missing 'cmd'"),
+            (br#"{"cmd":"figure"}"#, "unsupported cmd"),
+            (br#"{"cmd":"sweep","options":{"n":16}}"#, "must be a string"),
+            (br#"{"cmd":"sweep","options":{"out-dir":"/x"}}"#, "reserved"),
+            (br#"{"cmd":"sweep","options":{"procs":"4"}}"#, "reserved"),
+            (br#"{"cmd":"sweep","switches":["no-cache"]}"#, "not available"),
+            (b"not json", "bad JSON"),
+            (b"\xff\xfe", "not UTF-8"),
+        ] {
+            let err = parse_job_spec(body).unwrap_err();
+            assert!(err.contains(needle), "{err:?} should mention {needle:?}");
+        }
+    }
+
+    #[test]
+    fn status_json_shape() {
+        let st = JobStatus {
+            id: 3,
+            verb: "sweep".into(),
+            state: JobState::Done,
+            error: None,
+            result_path: Some(PathBuf::from("/x/sweep.csv")),
+            metrics: crate::coordinator::MetricsSnapshot {
+                cache_hits: 6,
+                cache_misses: 0,
+                points_computed: 0,
+                trials_completed: 0,
+                mc_errors: 0,
+            },
+        };
+        let j = status_json(&st);
+        assert_eq!(j.get("id").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("state").and_then(|v| v.as_str()), Some("done"));
+        assert_eq!(j.get("cache_hits").and_then(Json::as_usize), Some(6));
+        assert_eq!(j.get("result").and_then(|v| v.as_str()), Some("/jobs/3/result"));
+        let text = j.to_string();
+        let reparsed = Json::parse(&text).unwrap();
+        let computed = reparsed.get("points_computed").and_then(Json::as_usize);
+        assert_eq!(computed, Some(0));
+    }
+}

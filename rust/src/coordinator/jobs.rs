@@ -1,0 +1,392 @@
+//! Job manager for `imclim serve`: a bounded submission queue with
+//! backpressure, monotone job ids, a queued → running → done/failed
+//! lifecycle (plus canceled), and graceful drain.
+//!
+//! Execution policy: one sequential executor thread. Sweep jobs already
+//! saturate the machine through the scheduler's worker pool, so running
+//! jobs back-to-back (instead of concurrently) keeps cache writes
+//! race-free and makes per-job metrics exact — the executor differences
+//! two [`metrics::snapshot`]s around each run. The actual work is an
+//! injected [`JobRunner`] closure, which keeps this module independent
+//! of the CLI layer that knows how to execute a sweep.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::metrics::{self, MetricsSnapshot};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Canceled => "canceled",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Canceled)
+    }
+}
+
+/// What a client submits: a CLI verb (`sweep`, `pareto`, `optimize`)
+/// plus the exact option/switch strings the CLI would parse, so a
+/// served query and its command-line twin build identical grids.
+#[derive(Clone, Debug, Default)]
+pub struct JobSpec {
+    pub verb: String,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+/// A job's externally visible state.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    pub id: u64,
+    pub verb: String,
+    pub state: JobState,
+    pub error: Option<String>,
+    /// The result CSV, once the job is done.
+    pub result_path: Option<PathBuf>,
+    /// Counters accumulated while this job ran (exact: the executor is
+    /// single-threaded, so exactly one job runs at a time).
+    pub metrics: MetricsSnapshot,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity — retry later (HTTP 429).
+    QueueFull,
+    /// The daemon is draining — no new work (HTTP 503).
+    ShuttingDown,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    Canceled,
+    /// In-flight jobs run to completion; only queued jobs cancel.
+    Running,
+    Finished,
+    Unknown,
+}
+
+/// Per-state job counts, for the `/stats` surface.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueStats {
+    pub queued: usize,
+    pub running: usize,
+    pub done: usize,
+    pub failed: usize,
+    pub canceled: usize,
+}
+
+/// Executes one job: gets the job id and spec, returns the result CSV.
+pub type JobRunner = dyn Fn(u64, &JobSpec) -> anyhow::Result<PathBuf> + Send + Sync;
+
+struct Job {
+    spec: JobSpec,
+    status: JobStatus,
+}
+
+#[derive(Default)]
+struct State {
+    jobs: BTreeMap<u64, Job>,
+    queue: VecDeque<u64>,
+    next_id: u64,
+    shutting_down: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+    capacity: usize,
+    runner: Box<JobRunner>,
+}
+
+pub struct JobManager {
+    shared: Arc<Shared>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl JobManager {
+    /// Start the executor. `capacity` bounds the number of *queued*
+    /// jobs (the in-flight one rides for free).
+    pub fn new(capacity: usize, runner: Box<JobRunner>) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+            runner,
+        });
+        let for_worker = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("serve-executor".into())
+            .spawn(move || executor_loop(for_worker))
+            .expect("spawn serve executor");
+        Self {
+            shared,
+            worker: Mutex::new(Some(worker)),
+        }
+    }
+
+    pub fn submit(&self, spec: JobSpec) -> Result<u64, SubmitError> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutting_down {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if st.queue.len() >= self.shared.capacity {
+            return Err(SubmitError::QueueFull);
+        }
+        st.next_id += 1;
+        let id = st.next_id;
+        let status = JobStatus {
+            id,
+            verb: spec.verb.clone(),
+            state: JobState::Queued,
+            error: None,
+            result_path: None,
+            metrics: MetricsSnapshot::default(),
+        };
+        st.jobs.insert(id, Job { spec, status });
+        st.queue.push_back(id);
+        self.shared.cv.notify_all();
+        Ok(id)
+    }
+
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.get(&id).map(|j| j.status.clone())
+    }
+
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let mut st = self.shared.state.lock().unwrap();
+        let state = match st.jobs.get(&id) {
+            None => return CancelOutcome::Unknown,
+            Some(j) => j.status.state,
+        };
+        match state {
+            JobState::Queued => {
+                st.queue.retain(|&q| q != id);
+                st.jobs.get_mut(&id).expect("job exists").status.state = JobState::Canceled;
+                CancelOutcome::Canceled
+            }
+            JobState::Running => CancelOutcome::Running,
+            _ => CancelOutcome::Finished,
+        }
+    }
+
+    pub fn queue_stats(&self) -> QueueStats {
+        let st = self.shared.state.lock().unwrap();
+        let mut out = QueueStats::default();
+        for j in st.jobs.values() {
+            match j.status.state {
+                JobState::Queued => out.queued += 1,
+                JobState::Running => out.running += 1,
+                JobState::Done => out.done += 1,
+                JobState::Failed => out.failed += 1,
+                JobState::Canceled => out.canceled += 1,
+            }
+        }
+        out
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.state.lock().unwrap().shutting_down
+    }
+
+    /// Graceful drain: stop accepting submissions, let the in-flight
+    /// job run to completion, cancel everything still queued, and join
+    /// the executor. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutting_down = true;
+            self.shared.cv.notify_all();
+        }
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(shared: Arc<Shared>) {
+    loop {
+        let (id, spec) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutting_down {
+                    // drain: the in-flight job (if any) already finished
+                    // before we got here; whatever is still queued is
+                    // canceled rather than started.
+                    while let Some(id) = st.queue.pop_front() {
+                        if let Some(job) = st.jobs.get_mut(&id) {
+                            job.status.state = JobState::Canceled;
+                        }
+                    }
+                    return;
+                }
+                if let Some(id) = st.queue.pop_front() {
+                    let job = st.jobs.get_mut(&id).expect("queued job exists");
+                    job.status.state = JobState::Running;
+                    let spec = job.spec.clone();
+                    break (id, spec);
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+
+        let before = metrics::snapshot();
+        // a panicking runner must not take the executor (and with it the
+        // whole daemon) down — it fails the one job
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (shared.runner)(id, &spec)))
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("job execution panicked")));
+        let delta = metrics::snapshot().since(&before);
+
+        let mut st = shared.state.lock().unwrap();
+        if let Some(job) = st.jobs.get_mut(&id) {
+            job.status.metrics = delta;
+            match result {
+                Ok(path) => {
+                    job.status.state = JobState::Done;
+                    job.status.result_path = Some(path);
+                }
+                Err(e) => {
+                    job.status.state = JobState::Failed;
+                    job.status.error = Some(format!("{e:#}"));
+                }
+            }
+        }
+        shared.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn spec(verb: &str) -> JobSpec {
+        JobSpec {
+            verb: verb.into(),
+            ..JobSpec::default()
+        }
+    }
+
+    fn wait_terminal(mgr: &JobManager, id: u64) -> JobStatus {
+        for _ in 0..5_000 {
+            let s = mgr.status(id).expect("job exists");
+            if s.state.is_terminal() {
+                return s;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("job {id} never reached a terminal state");
+    }
+
+    #[test]
+    fn jobs_run_in_order_and_report_result_or_error() {
+        let ran = Arc::new(Mutex::new(Vec::new()));
+        let ran2 = Arc::clone(&ran);
+        let mgr = JobManager::new(
+            8,
+            Box::new(move |id, spec| {
+                ran2.lock().unwrap().push((id, spec.verb.clone()));
+                anyhow::ensure!(spec.verb != "boom", "synthetic failure");
+                Ok(PathBuf::from(format!("/out/{id}.csv")))
+            }),
+        );
+        let a = mgr.submit(spec("sweep")).unwrap();
+        let b = mgr.submit(spec("boom")).unwrap();
+        let sb = wait_terminal(&mgr, b);
+        let sa = wait_terminal(&mgr, a);
+        assert_eq!(sa.state, JobState::Done);
+        assert_eq!(sa.result_path.as_deref(), Some(Path::new("/out/1.csv")));
+        assert_eq!(sb.state, JobState::Failed);
+        assert!(sb.error.unwrap().contains("synthetic failure"));
+        assert_eq!(
+            ran.lock().unwrap().as_slice(),
+            &[(a, "sweep".to_string()), (b, "boom".to_string())]
+        );
+        assert_eq!(mgr.status(999).map(|s| s.id), None);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn panicking_jobs_fail_without_killing_the_executor() {
+        let mgr = JobManager::new(
+            8,
+            Box::new(|_, spec| {
+                assert!(spec.verb != "panic", "deliberate test panic");
+                Ok(PathBuf::from("/out/ok.csv"))
+            }),
+        );
+        let p = mgr.submit(spec("panic")).unwrap();
+        let ok = mgr.submit(spec("sweep")).unwrap();
+        let sp = wait_terminal(&mgr, p);
+        assert_eq!(sp.state, JobState::Failed);
+        assert!(sp.error.unwrap().contains("panicked"));
+        assert_eq!(wait_terminal(&mgr, ok).state, JobState::Done);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn backpressure_cancellation_and_graceful_drain() {
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let release_rx = Mutex::new(release_rx);
+        let mgr = JobManager::new(
+            2,
+            Box::new(move |_, _| {
+                started_tx.send(()).unwrap();
+                let _ = release_rx.lock().unwrap().recv();
+                Ok(PathBuf::from("/out/slow.csv"))
+            }),
+        );
+        let a = mgr.submit(spec("sweep")).unwrap();
+        started_rx.recv().unwrap(); // `a` is in flight, queue empty
+        let b = mgr.submit(spec("sweep")).unwrap();
+        let c = mgr.submit(spec("sweep")).unwrap();
+        assert_eq!(mgr.submit(spec("sweep")), Err(SubmitError::QueueFull));
+
+        assert_eq!(mgr.cancel(c), CancelOutcome::Canceled);
+        assert_eq!(mgr.status(c).unwrap().state, JobState::Canceled);
+        assert_eq!(mgr.cancel(a), CancelOutcome::Running);
+        assert_eq!(mgr.cancel(c), CancelOutcome::Finished);
+        assert_eq!(mgr.cancel(999), CancelOutcome::Unknown);
+        // canceling `c` freed a queue slot
+        let d = mgr.submit(spec("sweep")).unwrap();
+
+        // shutdown while `a` runs: the in-flight job completes, the
+        // queued jobs are canceled, and new submissions are refused
+        let unblock = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            release_tx.send(()).unwrap();
+            let _ = release_tx.send(()); // tolerate one more started job
+        });
+        mgr.shutdown();
+        unblock.join().unwrap();
+        assert_eq!(mgr.status(a).unwrap().state, JobState::Done);
+        assert!(mgr.status(b).unwrap().state.is_terminal());
+        assert!(mgr.status(d).unwrap().state.is_terminal());
+        assert_eq!(mgr.submit(spec("sweep")), Err(SubmitError::ShuttingDown));
+        assert!(mgr.is_shutting_down());
+        let qs = mgr.queue_stats();
+        assert_eq!(qs.queued + qs.running, 0, "drained: {qs:?}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Process-wide execution counters — the observability surface behind
+//! `imclim serve`'s `GET /stats`.
+//!
+//! The scheduler hands `SweepOptions` around by value (`Copy`), so
+//! there is no place to thread a metrics handle through the worker
+//! pool; global atomics are the honest fit. Counters are monotone
+//! totals since process start: consumers report them as-is (the daemon)
+//! or difference two [`snapshot`]s around a region of interest
+//! (per-job accounting).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+static POINTS_COMPUTED: AtomicU64 = AtomicU64::new(0);
+static TRIALS_COMPLETED: AtomicU64 = AtomicU64::new(0);
+static MC_ERRORS: AtomicU64 = AtomicU64::new(0);
+
+/// One consistent-enough view of the counters (reads are relaxed and
+/// independent; totals are exact once the measured region is quiescent).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub points_computed: u64,
+    pub trials_completed: u64,
+    pub mc_errors: u64,
+}
+
+impl MetricsSnapshot {
+    /// Counter deltas accumulated since an earlier snapshot.
+    pub fn since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            cache_hits: self.cache_hits.wrapping_sub(earlier.cache_hits),
+            cache_misses: self.cache_misses.wrapping_sub(earlier.cache_misses),
+            points_computed: self.points_computed.wrapping_sub(earlier.points_computed),
+            trials_completed: self.trials_completed.wrapping_sub(earlier.trials_completed),
+            mc_errors: self.mc_errors.wrapping_sub(earlier.mc_errors),
+        }
+    }
+}
+
+pub fn snapshot() -> MetricsSnapshot {
+    MetricsSnapshot {
+        cache_hits: CACHE_HITS.load(Ordering::Relaxed),
+        cache_misses: CACHE_MISSES.load(Ordering::Relaxed),
+        points_computed: POINTS_COMPUTED.load(Ordering::Relaxed),
+        trials_completed: TRIALS_COMPLETED.load(Ordering::Relaxed),
+        mc_errors: MC_ERRORS.load(Ordering::Relaxed),
+    }
+}
+
+pub fn add_cache_hits(n: u64) {
+    CACHE_HITS.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn add_cache_misses(n: u64) {
+    CACHE_MISSES.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn add_points_computed(n: u64) {
+    POINTS_COMPUTED.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn add_trials_completed(n: u64) {
+    TRIALS_COMPLETED.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn add_mc_errors(n: u64) {
+    MC_ERRORS.fetch_add(n, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshots_difference_cleanly() {
+        // counters are process-global, so assert on deltas only — other
+        // tests may be incrementing concurrently
+        let before = snapshot();
+        add_cache_hits(3);
+        add_trials_completed(512);
+        add_mc_errors(1);
+        let delta = snapshot().since(&before);
+        assert!(delta.cache_hits >= 3);
+        assert!(delta.trials_completed >= 512);
+        assert!(delta.mc_errors >= 1);
+    }
+}

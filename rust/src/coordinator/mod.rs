@@ -8,6 +8,10 @@
 //! * `scheduler` — sweep scheduling: lock-free atomic work claiming ->
 //!   worker pool with per-worker result buffers -> trial batching ->
 //!   order-independent statistical aggregation.
+//! * `jobs` — the `imclim serve` job manager: bounded submission queue
+//!   with backpressure, job lifecycle, cancellation, graceful drain.
+//! * `metrics` — process-wide execution counters (cache hits/misses,
+//!   trials completed) feeding the daemon's `/stats` endpoint.
 //!
 //! Cached execution (grid building, content-addressed result reuse)
 //! lives one layer up in `crate::engine`, which drives this scheduler.
@@ -15,9 +19,15 @@
 //! Python never appears here: the executor consumes AOT-compiled HLO
 //! artifacts; the native Monte-Carlo backend needs nothing at all.
 
+pub mod jobs;
+pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
+pub use jobs::{
+    CancelOutcome, JobManager, JobRunner, JobSpec, JobState, JobStatus, QueueStats, SubmitError,
+};
+pub use metrics::MetricsSnapshot;
 pub use scheduler::{run_point, run_sweep, Backend, SweepOptions, SweepPoint, SweepResult};
 pub use service::{
     run_shard_procs, ArchRequest, MlpRequest, MlpWeights, PjrtHandle, PjrtService, ShardCommand,

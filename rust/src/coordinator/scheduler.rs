@@ -254,6 +254,9 @@ pub fn run_sweep(
                             Job::Point(index) => {
                                 let point = &points_slice[index];
                                 let res = run_point(point, &backend);
+                                if let Ok(m) = &res {
+                                    super::metrics::add_trials_completed(m.trials);
+                                }
                                 let left = remaining_slice[index]
                                     .fetch_sub(1, Ordering::Relaxed)
                                     - 1;
@@ -297,6 +300,7 @@ pub fn run_sweep(
                                     seed,
                                     point.dist,
                                 );
+                                super::metrics::add_trials_completed(trials as u64);
                                 let left = remaining_slice[index]
                                     .fetch_sub(1, Ordering::Relaxed)
                                     - 1;

@@ -260,8 +260,84 @@ pub fn run_shard_procs(shards: Vec<ShardCommand>) -> Result<()> {
 /// Forward a child pipe to stderr, one prefixed line at a time.
 fn stream_lines(label: String, pipe: impl Read + Send + 'static) -> JoinHandle<()> {
     std::thread::spawn(move || {
-        for line in BufReader::new(pipe).lines().map_while(std::result::Result::ok) {
-            eprintln!("[{label}] {line}");
-        }
+        forward_lines(pipe, |line| eprintln!("[{label}] {line}"));
     })
+}
+
+/// Pump a pipe line-by-line into `emit`. Non-UTF-8 bytes are decoded
+/// lossily — a shard crashing mid-write must not silence the rest of
+/// its output — and a read error is surfaced as a final diagnostic
+/// line instead of silently truncating the stream (the old
+/// `.lines().map_while(Result::ok)` did both).
+fn forward_lines(pipe: impl Read, mut emit: impl FnMut(&str)) {
+    let mut reader = BufReader::new(pipe);
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => break,
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    buf.pop();
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                }
+                emit(&String::from_utf8_lossy(&buf));
+            }
+            Err(e) => {
+                emit(&format!("<stream read error: {e}>"));
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io;
+
+    /// Reader that yields its buffered bytes, then fails.
+    struct ErrAfter(io::Cursor<Vec<u8>>);
+
+    impl Read for ErrAfter {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            match self.0.read(buf)? {
+                0 => Err(io::Error::new(io::ErrorKind::BrokenPipe, "pipe burst")),
+                n => Ok(n),
+            }
+        }
+    }
+
+    fn collect(pipe: impl Read) -> Vec<String> {
+        let mut out = Vec::new();
+        forward_lines(pipe, |l| out.push(l.to_string()));
+        out
+    }
+
+    #[test]
+    fn non_utf8_lines_are_decoded_lossily_not_dropped() {
+        let lines = collect(io::Cursor::new(b"ok\n\xffbad\xfe\nafter".to_vec()));
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "ok");
+        assert!(lines[1].contains('\u{FFFD}'), "{:?}", lines[1]);
+        assert!(lines[1].contains("bad"), "{:?}", lines[1]);
+        assert_eq!(lines[2], "after", "lines after bad bytes must survive");
+    }
+
+    #[test]
+    fn read_errors_surface_as_a_diagnostic_line() {
+        let lines = collect(ErrAfter(io::Cursor::new(b"first\n".to_vec())));
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], "first");
+        assert!(lines[1].contains("stream read error"), "{:?}", lines[1]);
+        assert!(lines[1].contains("pipe burst"), "{:?}", lines[1]);
+    }
+
+    #[test]
+    fn crlf_and_missing_final_newline_are_handled() {
+        let lines = collect(io::Cursor::new(b"a\r\nb".to_vec()));
+        assert_eq!(lines, ["a", "b"]);
+    }
 }

@@ -494,15 +494,19 @@ pub struct RecordInfo {
 }
 
 /// Scan a cache directory's records (manifest excluded), oldest first
-/// (mtime order = LRU order, since cache hits refresh mtimes).
+/// (mtime order = LRU order, since cache hits refresh mtimes). A record
+/// whose mtime cannot be read sorts as *newest* — an unreadable
+/// timestamp must never promote a just-written record to the front of
+/// the eviction queue.
 pub fn scan_records(dir: &Path) -> Result<Vec<RecordInfo>> {
+    let now = SystemTime::now();
     let mut out = Vec::new();
     for (key, path) in list_record_files(dir)? {
         let meta = match std::fs::metadata(&path) {
             Ok(m) => m,
             Err(_) => continue,
         };
-        let modified = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        let modified = meta.modified().unwrap_or(now);
         out.push(RecordInfo {
             key,
             path,
@@ -554,9 +558,42 @@ pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
         ..GcReport::default()
     };
 
+    let evict_idx = plan_evictions(&records, now, opts);
+    let evict: Vec<&RecordInfo> = evict_idx.iter().map(|&i| &records[i]).collect();
+    let evicted_bytes: u64 = evict.iter().map(|r| r.bytes).sum();
+
+    report.evicted = evict.len();
+    report.bytes_after = total - evicted_bytes;
+    report.evicted_keys = evict.iter().map(|r| r.key.clone()).collect();
+    report.evicted_keys.sort();
+    if opts.dry_run || evict.is_empty() {
+        return Ok(report);
+    }
+    for r in &evict {
+        let _ = std::fs::remove_file(&r.path);
+    }
+    // drop evicted keys from the manifest (if one exists)
+    if dir.join(MANIFEST_FILE).exists() {
+        let mut entries = read_manifest_entries(dir);
+        for r in &evict {
+            entries.remove(&r.key);
+        }
+        let backend = read_manifest_backend(dir).unwrap_or_else(|| "unknown".into());
+        write_manifest(dir, &backend, entries)?;
+    }
+    Ok(report)
+}
+
+/// Pure eviction planner over an oldest-first record list: age-expiry
+/// pass, then LRU size pass with the `max_age` protection floor.
+/// Returns indices into `records` to evict. Split from [`gc`] so the
+/// ordering semantics — including the unreadable-mtime "sorts newest,
+/// never evicted first" fallback from [`scan_records`] — are testable
+/// without faking filesystem metadata.
+fn plan_evictions(records: &[RecordInfo], now: SystemTime, opts: &GcOptions) -> Vec<usize> {
     let age_of = |r: &RecordInfo| now.duration_since(r.modified).unwrap_or(Duration::ZERO);
     let mut keep = vec![true; records.len()];
-    let mut remaining = total;
+    let mut remaining: u64 = records.iter().map(|r| r.bytes).sum();
     for (i, r) in records.iter().enumerate() {
         if matches!(opts.max_age, Some(max) if age_of(r) > max) {
             keep[i] = false;
@@ -578,33 +615,11 @@ pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
             remaining -= r.bytes;
         }
     }
-    let evict: Vec<&RecordInfo> = records
-        .iter()
-        .zip(&keep)
+    keep.iter()
+        .enumerate()
         .filter(|(_, &k)| !k)
-        .map(|(r, _)| r)
-        .collect();
-
-    report.evicted = evict.len();
-    report.bytes_after = remaining;
-    report.evicted_keys = evict.iter().map(|r| r.key.clone()).collect();
-    report.evicted_keys.sort();
-    if opts.dry_run || evict.is_empty() {
-        return Ok(report);
-    }
-    for r in &evict {
-        let _ = std::fs::remove_file(&r.path);
-    }
-    // drop evicted keys from the manifest (if one exists)
-    if dir.join(MANIFEST_FILE).exists() {
-        let mut entries = read_manifest_entries(dir);
-        for r in &evict {
-            entries.remove(&r.key);
-        }
-        let backend = read_manifest_backend(dir).unwrap_or_else(|| "unknown".into());
-        write_manifest(dir, &backend, entries)?;
-    }
-    Ok(report)
+        .map(|(i, _)| i)
+        .collect()
 }
 
 #[cfg(test)]
@@ -735,5 +750,53 @@ mod tests {
         assert_eq!(entries.len(), 2);
         assert_eq!(entries["k1"].as_str(), Some("id1b"));
         assert_eq!(entries["k2"].as_str(), Some("id2"));
+    }
+
+    #[test]
+    fn unreadable_mtime_records_are_last_not_first_eviction_candidates() {
+        let now = SystemTime::now();
+        let rec = |key: &str, age_secs: u64, bytes: u64| RecordInfo {
+            key: key.into(),
+            path: PathBuf::from(key),
+            bytes,
+            modified: now - Duration::from_secs(age_secs),
+        };
+        // `fresh` models a just-written record whose mtime read failed:
+        // scan_records falls back to `now` (the old UNIX_EPOCH fallback
+        // made exactly these records the first eviction candidates).
+        let mut records = vec![
+            rec("fresh", 0, 100),
+            rec("old", 3_600, 100),
+            rec("older", 7_200, 100),
+        ];
+        records.sort_by(|a, b| (a.modified, &a.key).cmp(&(b.modified, &b.key)));
+        assert_eq!(records[2].key, "fresh", "fallback must sort newest");
+
+        // pure size pressure: LRU evicts the two genuinely old records
+        // and the fallback record is the survivor.
+        let opts = GcOptions {
+            max_bytes: Some(100),
+            max_age: None,
+            dry_run: false,
+        };
+        let evicted: Vec<&str> = plan_evictions(&records, now, &opts)
+            .iter()
+            .map(|&i| records[i].key.as_str())
+            .collect();
+        assert_eq!(evicted, ["older", "old"]);
+
+        // combined pressure: age expiry takes the old records, and the
+        // age-zero fallback record stays protected from the size pass
+        // even when max_bytes cannot be met (best-effort floor).
+        let opts = GcOptions {
+            max_bytes: Some(0),
+            max_age: Some(Duration::from_secs(600)),
+            dry_run: false,
+        };
+        let evicted: Vec<&str> = plan_evictions(&records, now, &opts)
+            .iter()
+            .map(|&i| records[i].key.as_str())
+            .collect();
+        assert_eq!(evicted, ["older", "old"]);
     }
 }

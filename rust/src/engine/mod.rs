@@ -97,6 +97,7 @@ impl Engine {
             let results = run_sweep(points, self.backend.clone(), self.opts);
             stats.misses = results.len();
             stats.errors = results.iter().filter(|r| r.error.is_some()).count();
+            record_metrics(&stats);
             return (results, stats);
         };
 
@@ -171,6 +172,7 @@ impl Engine {
             .into_iter()
             .map(|r| r.expect("every point produces a result"))
             .collect();
+        record_metrics(&stats);
         (results, stats)
     }
 
@@ -233,6 +235,20 @@ impl Drop for Engine {
     fn drop(&mut self) {
         self.flush_manifest();
     }
+}
+
+/// Feed one run's hit/miss/error counts into the process-wide
+/// [`coordinator::metrics`] counters (the daemon's `/stats` surface).
+/// Trials-completed is counted at the scheduler, which knows actual
+/// ensemble sizes.
+///
+/// [`coordinator::metrics`]: crate::coordinator::metrics
+fn record_metrics(stats: &RunStats) {
+    use crate::coordinator::metrics;
+    metrics::add_cache_hits(stats.hits as u64);
+    metrics::add_cache_misses(stats.misses as u64);
+    metrics::add_points_computed(stats.misses as u64);
+    metrics::add_mc_errors(stats.errors as u64);
 }
 
 #[cfg(test)]

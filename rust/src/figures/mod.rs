@@ -43,6 +43,10 @@ pub struct FigCtx {
     /// Serve repeated points from the content-addressed result cache
     /// under `out_dir/cache` (on by default; `--no-cache` in the CLI).
     pub cache: bool,
+    /// Override the cache root. `None` = `out_dir/cache`; the serve
+    /// daemon points every job at one shared cache directory while each
+    /// job keeps its own out-dir for CSVs.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl FigCtx {
@@ -55,6 +59,7 @@ impl FigCtx {
             workers: crate::coordinator::SweepOptions::default().workers,
             verbose: false,
             cache: true,
+            cache_dir: None,
         }
     }
 
@@ -66,11 +71,15 @@ impl FigCtx {
     }
 
     /// The sweep engine this context drives (cache rooted at
-    /// `out_dir/cache` unless disabled).
+    /// `cache_dir`, defaulting to `out_dir/cache`, unless disabled).
     pub fn engine(&self) -> Engine {
         let engine = Engine::new(self.backend.clone(), self.sweep_opts());
         if self.cache {
-            engine.with_cache(self.out_dir.join("cache"))
+            let dir = self
+                .cache_dir
+                .clone()
+                .unwrap_or_else(|| self.out_dir.join("cache"));
+            engine.with_cache(dir)
         } else {
             engine
         }

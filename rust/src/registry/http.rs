@@ -141,6 +141,42 @@ impl HttpEndpoint {
             s => bail!("PUT {} failed with HTTP {s}", self.url_for(rel)),
         }
     }
+
+    /// POST bytes to a path relative to the base and return the raw
+    /// `(status, body)`. Unlike `get`/`put`, every status is handed to
+    /// the caller — the serve daemon uses 4xx replies as meaningful
+    /// answers (backpressure, bad request), not transport failures.
+    pub fn post(&self, rel: &str, data: &[u8], content_type: &str) -> Result<(u16, Vec<u8>)> {
+        let mut stream = self.connect()?;
+        let path = format!("{}/{rel}", self.base);
+        write!(
+            stream,
+            "POST {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\
+             Content-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+            self.host_display(),
+            data.len()
+        )?;
+        stream.write_all(data)?;
+        stream.flush()?;
+        read_response(&mut stream)
+            .with_context(|| format!("reading response for POST {}", self.url_for(rel)))
+    }
+
+    /// GET returning the raw `(status, body)` without miss/error
+    /// mapping; the daemon client's status polling wants 404 and 409
+    /// as answers, not errors.
+    pub fn get_raw(&self, rel: &str) -> Result<(u16, Vec<u8>)> {
+        let mut stream = self.connect()?;
+        let path = format!("{}/{rel}", self.base);
+        write!(
+            stream,
+            "GET {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\nAccept: */*\r\n\r\n",
+            self.host_display()
+        )?;
+        stream.flush()?;
+        read_response(&mut stream)
+            .with_context(|| format!("reading response for GET {}", self.url_for(rel)))
+    }
 }
 
 /// Read a full HTTP/1.1 response: status code + body. Understands
@@ -188,9 +224,21 @@ fn read_response(stream: &mut TcpStream) -> Result<(u16, Vec<u8>)> {
     }
     let mut body = raw[header_end + 4..].to_vec();
     if chunked {
-        // drain the stream, then decode the chunked framing
-        read_to_end(stream, &mut body)?;
-        return Ok((status, decode_chunked(&body)?));
+        // Decode incrementally from the chunk framing and stop at the
+        // terminator. Draining to EOF first would stall against any
+        // keep-alive server until the read timeout fired.
+        loop {
+            if let Some(decoded) = decode_chunked_step(&body, false)? {
+                return Ok((status, decoded));
+            }
+            let n = stream.read(&mut buf)?;
+            if n == 0 {
+                // connection closed: a close right after `0\r\n` is
+                // tolerated, anything else is truncation
+                return Ok((status, decode_chunked(&body)?));
+            }
+            body.extend_from_slice(&buf[..n]);
+        }
     }
     match content_length {
         Some(len) => {
@@ -221,16 +269,26 @@ fn find_header_end(raw: &[u8]) -> Option<usize> {
     raw.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
+/// Decode a complete chunked body (connection already at EOF).
 fn decode_chunked(data: &[u8]) -> Result<Vec<u8>> {
+    decode_chunked_step(data, true)?.context("truncated chunk stream")
+}
+
+/// One incremental decoding attempt over the chunked-framing bytes
+/// received so far. `Ok(Some(body))` once the terminating chunk and its
+/// trailer block are complete; `Ok(None)` when the framing is valid but
+/// incomplete and more bytes are needed; `Err` on malformed framing.
+/// With `eof` set, "incomplete" hardens into an error — except a close
+/// directly after `0\r\n`, which is tolerated.
+fn decode_chunked_step(data: &[u8], eof: bool) -> Result<Option<Vec<u8>>> {
     let mut out = Vec::new();
     let mut pos = 0;
     loop {
-        ensure!(pos <= data.len(), "truncated chunk stream");
-        let line_end = data[pos..]
-            .windows(2)
-            .position(|w| w == b"\r\n")
-            .context("truncated chunk header")?
-            + pos;
+        let Some(rel) = data[pos..].windows(2).position(|w| w == b"\r\n") else {
+            ensure!(!eof, "truncated chunk header");
+            return Ok(None);
+        };
+        let line_end = pos + rel;
         let size_str = std::str::from_utf8(&data[pos..line_end]).context("bad chunk size")?;
         let size = usize::from_str_radix(size_str.trim().split(';').next().unwrap_or("").trim(), 16)
             .with_context(|| format!("bad chunk size '{size_str}'"))?;
@@ -239,12 +297,15 @@ fn decode_chunked(data: &[u8]) -> Result<Vec<u8>> {
             // after the 0-size chunk: optional trailer headers, then a
             // final CRLF. Anything else is malformed framing. (A server
             // that closes right after `0\r\n` is tolerated.)
-            while pos < data.len() {
-                let line_end = data[pos..]
-                    .windows(2)
-                    .position(|w| w == b"\r\n")
-                    .context("garbage after final chunk (no CRLF)")?
-                    + pos;
+            loop {
+                if pos == data.len() {
+                    return if eof { Ok(Some(out)) } else { Ok(None) };
+                }
+                let Some(rel) = data[pos..].windows(2).position(|w| w == b"\r\n") else {
+                    ensure!(!eof, "garbage after final chunk (no CRLF)");
+                    return Ok(None);
+                };
+                let line_end = pos + rel;
                 let line = &data[pos..line_end];
                 pos = line_end + 2;
                 if line.is_empty() {
@@ -253,7 +314,7 @@ fn decode_chunked(data: &[u8]) -> Result<Vec<u8>> {
                         "{} trailing bytes after chunked body terminator",
                         data.len() - pos
                     );
-                    break;
+                    return Ok(Some(out));
                 }
                 ensure!(
                     line.contains(&b':'),
@@ -261,15 +322,153 @@ fn decode_chunked(data: &[u8]) -> Result<Vec<u8>> {
                     String::from_utf8_lossy(line)
                 );
             }
-            return Ok(out);
         }
-        ensure!(pos + size + 2 <= data.len(), "truncated chunk body");
+        if pos + size + 2 > data.len() {
+            ensure!(!eof, "truncated chunk body");
+            return Ok(None);
+        }
         ensure!(
             &data[pos + size..pos + size + 2] == b"\r\n",
             "chunk body not terminated by CRLF (malformed framing)"
         );
         out.extend_from_slice(&data[pos..pos + size]);
         pos += size + 2;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server-side primitives — the daemon's half of the protocol, built on
+// the same dumb subset as the client above: HTTP/1.1 request lines,
+// `Content-Length` bodies, one request per connection (`Connection:
+// close`), optional chunked responses for progress streaming.
+// ---------------------------------------------------------------------
+
+/// One parsed incoming request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Raw request path (no percent-decoding; the daemon's routes are
+    /// all plain ASCII).
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Read one HTTP/1.1 request from a stream: request line, headers
+/// (only `Content-Length` is interpreted), then the body.
+pub fn read_request(stream: &mut impl Read) -> Result<HttpRequest> {
+    let mut raw = Vec::new();
+    let mut buf = [0u8; 8192];
+    let header_end = loop {
+        if let Some(i) = find_header_end(&raw) {
+            break i;
+        }
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            if raw.is_empty() {
+                bail!("connection closed before a request");
+            }
+            bail!("connection closed mid-header");
+        }
+        raw.extend_from_slice(&buf[..n]);
+    };
+    let head = std::str::from_utf8(&raw[..header_end]).context("non-UTF-8 request header")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let path = parts
+        .next()
+        .with_context(|| format!("request line '{request_line}' has no path"))?
+        .to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = raw[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut buf)?;
+        ensure!(
+            n > 0,
+            "connection closed mid-body ({}/{content_length} bytes)",
+            body.len()
+        );
+        body.extend_from_slice(&buf[..n]);
+    }
+    body.truncate(content_length);
+    Ok(HttpRequest { method, path, body })
+}
+
+/// Write a complete response with a `Content-Length` body.
+pub fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        status_reason(status),
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Start a chunked-transfer response; follow with [`write_chunk`] calls
+/// and a final [`finish_chunked`]. This is how the daemon streams job
+/// progress without knowing the total length up front.
+pub fn write_chunked_head(stream: &mut impl Write, status: u16, content_type: &str) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        status_reason(status)
+    )?;
+    Ok(())
+}
+
+/// Write one chunk. Empty data is skipped — a zero-length chunk would
+/// terminate the stream ([`finish_chunked`]'s job).
+pub fn write_chunk(stream: &mut impl Write, data: &[u8]) -> Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(stream, "{:x}\r\n", data.len())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Terminate a chunked response.
+pub fn finish_chunked(stream: &mut impl Write) -> Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
     }
 }
 
@@ -342,5 +541,69 @@ mod tests {
         assert!(decode_chunked(b"4\r\nWiki\r\n0\r\ngarbage\r\n\r\n").is_err());
         // chunk body truncated before its CRLF
         assert!(decode_chunked(b"4\r\nWiki").is_err());
+    }
+
+    #[test]
+    fn incremental_decode_waits_for_the_terminator() {
+        let full = b"4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        // every proper prefix is "incomplete, read more" — never an
+        // error, never a premature body
+        for cut in 0..full.len() {
+            let step = decode_chunked_step(&full[..cut], false).unwrap();
+            assert!(step.is_none(), "prefix of {cut} bytes must not resolve");
+        }
+        let body = decode_chunked_step(full, false).unwrap().unwrap();
+        assert_eq!(body, b"Wikipedia");
+        // trailers delay the terminator but still resolve without EOF
+        let trailed = b"3\r\nabc\r\n0\r\nX-Sum: 1\r\n\r\n";
+        assert_eq!(
+            decode_chunked_step(trailed, false).unwrap().unwrap(),
+            b"abc"
+        );
+        // malformed framing is a hard error even mid-stream
+        assert!(decode_chunked_step(b"4\r\nWikiXX", false).is_err());
+        assert!(decode_chunked_step(b"zz\r\n", false).is_err());
+    }
+
+    #[test]
+    fn parses_requests_and_writes_responses() {
+        let mut req: &[u8] =
+            b"POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nbody";
+        let r = read_request(&mut req).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/jobs");
+        assert_eq!(r.body, b"body");
+
+        let mut req: &[u8] = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let r = read_request(&mut req).unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.body.is_empty());
+
+        let mut empty: &[u8] = b"";
+        assert!(read_request(&mut empty).is_err());
+        let mut truncated: &[u8] = b"POST /jobs HTTP/1.1\r\nContent-Length: 9\r\n\r\nbo";
+        assert!(read_request(&mut truncated).is_err());
+
+        let mut out = Vec::new();
+        write_response(&mut out, 404, "text/plain", b"no such job").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\nno such job"), "{text}");
+    }
+
+    #[test]
+    fn chunked_writer_roundtrips_through_the_decoder() {
+        let mut out = Vec::new();
+        write_chunked_head(&mut out, 200, "text/plain").unwrap();
+        write_chunk(&mut out, b"Wiki").unwrap();
+        write_chunk(&mut out, b"").unwrap(); // skipped, not a terminator
+        write_chunk(&mut out, b"pedia").unwrap();
+        finish_chunked(&mut out).unwrap();
+        let head_end = out.windows(4).position(|w| w == b"\r\n\r\n").unwrap();
+        let head = std::str::from_utf8(&out[..head_end]).unwrap();
+        assert!(head.contains("Transfer-Encoding: chunked"), "{head}");
+        assert_eq!(decode_chunked(&out[head_end + 4..]).unwrap(), b"Wikipedia");
     }
 }

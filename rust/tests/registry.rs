@@ -273,6 +273,50 @@ fn http_registry_push_pull_roundtrip() {
     }
 }
 
+/// Regression: a chunked response from a keep-alive server must
+/// resolve as soon as the terminating `0\r\n\r\n` arrives. The old
+/// decoder buffered to EOF, so a server that (correctly) held the
+/// connection open stalled every GET until the 30s read timeout.
+#[test]
+fn chunked_response_from_keep_alive_server_resolves_without_waiting_for_eof() {
+    use imclim::registry::http::HttpEndpoint;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    // the server never closes its side: it answers chunked, then holds
+    // the socket open (keep-alive) far longer than the test tolerates
+    std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let mut raw = Vec::new();
+        let mut buf = [0u8; 1024];
+        while !raw.windows(4).any(|w| w == b"\r\n\r\n") {
+            match stream.read(&mut buf) {
+                Ok(0) | Err(_) => return,
+                Ok(n) => raw.extend_from_slice(&buf[..n]),
+            }
+        }
+        stream
+            .write_all(
+                b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n\
+                  4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n",
+            )
+            .unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_secs(60));
+    });
+
+    let ep = HttpEndpoint::parse(&format!("http://127.0.0.1:{port}/")).unwrap();
+    let started = std::time::Instant::now();
+    let body = ep.get("chunked").unwrap().expect("200 response");
+    assert_eq!(body, b"Wikipedia");
+    assert!(
+        started.elapsed() < std::time::Duration::from_secs(3),
+        "decoder must resolve on the chunk terminator, not wait for \
+         EOF/timeout (took {:?})",
+        started.elapsed()
+    );
+}
+
 // ---------------------------------------------------------------------
 // End-to-end through the CLI binary.
 // ---------------------------------------------------------------------

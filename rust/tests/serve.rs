@@ -1,0 +1,311 @@
+//! Sweep-as-a-service acceptance: the `imclim serve` daemon accepts
+//! sweep jobs from concurrent HTTP clients and answers with CSVs that
+//! are byte-identical to the same query run through the CLI; warm
+//! submissions recompute nothing (zero Monte-Carlo); a mid-run shutdown
+//! drains gracefully (the in-flight job completes, queued jobs are
+//! canceled) without corrupting the shared cache; and a SIGTERM'd
+//! daemon subprocess exits 0.
+//!
+//! Per-job metrics are process-global counters sampled around each
+//! job, so the in-process daemon tests serialize on one mutex — they
+//! pass under the default test harness and under `--test-threads 1`
+//! alike.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use imclim::cli::serve::{start, ServeHandle};
+use imclim::registry::http::HttpEndpoint;
+use imclim::util::json::Json;
+
+/// Serializes the in-process daemon tests (shared global metrics).
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+const GRID_POINTS: usize = 6; // arch qs × n {8,12,16} × b-adc {4,5}
+const GRID_TRIALS: usize = 48;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imclim-serve-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sweep_body() -> &'static str {
+    r#"{"cmd":"sweep","options":{"arch":"qs","n":"8,12,16","b-adc":"4,5",
+        "trials":"48","workers":"2"}}"#
+}
+
+/// The same grid through the CLI binary; returns sweep.csv bytes.
+fn cli_reference_csv(dir: &Path) -> Vec<u8> {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_imclim"))
+        .args([
+            "sweep", "--arch", "qs", "--n", "8,12,16", "--b-adc", "4,5", "--trials", "48",
+            "--workers", "2", "--out-dir",
+        ])
+        .arg(dir)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "reference sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::read(dir.join("sweep.csv")).unwrap()
+}
+
+fn daemon(name: &str) -> (ServeHandle, HttpEndpoint, PathBuf) {
+    let out_dir = tmp_dir(name);
+    let handle = start("127.0.0.1:0", out_dir.clone(), 64).unwrap();
+    let ep = HttpEndpoint::parse(&handle.base_url()).unwrap();
+    (handle, ep, out_dir)
+}
+
+fn post_json(ep: &HttpEndpoint, rel: &str, body: &str) -> (u16, Json) {
+    let (status, bytes) = ep.post(rel, body.as_bytes(), "application/json").unwrap();
+    let text = String::from_utf8_lossy(&bytes);
+    let json = Json::parse(&text).unwrap_or(Json::Null);
+    (status, json)
+}
+
+fn submit(ep: &HttpEndpoint, body: &str) -> u64 {
+    let (status, json) = post_json(ep, "jobs", body);
+    assert_eq!(status, 202, "submission accepted: {json:?}");
+    json.get("id").and_then(Json::as_usize).expect("job id") as u64
+}
+
+/// Poll a job until it reaches a terminal state; returns its status
+/// JSON.
+fn wait_job(ep: &HttpEndpoint, id: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, bytes) = ep.get_raw(&format!("jobs/{id}")).unwrap();
+        assert_eq!(status, 200, "status poll for job {id}");
+        let json = Json::parse(&String::from_utf8_lossy(&bytes)).unwrap();
+        let state = json.get("state").and_then(|v| v.as_str()).unwrap().to_string();
+        if matches!(state.as_str(), "done" | "failed" | "canceled") {
+            return json;
+        }
+        assert!(Instant::now() < deadline, "job {id} stuck in '{state}'");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn metric(json: &Json, name: &str) -> usize {
+    json.get(name)
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("status JSON lacks '{name}': {json:?}"))
+}
+
+#[test]
+fn concurrent_clients_get_cli_identical_csvs_and_warm_jobs_recompute_nothing() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let reference = cli_reference_csv(&tmp_dir("cli-ref"));
+    let (handle, ep, _out) = daemon("concurrent");
+
+    // health first: the daemon answers before any job exists
+    let (st, body) = ep.get_raw("healthz").unwrap();
+    assert_eq!((st, body.as_slice()), (200, &b"ok\n"[..]));
+
+    // four clients race the same grid; the sequential executor computes
+    // it once, every later job is served entirely from the shared cache
+    let statuses: Vec<Json> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let ep = ep.clone();
+                scope.spawn(move || {
+                    let id = submit(&ep, sweep_body());
+                    let status = wait_job(&ep, id);
+                    let (st, csv) = ep.get_raw(&format!("jobs/{id}/result")).unwrap();
+                    assert_eq!(st, 200, "result for job {id}");
+                    (status, csv)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                let (status, csv) = h.join().unwrap();
+                assert_eq!(csv, reference, "served CSV must be byte-identical to the CLI run");
+                status
+            })
+            .collect()
+    });
+
+    let computed: Vec<usize> = statuses.iter().map(|j| metric(j, "points_computed")).collect();
+    assert_eq!(
+        computed.iter().sum::<usize>(),
+        GRID_POINTS,
+        "the grid is computed exactly once across all jobs: {computed:?}"
+    );
+    assert_eq!(
+        computed.iter().filter(|&&c| c == 0).count(),
+        3,
+        "every repeat job is fully warm (zero Monte-Carlo): {computed:?}"
+    );
+    for j in &statuses {
+        assert_eq!(j.get("state").and_then(|v| v.as_str()), Some("done"));
+        let (hits, misses) = (metric(j, "cache_hits"), metric(j, "cache_misses"));
+        assert_eq!(hits + misses, GRID_POINTS, "every point accounted for");
+    }
+    let trials: usize = statuses.iter().map(|j| metric(j, "trials_completed")).sum();
+    assert_eq!(trials, GRID_POINTS * GRID_TRIALS, "trial accounting matches the one cold job");
+
+    // process-wide observability
+    let (st, bytes) = ep.get_raw("stats").unwrap();
+    assert_eq!(st, 200);
+    let stats = Json::parse(&String::from_utf8_lossy(&bytes)).unwrap();
+    assert!(metric(&stats, "cache_hits") >= 3 * GRID_POINTS, "{stats:?}");
+    let jobs = stats.get("jobs").expect("per-state job counts");
+    assert_eq!(metric(jobs, "done"), 4, "{stats:?}");
+    assert_eq!(metric(&stats, "jobs_in_flight"), 0, "{stats:?}");
+    assert_eq!(stats.get("draining"), Some(&Json::Bool(false)));
+
+    handle.shutdown();
+}
+
+#[test]
+fn bad_submissions_and_unknown_jobs_answer_4xx_not_5xx() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (handle, ep, _out) = daemon("errors");
+
+    for (body, needle) in [
+        (r#"{"cmd":"figure"}"#, "unsupported cmd"),
+        (r#"{"options":{}}"#, "missing 'cmd'"),
+        (r#"{"cmd":"sweep","options":{"out-dir":"/x"}}"#, "reserved"),
+        (r#"{"cmd":"sweep","options":{"n":16}}"#, "must be a string"),
+        ("not json", "bad JSON"),
+    ] {
+        let (status, json) = post_json(&ep, "jobs", body);
+        assert_eq!(status, 400, "{body}");
+        let err = json.get("error").and_then(|v| v.as_str()).unwrap_or("");
+        assert!(err.contains(needle), "{err:?} should mention {needle:?}");
+    }
+
+    let (status, _) = ep.get_raw("jobs/9999").unwrap();
+    assert_eq!(status, 404, "unknown job id");
+    let (status, _) = ep.get_raw("jobs/9999/result").unwrap();
+    assert_eq!(status, 404, "unknown job result");
+    let (status, _) = ep.get_raw("jobs/not-a-number").unwrap();
+    assert_eq!(status, 400, "non-numeric job id");
+    let (status, _) = ep.get_raw("no/such/route").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = ep.post("healthz", b"", "text/plain").unwrap();
+    assert_eq!(status, 404, "POST to a GET-only route");
+
+    // a job that fails (bad grid) reports 'failed' with its error, and
+    // its result endpoint answers 409, not a broken 200
+    let id = submit(&ep, r#"{"cmd":"sweep","options":{"n":"garbage"}}"#);
+    let status = wait_job(&ep, id);
+    assert_eq!(status.get("state").and_then(|v| v.as_str()), Some("failed"));
+    assert!(status.get("error").is_some(), "{status:?}");
+    let (st, bytes) = ep.get_raw(&format!("jobs/{id}/result")).unwrap();
+    assert_eq!(st, 409, "no result for a failed job");
+    assert!(String::from_utf8_lossy(&bytes).contains("failed"));
+
+    handle.shutdown();
+}
+
+#[test]
+fn mid_run_shutdown_drains_without_corrupting_the_shared_cache() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let reference = cli_reference_csv(&tmp_dir("drain-cli-ref"));
+    let (handle, ep, out_dir) = daemon("drain");
+
+    // fill the queue behind one job, then pull the plug mid-run
+    let first = submit(&ep, sweep_body());
+    let rest: Vec<u64> = (0..3).map(|_| submit(&ep, sweep_body())).collect();
+
+    // make sure the first job has actually been claimed before draining
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (st, bytes) = ep.get_raw(&format!("jobs/{first}")).unwrap();
+        assert_eq!(st, 200);
+        let json = Json::parse(&String::from_utf8_lossy(&bytes)).unwrap();
+        let state = json.get("state").and_then(|v| v.as_str()).unwrap().to_string();
+        if state != "queued" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "first job never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let (st, body) = ep.post("shutdown", b"", "text/plain").unwrap();
+    assert_eq!((st, body.as_slice()), (200, &b"draining\n"[..]));
+    handle.wait();
+
+    // the in-flight job completed and its CSV matches the CLI twin
+    let first_csv = out_dir.join("jobs").join(first.to_string()).join("sweep.csv");
+    assert_eq!(
+        std::fs::read(&first_csv).unwrap(),
+        reference,
+        "the in-flight job drains to a complete, CLI-identical CSV"
+    );
+    // queued jobs either ran to completion before the drain hit the
+    // queue or were canceled — but a canceled job never leaves a
+    // partial CSV behind
+    for id in rest {
+        let csv = out_dir.join("jobs").join(id.to_string()).join("sweep.csv");
+        if csv.exists() {
+            assert_eq!(std::fs::read(&csv).unwrap(), reference, "job {id}");
+        }
+    }
+
+    // cache integrity after the drain: a CLI run over the daemon's
+    // shared cache is fully warm and byte-identical
+    let warm_dir = tmp_dir("drain-warm");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_imclim"))
+        .args([
+            "sweep", "--arch", "qs", "--n", "8,12,16", "--b-adc", "4,5", "--trials", "48",
+            "--workers", "2", "--cache-dir",
+        ])
+        .arg(out_dir.join("cache"))
+        .arg("--out-dir")
+        .arg(&warm_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("(6 cache hits, 0 computed)"),
+        "the drained daemon's cache serves the whole grid: {stdout}"
+    );
+    assert_eq!(std::fs::read(warm_dir.join("sweep.csv")).unwrap(), reference);
+}
+
+#[cfg(unix)]
+#[test]
+fn sigterm_drains_the_daemon_subprocess_and_it_exits_zero() {
+    use std::io::{BufRead, BufReader};
+
+    // no lock needed: the daemon is a subprocess with its own metrics
+    let out_dir = tmp_dir("sigterm");
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_imclim"))
+        .args(["serve", "--addr", "127.0.0.1:0", "--out-dir"])
+        .arg(&out_dir)
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // the readiness line carries the port-0 assignment
+    let stdout = child.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout).lines();
+    let url = loop {
+        let line = lines.next().expect("daemon exited before listening").unwrap();
+        if let Some(rest) = line.strip_prefix("imclim serve: listening on ") {
+            break rest.to_string();
+        }
+    };
+    let ep = HttpEndpoint::parse(&url).unwrap();
+    let (st, body) = ep.get_raw("healthz").unwrap();
+    assert_eq!((st, body.as_slice()), (200, &b"ok\n"[..]));
+    let id = submit(&ep, sweep_body());
+    wait_job(&ep, id);
+
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGTERM: i32 = 15;
+    assert_eq!(unsafe { kill(child.id() as i32, SIGTERM) }, 0);
+    let status = child.wait().unwrap();
+    assert!(status.success(), "SIGTERM must drain to exit 0: {status:?}");
+}
