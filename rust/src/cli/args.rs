@@ -155,6 +155,27 @@ EXAMPLES:
   curl -s http://host:7878/healthz
   curl -s http://host:7878/stats
   curl -s -X POST http://host:7878/shutdown
+
+  # Prometheus scrape target: counters (cache hits/misses, points,
+  # trials), queue gauges, and cache-probe / MC-chunk latency
+  # histograms in text exposition format
+  curl -s http://host:7878/metrics
+
+  # watch a job live: NDJSON progress events stream over chunked
+  # transfer-encoding as the job runs (one per finished point) and the
+  # stream ends with the job's terminal event; a warm job goes straight
+  # to the terminal event
+  curl -sN http://host:7878/jobs/1/events
+
+  # trace where a sweep spends its time: spans for grid parse, cache
+  # probes, MC chunks, adaptive rounds and CSV emit land in t.json
+  # (Chrome trace format — open in Perfetto); outputs are byte-identical
+  # with and without --trace
+  imclim sweep --arch qs --n 64,128 --b-adc 4:8 --trace t.json
+
+  # progress as data on stderr (same events serve streams), or silence
+  imclim sweep --arch qs --n 64:512:64 --b-adc 4:10 --progress json
+  imclim sweep --arch qs --n 64:512:64 --b-adc 4:10 --quiet
 ";
 
 /// Parse a byte size with optional binary-unit suffix: `"4096"`,

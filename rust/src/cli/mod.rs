@@ -149,10 +149,17 @@ COMMANDS:
                       on the \"listening on\" line), --queue-depth N
                       (default 64; a full queue answers HTTP 429).
                       Endpoints: GET /healthz, GET /stats,
-                      POST /jobs, GET /jobs/<id>, GET /jobs/<id>/result,
-                      POST /jobs/<id>/cancel, POST /shutdown. SIGTERM /
-                      SIGINT / POST /shutdown drain gracefully: the
-                      in-flight job completes, queued jobs are canceled
+                      GET /metrics (Prometheus text exposition of the
+                      counter/gauge/histogram registry), POST /jobs,
+                      GET /jobs/<id> (status JSON incl. queued_at /
+                      started_at / finished_at / duration_ms),
+                      GET /jobs/<id>/events (live NDJSON progress
+                      stream over chunked transfer-encoding, ending
+                      with the job's terminal event),
+                      GET /jobs/<id>/result, POST /jobs/<id>/cancel,
+                      POST /shutdown. SIGTERM / SIGINT / POST /shutdown
+                      drain gracefully: the in-flight job completes,
+                      queued jobs are canceled
   assign              precision assignment: --snr-a DB [--margin DB]
   dnn                 train the Fig. 2 MLP: [--epochs E]
   smoke               PJRT artifact round-trip check
@@ -187,6 +194,19 @@ COMMON OPTIONS:
                       order (bit-identical to --workers 1)
   --no-cache          bypass the content-addressed result cache
   --verbose           progress output
+  --quiet             suppress progress output (errors still print);
+                      wins over --verbose and --progress
+  --progress MODE     progress stream mode: human (rate-limited stderr
+                      lines, >=100 ms apart) or json (one NDJSON event
+                      per line on stderr — the same events `serve`
+                      streams at /jobs/<id>/events)
+  --trace FILE        record structured spans (grid parse, cache probe,
+                      MC chunks, adaptive rounds, frontier phases, cache
+                      merge, CSV emit) and write a Chrome-trace-format
+                      JSON file on exit; load it in Perfetto or
+                      chrome://tracing. Tracing never changes outputs:
+                      sweep.csv and cache records are byte-identical
+                      with and without --trace
 ";
 
 pub fn main() {
@@ -202,6 +222,21 @@ pub fn main() {
 }
 
 pub fn run(args: &Args) -> anyhow::Result<()> {
+    configure_observability(args)?;
+    let result = dispatch(args);
+    // The trace is written even when the command failed: a trace of the
+    // work done up to the error is exactly what --trace is for. Trace
+    // write failures are reported but never mask the command's result.
+    if let Some(path) = args.opt("trace").map(PathBuf::from) {
+        match crate::obs::trace::write_chrome_trace(&path) {
+            Ok(n) => eprintln!("trace: {n} spans -> {}", path.display()),
+            Err(e) => eprintln!("trace: failed to write {}: {e:#}", path.display()),
+        }
+    }
+    result
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.pos(0) {
         Some("figure") => cmd_figure(args),
         Some("table") => cmd_table(args),
@@ -221,6 +256,30 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
     }
+}
+
+/// Apply the global observability switches before any command runs:
+/// progress-stream mode (--quiet wins over --progress, which wins over
+/// --verbose) and span recording (--trace). Both are process-global and
+/// inert by default, so commands that never emit stay zero-cost.
+fn configure_observability(args: &Args) -> anyhow::Result<()> {
+    use crate::obs::progress::{set_mode, ProgressMode};
+    let mode = if args.has("quiet") {
+        ProgressMode::Off
+    } else {
+        match args.opt("progress") {
+            Some("json") => ProgressMode::Json,
+            Some("human") => ProgressMode::Human,
+            Some(other) => anyhow::bail!("--progress expects 'human' or 'json', got '{other}'"),
+            None if args.has("verbose") => ProgressMode::Human,
+            None => ProgressMode::Off,
+        }
+    };
+    set_mode(mode);
+    if args.opt("trace").is_some() {
+        crate::obs::trace::enable();
+    }
+    Ok(())
 }
 
 /// Build the figure context (and keep the PJRT service alive with it).
@@ -256,7 +315,7 @@ fn make_ctx(args: &Args) -> anyhow::Result<(FigCtx, Option<PjrtService>)> {
         "workers",
         crate::coordinator::SweepOptions::default().workers,
     );
-    let verbose = args.has("verbose");
+    let verbose = args.has("verbose") && !args.has("quiet");
     let (backend, service) = match args.opt("backend").unwrap_or("native") {
         "native" => (Backend::Native, None),
         "pjrt" => {
@@ -408,8 +467,12 @@ fn orchestrate_sharded_sweep(args: &Args, procs: usize) -> anyhow::Result<()> {
         let dir = out_dir.join(format!("shard-{i}"));
         let mut command = std::process::Command::new(&exe);
         command.arg("sweep");
+        // trace/progress stay with the parent: shards sharing the
+        // parent's trace path would race on the file, and forwarded
+        // shard lines carry a "[shard i/k]" prefix that would corrupt
+        // an NDJSON stream (--verbose and --quiet still pass through).
         for (k, v) in &args.options {
-            if matches!(k.as_str(), "out-dir" | "procs" | "shard") {
+            if matches!(k.as_str(), "out-dir" | "procs" | "shard" | "trace" | "progress") {
                 continue;
             }
             command.arg(format!("--{k}")).arg(v);
@@ -438,22 +501,27 @@ fn orchestrate_sharded_sweep(args: &Args, procs: usize) -> anyhow::Result<()> {
         });
         shard_dirs.push(dir);
     }
-    eprintln!(
-        "sweep: distributing over {procs} shard processes under {}",
-        out_dir.display()
-    );
+    let quiet = args.has("quiet");
+    if !quiet {
+        eprintln!(
+            "sweep: distributing over {procs} shard processes under {}",
+            out_dir.display()
+        );
+    }
     run_shard_procs(shards)?;
 
     let dst = out_dir.join("cache");
     let sources: Vec<PathBuf> = shard_dirs.iter().map(|d| d.join("cache")).collect();
     let report = merge_cache_dirs(&dst, &sources)?;
-    eprintln!(
-        "sweep: merged {} shard caches into {} ({} new records, {} already shared)",
-        procs,
-        dst.display(),
-        report.copied,
-        report.identical
-    );
+    if !quiet {
+        eprintln!(
+            "sweep: merged {} shard caches into {} ({} new records, {} already shared)",
+            procs,
+            dst.display(),
+            report.copied,
+            report.identical
+        );
+    }
     if !report.collisions.is_empty() {
         eprintln!(
             "warning: {} cache keys collided with differing payloads (kept existing): {:?}",
@@ -477,6 +545,8 @@ pub(crate) fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyh
     let (ctx, _service) = make_ctx(args)?;
     std::fs::create_dir_all(&ctx.out_dir)?;
 
+    // spans grid parsing + validation through point/meta construction
+    let parse_span = crate::obs::trace::span("grid_parse", "sweep");
     let archs = csv_list(args.opt("arch").unwrap_or("qs"));
     let nodes = csv_list(args.opt("node").unwrap_or("65"));
     let dists = csv_list(args.opt("dist").unwrap_or("uniform"));
@@ -581,9 +651,13 @@ pub(crate) fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyh
         });
         points.push(point);
     }
+    drop(parse_span);
 
     let (results, stats) = ctx.engine().run_with_stats(points);
 
+    let emit_span = crate::obs::trace::span_with("csv_emit", "sweep", || {
+        format!("{} rows", results.len())
+    });
     let mut csv = CsvWriter::new(&[
         "arch",
         "node_nm",
@@ -628,6 +702,7 @@ pub(crate) fn run_sweep_grid(args: &Args, shard: Option<(usize, usize)>) -> anyh
     }
     let csv_path = ctx.csv_path("sweep");
     csv.write_to(&csv_path)?;
+    drop(emit_span);
 
     if results.len() == 1 {
         let m = &meta[0];
@@ -848,12 +923,16 @@ pub(crate) fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
 
     // the CSV (with its sim_error column) is written even when
     // validation points failed, so the failure below is inspectable
+    let emit_span = crate::obs::trace::span_with("csv_emit", "pareto", || {
+        format!("{} rows", frontier.points.len())
+    });
     let mut csv = design_point_csv();
     for (p, (sim, err)) in frontier.points.iter().zip(&sims) {
         design_point_row(&mut csv, p, sim, err);
     }
     let csv_path = ctx.csv_path("pareto");
     csv.write_to(&csv_path)?;
+    drop(emit_span);
     anyhow::ensure!(
         sim_errors == 0,
         "{} validation point(s) failed (see the sim_error column in {})",
@@ -920,7 +999,12 @@ pub(crate) fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
             ]);
         }
         let cross_path = ctx.csv_path("crossover");
-        csv.write_to(&cross_path)?;
+        {
+            let _span = crate::obs::trace::span_with("csv_emit", "pareto", || {
+                format!("{} crossover rows", report.rows.len())
+            });
+            csv.write_to(&cross_path)?;
+        }
         match report.crossover_snr_t_db {
             Some(c) => println!(
                 "crossover: QS-Arch preferred below {c:.2} dB, QR-Arch at and above \
@@ -973,10 +1057,12 @@ pub(crate) fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         );
     };
 
+    let emit_span = crate::obs::trace::span("csv_emit", "optimize");
     let mut csv = design_point_csv();
     design_point_row(&mut csv, best, "", "");
     let csv_path = ctx.csv_path("optimize");
     csv.write_to(&csv_path)?;
+    drop(emit_span);
 
     let mut t = Table::new(&["metric", "value"]).with_title(&format!(
         "{} optimum: {}",

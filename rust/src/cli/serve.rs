@@ -14,8 +14,16 @@
 //! Endpoints:
 //!   GET  /healthz            liveness probe ("ok")
 //!   GET  /stats              process counters + per-state job counts
+//!   GET  /metrics            Prometheus text exposition of the whole
+//!                            `obs::registry` (counters, job gauges,
+//!                            cache-probe / MC-chunk latency histograms)
 //!   POST /jobs               submit {"cmd","options","switches"} → 202
-//!   GET  /jobs/<id>          job status JSON (state, per-job metrics)
+//!   GET  /jobs/<id>          job status JSON (state, per-job metrics,
+//!                            queued/started/finished timestamps)
+//!   GET  /jobs/<id>/events   live NDJSON progress stream (chunked
+//!                            transfer-encoding); events appear as the
+//!                            job produces them and the stream ends
+//!                            with the job's terminal event
 //!   GET  /jobs/<id>/result   the result CSV once the job is done
 //!   POST /jobs/<id>/cancel   cancel a queued job (in-flight ones finish)
 //!   POST /shutdown           graceful drain (same path as SIGTERM)
@@ -40,7 +48,11 @@ use crate::coordinator::jobs::{
     CancelOutcome, JobManager, JobSpec, JobState, JobStatus, SubmitError,
 };
 use crate::coordinator::metrics;
-use crate::registry::http::{read_request, write_response, HttpRequest};
+use crate::obs::progress::EventLog;
+use crate::obs::registry as obs_registry;
+use crate::registry::http::{
+    finish_chunked, read_request, write_chunk, write_chunked_head, write_response, HttpRequest,
+};
 use crate::util::json::{num, obj, s, Json};
 
 use super::args::Args;
@@ -51,6 +63,9 @@ static SIGNAL_SHUTDOWN: AtomicBool = AtomicBool::new(false);
 
 const ACCEPT_POLL: Duration = Duration::from_millis(20);
 const CONN_TIMEOUT: Duration = Duration::from_secs(30);
+/// How often an idle `/events` stream re-checks its job's log for new
+/// lines (and the daemon for a drain request).
+const EVENT_POLL: Duration = Duration::from_millis(100);
 
 /// A running daemon. Used in-process by the integration tests; the CLI
 /// wraps it in [`cmd_serve`].
@@ -247,6 +262,20 @@ fn route(
             "application/json",
             stats_json(manager).to_string().as_bytes(),
         ),
+        ("GET", "/metrics") => {
+            // job gauges are sampled at scrape time: the registry's
+            // counters accumulate on their own, but queue depths are
+            // the manager's state
+            let q = manager.queue_stats();
+            obs_registry::JOBS_QUEUED.set(q.queued as u64);
+            obs_registry::JOBS_RUNNING.set(q.running as u64);
+            write_response(
+                stream,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                obs_registry::render_prometheus().as_bytes(),
+            )
+        }
         ("POST", "/jobs") => match parse_job_spec(&req.body) {
             Err(msg) => error_response(stream, 400, &msg),
             Ok(spec) => match manager.submit(spec) {
@@ -271,7 +300,7 @@ fn route(
             shutdown.store(true, Ordering::SeqCst);
             write_response(stream, 200, "text/plain", b"draining\n")
         }
-        (method, p) if p.starts_with("/jobs/") => job_route(stream, method, p, manager),
+        (method, p) if p.starts_with("/jobs/") => job_route(stream, method, p, manager, shutdown),
         ("GET" | "POST", _) => error_response(stream, 404, "no such route"),
         _ => error_response(stream, 405, "method not allowed"),
     }
@@ -282,6 +311,7 @@ fn job_route(
     method: &str,
     path: &str,
     manager: &JobManager,
+    shutdown: &AtomicBool,
 ) -> anyhow::Result<()> {
     let rest = &path["/jobs/".len()..];
     let (id_str, tail) = match rest.split_once('/') {
@@ -300,6 +330,10 @@ fn job_route(
                 status_json(&st).to_string().as_bytes(),
             ),
             None => error_response(stream, 404, "no such job"),
+        },
+        ("GET", Some("events")) => match manager.events(id) {
+            None => error_response(stream, 404, "no such job"),
+            Some(log) => stream_job_events(stream, &log, shutdown),
         },
         ("GET", Some("result")) => match manager.status(id) {
             None => error_response(stream, 404, "no such job"),
@@ -331,6 +365,39 @@ fn job_route(
         },
         _ => error_response(stream, 404, "no such route"),
     }
+}
+
+/// Stream a job's progress log as NDJSON over chunked transfer
+/// encoding: everything logged so far immediately, then new events as
+/// the job appends them, terminating once the log closes (its last
+/// line is the job's terminal event). The drain check matters for
+/// correctness, not just latency: the accept loop joins connection
+/// handlers *before* `JobManager::shutdown` cancels queued jobs, so a
+/// queued job's log would never close during a drain — the stream must
+/// end itself rather than hold the join hostage.
+fn stream_job_events(
+    stream: &mut TcpStream,
+    log: &EventLog,
+    shutdown: &AtomicBool,
+) -> anyhow::Result<()> {
+    // a long-running job may be silent between events; the connection
+    // timeout bounds a single blocked write, not the stream's lifetime
+    write_chunked_head(stream, 200, "application/x-ndjson")?;
+    let mut from = 0usize;
+    loop {
+        let (lines, closed) = log.wait_since(from, EVENT_POLL);
+        from += lines.len();
+        for line in &lines {
+            write_chunk(stream, format!("{line}\n").as_bytes())?;
+        }
+        if closed {
+            break;
+        }
+        if shutdown.load(Ordering::SeqCst) || SIGNAL_SHUTDOWN.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    finish_chunked(stream)
 }
 
 fn error_response(stream: &mut TcpStream, status: u16, msg: &str) -> anyhow::Result<()> {
@@ -379,9 +446,13 @@ fn parse_job_spec(body: &[u8]) -> Result<JobSpec, String> {
         }
     }
     for k in options.keys() {
+        // trace and progress are process-global observability switches:
+        // a job toggling them would retarget the daemon's own trace
+        // slab / stderr stream (use GET /jobs/<id>/events instead)
         if matches!(
             k.as_str(),
-            "out-dir" | "cache-dir" | "procs" | "shard" | "backend" | "artifacts"
+            "out-dir" | "cache-dir" | "procs" | "shard" | "backend" | "artifacts" | "trace"
+                | "progress"
         ) {
             return Err(format!("option '--{k}' is reserved by the daemon"));
         }
@@ -407,7 +478,17 @@ fn status_json(st: &JobStatus) -> Json {
         ("cache_misses", num(st.metrics.cache_misses as f64)),
         ("points_computed", num(st.metrics.points_computed as f64)),
         ("trials_completed", num(st.metrics.trials_completed as f64)),
+        ("queued_at_ms", num(st.queued_at_ms as f64)),
     ];
+    if let Some(t) = st.started_at_ms {
+        fields.push(("started_at_ms", num(t as f64)));
+    }
+    if let Some(t) = st.finished_at_ms {
+        fields.push(("finished_at_ms", num(t as f64)));
+    }
+    if let Some(d) = st.duration_ms() {
+        fields.push(("duration_ms", num(d as f64)));
+    }
     if let Some(e) = &st.error {
         fields.push(("error", s(e)));
     }
@@ -464,6 +545,8 @@ mod tests {
             (br#"{"cmd":"sweep","options":{"n":16}}"#, "must be a string"),
             (br#"{"cmd":"sweep","options":{"out-dir":"/x"}}"#, "reserved"),
             (br#"{"cmd":"sweep","options":{"procs":"4"}}"#, "reserved"),
+            (br#"{"cmd":"sweep","options":{"trace":"/t.json"}}"#, "reserved"),
+            (br#"{"cmd":"sweep","options":{"progress":"json"}}"#, "reserved"),
             (br#"{"cmd":"sweep","switches":["no-cache"]}"#, "not available"),
             (b"not json", "bad JSON"),
             (b"\xff\xfe", "not UTF-8"),
@@ -483,20 +566,37 @@ mod tests {
             result_path: Some(PathBuf::from("/x/sweep.csv")),
             metrics: crate::coordinator::MetricsSnapshot {
                 cache_hits: 6,
-                cache_misses: 0,
-                points_computed: 0,
-                trials_completed: 0,
-                mc_errors: 0,
+                ..Default::default()
             },
+            queued_at_ms: 1_000,
+            started_at_ms: Some(1_250),
+            finished_at_ms: Some(1_900),
         };
         let j = status_json(&st);
         assert_eq!(j.get("id").and_then(Json::as_usize), Some(3));
         assert_eq!(j.get("state").and_then(|v| v.as_str()), Some("done"));
         assert_eq!(j.get("cache_hits").and_then(Json::as_usize), Some(6));
         assert_eq!(j.get("result").and_then(|v| v.as_str()), Some("/jobs/3/result"));
+        assert_eq!(j.get("queued_at_ms").and_then(Json::as_usize), Some(1_000));
+        assert_eq!(j.get("started_at_ms").and_then(Json::as_usize), Some(1_250));
+        assert_eq!(j.get("finished_at_ms").and_then(Json::as_usize), Some(1_900));
+        assert_eq!(j.get("duration_ms").and_then(Json::as_usize), Some(650));
         let text = j.to_string();
         let reparsed = Json::parse(&text).unwrap();
         let computed = reparsed.get("points_computed").and_then(Json::as_usize);
         assert_eq!(computed, Some(0));
+
+        // timestamps a queued job doesn't have yet are simply absent
+        let st = JobStatus {
+            started_at_ms: None,
+            finished_at_ms: None,
+            state: JobState::Queued,
+            result_path: None,
+            ..st
+        };
+        let j = status_json(&st);
+        assert!(j.get("started_at_ms").is_none());
+        assert!(j.get("duration_ms").is_none());
+        assert!(j.get("result").is_none());
     }
 }

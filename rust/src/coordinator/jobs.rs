@@ -16,6 +16,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use super::metrics::{self, MetricsSnapshot};
+use crate::obs::progress::{self, EventLog};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobState {
@@ -64,6 +65,29 @@ pub struct JobStatus {
     /// Counters accumulated while this job ran (exact: the executor is
     /// single-threaded, so exactly one job runs at a time).
     pub metrics: MetricsSnapshot,
+    /// Wall-clock lifecycle stamps (Unix milliseconds): submission,
+    /// executor claim, terminal transition.
+    pub queued_at_ms: u64,
+    pub started_at_ms: Option<u64>,
+    pub finished_at_ms: Option<u64>,
+}
+
+impl JobStatus {
+    /// Running time (`finished - started`), once both stamps exist.
+    pub fn duration_ms(&self) -> Option<u64> {
+        match (self.started_at_ms, self.finished_at_ms) {
+            (Some(a), Some(b)) => Some(b.saturating_sub(a)),
+            _ => None,
+        }
+    }
+}
+
+/// Current wall clock as Unix milliseconds.
+fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -99,6 +123,41 @@ pub type JobRunner = dyn Fn(u64, &JobSpec) -> anyhow::Result<PathBuf> + Send + S
 struct Job {
     spec: JobSpec,
     status: JobStatus,
+    /// Structured progress events collected while the job runs, closed
+    /// with a terminal event — the backing store of
+    /// `GET /jobs/<id>/events`.
+    events: Arc<EventLog>,
+}
+
+/// Append the job's terminal event and close its log. Called exactly
+/// once per job, on whichever path finishes it (run, cancel, drain).
+fn finish_events(job: &Job) {
+    let m = &job.status.metrics;
+    let mut pairs = vec![
+        ("id", crate::util::json::num(job.status.id as f64)),
+        ("state", crate::util::json::s(job.status.state.as_str())),
+        ("cache_hits", crate::util::json::num(m.cache_hits as f64)),
+        (
+            "cache_misses",
+            crate::util::json::num(m.cache_misses as f64),
+        ),
+        (
+            "points_computed",
+            crate::util::json::num(m.points_computed as f64),
+        ),
+        (
+            "trials_completed",
+            crate::util::json::num(m.trials_completed as f64),
+        ),
+    ];
+    if let Some(d) = job.status.duration_ms() {
+        pairs.push(("duration_ms", crate::util::json::num(d as f64)));
+    }
+    if let Some(e) = &job.status.error {
+        pairs.push(("error", crate::util::json::s(e)));
+    }
+    job.events.append(progress::terminal_line(pairs));
+    job.events.close();
 }
 
 #[derive(Default)]
@@ -159,8 +218,18 @@ impl JobManager {
             error: None,
             result_path: None,
             metrics: MetricsSnapshot::default(),
+            queued_at_ms: now_ms(),
+            started_at_ms: None,
+            finished_at_ms: None,
         };
-        st.jobs.insert(id, Job { spec, status });
+        st.jobs.insert(
+            id,
+            Job {
+                spec,
+                status,
+                events: EventLog::new(),
+            },
+        );
         st.queue.push_back(id);
         self.shared.cv.notify_all();
         Ok(id)
@@ -169,6 +238,12 @@ impl JobManager {
     pub fn status(&self, id: u64) -> Option<JobStatus> {
         let st = self.shared.state.lock().unwrap();
         st.jobs.get(&id).map(|j| j.status.clone())
+    }
+
+    /// The job's progress event log (streamed by `GET /jobs/<id>/events`).
+    pub fn events(&self, id: u64) -> Option<Arc<EventLog>> {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.get(&id).map(|j| Arc::clone(&j.events))
     }
 
     pub fn cancel(&self, id: u64) -> CancelOutcome {
@@ -180,7 +255,10 @@ impl JobManager {
         match state {
             JobState::Queued => {
                 st.queue.retain(|&q| q != id);
-                st.jobs.get_mut(&id).expect("job exists").status.state = JobState::Canceled;
+                let job = st.jobs.get_mut(&id).expect("job exists");
+                job.status.state = JobState::Canceled;
+                job.status.finished_at_ms = Some(now_ms());
+                finish_events(job);
                 CancelOutcome::Canceled
             }
             JobState::Running => CancelOutcome::Running,
@@ -224,7 +302,7 @@ impl JobManager {
 
 fn executor_loop(shared: Arc<Shared>) {
     loop {
-        let (id, spec) = {
+        let (id, spec, events) = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if st.shutting_down {
@@ -234,6 +312,8 @@ fn executor_loop(shared: Arc<Shared>) {
                     while let Some(id) = st.queue.pop_front() {
                         if let Some(job) = st.jobs.get_mut(&id) {
                             job.status.state = JobState::Canceled;
+                            job.status.finished_at_ms = Some(now_ms());
+                            finish_events(job);
                         }
                     }
                     return;
@@ -241,24 +321,29 @@ fn executor_loop(shared: Arc<Shared>) {
                 if let Some(id) = st.queue.pop_front() {
                     let job = st.jobs.get_mut(&id).expect("queued job exists");
                     job.status.state = JobState::Running;
-                    let spec = job.spec.clone();
-                    break (id, spec);
+                    job.status.started_at_ms = Some(now_ms());
+                    break (id, job.spec.clone(), Arc::clone(&job.events));
                 }
                 st = shared.cv.wait(st).unwrap();
             }
         };
 
         let before = metrics::snapshot();
+        // route the scheduler's progress events into this job's log
+        // while it runs (one collector at a time: jobs are sequential)
+        progress::install_collector(Arc::clone(&events));
         // a panicking runner must not take the executor (and with it the
         // whole daemon) down — it fails the one job
         let result =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (shared.runner)(id, &spec)))
                 .unwrap_or_else(|_| Err(anyhow::anyhow!("job execution panicked")));
+        progress::clear_collector();
         let delta = metrics::snapshot().since(&before);
 
         let mut st = shared.state.lock().unwrap();
         if let Some(job) = st.jobs.get_mut(&id) {
             job.status.metrics = delta;
+            job.status.finished_at_ms = Some(now_ms());
             match result {
                 Ok(path) => {
                     job.status.state = JobState::Done;
@@ -269,6 +354,7 @@ fn executor_loop(shared: Arc<Shared>) {
                     job.status.error = Some(format!("{e:#}"));
                 }
             }
+            finish_events(job);
         }
         shared.cv.notify_all();
     }
@@ -324,6 +410,45 @@ mod tests {
             &[(a, "sweep".to_string()), (b, "boom".to_string())]
         );
         assert_eq!(mgr.status(999).map(|s| s.id), None);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn lifecycle_stamps_and_terminal_event() {
+        let mgr = JobManager::new(8, Box::new(|id, _| Ok(PathBuf::from(format!("/out/{id}.csv")))));
+        let id = mgr.submit(spec("sweep")).unwrap();
+        let st = wait_terminal(&mgr, id);
+        assert!(st.queued_at_ms > 0);
+        assert!(st.started_at_ms.unwrap() >= st.queued_at_ms);
+        assert!(st.finished_at_ms.unwrap() >= st.started_at_ms.unwrap());
+        assert!(st.duration_ms().is_some());
+        let log = mgr.events(id).expect("event log exists");
+        let (lines, closed) = log.wait_since(0, Duration::from_secs(5));
+        assert!(closed, "log closes at terminal state");
+        let last = lines.last().expect("terminal event present");
+        assert!(last.contains("\"kind\":\"terminal\""), "{last}");
+        assert!(last.contains("\"state\":\"done\""), "{last}");
+
+        // canceled-while-queued jobs also get a closed log + terminal
+        let (tx, rx) = mpsc::channel::<()>();
+        let rx = Mutex::new(rx);
+        let mgr2 = JobManager::new(
+            8,
+            Box::new(move |_, _| {
+                let _ = rx.lock().unwrap().recv();
+                Ok(PathBuf::from("/out/slow.csv"))
+            }),
+        );
+        let _running = mgr2.submit(spec("sweep")).unwrap();
+        let queued = mgr2.submit(spec("sweep")).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(mgr2.cancel(queued), CancelOutcome::Canceled);
+        let log = mgr2.events(queued).unwrap();
+        let (lines, closed) = log.wait_since(0, Duration::from_secs(5));
+        assert!(closed);
+        assert!(lines.last().unwrap().contains("\"state\":\"canceled\""));
+        tx.send(()).unwrap();
+        mgr2.shutdown();
         mgr.shutdown();
     }
 

@@ -3,21 +3,22 @@
 //!
 //! The scheduler hands `SweepOptions` around by value (`Copy`), so
 //! there is no place to thread a metrics handle through the worker
-//! pool; global atomics are the honest fit. Counters are monotone
-//! totals since process start: consumers report them as-is (the daemon)
-//! or difference two [`snapshot`]s around a region of interest
-//! (per-job accounting).
+//! pool; global atomics are the honest fit. Since PR 9 the atomics
+//! themselves live in [`crate::obs::registry`] (where they are also
+//! exported as Prometheus text at `GET /metrics`); this module remains
+//! the snapshot/delta facade the engine and serve executor use.
+//! Counters are monotone totals since process start: consumers report
+//! them as-is (the daemon) or difference two [`snapshot`]s around a
+//! region of interest (per-job accounting).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
-static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
-static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
-static POINTS_COMPUTED: AtomicU64 = AtomicU64::new(0);
-static TRIALS_COMPLETED: AtomicU64 = AtomicU64::new(0);
-static MC_ERRORS: AtomicU64 = AtomicU64::new(0);
+use crate::obs::registry::{self, HistogramSnapshot};
 
 /// One consistent-enough view of the counters (reads are relaxed and
 /// independent; totals are exact once the measured region is quiescent).
+///
+/// The first five fields are the PR 8 counters and keep the JSON shape
+/// of `GET /stats` unchanged; the remaining families (adaptive rounds,
+/// cache-probe and MC-chunk latency histograms) are additive.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     pub cache_hits: u64,
@@ -25,6 +26,9 @@ pub struct MetricsSnapshot {
     pub points_computed: u64,
     pub trials_completed: u64,
     pub mc_errors: u64,
+    pub adaptive_rounds: u64,
+    pub cache_probe: HistogramSnapshot,
+    pub mc_chunk: HistogramSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -36,38 +40,44 @@ impl MetricsSnapshot {
             points_computed: self.points_computed.wrapping_sub(earlier.points_computed),
             trials_completed: self.trials_completed.wrapping_sub(earlier.trials_completed),
             mc_errors: self.mc_errors.wrapping_sub(earlier.mc_errors),
+            adaptive_rounds: self.adaptive_rounds.wrapping_sub(earlier.adaptive_rounds),
+            cache_probe: self.cache_probe.since(&earlier.cache_probe),
+            mc_chunk: self.mc_chunk.since(&earlier.mc_chunk),
         }
     }
 }
 
 pub fn snapshot() -> MetricsSnapshot {
     MetricsSnapshot {
-        cache_hits: CACHE_HITS.load(Ordering::Relaxed),
-        cache_misses: CACHE_MISSES.load(Ordering::Relaxed),
-        points_computed: POINTS_COMPUTED.load(Ordering::Relaxed),
-        trials_completed: TRIALS_COMPLETED.load(Ordering::Relaxed),
-        mc_errors: MC_ERRORS.load(Ordering::Relaxed),
+        cache_hits: registry::CACHE_HITS.get(),
+        cache_misses: registry::CACHE_MISSES.get(),
+        points_computed: registry::POINTS_COMPUTED.get(),
+        trials_completed: registry::TRIALS_COMPLETED.get(),
+        mc_errors: registry::MC_ERRORS.get(),
+        adaptive_rounds: registry::ADAPTIVE_ROUNDS.get(),
+        cache_probe: registry::CACHE_PROBE_SECONDS.snapshot(),
+        mc_chunk: registry::MC_CHUNK_SECONDS.snapshot(),
     }
 }
 
 pub fn add_cache_hits(n: u64) {
-    CACHE_HITS.fetch_add(n, Ordering::Relaxed);
+    registry::CACHE_HITS.add(n);
 }
 
 pub fn add_cache_misses(n: u64) {
-    CACHE_MISSES.fetch_add(n, Ordering::Relaxed);
+    registry::CACHE_MISSES.add(n);
 }
 
 pub fn add_points_computed(n: u64) {
-    POINTS_COMPUTED.fetch_add(n, Ordering::Relaxed);
+    registry::POINTS_COMPUTED.add(n);
 }
 
 pub fn add_trials_completed(n: u64) {
-    TRIALS_COMPLETED.fetch_add(n, Ordering::Relaxed);
+    registry::TRIALS_COMPLETED.add(n);
 }
 
 pub fn add_mc_errors(n: u64) {
-    MC_ERRORS.fetch_add(n, Ordering::Relaxed);
+    registry::MC_ERRORS.add(n);
 }
 
 #[cfg(test)]
@@ -86,5 +96,18 @@ mod tests {
         assert!(delta.cache_hits >= 3);
         assert!(delta.trials_completed >= 512);
         assert!(delta.mc_errors >= 1);
+    }
+
+    #[test]
+    fn histogram_families_flow_into_snapshots() {
+        let before = snapshot();
+        registry::CACHE_PROBE_SECONDS.observe(std::time::Duration::from_micros(80));
+        registry::MC_CHUNK_SECONDS.observe(std::time::Duration::from_millis(2));
+        registry::ADAPTIVE_ROUNDS.add(2);
+        let delta = snapshot().since(&before);
+        assert!(delta.cache_probe.count >= 1);
+        assert!(delta.cache_probe.sum_us >= 80);
+        assert!(delta.mc_chunk.count >= 1);
+        assert!(delta.adaptive_rounds >= 2);
     }
 }

@@ -133,7 +133,11 @@ impl Backend {
 #[derive(Clone, Copy, Debug)]
 pub struct SweepOptions {
     pub workers: usize,
-    /// Print progress lines.
+    /// Print progress lines. Progress is emitted as structured events
+    /// through `crate::obs::progress` (which renders the human lines,
+    /// rate-limited); this flag is the library-level fallback that
+    /// keeps those lines printing for embedders that never select a
+    /// CLI progress mode.
     pub verbose: bool,
 }
 
@@ -199,6 +203,7 @@ pub fn run_sweep(
     if n_points == 0 {
         return Vec::new();
     }
+    crate::obs::progress::mc_start(n_points as u64);
 
     let mut jobs: Vec<Job> = Vec::new();
     for (i, point) in points.iter().enumerate() {
@@ -262,13 +267,19 @@ pub fn run_sweep(
                                     - 1;
                                 debug_assert_eq!(left, 0);
                                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
-                                if opts.verbose {
-                                    eprintln!(
-                                        "[{finished}/{n_points}] {} snr_t={:.2} dB",
-                                        point.id,
-                                        res.as_ref().map(|m| m.snr_t_db).unwrap_or(f64::NAN)
-                                    );
-                                }
+                                crate::obs::progress::point_done(
+                                    &point.id,
+                                    finished as u64,
+                                    n_points as u64,
+                                    res.as_ref().map(|m| m.trials).unwrap_or(0),
+                                    0,
+                                    Some(
+                                        res.as_ref()
+                                            .map(|m| m.snr_t_db)
+                                            .unwrap_or(f64::NAN),
+                                    ),
+                                    opts.verbose,
+                                );
                                 local.push(WorkItem::Result(match res {
                                     Ok(measured) => SweepResult {
                                         id: point.id.clone(),
@@ -306,13 +317,15 @@ pub fn run_sweep(
                                     - 1;
                                 if left == 0 {
                                     let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
-                                    if opts.verbose {
-                                        eprintln!(
-                                            "[{finished}/{n_points}] {} ({} chunks)",
-                                            point.id,
-                                            crate::mc::n_chunks(point.trials)
-                                        );
-                                    }
+                                    crate::obs::progress::point_done(
+                                        &point.id,
+                                        finished as u64,
+                                        n_points as u64,
+                                        point.trials as u64,
+                                        crate::mc::n_chunks(point.trials) as u64,
+                                        None,
+                                        opts.verbose,
+                                    );
                                 }
                                 local.push(WorkItem::Chunk {
                                     point: index,

@@ -221,12 +221,24 @@ pub struct ShardCommand {
 /// failing shard never orphans its siblings: all spawned children are
 /// drained and waited on before the combined error is reported.
 pub fn run_shard_procs(shards: Vec<ShardCommand>) -> Result<()> {
+    let n_shards = shards.len();
+    let _span = crate::obs::trace::span_with("shard_procs", "coordinator", || {
+        format!("{n_shards} shards")
+    });
     let mut failures: Vec<String> = Vec::new();
     let mut children: Vec<(String, Child)> = Vec::new();
-    for mut shard in shards {
+    for (i, mut shard) in shards.into_iter().enumerate() {
         shard.command.stdout(Stdio::piped()).stderr(Stdio::piped());
         match shard.command.spawn() {
-            Ok(child) => children.push((shard.label, child)),
+            Ok(child) => {
+                crate::obs::progress::shard(
+                    "shard_start",
+                    &shard.label,
+                    i as u64 + 1,
+                    n_shards as u64,
+                );
+                children.push((shard.label, child));
+            }
             Err(e) => failures.push(format!("spawning {} failed: {e}", shard.label)),
         }
     }
@@ -239,12 +251,14 @@ pub fn run_shard_procs(shards: Vec<ShardCommand>) -> Result<()> {
             readers.push(stream_lines(label.clone(), err));
         }
     }
-    for (label, mut child) in children {
+    let n_spawned = children.len();
+    for (i, (label, mut child)) in children.into_iter().enumerate() {
         match child.wait() {
             Ok(status) if status.success() => {}
             Ok(status) => failures.push(format!("{label} exited with {status}")),
             Err(e) => failures.push(format!("waiting on {label} failed: {e}")),
         }
+        crate::obs::progress::shard("shard_exit", &label, i as u64 + 1, n_spawned as u64);
     }
     for r in readers {
         let _ = r.join();

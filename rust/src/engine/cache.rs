@@ -167,7 +167,16 @@ impl ResultCache {
 
     /// Look up a point; `None` on miss *or* on any record defect. A hit
     /// refreshes the record's mtime so [`gc`]'s LRU order tracks use.
+    /// Probe latency (hit or miss) feeds the
+    /// `imclim_cache_probe_seconds` histogram.
     pub fn load(&self, point: &SweepPoint) -> Option<MeasuredSnr> {
+        let t0 = std::time::Instant::now();
+        let decoded = self.load_untimed(point);
+        crate::obs::registry::CACHE_PROBE_SECONDS.observe(t0.elapsed());
+        decoded
+    }
+
+    fn load_untimed(&self, point: &SweepPoint) -> Option<MeasuredSnr> {
         let key = self.key(point);
         let path = self.record_path(&key);
         let text = std::fs::read_to_string(&path).ok()?;
@@ -413,6 +422,9 @@ pub struct MergeReport {
 /// collision (and the destination's payload wins). The rebuilt manifest
 /// only indexes keys that exist as records in `dst`.
 pub fn merge_cache_dirs(dst: &Path, sources: &[PathBuf]) -> Result<MergeReport> {
+    let _span = crate::obs::trace::span_with("cache_merge", "cache", || {
+        format!("{} sources", sources.len())
+    });
     std::fs::create_dir_all(dst).with_context(|| format!("creating {}", dst.display()))?;
     let mut report = MergeReport::default();
     let mut entries = read_manifest_entries(dst);

@@ -104,18 +104,22 @@ impl Engine {
         let n = points.len();
         let mut slots: Vec<Option<SweepResult>> = vec![None; n];
         let mut miss_idx: Vec<usize> = Vec::new();
-        for (i, point) in points.iter().enumerate() {
-            if let Some(measured) = cache.load(point) {
-                slots[i] = Some(SweepResult {
-                    id: point.id.clone(),
-                    index: i,
-                    measured,
-                    error: None,
-                    cached: true,
-                });
-                stats.hits += 1;
-            } else {
-                miss_idx.push(i);
+        {
+            let _span =
+                crate::obs::trace::span_with("cache_probe", "engine", || format!("{n} points"));
+            for (i, point) in points.iter().enumerate() {
+                if let Some(measured) = cache.load(point) {
+                    slots[i] = Some(SweepResult {
+                        id: point.id.clone(),
+                        index: i,
+                        measured,
+                        error: None,
+                        cached: true,
+                    });
+                    stats.hits += 1;
+                } else {
+                    miss_idx.push(i);
+                }
             }
         }
 

@@ -37,6 +37,7 @@ pub mod energy;
 pub mod engine;
 pub mod figures;
 pub mod mc;
+pub mod obs;
 pub mod opt;
 pub mod prop;
 pub mod quant;

@@ -83,6 +83,10 @@ pub fn simulate_adaptive(
     let mut chunks = 0;
     let mut converged = false;
     while chunks < max_chunks {
+        let _round_span = crate::obs::trace::span_with("adaptive_round", "adaptive", || {
+            format!("round {} of <= {max_chunks}", chunks + 1)
+        });
+        crate::obs::registry::ADAPTIVE_ROUNDS.add(1);
         let out =
             simulate_chunk(kind, params, CHUNK_TRIALS, chunk_seed(seed, chunks as u64), dist);
         pooled.push_chunk(&out);

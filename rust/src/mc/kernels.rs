@@ -21,6 +21,10 @@ use crate::util::rng::Pcg64;
 use super::{w_plane_weight, ArchKind, InputDist, McOutput};
 
 /// Run one chunk of `trials` trials on a single-bank parameter vector.
+/// Each chunk is one span in the trace ("mc_chunk") and one observation
+/// in the `imclim_mc_chunk_seconds` latency histogram — this is the
+/// choke point every MC path (scheduler chunk jobs, sequential
+/// `simulate`, adaptive rounds, banked sub-ensembles) flows through.
 pub(super) fn run_chunk(
     kind: ArchKind,
     params: &[f64; pvec::P],
@@ -28,6 +32,9 @@ pub(super) fn run_chunk(
     seed: u64,
     dist: InputDist,
 ) -> McOutput {
+    let _span =
+        crate::obs::trace::span_with("mc_chunk", "mc", || format!("{kind:?} {trials} trials"));
+    let t0 = std::time::Instant::now();
     let mut out = McOutput::with_capacity(trials);
     let mut rng = Pcg64::new(seed);
     match kind {
@@ -35,6 +42,7 @@ pub(super) fn run_chunk(
         ArchKind::Qr => qr_chunk(params, trials, &mut rng, dist, &mut out),
         ArchKind::Cm => cm_chunk(params, trials, &mut rng, dist, &mut out),
     }
+    crate::obs::registry::MC_CHUNK_SECONDS.observe(t0.elapsed());
     out
 }
 

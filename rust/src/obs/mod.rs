@@ -1,0 +1,30 @@
+//! Observability: structured tracing, a metrics registry, and progress
+//! event streaming — all dependency-free and global, mirroring the
+//! design of `coordinator::metrics` (global atomics, since
+//! `SweepOptions` is `Copy` and no context handle is threaded through
+//! the stack).
+//!
+//! Three cooperating pieces:
+//!
+//! * [`trace`] — a lock-free span recorder. Disabled by default; the
+//!   CLI's `--trace FILE` enables it for the process and dumps
+//!   Chrome-trace-format JSON (loadable in `chrome://tracing` or
+//!   Perfetto) on exit. The hard invariant: tracing never perturbs
+//!   computed output. Spans carry wall-clock only into the trace file;
+//!   `sweep.csv` and cache records are byte-identical with and without
+//!   `--trace`.
+//! * [`registry`] — named counters, gauges, and fixed-bucket latency
+//!   histograms, rendered as Prometheus text exposition format for
+//!   `GET /metrics` on `imclim serve`. The five PR 8 counters behind
+//!   `coordinator::metrics` now live here; that module remains as a
+//!   snapshot facade.
+//! * [`progress`] — structured progress events. The scheduler and the
+//!   shard runner emit events through [`progress::emit`]; the human
+//!   stderr lines are rendered *from* those events (rate-limited to
+//!   one line per 100 ms), `--progress json` emits the raw NDJSON
+//!   instead, and `imclim serve` installs a per-job collector so
+//!   `GET /jobs/<id>/events` can stream them live.
+
+pub mod progress;
+pub mod registry;
+pub mod trace;

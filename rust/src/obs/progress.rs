@@ -1,0 +1,429 @@
+//! Structured progress events.
+//!
+//! The scheduler and shard runner emit [`Event`]s here instead of
+//! printing directly. One emission fans out to up to three sinks:
+//!
+//! * **Human stderr** (`ProgressMode::Human`, set by `--verbose`):
+//!   the familiar `[done/total] id …` lines are rendered *from* the
+//!   events, rate-limited to one line per 100 ms so huge grids stop
+//!   flooding stderr through the shard-log forwarder. The first and
+//!   final line of a sweep always print.
+//! * **Raw NDJSON stderr** (`ProgressMode::Json`, set by
+//!   `--progress json`): one JSON object per line, machine-parseable.
+//! * **A per-job [`EventLog`] collector** installed by the serve
+//!   executor, from which `GET /jobs/<id>/events` streams live.
+//!
+//! With no mode set and no collector installed (`--quiet`, or any
+//!   plain run), emission is a two-atomic-load no-op.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::obs::registry;
+use crate::util::json::{self, Json};
+
+/// Where human-readable progress goes. Selected once per process by
+/// the CLI (`--quiet` > `--progress json` > `--verbose` > off).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgressMode {
+    Off,
+    Human,
+    Json,
+}
+
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+pub fn set_mode(mode: ProgressMode) {
+    let v = match mode {
+        ProgressMode::Off => 0,
+        ProgressMode::Human => 1,
+        ProgressMode::Json => 2,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+pub fn mode() -> ProgressMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => ProgressMode::Human,
+        2 => ProgressMode::Json,
+        _ => ProgressMode::Off,
+    }
+}
+
+/// One structured progress event. `kind` discriminates; unused fields
+/// are simply omitted from the JSON form.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub kind: &'static str,
+    /// Point id, shard label — whatever names the unit of work.
+    pub id: String,
+    pub done: u64,
+    pub total: u64,
+    pub trials: u64,
+    /// Number of MC chunks for chunked points (0 = not chunked).
+    pub chunks: u64,
+    pub snr_t_db: Option<f64>,
+}
+
+impl Event {
+    fn to_json_line(&self) -> String {
+        let mut pairs = vec![("kind", json::s(self.kind))];
+        if !self.id.is_empty() {
+            pairs.push(("id", json::s(&self.id)));
+        }
+        if self.total > 0 {
+            pairs.push(("done", json::num(self.done as f64)));
+            pairs.push(("total", json::num(self.total as f64)));
+        }
+        if self.trials > 0 {
+            pairs.push(("trials", json::num(self.trials as f64)));
+        }
+        if self.chunks > 0 {
+            pairs.push(("chunks", json::num(self.chunks as f64)));
+        }
+        // Failed points carry NaN; keep the JSON valid by omitting it.
+        if let Some(snr) = self.snr_t_db.filter(|v| v.is_finite()) {
+            pairs.push(("snr_t_db", json::num(snr)));
+        }
+        json::obj(pairs).to_string()
+    }
+
+    /// The legacy stderr rendering, reproduced byte-for-byte from the
+    /// pre-obs `eprintln!` sites so `--verbose` output is unchanged.
+    fn render_human(&self) -> Option<String> {
+        match self.kind {
+            "point" if self.chunks > 0 => Some(format!(
+                "[{}/{}] {} ({} chunks)",
+                self.done, self.total, self.id, self.chunks
+            )),
+            "point" => Some(format!(
+                "[{}/{}] {} snr_t={:.2} dB",
+                self.done,
+                self.total,
+                self.id,
+                self.snr_t_db.unwrap_or(f64::NAN)
+            )),
+            _ => None,
+        }
+    }
+
+    /// Final event of a sweep — exempt from rate limiting so the last
+    /// line always lands.
+    fn is_final(&self) -> bool {
+        self.kind == "point" && self.total > 0 && self.done == self.total
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-job event log (serve): append-only line buffer + condvar, so an
+// HTTP handler can stream events as they arrive and learn when the
+// job is finished.
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct EventLog {
+    lines: Mutex<Vec<String>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl EventLog {
+    pub fn new() -> Arc<EventLog> {
+        Arc::new(EventLog::default())
+    }
+
+    pub fn append(&self, line: String) {
+        self.lines.lock().unwrap().push(line);
+        self.cv.notify_all();
+    }
+
+    /// Mark the log complete (terminal event already appended). After
+    /// close, `wait_since` never blocks.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        // Take the lock so a waiter can't check `closed` and then
+        // block just before the store becomes visible.
+        let _guard = self.lines.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Return lines `[from..]`, blocking up to `timeout` for new ones.
+    /// The returned flag is true once the log is closed *and* every
+    /// line up to the close has been handed out.
+    pub fn wait_since(&self, from: usize, timeout: Duration) -> (Vec<String>, bool) {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.lines.lock().unwrap();
+        loop {
+            if guard.len() > from {
+                return (guard[from..].to_vec(), self.is_closed());
+            }
+            if self.is_closed() {
+                return (Vec::new(), true);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return (Vec::new(), false);
+            }
+            let (g, _timeout) = self.cv.wait_timeout(guard, left).unwrap();
+            guard = g;
+        }
+    }
+}
+
+static COLLECTOR: Mutex<Option<Arc<EventLog>>> = Mutex::new(None);
+/// Lock-free fast-path mirror of `COLLECTOR.is_some()`.
+static HAS_COLLECTOR: AtomicBool = AtomicBool::new(false);
+
+/// Route subsequent events into `log` (one collector at a time; the
+/// serve executor runs jobs sequentially).
+pub fn install_collector(log: Arc<EventLog>) {
+    *COLLECTOR.lock().unwrap() = Some(log);
+    HAS_COLLECTOR.store(true, Ordering::Release);
+}
+
+pub fn clear_collector() {
+    HAS_COLLECTOR.store(false, Ordering::Release);
+    *COLLECTOR.lock().unwrap() = None;
+}
+
+fn collector() -> Option<Arc<EventLog>> {
+    COLLECTOR.lock().unwrap().clone()
+}
+
+/// Whether anyone is listening. Callers may skip building events
+/// entirely when this is false — except human-fallback paths, see
+/// [`emit`].
+pub fn active() -> bool {
+    HAS_COLLECTOR.load(Ordering::Acquire) || mode() != ProgressMode::Off
+}
+
+/// Emit one event to every active sink. `human_fallback` preserves the
+/// pre-obs library behavior: when the process never selected a mode
+/// (embedders calling `run_sweep` directly with `verbose: true`), the
+/// human line still prints.
+pub fn emit(ev: &Event, human_fallback: bool) {
+    let mode = mode();
+    let collecting = HAS_COLLECTOR.load(Ordering::Acquire);
+    let render_human = mode == ProgressMode::Human
+        || (mode == ProgressMode::Off && !collecting && human_fallback);
+    if !collecting && mode == ProgressMode::Off && !render_human {
+        return;
+    }
+    registry::PROGRESS_EVENTS.add(1);
+    if collecting {
+        if let Some(log) = collector() {
+            log.append(ev.to_json_line());
+        }
+    }
+    match mode {
+        ProgressMode::Json => eprintln!("{}", ev.to_json_line()),
+        _ if render_human => {
+            if let Some(text) = ev.render_human() {
+                rate_limited_eprintln(&text, ev.is_final());
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Minimum spacing between human progress lines.
+const MIN_INTERVAL: Duration = Duration::from_millis(100);
+
+static RATE_EPOCH: OnceLock<Instant> = OnceLock::new();
+/// Nanoseconds-since-epoch of the last printed line, +1 so 0 can mean
+/// "never printed".
+static LAST_PRINT_NS: AtomicU64 = AtomicU64::new(0);
+
+fn rate_limited_eprintln(text: &str, force: bool) {
+    let epoch = *RATE_EPOCH.get_or_init(Instant::now);
+    let now = epoch.elapsed().as_nanos() as u64 + 1;
+    let last = LAST_PRINT_NS.load(Ordering::Relaxed);
+    let due = last == 0 || now.saturating_sub(last) >= MIN_INTERVAL.as_nanos() as u64;
+    if !force && !due {
+        return;
+    }
+    // CAS so racing threads don't both print inside one window; forced
+    // (final) lines print regardless of who wins.
+    let won = LAST_PRINT_NS
+        .compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed)
+        .is_ok();
+    if won || force {
+        eprintln!("{text}");
+    }
+}
+
+/// Convenience: the scheduler's per-point completion event. Builds the
+/// event only when a sink is active (or the legacy verbose fallback
+/// asks for it).
+#[allow(clippy::too_many_arguments)]
+pub fn point_done(
+    id: &str,
+    done: u64,
+    total: u64,
+    trials: u64,
+    chunks: u64,
+    snr_t_db: Option<f64>,
+    human_fallback: bool,
+) {
+    if !active() && !human_fallback {
+        return;
+    }
+    emit(
+        &Event {
+            kind: "point",
+            id: id.to_string(),
+            done,
+            total,
+            trials,
+            chunks,
+            snr_t_db,
+        },
+        human_fallback,
+    );
+}
+
+/// Convenience: sweep-start event (total points about to run).
+pub fn mc_start(total: u64) {
+    if !active() {
+        return;
+    }
+    emit(
+        &Event {
+            kind: "mc_start",
+            id: String::new(),
+            done: 0,
+            total,
+            trials: 0,
+            chunks: 0,
+            snr_t_db: None,
+        },
+        false,
+    );
+}
+
+/// Convenience: shard subprocess lifecycle event.
+pub fn shard(kind: &'static str, label: &str, index: u64, total: u64) {
+    if !active() {
+        return;
+    }
+    emit(
+        &Event {
+            kind,
+            id: label.to_string(),
+            done: index,
+            total,
+            trials: 0,
+            chunks: 0,
+            snr_t_db: None,
+        },
+        false,
+    );
+}
+
+/// Build the JSON line for a job's terminal event (appended by the
+/// serve executor right before closing the log).
+pub fn terminal_line(pairs: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("kind", json::s("terminal"))];
+    all.extend(pairs);
+    json::obj(all).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_omits_unused_fields() {
+        let ev = Event {
+            kind: "point",
+            id: "qs-n128".into(),
+            done: 3,
+            total: 6,
+            trials: 256,
+            chunks: 0,
+            snr_t_db: Some(12.5),
+        };
+        let line = ev.to_json_line();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("point"));
+        assert_eq!(j.get("done").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("snr_t_db").unwrap().as_f64(), Some(12.5));
+        assert!(j.get("chunks").is_none());
+        assert!(line.ends_with('}') && !line.contains('\n'));
+    }
+
+    #[test]
+    fn human_rendering_matches_legacy_formats() {
+        let plain = Event {
+            kind: "point",
+            id: "p".into(),
+            done: 1,
+            total: 2,
+            trials: 48,
+            chunks: 0,
+            snr_t_db: Some(3.25),
+        };
+        assert_eq!(plain.render_human().unwrap(), "[1/2] p snr_t=3.25 dB");
+        let chunked = Event {
+            chunks: 4,
+            ..plain.clone()
+        };
+        assert_eq!(chunked.render_human().unwrap(), "[1/2] p (4 chunks)");
+    }
+
+    #[test]
+    fn event_log_streams_and_closes() {
+        let log = EventLog::new();
+        log.append("a".to_string());
+        let (lines, closed) = log.wait_since(0, Duration::from_millis(10));
+        assert_eq!(lines, ["a"]);
+        assert!(!closed);
+        // Nothing new: timeout path.
+        let (lines, closed) = log.wait_since(1, Duration::from_millis(10));
+        assert!(lines.is_empty() && !closed);
+
+        let log2 = Arc::clone(&log);
+        let writer = std::thread::spawn(move || {
+            log2.append("b".to_string());
+            log2.close();
+        });
+        let mut from = 1;
+        let mut got = Vec::new();
+        loop {
+            let (lines, closed) = log.wait_since(from, Duration::from_secs(5));
+            from += lines.len();
+            got.extend(lines);
+            if closed && got.len() == 1 {
+                break;
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(got, ["b"]);
+    }
+
+    #[test]
+    fn collector_receives_events_regardless_of_mode() {
+        let log = EventLog::new();
+        install_collector(Arc::clone(&log));
+        point_done("collector-test-x", 1, 1, 8, 0, Some(1.0), false);
+        clear_collector();
+        point_done("collector-test-y", 1, 1, 8, 0, Some(1.0), false);
+        let (lines, _) = log.wait_since(0, Duration::from_millis(10));
+        // Other tests may emit concurrently while the collector is
+        // installed; assert only on our own ids.
+        let xs = lines
+            .iter()
+            .filter(|l| l.contains("\"id\":\"collector-test-x\""))
+            .count();
+        let ys = lines
+            .iter()
+            .filter(|l| l.contains("\"id\":\"collector-test-y\""))
+            .count();
+        assert_eq!((xs, ys), (1, 0));
+    }
+}

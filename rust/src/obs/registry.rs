@@ -1,0 +1,338 @@
+//! Named counter/gauge/histogram registry with Prometheus text
+//! exposition (format version 0.0.4), served at `GET /metrics` by
+//! `imclim serve`.
+//!
+//! Everything is a static with relaxed atomics — same pattern as the
+//! PR 8 counters in `coordinator::metrics`, which now delegate here.
+//! Histograms use one fixed exponential latency bucket ladder
+//! ([`LATENCY_BOUNDS_US`], 100 µs … 10 s) shared by every family, and
+//! store their sum in integer microseconds so snapshots stay `Copy +
+//! Eq` (no floats in `MetricsSnapshot`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotone counter.
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            value: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge (set-to-current-value semantics).
+pub struct Gauge {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            value: AtomicU64::new(0),
+        }
+    }
+
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of finite histogram buckets (the `+Inf` bucket is tracked
+/// separately as `overflow`).
+pub const HIST_BUCKETS: usize = 12;
+
+/// Upper bounds of the finite buckets, in microseconds: an exponential
+/// ladder from 100 µs to 10 s covering both sub-millisecond cache
+/// probes and multi-second MC chunks.
+pub const LATENCY_BOUNDS_US: [u64; HIST_BUCKETS] = [
+    100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000, 10_000_000,
+];
+
+/// Fixed-bucket latency histogram.
+pub struct Histogram {
+    name: &'static str,
+    help: &'static str,
+    /// Per-bucket (non-cumulative) observation counts; rendered
+    /// cumulatively, as Prometheus requires.
+    buckets: [AtomicU64; HIST_BUCKETS],
+    /// Observations above the largest finite bound (`+Inf` residue).
+    overflow: AtomicU64,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self {
+            name,
+            help,
+            buckets: [ZERO; HIST_BUCKETS],
+            overflow: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency observation.
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        match LATENCY_BOUNDS_US.iter().position(|&b| us <= b) {
+            Some(i) => self.buckets[i].fetch_add(1, Ordering::Relaxed),
+            None => self.overflow.fetch_add(1, Ordering::Relaxed),
+        };
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(&self.buckets) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            buckets,
+            overflow: self.overflow.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]. Sum is kept in integer
+/// microseconds so the type (and `coordinator::MetricsSnapshot`, which
+/// embeds it) stays `Copy + Eq`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub overflow: u64,
+    pub count: u64,
+    pub sum_us: u64,
+}
+
+impl HistogramSnapshot {
+    /// Delta since an earlier snapshot (wrapping, like
+    /// `MetricsSnapshot::since`).
+    pub fn since(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (i, out) in buckets.iter_mut().enumerate() {
+            *out = self.buckets[i].wrapping_sub(earlier.buckets[i]);
+        }
+        HistogramSnapshot {
+            buckets,
+            overflow: self.overflow.wrapping_sub(earlier.overflow),
+            count: self.count.wrapping_sub(earlier.count),
+            sum_us: self.sum_us.wrapping_sub(earlier.sum_us),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The registry itself: every family the process exports. Dependency-
+// free, so "registry" is a fixed list rather than a runtime map —
+// registration is adding a static here and an entry in `render`.
+// ---------------------------------------------------------------------
+
+pub static CACHE_HITS: Counter = Counter::new(
+    "imclim_cache_hits_total",
+    "Sweep points served from the result cache",
+);
+pub static CACHE_MISSES: Counter = Counter::new(
+    "imclim_cache_misses_total",
+    "Sweep points not found in the result cache",
+);
+pub static POINTS_COMPUTED: Counter = Counter::new(
+    "imclim_points_computed_total",
+    "Sweep points actually simulated (cache misses that ran MC)",
+);
+pub static TRIALS_COMPLETED: Counter = Counter::new(
+    "imclim_trials_completed_total",
+    "Monte-Carlo trials completed across all points",
+);
+pub static MC_ERRORS: Counter = Counter::new(
+    "imclim_mc_errors_total",
+    "Monte-Carlo point simulations that returned an error",
+);
+pub static ADAPTIVE_ROUNDS: Counter = Counter::new(
+    "imclim_adaptive_rounds_total",
+    "Adaptive-precision refinement rounds executed",
+);
+pub static PROGRESS_EVENTS: Counter = Counter::new(
+    "imclim_progress_events_total",
+    "Structured progress events emitted",
+);
+pub static TRACE_SPANS_DROPPED: Counter = Counter::new(
+    "imclim_trace_spans_dropped_total",
+    "Trace spans dropped because the recorder slab was full",
+);
+
+pub static JOBS_QUEUED: Gauge = Gauge::new(
+    "imclim_jobs_queued",
+    "Serve jobs waiting in the queue",
+);
+pub static JOBS_RUNNING: Gauge = Gauge::new(
+    "imclim_jobs_running",
+    "Serve jobs currently executing",
+);
+
+pub static CACHE_PROBE_SECONDS: Histogram = Histogram::new(
+    "imclim_cache_probe_seconds",
+    "Latency of individual result-cache probes",
+);
+pub static MC_CHUNK_SECONDS: Histogram = Histogram::new(
+    "imclim_mc_chunk_seconds",
+    "Latency of individual Monte-Carlo trial chunks",
+);
+
+const COUNTERS: [&Counter; 8] = [
+    &CACHE_HITS,
+    &CACHE_MISSES,
+    &POINTS_COMPUTED,
+    &TRIALS_COMPLETED,
+    &MC_ERRORS,
+    &ADAPTIVE_ROUNDS,
+    &PROGRESS_EVENTS,
+    &TRACE_SPANS_DROPPED,
+];
+
+const GAUGES: [&Gauge; 2] = [&JOBS_QUEUED, &JOBS_RUNNING];
+
+const HISTOGRAMS: [&Histogram; 2] = [&CACHE_PROBE_SECONDS, &MC_CHUNK_SECONDS];
+
+/// Format a microsecond bound as Prometheus seconds (`le` label /
+/// `_sum` value). Plain decimal, no exponent — `0.0001`, `2.5`, `10`.
+fn us_as_seconds(us: u64) -> String {
+    let whole = us / 1_000_000;
+    let frac = us % 1_000_000;
+    if frac == 0 {
+        format!("{whole}")
+    } else {
+        let s = format!("{whole}.{frac:06}");
+        s.trim_end_matches('0').to_string()
+    }
+}
+
+/// Render every family as Prometheus text exposition format 0.0.4.
+pub fn render_prometheus() -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for c in COUNTERS {
+        let _ = writeln!(out, "# HELP {} {}", c.name, c.help);
+        let _ = writeln!(out, "# TYPE {} counter", c.name);
+        let _ = writeln!(out, "{} {}", c.name, c.get());
+    }
+    for g in GAUGES {
+        let _ = writeln!(out, "# HELP {} {}", g.name, g.help);
+        let _ = writeln!(out, "# TYPE {} gauge", g.name);
+        let _ = writeln!(out, "{} {}", g.name, g.get());
+    }
+    for h in HISTOGRAMS {
+        let snap = h.snapshot();
+        let _ = writeln!(out, "# HELP {} {}", h.name, h.help);
+        let _ = writeln!(out, "# TYPE {} histogram", h.name);
+        let mut cumulative = 0u64;
+        for (i, &bound) in LATENCY_BOUNDS_US.iter().enumerate() {
+            cumulative += snap.buckets[i];
+            let _ = writeln!(
+                out,
+                "{}_bucket{{le=\"{}\"}} {}",
+                h.name,
+                us_as_seconds(bound),
+                cumulative
+            );
+        }
+        cumulative += snap.overflow;
+        let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", h.name, cumulative);
+        let _ = writeln!(out, "{}_sum {}", h.name, us_as_seconds(snap.sum_us));
+        let _ = writeln!(out, "{}_count {}", h.name, snap.count);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        static H: Histogram = Histogram::new("imclim_test_seconds", "test");
+        H.observe(Duration::from_micros(50)); // -> le=100us bucket
+        H.observe(Duration::from_micros(900)); // -> le=1ms bucket
+        H.observe(Duration::from_secs(60)); // -> +Inf
+        let s = H.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[3], 1);
+        assert_eq!(s.overflow, 1);
+        assert_eq!(s.sum_us, 50 + 900 + 60_000_000);
+        let d = H.snapshot().since(&s);
+        assert_eq!(d, HistogramSnapshot::default());
+    }
+
+    #[test]
+    fn seconds_formatting_is_plain_decimal() {
+        assert_eq!(us_as_seconds(100), "0.0001");
+        assert_eq!(us_as_seconds(2_500), "0.0025");
+        assert_eq!(us_as_seconds(1_000_000), "1");
+        assert_eq!(us_as_seconds(10_000_000), "10");
+        assert_eq!(us_as_seconds(1_234_567), "1.234567");
+    }
+
+    #[test]
+    fn render_is_wellformed_exposition() {
+        CACHE_HITS.add(0); // touch so the family exists
+        let text = render_prometheus();
+        for family in [
+            "imclim_cache_hits_total",
+            "imclim_cache_misses_total",
+            "imclim_mc_chunk_seconds",
+            "imclim_cache_probe_seconds",
+            "imclim_jobs_queued",
+        ] {
+            assert!(
+                text.contains(&format!("# HELP {family} ")),
+                "missing HELP for {family}"
+            );
+            assert!(
+                text.contains(&format!("# TYPE {family} ")),
+                "missing TYPE for {family}"
+            );
+        }
+        assert!(text.contains("imclim_mc_chunk_seconds_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("imclim_mc_chunk_seconds_count"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "unparseable value in line: {line}"
+            );
+        }
+    }
+}

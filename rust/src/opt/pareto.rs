@@ -81,43 +81,54 @@ pub fn frontier_of_families(
     // Bound every family cheaply, then order by ascending energy lower
     // bound so likely dominators are pooled before the families they
     // prune (ties broken canonically for determinism).
-    let mut bounded: Vec<(Family, FamilyBounds)> = families
-        .iter()
-        .map(|f| {
-            let b = f.bounds(b_adcs[0], w, x);
-            (f.clone(), b)
-        })
-        .collect();
-    bounded.sort_by(|(fa, ba), (fb, bb)| {
-        ba.energy_lb_j
-            .total_cmp(&bb.energy_lb_j)
-            .then_with(|| fa.key().cmp(&fb.key()))
-    });
+    let bounded: Vec<(Family, FamilyBounds)> = {
+        let _span = crate::obs::trace::span_with("frontier_bound", "pareto", || {
+            format!("{} families", families.len())
+        });
+        let mut bounded: Vec<(Family, FamilyBounds)> = families
+            .iter()
+            .map(|f| {
+                let b = f.bounds(b_adcs[0], w, x);
+                (f.clone(), b)
+            })
+            .collect();
+        bounded.sort_by(|(fa, ba), (fb, bb)| {
+            ba.energy_lb_j
+                .total_cmp(&bb.energy_lb_j)
+                .then_with(|| fa.key().cmp(&fb.key()))
+        });
+        bounded
+    };
 
     let shards = shards.max(1).min(bounded.len());
     let mut pool: Vec<DesignPoint> = Vec::new();
-    if shards <= 1 {
-        let (p, evaluated, pruned) = extract_pool(&bounded, 0, 1, b_adcs, w, x);
-        pool = p;
-        out.points_evaluated = evaluated;
-        out.families_pruned = pruned;
-    } else {
-        let results = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..shards)
-                .map(|i| {
-                    let bounded = &bounded;
-                    scope.spawn(move || extract_pool(bounded, i, shards, b_adcs, w, x))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("frontier shard thread panicked"))
-                .collect::<Vec<_>>()
+    {
+        let _span = crate::obs::trace::span_with("frontier_extract", "pareto", || {
+            format!("{shards} shards")
         });
-        for (p, evaluated, pruned) in results {
-            pool.extend(p);
-            out.points_evaluated += evaluated;
-            out.families_pruned += pruned;
+        if shards <= 1 {
+            let (p, evaluated, pruned) = extract_pool(&bounded, 0, 1, b_adcs, w, x);
+            pool = p;
+            out.points_evaluated = evaluated;
+            out.families_pruned = pruned;
+        } else {
+            let results = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..shards)
+                    .map(|i| {
+                        let bounded = &bounded;
+                        scope.spawn(move || extract_pool(bounded, i, shards, b_adcs, w, x))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("frontier shard thread panicked"))
+                    .collect::<Vec<_>>()
+            });
+            for (p, evaluated, pruned) in results {
+                pool.extend(p);
+                out.points_evaluated += evaluated;
+                out.families_pruned += pruned;
+            }
         }
     }
 
@@ -176,6 +187,9 @@ fn extract_pool(
 /// area — the direction dominance requires), then keep the
 /// non-dominated prefix survivors. Order-independent result.
 pub fn prune(mut pool: Vec<DesignPoint>) -> Vec<DesignPoint> {
+    let _span = crate::obs::trace::span_with("frontier_prune", "pareto", || {
+        format!("{} candidates", pool.len())
+    });
     pool.sort_by(|a, b| {
         a.energy_j
             .total_cmp(&b.energy_j)

@@ -162,6 +162,108 @@ impl HttpEndpoint {
             .with_context(|| format!("reading response for POST {}", self.url_for(rel)))
     }
 
+    /// GET a path and consume the response body incrementally: for a
+    /// chunked response, `on_data` is called with each newly decoded
+    /// slice as its chunk arrives (this is how live NDJSON progress
+    /// streams from `imclim serve` are consumed before the job ends);
+    /// for a `Content-Length` or close-delimited body it is called once
+    /// with the whole body. Returns the complete body. Any non-2xx
+    /// status is an error — a stream is only useful once accepted.
+    pub fn get_stream(&self, rel: &str, mut on_data: impl FnMut(&[u8])) -> Result<Vec<u8>> {
+        let mut stream = self.connect()?;
+        let path = format!("{}/{rel}", self.base);
+        write!(
+            stream,
+            "GET {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\nAccept: */*\r\n\r\n",
+            self.host_display()
+        )?;
+        stream.flush()?;
+        let mut raw = Vec::new();
+        let mut buf = [0u8; 8192];
+        let header_end = loop {
+            if let Some(i) = find_header_end(&raw) {
+                break i;
+            }
+            let n = stream.read(&mut buf)?;
+            ensure!(
+                n > 0,
+                "connection closed mid-header on GET {}",
+                self.url_for(rel)
+            );
+            raw.extend_from_slice(&buf[..n]);
+        };
+        let head = std::str::from_utf8(&raw[..header_end]).context("non-UTF-8 response header")?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad HTTP status line '{status_line}'"))?;
+        ensure!(
+            (200..300).contains(&status),
+            "GET {} failed with HTTP {status}",
+            self.url_for(rel)
+        );
+        let mut content_length: Option<usize> = None;
+        let mut chunked = false;
+        for line in lines {
+            let Some((name, value)) = line.split_once(':') else {
+                continue;
+            };
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.parse().ok();
+            } else if name.eq_ignore_ascii_case("transfer-encoding")
+                && value.to_ascii_lowercase().contains("chunked")
+            {
+                chunked = true;
+            }
+        }
+        let mut leftover = raw[header_end + 4..].to_vec();
+        if chunked {
+            let mut body = Vec::new();
+            loop {
+                let before = body.len();
+                let done = drain_chunk_frames(&mut leftover, &mut body)?;
+                if body.len() > before {
+                    on_data(&body[before..]);
+                }
+                if done {
+                    return Ok(body);
+                }
+                let n = stream.read(&mut buf)?;
+                if n == 0 {
+                    // a close right after `0\r\n` is tolerated, as in
+                    // `read_response`; anything else is truncation
+                    ensure!(
+                        leftover == b"0\r\n",
+                        "connection closed mid-stream on GET {}",
+                        self.url_for(rel)
+                    );
+                    return Ok(body);
+                }
+                leftover.extend_from_slice(&buf[..n]);
+            }
+        }
+        let mut body = leftover;
+        match content_length {
+            Some(len) => {
+                while body.len() < len {
+                    let n = stream.read(&mut buf)?;
+                    ensure!(n > 0, "connection closed mid-body ({}/{len} bytes)", body.len());
+                    body.extend_from_slice(&buf[..n]);
+                }
+                body.truncate(len);
+            }
+            None => read_to_end(&mut stream, &mut body)?,
+        }
+        if !body.is_empty() {
+            on_data(&body);
+        }
+        Ok(body)
+    }
+
     /// GET returning the raw `(status, body)` without miss/error
     /// mapping; the daemon client's status polling wants 404 and 409
     /// as answers, not errors.
@@ -272,6 +374,54 @@ fn find_header_end(raw: &[u8]) -> Option<usize> {
 /// Decode a complete chunked body (connection already at EOF).
 fn decode_chunked(data: &[u8]) -> Result<Vec<u8>> {
     decode_chunked_step(data, true)?.context("truncated chunk stream")
+}
+
+/// Consume every *complete* chunk at the front of `framing`, appending
+/// the payload bytes to `decoded` and draining the consumed framing.
+/// Returns `true` once the terminating 0-size chunk and its (optional)
+/// trailer block have been consumed; `false` means the framing so far
+/// is valid but more bytes are needed. Unlike [`decode_chunked_step`],
+/// partial progress is kept — this is the incremental decoder behind
+/// [`HttpEndpoint::get_stream`].
+fn drain_chunk_frames(framing: &mut Vec<u8>, decoded: &mut Vec<u8>) -> Result<bool> {
+    loop {
+        let Some(rel) = framing.windows(2).position(|w| w == b"\r\n") else {
+            return Ok(false);
+        };
+        let size_str = std::str::from_utf8(&framing[..rel]).context("bad chunk size")?;
+        let size = usize::from_str_radix(size_str.trim().split(';').next().unwrap_or("").trim(), 16)
+            .with_context(|| format!("bad chunk size '{size_str}'"))?;
+        if size == 0 {
+            // skip trailer lines until the empty line that ends the body
+            let mut pos = rel + 2;
+            loop {
+                let Some(tr) = framing[pos..].windows(2).position(|w| w == b"\r\n") else {
+                    return Ok(false);
+                };
+                let line_end = pos + tr;
+                if framing[pos..line_end].is_empty() {
+                    framing.drain(..line_end + 2);
+                    return Ok(true);
+                }
+                ensure!(
+                    framing[pos..line_end].contains(&b':'),
+                    "malformed trailer after final chunk: '{}'",
+                    String::from_utf8_lossy(&framing[pos..line_end])
+                );
+                pos = line_end + 2;
+            }
+        }
+        let body_start = rel + 2;
+        if framing.len() < body_start + size + 2 {
+            return Ok(false);
+        }
+        ensure!(
+            &framing[body_start + size..body_start + size + 2] == b"\r\n",
+            "chunk body not terminated by CRLF (malformed framing)"
+        );
+        decoded.extend_from_slice(&framing[body_start..body_start + size]);
+        framing.drain(..body_start + size + 2);
+    }
 }
 
 /// One incremental decoding attempt over the chunked-framing bytes
@@ -563,6 +713,38 @@ mod tests {
         // malformed framing is a hard error even mid-stream
         assert!(decode_chunked_step(b"4\r\nWikiXX", false).is_err());
         assert!(decode_chunked_step(b"zz\r\n", false).is_err());
+    }
+
+    #[test]
+    fn incremental_frame_drain_keeps_partial_progress() {
+        let full = b"4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        // feed byte by byte: decoded bytes must appear as soon as each
+        // chunk completes, well before the terminator
+        let mut framing = Vec::new();
+        let mut decoded = Vec::new();
+        let mut done_at = None;
+        for (i, b) in full.iter().enumerate() {
+            framing.push(*b);
+            let done = drain_chunk_frames(&mut framing, &mut decoded).unwrap();
+            if done {
+                done_at = Some(i);
+                break;
+            }
+            if i >= 9 {
+                // "4\r\nWiki\r\n" is 9 bytes: the first chunk is out
+                assert!(decoded.starts_with(b"Wiki"), "at byte {i}");
+            }
+        }
+        assert_eq!(done_at, Some(full.len() - 1));
+        assert_eq!(decoded, b"Wikipedia");
+        assert!(framing.is_empty());
+        // trailers are skipped; malformed framing still errors
+        let mut f = b"3\r\nabc\r\n0\r\nX-Sum: 1\r\n\r\n".to_vec();
+        let mut d = Vec::new();
+        assert!(drain_chunk_frames(&mut f, &mut d).unwrap());
+        assert_eq!(d, b"abc");
+        let mut f = b"4\r\nWikiXX".to_vec();
+        assert!(drain_chunk_frames(&mut f, &mut Vec::new()).is_err());
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Observability acceptance: tracing never perturbs outputs (a traced
+//! sweep's CSV and cache records are byte-identical to an untraced
+//! twin, and the trace itself is a Perfetto-loadable Chrome trace with
+//! the expected spans); `GET /metrics` serves Prometheus text
+//! exposition whose counters move monotonically across scrapes; and
+//! `GET /jobs/<id>/events` streams NDJSON progress over chunked
+//! transfer-encoding — a cold job yields per-point events before its
+//! terminal line, a warm resubmission yields exactly the terminal line.
+//!
+//! The in-process daemon tests serialize on one mutex for the same
+//! reason `tests/serve.rs` does: metrics are process-global.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use imclim::cli::serve::{start, ServeHandle};
+use imclim::registry::http::HttpEndpoint;
+use imclim::util::json::Json;
+
+/// Serializes the in-process daemon tests (shared global metrics).
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+const GRID_POINTS: usize = 6; // arch qs × n {8,12,16} × b-adc {4,5}
+const GRID_TRIALS: usize = 48;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imclim-obs-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sweep_body() -> &'static str {
+    r#"{"cmd":"sweep","options":{"arch":"qs","n":"8,12,16","b-adc":"4,5",
+        "trials":"48","workers":"2"}}"#
+}
+
+fn daemon(name: &str) -> (ServeHandle, HttpEndpoint, PathBuf) {
+    let out_dir = tmp_dir(name);
+    let handle = start("127.0.0.1:0", out_dir.clone(), 64).unwrap();
+    let ep = HttpEndpoint::parse(&handle.base_url()).unwrap();
+    (handle, ep, out_dir)
+}
+
+fn submit(ep: &HttpEndpoint, body: &str) -> u64 {
+    let (status, bytes) = ep.post("jobs", body.as_bytes(), "application/json").unwrap();
+    let json = Json::parse(&String::from_utf8_lossy(&bytes)).unwrap_or(Json::Null);
+    assert_eq!(status, 202, "submission accepted: {json:?}");
+    json.get("id").and_then(Json::as_usize).expect("job id") as u64
+}
+
+/// Poll a job until it reaches a terminal state; returns its status
+/// JSON.
+fn wait_job(ep: &HttpEndpoint, id: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, bytes) = ep.get_raw(&format!("jobs/{id}")).unwrap();
+        assert_eq!(status, 200, "status poll for job {id}");
+        let json = Json::parse(&String::from_utf8_lossy(&bytes)).unwrap();
+        let state = json.get("state").and_then(|v| v.as_str()).unwrap().to_string();
+        if matches!(state.as_str(), "done" | "failed" | "canceled") {
+            return json;
+        }
+        assert!(Instant::now() < deadline, "job {id} stuck in '{state}'");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace determinism
+// ---------------------------------------------------------------------
+
+/// Run the reference grid through the CLI binary into `dir` with extra
+/// flags appended.
+fn run_sweep(dir: &Path, extra: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_imclim"))
+        .args([
+            "sweep", "--arch", "qs", "--n", "8,12,16", "--b-adc", "4,5", "--trials", "48",
+            "--workers", "2", "--out-dir",
+        ])
+        .arg(dir)
+        .args(extra)
+        .output()
+        .unwrap()
+}
+
+/// Every regular file under `root`, keyed by relative path.
+fn dir_files(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in std::fs::read_dir(&d).unwrap() {
+            let p = entry.unwrap().path();
+            if p.is_dir() {
+                stack.push(p);
+            } else {
+                let rel = p.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read(&p).unwrap());
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn tracing_never_perturbs_outputs_and_the_trace_is_perfetto_loadable() {
+    // Subprocesses, so no TEST_LOCK: each run has its own metrics and
+    // its own sticky trace state.
+    let traced = tmp_dir("trace-on");
+    let plain = tmp_dir("trace-off");
+    let trace_path = traced.join("trace.json");
+
+    let out = run_sweep(&traced, &["--trace", trace_path.to_str().unwrap()]);
+    assert!(out.status.success(), "traced: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("trace: "),
+        "the trace summary line prints"
+    );
+    let out = run_sweep(&plain, &[]);
+    assert!(out.status.success(), "plain: {}", String::from_utf8_lossy(&out.stderr));
+
+    // The hard invariant: tracing observes, never perturbs.
+    assert_eq!(
+        std::fs::read(traced.join("sweep.csv")).unwrap(),
+        std::fs::read(plain.join("sweep.csv")).unwrap(),
+        "sweep.csv must be byte-identical with and without --trace"
+    );
+    // the trace file lands next to sweep.csv, outside cache/, so the
+    // cache trees compare cleanly
+    assert_eq!(
+        dir_files(&traced.join("cache")),
+        dir_files(&plain.join("cache")),
+        "cache records must be byte-identical with and without --trace"
+    );
+
+    // The trace is one JSON array (Chrome trace format, the layout
+    // Perfetto's legacy loader accepts) of well-formed events.
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let json = Json::parse(&text).unwrap_or_else(|e| panic!("trace is not valid JSON: {e}"));
+    let events = json.as_arr().expect("chrome trace is a JSON array");
+    assert!(!events.is_empty());
+
+    let mut span_names = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|v| v.as_str()).expect("every event has ph");
+        match ph {
+            "X" => {
+                for field in ["name", "cat", "ts", "dur", "pid", "tid"] {
+                    assert!(ev.get(field).is_some(), "complete event lacks {field}: {ev:?}");
+                }
+                span_names.push(ev.get("name").unwrap().as_str().unwrap().to_string());
+            }
+            "M" => assert!(ev.get("name").is_some(), "metadata event lacks name"),
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    for required in ["grid_parse", "cache_probe", "mc_chunk", "csv_emit"] {
+        assert!(
+            span_names.iter().any(|n| n == required),
+            "trace lacks a {required:?} span; saw {span_names:?}"
+        );
+    }
+    // 6 points × 48 trials is a single chunk per point.
+    let chunks = span_names.iter().filter(|n| *n == "mc_chunk").count();
+    assert_eq!(chunks, GRID_POINTS, "one mc_chunk span per computed point");
+}
+
+// ---------------------------------------------------------------------
+// Prometheus exposition
+// ---------------------------------------------------------------------
+
+fn scrape(ep: &HttpEndpoint) -> String {
+    let (status, bytes) = ep.get_raw("metrics").unwrap();
+    assert_eq!(status, 200, "/metrics answers 200");
+    String::from_utf8(bytes).expect("exposition is UTF-8")
+}
+
+/// The value of an unlabeled sample line `name value`.
+fn sample(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("exposition lacks sample {name:?}:\n{text}"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("sample {name:?} is not a number: {e}"))
+}
+
+#[test]
+fn metrics_endpoint_serves_prometheus_text_with_monotone_counters() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (handle, ep, _out) = daemon("metrics");
+
+    let first = scrape(&ep);
+    // Text exposition format 0.0.4: HELP/TYPE comments then samples.
+    for family in [
+        ("imclim_cache_hits_total", "counter"),
+        ("imclim_cache_misses_total", "counter"),
+        ("imclim_trials_completed_total", "counter"),
+        ("imclim_jobs_queued", "gauge"),
+        ("imclim_jobs_running", "gauge"),
+        ("imclim_cache_probe_seconds", "histogram"),
+        ("imclim_mc_chunk_seconds", "histogram"),
+    ] {
+        let (name, kind) = family;
+        assert!(first.contains(&format!("# HELP {name} ")), "HELP for {name}");
+        assert!(first.contains(&format!("# TYPE {name} {kind}")), "TYPE for {name}");
+    }
+    // Histograms carry the full cumulative-bucket contract.
+    assert!(first.contains("imclim_mc_chunk_seconds_bucket{le=\"+Inf\"}"));
+    assert!(first.contains("imclim_mc_chunk_seconds_sum"));
+    assert!(first.contains("imclim_mc_chunk_seconds_count"));
+
+    // One cold job moves the counters by exactly the grid's work.
+    let id = submit(&ep, sweep_body());
+    let status = wait_job(&ep, id);
+    assert_eq!(status.get("state").and_then(|v| v.as_str()), Some("done"));
+    let second = scrape(&ep);
+
+    let delta = |name: &str| sample(&second, name) - sample(&first, name);
+    assert_eq!(delta("imclim_points_computed_total"), GRID_POINTS as f64);
+    assert_eq!(delta("imclim_trials_completed_total"), (GRID_POINTS * GRID_TRIALS) as f64);
+    assert!(delta("imclim_cache_probe_seconds_count") >= 1.0, "probe histogram observed");
+    assert!(delta("imclim_mc_chunk_seconds_count") >= 1.0, "chunk histogram observed");
+    for name in [
+        "imclim_cache_hits_total",
+        "imclim_cache_misses_total",
+        "imclim_mc_errors_total",
+        "imclim_trace_spans_dropped_total",
+    ] {
+        assert!(delta(name) >= 0.0, "counter {name} is monotone");
+    }
+    // +Inf bucket equals the count (cumulative buckets are complete).
+    assert_eq!(
+        sample(&second, "imclim_mc_chunk_seconds_bucket{le=\"+Inf\"}"),
+        sample(&second, "imclim_mc_chunk_seconds_count"),
+    );
+    assert_eq!(sample(&second, "imclim_jobs_running"), 0.0, "sampled after completion");
+
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Live progress streaming
+// ---------------------------------------------------------------------
+
+fn stream_events(ep: &HttpEndpoint, id: u64) -> Vec<Json> {
+    let body = ep
+        .get_stream(&format!("jobs/{id}/events"), |_| {})
+        .unwrap_or_else(|e| panic!("streaming job {id} events: {e:?}"));
+    let text = String::from_utf8(body).expect("NDJSON is UTF-8");
+    text.lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad NDJSON line {l:?}: {e}")))
+        .collect()
+}
+
+#[test]
+fn job_events_stream_ndjson_ending_with_the_terminal_status() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (handle, ep, _out) = daemon("events");
+
+    // Cold job: connect while it runs; the stream replays everything
+    // logged so far and follows the job to its terminal line.
+    let cold = submit(&ep, sweep_body());
+    let events = stream_events(&ep, cold);
+    let kinds: Vec<&str> = events
+        .iter()
+        .map(|j| j.get("kind").and_then(|v| v.as_str()).expect("every event has a kind"))
+        .collect();
+    assert!(kinds.contains(&"mc_start"), "{kinds:?}");
+    assert!(
+        kinds.iter().filter(|k| **k == "point").count() >= GRID_POINTS,
+        "one event per computed point: {kinds:?}"
+    );
+    assert_eq!(kinds.last(), Some(&"terminal"), "{kinds:?}");
+    let terminal = events.last().unwrap();
+    assert_eq!(terminal.get("state").and_then(|v| v.as_str()), Some("done"));
+    assert_eq!(terminal.get("points_computed").and_then(Json::as_usize), Some(GRID_POINTS));
+    assert!(terminal.get("duration_ms").is_some(), "{terminal:?}");
+
+    // The status JSON carries the new lifecycle timestamps.
+    let status = wait_job(&ep, cold);
+    for field in ["queued_at_ms", "started_at_ms", "finished_at_ms", "duration_ms"] {
+        assert!(status.get(field).is_some(), "status lacks {field}: {status:?}");
+    }
+
+    // Warm resubmission: nothing computes, so the stream is exactly the
+    // terminal line (the scheduler never starts).
+    let warm = submit(&ep, sweep_body());
+    wait_job(&ep, warm);
+    let events = stream_events(&ep, warm);
+    assert_eq!(events.len(), 1, "warm job streams only its terminal event: {events:?}");
+    let terminal = &events[0];
+    assert_eq!(terminal.get("kind").and_then(|v| v.as_str()), Some("terminal"));
+    assert_eq!(terminal.get("state").and_then(|v| v.as_str()), Some("done"));
+    assert_eq!(terminal.get("cache_hits").and_then(Json::as_usize), Some(GRID_POINTS));
+    assert_eq!(terminal.get("points_computed").and_then(Json::as_usize), Some(0));
+
+    // Unknown job: the events route 404s rather than hanging.
+    let (st, _) = ep.get_raw("jobs/9999/events").unwrap();
+    assert_eq!(st, 404);
+
+    handle.shutdown();
+}
