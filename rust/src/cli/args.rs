@@ -176,6 +176,19 @@ EXAMPLES:
   # progress as data on stderr (same events serve streams), or silence
   imclim sweep --arch qs --n 64:512:64 --b-adc 4:10 --progress json
   imclim sweep --arch qs --n 64:512:64 --b-adc 4:10 --quiet
+
+  # fan sweeps out across hosts: workers attach to a running daemon,
+  # lease deterministic --shard i/k slices of each job, and ship the
+  # records back as verified cache artifacts; the coordinator merges
+  # them and emits a CSV byte-identical to a single-process run
+  imclim serve --addr 0.0.0.0:7878 --out-dir /srv/imclim --lease-timeout 30s
+  imclim worker --connect http://coordinator:7878 --name $(hostname)
+  curl -s http://coordinator:7878/workers   # who is attached, who holds leases
+
+  # workers are disposable: kill one mid-job and its shards re-queue to
+  # the survivors (watch for shard_requeued in the job's event stream);
+  # with no workers left the coordinator finishes the job itself
+  curl -sN http://coordinator:7878/jobs/1/events | grep shard_
 ";
 
 /// Parse a byte size with optional binary-unit suffix: `"4096"`,

@@ -23,7 +23,11 @@
 //!                        sweep/pareto/optimize jobs as JSON POSTs,
 //!                        runs them through the same code paths as the
 //!                        CLI against one shared cache (warm queries
-//!                        answer with zero Monte-Carlo)
+//!                        answer with zero Monte-Carlo); doubles as the
+//!                        coordinator for remote workers
+//!   worker               remote execution worker: leases sweep shards
+//!                        from a serve daemon and publishes results
+//!                        back as verified cache artifacts
 //!   dnn                  train the Fig. 2 MLP and report accuracy/SNR
 //!   smoke                PJRT round-trip smoke test
 //!   assign               precision assignment for a target SNR (Sec. III-B)
@@ -159,7 +163,28 @@ COMMANDS:
                       GET /jobs/<id>/result, POST /jobs/<id>/cancel,
                       POST /shutdown. SIGTERM / SIGINT / POST /shutdown
                       drain gracefully: the in-flight job completes,
-                      queued jobs are canceled
+                      queued jobs are canceled. The daemon is also the
+                      coordinator for `imclim worker` processes:
+                      registered workers get sweep jobs sharded across
+                      them (--lease-timeout DUR, default 30s: a worker
+                      silent that long is reaped and its shards
+                      re-queued); with none registered, jobs run
+                      locally exactly as before
+  worker              attach to a serve daemon and execute leased sweep
+                      shards: --connect http://HOST:PORT (required),
+                      --name N (default worker-<pid>), --scratch DIR
+                      (per-shard out-dirs + a local cache that stays
+                      warm across leases), --poll-ms MS (idle lease
+                      poll, default 500), --heartbeat-ms MS (keep-alive
+                      while executing, default 1000). Results travel
+                      back as verified cache artifacts (`cache pack` /
+                      `push` over the coordinator's /fabric store); the
+                      coordinator merges them and emits a CSV
+                      byte-identical to a single-process run. Exits 0
+                      when the coordinator drains or disappears —
+                      workers are disposable; a killed worker's shards
+                      are re-leased to the survivors or run locally by
+                      the coordinator
   assign              precision assignment: --snr-a DB [--margin DB]
   dnn                 train the Fig. 2 MLP: [--epochs E]
   smoke               PJRT artifact round-trip check
@@ -246,6 +271,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("merge") => cmd_merge(args),
         Some("cache") => cmd_cache(args),
         Some("serve") => serve::cmd_serve(args),
+        Some("worker") => serve::cmd_worker(args),
         Some("assign") => cmd_assign(args),
         Some("dnn") => cmd_dnn(args),
         Some("smoke") => cmd_smoke(args),

@@ -28,6 +28,21 @@
 //!   POST /jobs/<id>/cancel   cancel a queued job (in-flight ones finish)
 //!   POST /shutdown           graceful drain (same path as SIGTERM)
 //!
+//! Worker fabric (see `coordinator::remote`): `imclim worker
+//! --connect URL` processes on other hosts register here, lease
+//! deterministic `--shard i/k` slices of the running sweep job, and
+//! publish results back as verified cache artifacts. A daemon with no
+//! registered workers runs every job locally, exactly as before.
+//!   POST /workers/register   {"name"} → {"worker_id"} (503 draining)
+//!   POST /workers/heartbeat  {"worker_id"} keep-alive → 200 | 404
+//!   POST /workers/lease      {"worker_id"} → 200 lease | 204 no work
+//!                            | 404 re-register | 503 draining
+//!   POST /workers/complete   {"worker_id","job_id","shard",
+//!                            "artifact"|"error"} → 200 | 404 | 409
+//!   GET  /workers            registered workers (id, name, leases)
+//!   GET|PUT /fabric/...      per-shard artifact stores (the push/pull
+//!                            transport; files under DIR/fabric/)
+//!
 //! Transport: the dependency-free HTTP/1.1 server half in
 //! `registry::http` — one request per connection, `Content-Length`
 //! bodies, thread per connection. Job execution itself is sequential
@@ -36,7 +51,7 @@
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -48,14 +63,18 @@ use crate::coordinator::jobs::{
     CancelOutcome, JobManager, JobSpec, JobState, JobStatus, SubmitError,
 };
 use crate::coordinator::metrics;
+use crate::coordinator::remote::{
+    self, CompleteReply, Fabric, LeaseReply, ShardLease, FABRIC_PREFIX,
+};
 use crate::obs::progress::EventLog;
 use crate::obs::registry as obs_registry;
 use crate::registry::http::{
-    finish_chunked, read_request, write_chunk, write_chunked_head, write_response, HttpRequest,
+    finish_chunked, read_request, write_chunk, write_chunked_head, write_response, HttpEndpoint,
+    HttpRequest, RequestError,
 };
-use crate::util::json::{num, obj, s, Json};
+use crate::util::json::{arr, num, obj, s, Json};
 
-use super::args::Args;
+use super::args::{parse_duration_secs, Args};
 
 /// Set by the SIGTERM/SIGINT handler; every accept loop polls it, so a
 /// signal drains the daemon exactly like `POST /shutdown`.
@@ -104,20 +123,36 @@ impl ServeHandle {
 }
 
 /// Bind `addr` and start serving. `queue_depth` bounds the submission
-/// queue (backpressure: an over-full queue answers HTTP 429).
+/// queue (backpressure: an over-full queue answers HTTP 429). Uses the
+/// default worker lease timeout; see [`start_with`].
 pub fn start(addr: &str, out_dir: PathBuf, queue_depth: usize) -> anyhow::Result<ServeHandle> {
+    start_with(addr, out_dir, queue_depth, remote::DEFAULT_LEASE_TIMEOUT)
+}
+
+/// [`start`] with an explicit worker lease timeout: how long a worker
+/// may go silent before its shards are re-queued.
+pub fn start_with(
+    addr: &str,
+    out_dir: PathBuf,
+    queue_depth: usize,
+    lease_timeout: Duration,
+) -> anyhow::Result<ServeHandle> {
     std::fs::create_dir_all(&out_dir)
         .with_context(|| format!("creating out-dir {}", out_dir.display()))?;
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     listener.set_nonblocking(true)?;
     let shutdown = Arc::new(AtomicBool::new(false));
-    let manager = Arc::new(JobManager::new(queue_depth, job_runner(out_dir)));
+    let fabric = Arc::new(Fabric::new(out_dir.join("fabric"), lease_timeout));
+    let manager = Arc::new(JobManager::new(
+        queue_depth,
+        job_runner(out_dir, Arc::clone(&fabric)),
+    ));
     let accept = {
         let shutdown = Arc::clone(&shutdown);
         std::thread::Builder::new()
             .name("serve-accept".into())
-            .spawn(move || accept_loop(listener, manager, shutdown))
+            .spawn(move || accept_loop(listener, manager, fabric, shutdown))
             .context("spawning the accept loop")?
     };
     Ok(ServeHandle {
@@ -127,13 +162,18 @@ pub fn start(addr: &str, out_dir: PathBuf, queue_depth: usize) -> anyhow::Result
     })
 }
 
-/// `imclim serve --addr HOST:PORT --out-dir DIR [--queue-depth N]`.
+/// `imclim serve --addr HOST:PORT --out-dir DIR [--queue-depth N]
+/// [--lease-timeout DUR]`.
 pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let addr = args.opt("addr").unwrap_or("127.0.0.1:7878");
     let out_dir: PathBuf = args.opt("out-dir").unwrap_or("results").into();
     let queue_depth = args.opt_parse("queue-depth", 64usize);
+    let lease_timeout = match args.opt("lease-timeout") {
+        Some(v) => Duration::from_secs(parse_duration_secs(v)?),
+        None => remote::DEFAULT_LEASE_TIMEOUT,
+    };
     install_signal_handlers();
-    let handle = start(addr, out_dir.clone(), queue_depth)?;
+    let handle = start_with(addr, out_dir.clone(), queue_depth, lease_timeout)?;
     // the "listening on" line is the daemon's readiness signal (tests
     // and scripts parse it to learn a port-0 assignment)
     println!("imclim serve: listening on {}", handle.base_url());
@@ -141,6 +181,10 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "imclim serve: jobs under {}, shared cache {}",
         out_dir.join("jobs").display(),
         out_dir.join("cache").display()
+    );
+    println!(
+        "imclim serve: worker fabric at /workers (lease timeout {}s)",
+        lease_timeout.as_secs()
     );
     handle.wait();
     println!("imclim serve: drained, shutting down");
@@ -170,7 +214,14 @@ fn install_signal_handlers() {}
 /// The executor closure handed to the job manager: run the submitted
 /// verb through the CLI's own entry points, with the job's private
 /// out-dir and the daemon's shared cache, and return the result CSV.
-fn job_runner(out_dir: PathBuf) -> Box<crate::coordinator::jobs::JobRunner> {
+///
+/// Sweep jobs first go through the worker fabric: with workers
+/// registered, the grid is sharded across them and their artifacts are
+/// merged into the shared cache; the final full-grid pass is then all
+/// cache hits and emits the canonical CSV, byte-identical to a local
+/// run. With no workers the fabric is a no-op and the full pass does
+/// the computing itself — the pre-fabric behaviour.
+fn job_runner(out_dir: PathBuf, fabric: Arc<Fabric>) -> Box<crate::coordinator::jobs::JobRunner> {
     let jobs_root = out_dir.join("jobs");
     let cache_dir = out_dir.join("cache");
     Box::new(move |id: u64, spec: &JobSpec| {
@@ -184,6 +235,27 @@ fn job_runner(out_dir: PathBuf) -> Box<crate::coordinator::jobs::JobRunner> {
         cli.options.insert("cache-dir".into(), cache_dir.to_string_lossy().into_owned());
         let result_name = match spec.verb.as_str() {
             "sweep" => {
+                let local_shard = |i: usize, k: usize| -> anyhow::Result<()> {
+                    // the executor thread is the shared cache's single
+                    // writer, so the fallback writes it directly; only
+                    // the partial CSV is diverted (and discarded)
+                    let mut shard_cli = cli.clone();
+                    let shard_dir = job_dir.join(format!("local-shard-{i}"));
+                    shard_cli
+                        .options
+                        .insert("out-dir".into(), shard_dir.to_string_lossy().into_owned());
+                    super::run_sweep_grid(&shard_cli, Some((i, k)))?;
+                    let _ = std::fs::remove_dir_all(&shard_dir);
+                    Ok(())
+                };
+                let report = fabric.run_distributed(id, spec, &cache_dir, &local_shard)?;
+                if report.shards > 0 {
+                    println!(
+                        "serve: job {id} distributed over {} shards \
+                         ({} merged from workers, {} run locally, {} records pulled)",
+                        report.shards, report.merged, report.local, report.records
+                    );
+                }
                 super::run_sweep_grid(&cli, None)?;
                 "sweep.csv"
             }
@@ -201,7 +273,12 @@ fn job_runner(out_dir: PathBuf) -> Box<crate::coordinator::jobs::JobRunner> {
     })
 }
 
-fn accept_loop(listener: TcpListener, manager: Arc<JobManager>, shutdown: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    manager: Arc<JobManager>,
+    fabric: Arc<Fabric>,
+    shutdown: Arc<AtomicBool>,
+) {
     let mut handlers: Vec<JoinHandle<()>> = Vec::new();
     loop {
         if shutdown.load(Ordering::SeqCst) || SIGNAL_SHUTDOWN.load(Ordering::SeqCst) {
@@ -210,10 +287,11 @@ fn accept_loop(listener: TcpListener, manager: Arc<JobManager>, shutdown: Arc<At
         match listener.accept() {
             Ok((mut stream, _peer)) => {
                 let manager = Arc::clone(&manager);
+                let fabric = Arc::clone(&fabric);
                 let shutdown = Arc::clone(&shutdown);
                 let spawned = std::thread::Builder::new()
                     .name("serve-conn".into())
-                    .spawn(move || handle_connection(&mut stream, &manager, &shutdown));
+                    .spawn(move || handle_connection(&mut stream, &manager, &fabric, &shutdown));
                 if let Ok(h) = spawned {
                     handlers.push(h);
                 }
@@ -231,21 +309,32 @@ fn accept_loop(listener: TcpListener, manager: Arc<JobManager>, shutdown: Arc<At
     manager.shutdown();
 }
 
-fn handle_connection(stream: &mut TcpStream, manager: &JobManager, shutdown: &AtomicBool) {
+fn handle_connection(
+    stream: &mut TcpStream,
+    manager: &JobManager,
+    fabric: &Fabric,
+    shutdown: &AtomicBool,
+) {
     let _ = stream.set_read_timeout(Some(CONN_TIMEOUT));
     let _ = stream.set_write_timeout(Some(CONN_TIMEOUT));
     let req = match read_request(stream) {
         Ok(r) => r,
-        // a hung-up or garbled client costs nothing but this connection
-        Err(_) => return,
+        // protocol violations get their status before the close...
+        Err(RequestError::Rejected { status, reason }) => {
+            let _ = error_response(stream, status, &reason);
+            return;
+        }
+        // ...while a hung-up client costs nothing but this connection
+        Err(RequestError::Io(_)) => return,
     };
-    let _ = route(stream, &req, manager, shutdown);
+    let _ = route(stream, &req, manager, fabric, shutdown);
 }
 
 fn route(
     stream: &mut TcpStream,
     req: &HttpRequest,
     manager: &JobManager,
+    fabric: &Fabric,
     shutdown: &AtomicBool,
 ) -> anyhow::Result<()> {
     let path = req.path.split('?').next().unwrap_or("");
@@ -260,15 +349,17 @@ fn route(
             stream,
             200,
             "application/json",
-            stats_json(manager).to_string().as_bytes(),
+            stats_json(manager, fabric).to_string().as_bytes(),
         ),
         ("GET", "/metrics") => {
-            // job gauges are sampled at scrape time: the registry's
-            // counters accumulate on their own, but queue depths are
-            // the manager's state
+            // job/worker gauges are sampled at scrape time: the
+            // registry's counters accumulate on their own, but queue
+            // depths and worker liveness are the manager's/fabric's
+            // state
             let q = manager.queue_stats();
             obs_registry::JOBS_QUEUED.set(q.queued as u64);
             obs_registry::JOBS_RUNNING.set(q.running as u64);
+            obs_registry::WORKERS_REGISTERED.set(fabric.live_workers() as u64);
             write_response(
                 stream,
                 200,
@@ -300,8 +391,177 @@ fn route(
             shutdown.store(true, Ordering::SeqCst);
             write_response(stream, 200, "text/plain", b"draining\n")
         }
+        ("GET", "/workers") => write_response(
+            stream,
+            200,
+            "application/json",
+            workers_json(fabric).to_string().as_bytes(),
+        ),
+        ("POST", p) if p.starts_with("/workers/") => {
+            let draining = shutdown.load(Ordering::SeqCst) || SIGNAL_SHUTDOWN.load(Ordering::SeqCst);
+            worker_route(stream, &p["/workers/".len()..], &req.body, fabric, draining)
+        }
         (method, p) if p.starts_with("/jobs/") => job_route(stream, method, p, manager, shutdown),
+        (method, p)
+            if p.starts_with(&format!("{FABRIC_PREFIX}/")) && matches!(method, "GET" | "PUT") =>
+        {
+            fabric_store_route(stream, method, &p[FABRIC_PREFIX.len() + 1..], &req.body, fabric)
+        }
         ("GET" | "POST", _) => error_response(stream, 404, "no such route"),
+        _ => error_response(stream, 405, "method not allowed"),
+    }
+}
+
+/// The worker-fabric control endpoints: register / heartbeat / lease /
+/// complete. All take a small JSON body; registration and leasing are
+/// refused while draining so workers detach cleanly (in-flight shards
+/// still complete — heartbeat and complete stay open).
+fn worker_route(
+    stream: &mut TcpStream,
+    tail: &str,
+    body: &[u8],
+    fabric: &Fabric,
+    draining: bool,
+) -> anyhow::Result<()> {
+    let json = match std::str::from_utf8(body)
+        .ok()
+        .and_then(|t| Json::parse(t).ok())
+    {
+        Some(j) => j,
+        None => return error_response(stream, 400, "body is not valid JSON"),
+    };
+    let worker_id = || {
+        json.get("worker_id")
+            .and_then(Json::as_usize)
+            .map(|v| v as u64)
+    };
+    match tail {
+        "register" => {
+            if draining {
+                return error_response(stream, 503, "daemon is draining — no new workers");
+            }
+            let Some(name) = json.get("name").and_then(Json::as_str) else {
+                return error_response(stream, 400, "registration needs a 'name'");
+            };
+            let id = fabric.register(name);
+            let reply = obj(vec![
+                ("worker_id", num(id as f64)),
+                (
+                    "lease_timeout_ms",
+                    num(fabric.lease_timeout().as_millis() as f64),
+                ),
+            ]);
+            write_response(stream, 200, "application/json", reply.to_string().as_bytes())
+        }
+        "heartbeat" => match worker_id() {
+            None => error_response(stream, 400, "heartbeat needs a numeric 'worker_id'"),
+            Some(id) if fabric.heartbeat(id) => {
+                write_response(stream, 200, "application/json", b"{\"ok\": true}")
+            }
+            Some(_) => error_response(stream, 404, "unknown worker — re-register"),
+        },
+        "lease" => {
+            let Some(id) = worker_id() else {
+                return error_response(stream, 400, "lease needs a numeric 'worker_id'");
+            };
+            if draining {
+                return error_response(stream, 503, "daemon is draining — no new leases");
+            }
+            match fabric.lease(id) {
+                LeaseReply::UnknownWorker => {
+                    error_response(stream, 404, "unknown worker — re-register")
+                }
+                LeaseReply::NoWork => write_response(stream, 204, "application/json", b""),
+                LeaseReply::Lease(lease) => write_response(
+                    stream,
+                    200,
+                    "application/json",
+                    remote::lease_json(&lease).to_string().as_bytes(),
+                ),
+            }
+        }
+        "complete" => {
+            let (Some(id), Some(job_id), Some(shard)) = (
+                worker_id(),
+                json.get("job_id").and_then(Json::as_usize),
+                json.get("shard").and_then(Json::as_usize),
+            ) else {
+                return error_response(
+                    stream,
+                    400,
+                    "complete needs numeric 'worker_id', 'job_id', 'shard'",
+                );
+            };
+            let outcome = match json.get("error").and_then(Json::as_str) {
+                Some(msg) => Err(msg.to_string()),
+                None => Ok(json
+                    .get("artifact")
+                    .and_then(Json::as_str)
+                    .map(str::to_string)),
+            };
+            match fabric.complete(id, job_id as u64, shard, outcome) {
+                CompleteReply::Accepted => {
+                    write_response(stream, 200, "application/json", b"{\"ok\": true}")
+                }
+                CompleteReply::UnknownWorker => {
+                    error_response(stream, 404, "unknown worker — re-register")
+                }
+                CompleteReply::NotLeased => error_response(
+                    stream,
+                    409,
+                    "shard is no longer leased to this worker (re-queued)",
+                ),
+            }
+        }
+        _ => error_response(stream, 404, "no such route"),
+    }
+}
+
+fn workers_json(fabric: &Fabric) -> Json {
+    let rows = fabric
+        .workers()
+        .into_iter()
+        .map(|w| {
+            obj(vec![
+                ("id", num(w.id as f64)),
+                ("name", s(&w.name)),
+                ("leased", num(w.leased as f64)),
+                ("idle_ms", num(w.idle_ms as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![("workers", arr(rows))])
+}
+
+/// The dumb file store under `/fabric/...` that workers push shard
+/// artifacts to (and `registry::pull` later reads server-side, straight
+/// from disk). Paths are sanitized component-by-component; the body cap
+/// in `read_request` bounds upload size.
+fn fabric_store_route(
+    stream: &mut TcpStream,
+    method: &str,
+    rel: &str,
+    body: &[u8],
+    fabric: &Fabric,
+) -> anyhow::Result<()> {
+    let Some(path) = remote::sanitize_store_rel(fabric.store_root(), rel) else {
+        return error_response(stream, 400, "bad fabric path");
+    };
+    match method {
+        "GET" => match std::fs::read(&path) {
+            Ok(bytes) => write_response(stream, 200, "application/octet-stream", &bytes),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                error_response(stream, 404, "no such fabric object")
+            }
+            Err(e) => error_response(stream, 500, &format!("reading fabric object: {e}")),
+        },
+        "PUT" => {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(&path, body)?;
+            write_response(stream, 201, "text/plain", b"stored\n")
+        }
         _ => error_response(stream, 405, "method not allowed"),
     }
 }
@@ -498,10 +758,20 @@ fn status_json(st: &JobStatus) -> Json {
     obj(fields)
 }
 
-fn stats_json(manager: &JobManager) -> Json {
+fn stats_json(manager: &JobManager, fabric: &Fabric) -> Json {
     let m = metrics::snapshot();
     let q = manager.queue_stats();
+    let (sh_pending, sh_active, sh_done) = fabric.shard_counts();
     obj(vec![
+        ("workers", num(fabric.live_workers() as f64)),
+        (
+            "shards",
+            obj(vec![
+                ("pending", num(sh_pending as f64)),
+                ("active", num(sh_active as f64)),
+                ("done", num(sh_done as f64)),
+            ]),
+        ),
         ("cache_hits", num(m.cache_hits as f64)),
         ("cache_misses", num(m.cache_misses as f64)),
         ("points_computed", num(m.points_computed as f64)),
@@ -520,6 +790,59 @@ fn stats_json(manager: &JobManager) -> Json {
         ),
         ("draining", Json::Bool(manager.is_shutting_down())),
     ])
+}
+
+/// `imclim worker --connect http://coordinator:PORT [--name N]
+/// [--scratch DIR] [--poll-ms MS] [--heartbeat-ms MS] [--hold-ms MS]`
+/// — attach to a running `imclim serve` daemon and execute leased
+/// sweep shards until the coordinator drains or SIGTERM/SIGINT.
+pub fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let url = args
+        .opt("connect")
+        .context("imclim worker needs --connect http://coordinator:PORT")?;
+    let coordinator = HttpEndpoint::parse(url)?;
+    let name = args
+        .opt("name")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("worker-{}", std::process::id()));
+    let scratch: PathBuf = args
+        .opt("scratch")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| std::env::temp_dir().join(format!("imclim-worker-{name}")));
+    let cfg = remote::WorkerConfig {
+        coordinator,
+        name,
+        scratch,
+        poll: Duration::from_millis(args.opt_parse("poll-ms", 500u64)),
+        heartbeat: Duration::from_millis(args.opt_parse("heartbeat-ms", 1_000u64)),
+        hold: Duration::from_millis(args.opt_parse("hold-ms", 0u64)),
+    };
+    install_signal_handlers();
+    remote::run_worker(&cfg, &execute_shard, &|| {
+        SIGNAL_SHUTDOWN.load(Ordering::SeqCst)
+    })
+}
+
+/// Execute one leased shard through the same grid entry point the CLI
+/// and the daemon use, against the worker's scratch cache. The shard's
+/// partial CSV lands in (and dies with) the per-lease out-dir; only
+/// cache records travel back to the coordinator.
+fn execute_shard(lease: &ShardLease, out_dir: &Path, cache_dir: &Path) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        lease.spec.verb == "sweep",
+        "coordinator leased unsupported verb '{}'",
+        lease.spec.verb
+    );
+    let mut cli = Args {
+        positionals: vec![lease.spec.verb.clone()],
+        options: lease.spec.options.clone(),
+        switches: lease.spec.switches.clone(),
+    };
+    cli.options
+        .insert("out-dir".into(), out_dir.to_string_lossy().into_owned());
+    cli.options
+        .insert("cache-dir".into(), cache_dir.to_string_lossy().into_owned());
+    super::run_sweep_grid(&cli, Some((lease.index, lease.total)))
 }
 
 #[cfg(test)]

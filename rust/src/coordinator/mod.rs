@@ -21,6 +21,7 @@
 
 pub mod jobs;
 pub mod metrics;
+pub mod remote;
 pub mod scheduler;
 pub mod service;
 

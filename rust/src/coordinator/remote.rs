@@ -1,0 +1,1060 @@
+//! Remote execution fabric for served jobs.
+//!
+//! `imclim serve` stays the single coordinator: it owns the job queue,
+//! the shared result cache, and the canonical CSV. What this module
+//! adds is the ability to fan one job's grid out across `imclim
+//! worker` processes on other hosts:
+//!
+//! - Workers **register** over the daemon's HTTP port and then poll
+//!   for **leases**. A lease names one deterministic `--shard i/k`
+//!   slice of the running job's grid (`SweepSpec::shard` — same point
+//!   ids and cache keys as a local run) plus the URL path of a
+//!   per-shard artifact store on the coordinator.
+//! - A worker executes its slice against a local scratch cache, then
+//!   publishes the records back through the cache-artifact contract:
+//!   `registry::pack` → `registry::push` against the coordinator's
+//!   `/fabric/...` store. The artifact is content-addressed and
+//!   re-verified by the coordinator before a single record lands in
+//!   the shared cache.
+//! - The coordinator's executor thread is the **only writer** of the
+//!   shared cache: it pulls each uploaded artifact (verify → unpack →
+//!   [`merge_cache_dirs`]) sequentially, then runs the canonical warm
+//!   full-grid pass that emits `sweep.csv` — byte-identical to a
+//!   single-process run because every record is content-addressed by
+//!   the same keys.
+//!
+//! Robustness: every lease doubles as a heartbeat, and a dedicated
+//! heartbeat runs while a worker is busy. A worker silent for longer
+//! than the lease timeout is reaped and its shards re-queued
+//! (`shard_requeued` in the job's event stream). A shard that keeps
+//! failing — or that nobody is left to run — is executed locally by
+//! the coordinator, so a fleet dying mid-job degrades to the old
+//! single-process behaviour instead of wedging the queue.
+//!
+//! Lease bookkeeping lives in coordinator memory and is valid for
+//! exactly one coordinator: this is the compute-side twin of the
+//! registry's single-pusher rule (see `registry::store::push`). Run
+//! one `imclim serve` per shared cache; point any number of workers
+//! at it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::jobs::JobSpec;
+use crate::obs::progress;
+use crate::obs::registry as obs_registry;
+use crate::registry::http::HttpEndpoint;
+use crate::registry::{pack, pull, push, FileStore, HttpStore};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// How long a worker may go silent before the coordinator declares it
+/// dead and re-queues its leased shards.
+pub const DEFAULT_LEASE_TIMEOUT: Duration = Duration::from_secs(30);
+/// URL prefix of the coordinator's per-shard artifact stores.
+pub const FABRIC_PREFIX: &str = "/fabric";
+/// A shard is handed to workers at most this many times; after that the
+/// coordinator runs it locally, so a deterministic grid error surfaces
+/// with its real message instead of bouncing between workers forever.
+const MAX_WORKER_ATTEMPTS: u32 = 3;
+/// Executor poll interval while waiting on remote shards.
+const WAIT_POLL: Duration = Duration::from_millis(100);
+/// Consecutive lease/transport failures after which a worker assumes
+/// the coordinator is gone and exits cleanly.
+const MAX_CONNECT_FAILURES: u32 = 5;
+
+// ---------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------
+
+struct WorkerInfo {
+    name: String,
+    last_seen: Instant,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum SlotState {
+    Pending,
+    /// Leased to a worker id (0 = the coordinator's local fallback).
+    Leased { worker: u64 },
+    /// Worker finished and pushed an artifact (`None` for an empty
+    /// shard); the executor still has to pull/verify/merge it.
+    Uploaded { artifact: Option<String> },
+    Done,
+}
+
+struct Slot {
+    state: SlotState,
+    /// Times this shard has been leased to a worker.
+    attempts: u32,
+    /// Most recent worker-reported execution error, kept for the job's
+    /// failure message.
+    last_error: Option<String>,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            state: SlotState::Pending,
+            attempts: 0,
+            last_error: None,
+        }
+    }
+}
+
+struct DistJob {
+    id: u64,
+    spec: JobSpec,
+    slots: Vec<Slot>,
+}
+
+struct FabricState {
+    next_worker: u64,
+    workers: BTreeMap<u64, WorkerInfo>,
+    /// Shards of the currently distributed job. The serve executor is
+    /// sequential, so at most one job ever has shards outstanding.
+    job: Option<DistJob>,
+}
+
+/// Coordinator-side lease bookkeeping: registered workers, the running
+/// job's shard slots, and the filesystem root of the per-shard artifact
+/// stores served under [`FABRIC_PREFIX`].
+pub struct Fabric {
+    state: Mutex<FabricState>,
+    cv: Condvar,
+    store_root: PathBuf,
+    lease_timeout: Duration,
+}
+
+/// One shard lease as handed to a worker.
+#[derive(Clone, Debug)]
+pub struct ShardLease {
+    pub job_id: u64,
+    pub index: usize,
+    pub total: usize,
+    pub spec: JobSpec,
+    /// URL path (on the coordinator) of this shard's artifact store.
+    pub store_path: String,
+}
+
+/// Outcome of a lease request.
+pub enum LeaseReply {
+    /// The worker id is unknown (reaped or never registered) — 404,
+    /// the worker should re-register.
+    UnknownWorker,
+    /// Nothing to do right now — 204.
+    NoWork,
+    Lease(ShardLease),
+}
+
+/// Outcome of a completion report.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CompleteReply {
+    Accepted,
+    UnknownWorker,
+    /// The shard is no longer leased to this worker (it was reaped and
+    /// the shard re-queued) — the upload is ignored, which is harmless:
+    /// artifacts are content-addressed and re-verified on pull.
+    NotLeased,
+}
+
+/// A registered worker, as reported by `GET /workers`.
+#[derive(Clone, Debug)]
+pub struct WorkerRow {
+    pub id: u64,
+    pub name: String,
+    /// Shards of the running job currently leased to this worker.
+    pub leased: usize,
+    /// Milliseconds since the last heartbeat/lease/completion.
+    pub idle_ms: u64,
+}
+
+/// What [`Fabric::run_distributed`] did.
+#[derive(Clone, Debug, Default)]
+pub struct DistReport {
+    /// Shards the job was split into (0 = no workers, caller ran the
+    /// whole grid locally).
+    pub shards: usize,
+    /// Shards merged from worker artifacts.
+    pub merged: usize,
+    /// Shards executed locally by the coordinator (fallback path).
+    pub local: usize,
+    /// Records newly copied into the shared cache from worker uploads.
+    pub records: usize,
+}
+
+fn shard_store_path(job_id: u64, index: usize) -> String {
+    format!("{FABRIC_PREFIX}/jobs/{job_id}/shards/{index}")
+}
+
+impl Fabric {
+    pub fn new(store_root: PathBuf, lease_timeout: Duration) -> Self {
+        Fabric {
+            state: Mutex::new(FabricState {
+                next_worker: 0,
+                workers: BTreeMap::new(),
+                job: None,
+            }),
+            cv: Condvar::new(),
+            store_root,
+            lease_timeout,
+        }
+    }
+
+    pub fn lease_timeout(&self) -> Duration {
+        self.lease_timeout
+    }
+
+    pub fn store_root(&self) -> &Path {
+        &self.store_root
+    }
+
+    /// Register a worker, returning its id. Names are display-only;
+    /// ids are what leases are bound to.
+    pub fn register(&self, name: &str) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        st.next_worker += 1;
+        let id = st.next_worker;
+        st.workers.insert(
+            id,
+            WorkerInfo {
+                name: name.to_string(),
+                last_seen: Instant::now(),
+            },
+        );
+        obs_registry::WORKERS_REGISTERED.set(st.workers.len() as u64);
+        self.cv.notify_all();
+        id
+    }
+
+    /// Refresh a worker's liveness. Returns false for unknown ids.
+    pub fn heartbeat(&self, id: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.workers.get_mut(&id) {
+            Some(w) => {
+                w.last_seen = Instant::now();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Workers that have been heard from within the lease timeout.
+    /// Reaps the rest (re-queueing their shards) as a side effect.
+    pub fn live_workers(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        self.reap_locked(&mut st);
+        st.workers.len()
+    }
+
+    /// Snapshot of registered workers for `GET /workers`.
+    pub fn workers(&self) -> Vec<WorkerRow> {
+        let mut st = self.state.lock().unwrap();
+        self.reap_locked(&mut st);
+        let now = Instant::now();
+        st.workers
+            .iter()
+            .map(|(&id, w)| WorkerRow {
+                id,
+                name: w.name.clone(),
+                leased: st
+                    .job
+                    .as_ref()
+                    .map(|j| {
+                        j.slots
+                            .iter()
+                            .filter(|s| s.state == SlotState::Leased { worker: id })
+                            .count()
+                    })
+                    .unwrap_or(0),
+                idle_ms: now.duration_since(w.last_seen).as_millis() as u64,
+            })
+            .collect()
+    }
+
+    /// Shard counts of the running distribution for `/stats`:
+    /// (pending, active = leased or awaiting merge, done).
+    pub fn shard_counts(&self) -> (usize, usize, usize) {
+        let st = self.state.lock().unwrap();
+        let Some(job) = st.job.as_ref() else {
+            return (0, 0, 0);
+        };
+        let mut counts = (0, 0, 0);
+        for slot in &job.slots {
+            match slot.state {
+                SlotState::Pending => counts.0 += 1,
+                SlotState::Leased { .. } | SlotState::Uploaded { .. } => counts.1 += 1,
+                SlotState::Done => counts.2 += 1,
+            }
+        }
+        counts
+    }
+
+    /// Hand out the next pending shard of the running job, refreshing
+    /// the worker's liveness either way.
+    pub fn lease(&self, worker: u64) -> LeaseReply {
+        let mut st = self.state.lock().unwrap();
+        self.reap_locked(&mut st);
+        let Some(w) = st.workers.get_mut(&worker) else {
+            return LeaseReply::UnknownWorker;
+        };
+        w.last_seen = Instant::now();
+        let name = w.name.clone();
+        let Some(job) = st.job.as_mut() else {
+            return LeaseReply::NoWork;
+        };
+        let total = job.slots.len();
+        let Some(i) = job.slots.iter().position(|slot| {
+            slot.state == SlotState::Pending && slot.attempts < MAX_WORKER_ATTEMPTS
+        }) else {
+            return LeaseReply::NoWork;
+        };
+        job.slots[i].state = SlotState::Leased { worker };
+        job.slots[i].attempts += 1;
+        obs_registry::SHARD_LEASES.add(1);
+        progress::shard("shard_leased", &name, i as u64, total as u64);
+        LeaseReply::Lease(ShardLease {
+            job_id: job.id,
+            index: i,
+            total,
+            spec: job.spec.clone(),
+            store_path: shard_store_path(job.id, i),
+        })
+    }
+
+    /// Record a worker's completion report for a shard it holds.
+    /// `outcome` is `Ok(artifact_id)` (`None` for an empty shard) or
+    /// the worker's execution error.
+    pub fn complete(
+        &self,
+        worker: u64,
+        job_id: u64,
+        index: usize,
+        outcome: Result<Option<String>, String>,
+    ) -> CompleteReply {
+        let mut st = self.state.lock().unwrap();
+        let Some(w) = st.workers.get_mut(&worker) else {
+            return CompleteReply::UnknownWorker;
+        };
+        w.last_seen = Instant::now();
+        let name = w.name.clone();
+        let Some(job) = st.job.as_mut() else {
+            return CompleteReply::NotLeased;
+        };
+        if job.id != job_id || index >= job.slots.len() {
+            return CompleteReply::NotLeased;
+        }
+        let total = job.slots.len();
+        let slot = &mut job.slots[index];
+        if slot.state != (SlotState::Leased { worker }) {
+            return CompleteReply::NotLeased;
+        }
+        match outcome {
+            Ok(artifact) => {
+                slot.state = SlotState::Uploaded { artifact };
+                obs_registry::SHARD_COMPLETIONS.add(1);
+                progress::shard("shard_completed", &name, index as u64, total as u64);
+            }
+            Err(msg) => {
+                slot.state = SlotState::Pending;
+                slot.last_error = Some(msg);
+                obs_registry::SHARD_REQUEUES.add(1);
+                progress::shard("shard_requeued", &name, index as u64, total as u64);
+            }
+        }
+        self.cv.notify_all();
+        CompleteReply::Accepted
+    }
+
+    /// Drop workers whose last sign of life is older than the lease
+    /// timeout, re-queueing any shards they were holding.
+    fn reap_locked(&self, st: &mut FabricState) {
+        let now = Instant::now();
+        let dead: Vec<u64> = st
+            .workers
+            .iter()
+            .filter(|(_, w)| now.duration_since(w.last_seen) > self.lease_timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        if dead.is_empty() {
+            return;
+        }
+        for id in dead {
+            let info = st.workers.remove(&id).expect("dead id was present");
+            if let Some(job) = st.job.as_mut() {
+                let total = job.slots.len();
+                for (i, slot) in job.slots.iter_mut().enumerate() {
+                    if slot.state == (SlotState::Leased { worker: id }) {
+                        slot.state = SlotState::Pending;
+                        obs_registry::SHARD_REQUEUES.add(1);
+                        progress::shard("shard_requeued", &info.name, i as u64, total as u64);
+                    }
+                }
+            }
+        }
+        obs_registry::WORKERS_REGISTERED.set(st.workers.len() as u64);
+        self.cv.notify_all();
+    }
+
+    /// Distribute a job's grid across the registered workers and merge
+    /// their shard artifacts into `cache_dst`, returning once every
+    /// shard is in. With no live workers this is a no-op (`shards: 0`)
+    /// and the caller runs the grid locally as before. `local_exec`
+    /// runs one `(index, total)` shard in-process — the fallback for
+    /// shards whose workers died or that exhausted their attempts.
+    ///
+    /// Called only from the serve executor thread, which is the single
+    /// writer of `cache_dst`.
+    pub fn run_distributed(
+        &self,
+        job_id: u64,
+        spec: &JobSpec,
+        cache_dst: &Path,
+        local_exec: &dyn Fn(usize, usize) -> Result<()>,
+    ) -> Result<DistReport> {
+        let total = {
+            let mut st = self.state.lock().unwrap();
+            self.reap_locked(&mut st);
+            let k = st.workers.len();
+            if k == 0 {
+                return Ok(DistReport::default());
+            }
+            st.job = Some(DistJob {
+                id: job_id,
+                spec: spec.clone(),
+                slots: (0..k).map(|_| Slot::new()).collect(),
+            });
+            self.cv.notify_all();
+            k
+        };
+        let result = self.drive(job_id, total, cache_dst, local_exec);
+        // Always clear the slots so a failed job can't leak leases
+        // into the next one.
+        self.state.lock().unwrap().job = None;
+        result
+    }
+
+    fn drive(
+        &self,
+        job_id: u64,
+        total: usize,
+        cache_dst: &Path,
+        local_exec: &dyn Fn(usize, usize) -> Result<()>,
+    ) -> Result<DistReport> {
+        enum Next {
+            Wait,
+            Merge(usize, Option<String>),
+            Local(usize),
+            Finished,
+        }
+        let mut report = DistReport {
+            shards: total,
+            ..DistReport::default()
+        };
+        loop {
+            let next = {
+                let mut guard = self.state.lock().unwrap();
+                self.reap_locked(&mut guard);
+                // Reborrow through the guard once, so `job` and
+                // `st.workers` below are disjoint field borrows.
+                let st = &mut *guard;
+                let job = st.job.as_mut().expect("distributed job present");
+                let uploaded = job
+                    .slots
+                    .iter()
+                    .position(|s| matches!(s.state, SlotState::Uploaded { .. }));
+                if let Some(i) = uploaded {
+                    // Claim the upload by marking Done now; a failed
+                    // merge reverts to Pending below. Only this thread
+                    // merges, so the intermediate state is never seen
+                    // as "finished" (the all-Done check runs here too).
+                    let prev = std::mem::replace(&mut job.slots[i].state, SlotState::Done);
+                    let SlotState::Uploaded { artifact } = prev else {
+                        unreachable!("position() matched Uploaded");
+                    };
+                    Next::Merge(i, artifact)
+                } else if let Some(i) = job.slots.iter().position(|s| {
+                    s.state == SlotState::Pending
+                        && (s.attempts >= MAX_WORKER_ATTEMPTS || st.workers.is_empty())
+                }) {
+                    // Nobody left to run it, or workers keep failing
+                    // it: the coordinator takes the shard itself.
+                    job.slots[i].state = SlotState::Leased { worker: 0 };
+                    job.slots[i].attempts += 1;
+                    Next::Local(i)
+                } else if job.slots.iter().all(|s| s.state == SlotState::Done) {
+                    Next::Finished
+                } else {
+                    Next::Wait
+                }
+            };
+            match next {
+                Next::Wait => {
+                    let st = self.state.lock().unwrap();
+                    let _unused = self.cv.wait_timeout(st, WAIT_POLL).unwrap();
+                }
+                Next::Merge(i, artifact) => match self.merge_shard(job_id, i, artifact.as_deref(), cache_dst) {
+                    Ok(added) => {
+                        report.merged += 1;
+                        report.records += added;
+                    }
+                    Err(e) => {
+                        // Corrupt or vanished upload: put the shard
+                        // back; a worker (or the local fallback) will
+                        // redo it.
+                        let mut st = self.state.lock().unwrap();
+                        if let Some(job) = st.job.as_mut() {
+                            job.slots[i].state = SlotState::Pending;
+                            job.slots[i].last_error = Some(format!("{e:#}"));
+                        }
+                        obs_registry::SHARD_REQUEUES.add(1);
+                        progress::shard("shard_requeued", "artifact-verify", i as u64, total as u64);
+                    }
+                },
+                Next::Local(i) => {
+                    progress::shard("shard_leased", "coordinator", i as u64, total as u64);
+                    local_exec(i, total).with_context(|| {
+                        let detail = {
+                            let st = self.state.lock().unwrap();
+                            st.job
+                                .as_ref()
+                                .and_then(|j| j.slots[i].last_error.clone())
+                                .map(|e| format!(" (last worker error: {e})"))
+                                .unwrap_or_default()
+                        };
+                        format!("local fallback for shard {i}/{total} failed{detail}")
+                    })?;
+                    let mut st = self.state.lock().unwrap();
+                    if let Some(job) = st.job.as_mut() {
+                        job.slots[i].state = SlotState::Done;
+                    }
+                    report.local += 1;
+                    obs_registry::SHARD_COMPLETIONS.add(1);
+                    progress::shard("shard_completed", "coordinator", i as u64, total as u64);
+                }
+                Next::Finished => return Ok(report),
+            }
+        }
+    }
+
+    /// Pull one uploaded shard artifact (verify → unpack → merge) into
+    /// the shared cache. `None` means the shard produced no records
+    /// (possible when the grid is smaller than the worker count).
+    fn merge_shard(
+        &self,
+        job_id: u64,
+        index: usize,
+        artifact: Option<&str>,
+        cache_dst: &Path,
+    ) -> Result<usize> {
+        let Some(id) = artifact else {
+            return Ok(0);
+        };
+        let store = FileStore::new(
+            self.store_root
+                .join(format!("jobs/{job_id}/shards/{index}")),
+        );
+        let rep = pull(&store, cache_dst, Some(id))
+            .with_context(|| format!("merging shard {index} artifact {id}"))?;
+        Ok(rep.copied)
+    }
+}
+
+/// Map a `/fabric/...` URL path component-by-component onto the store
+/// root, refusing traversal (`..`), hidden components, and anything
+/// outside `[A-Za-z0-9._-]`.
+pub fn sanitize_store_rel(root: &Path, rel: &str) -> Option<PathBuf> {
+    if rel.is_empty() {
+        return None;
+    }
+    let mut path = root.to_path_buf();
+    for comp in rel.split('/') {
+        let ok = !comp.is_empty()
+            && !comp.starts_with('.')
+            && comp
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'));
+        if !ok {
+            return None;
+        }
+        path.push(comp);
+    }
+    Some(path)
+}
+
+// ---------------------------------------------------------------------
+// Wire format — hand-rolled JSON, same as the rest of the daemon
+// ---------------------------------------------------------------------
+
+/// Encode a job spec for a lease body.
+pub fn spec_json(spec: &JobSpec) -> Json {
+    obj(vec![
+        ("cmd", s(&spec.verb)),
+        (
+            "options",
+            Json::Obj(
+                spec.options
+                    .iter()
+                    .map(|(k, v)| (k.clone(), s(v)))
+                    .collect(),
+            ),
+        ),
+        (
+            "switches",
+            arr(spec.switches.iter().map(|w| s(w)).collect()),
+        ),
+    ])
+}
+
+fn decode_spec(j: &Json) -> Result<JobSpec> {
+    let verb = j
+        .get("cmd")
+        .and_then(Json::as_str)
+        .context("lease spec has no cmd")?
+        .to_string();
+    let mut options = BTreeMap::new();
+    if let Some(o) = j.get("options").and_then(Json::as_obj) {
+        for (k, v) in o {
+            options.insert(
+                k.clone(),
+                v.as_str().context("non-string option value")?.to_string(),
+            );
+        }
+    }
+    let mut switches = Vec::new();
+    if let Some(a) = j.get("switches").and_then(Json::as_arr) {
+        for w in a {
+            switches.push(w.as_str().context("non-string switch")?.to_string());
+        }
+    }
+    Ok(JobSpec {
+        verb,
+        options,
+        switches,
+    })
+}
+
+/// Encode a lease for the `POST /workers/lease` 200 body.
+pub fn lease_json(l: &ShardLease) -> Json {
+    obj(vec![
+        ("job_id", num(l.job_id as f64)),
+        ("shard", num(l.index as f64)),
+        ("total", num(l.total as f64)),
+        ("store", s(&l.store_path)),
+        ("spec", spec_json(&l.spec)),
+    ])
+}
+
+fn decode_lease(j: &Json) -> Result<ShardLease> {
+    let field = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_usize)
+            .with_context(|| format!("lease has no numeric '{k}'"))
+    };
+    let spec = decode_spec(j.get("spec").context("lease has no spec")?)?;
+    let lease = ShardLease {
+        job_id: field("job_id")? as u64,
+        index: field("shard")?,
+        total: field("total")?,
+        spec,
+        store_path: j
+            .get("store")
+            .and_then(Json::as_str)
+            .context("lease has no store path")?
+            .to_string(),
+    };
+    ensure!(
+        lease.total > 0 && lease.index < lease.total,
+        "lease shard {}/{} out of range",
+        lease.index,
+        lease.total
+    );
+    Ok(lease)
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// Everything a worker process needs to talk to its coordinator.
+pub struct WorkerConfig {
+    pub coordinator: HttpEndpoint,
+    /// Display name reported on registration (host:pid by default).
+    pub name: String,
+    /// Scratch directory: per-shard out-dirs, artifact staging, and a
+    /// persistent local cache that stays warm across leases.
+    pub scratch: PathBuf,
+    /// Idle delay between lease polls when there is no work.
+    pub poll: Duration,
+    /// Interval of the keep-alive heartbeat while executing a shard.
+    pub heartbeat: Duration,
+    /// Testing/chaos knob: dwell this long between taking a lease and
+    /// executing it (heartbeats continue), so tests and CI can observe
+    /// — or kill — a worker that provably holds a lease.
+    pub hold: Duration,
+}
+
+/// Executes one leased shard: `(lease, out_dir, cache_dir)`.
+pub type ShardExec = dyn Fn(&ShardLease, &Path, &Path) -> Result<()> + Sync;
+
+/// Run the worker loop until the coordinator drains, the stop flag
+/// (SIGINT/SIGTERM) is raised, or the coordinator becomes unreachable.
+/// All three are clean exits: workers are disposable by design — the
+/// coordinator re-queues anything they were holding.
+pub fn run_worker(
+    cfg: &WorkerConfig,
+    exec: &ShardExec,
+    stop: &(dyn Fn() -> bool + Sync),
+) -> Result<()> {
+    std::fs::create_dir_all(&cfg.scratch)
+        .with_context(|| format!("creating scratch dir {}", cfg.scratch.display()))?;
+    let mut worker_id = register_with_retry(cfg, stop)?;
+    println!(
+        "imclim worker: registered as '{}' (id {worker_id}) with {}",
+        cfg.name,
+        cfg.coordinator.url_for("")
+    );
+    let mut failures = 0u32;
+    loop {
+        if stop() {
+            println!("imclim worker: stop requested, exiting");
+            return Ok(());
+        }
+        let body = obj(vec![("worker_id", num(worker_id as f64))]).to_string();
+        match cfg
+            .coordinator
+            .post("workers/lease", body.as_bytes(), "application/json")
+        {
+            Ok((200, reply)) => {
+                failures = 0;
+                let text = String::from_utf8(reply).context("non-UTF-8 lease body")?;
+                let json = Json::parse(&text).map_err(|e| anyhow!("parsing lease: {e}"))?;
+                let lease = decode_lease(&json)?;
+                println!(
+                    "imclim worker: leased shard {}/{} of job {}",
+                    lease.index, lease.total, lease.job_id
+                );
+                execute_lease(cfg, worker_id, &lease, exec)?;
+            }
+            Ok((204, _)) => {
+                failures = 0;
+                std::thread::sleep(cfg.poll);
+            }
+            Ok((404, _)) => {
+                // Reaped (e.g. after a long coordinator pause):
+                // re-register and carry on.
+                worker_id = register_with_retry(cfg, stop)?;
+                println!("imclim worker: lease expired, re-registered as id {worker_id}");
+            }
+            Ok((503, _)) => {
+                println!("imclim worker: coordinator draining, exiting");
+                return Ok(());
+            }
+            Ok((code, _)) => bail!("unexpected HTTP {code} from lease request"),
+            Err(_) => {
+                failures += 1;
+                if failures >= MAX_CONNECT_FAILURES {
+                    println!("imclim worker: coordinator unreachable, exiting");
+                    return Ok(());
+                }
+                std::thread::sleep(cfg.poll);
+            }
+        }
+    }
+}
+
+fn register_with_retry(cfg: &WorkerConfig, stop: &(dyn Fn() -> bool + Sync)) -> Result<u64> {
+    let body = obj(vec![("name", s(&cfg.name))]).to_string();
+    let mut last = String::new();
+    for _ in 0..MAX_CONNECT_FAILURES {
+        if stop() {
+            bail!("stop requested during registration");
+        }
+        match cfg
+            .coordinator
+            .post("workers/register", body.as_bytes(), "application/json")
+        {
+            Ok((200, reply)) => {
+                let text = String::from_utf8_lossy(&reply).into_owned();
+                let id = Json::parse(&text)
+                    .ok()
+                    .and_then(|j| j.get("worker_id").and_then(Json::as_usize))
+                    .with_context(|| format!("registration reply unparseable: {text}"))?;
+                return Ok(id as u64);
+            }
+            Ok((503, _)) => bail!("coordinator is draining, not accepting workers"),
+            Ok((code, _)) => last = format!("HTTP {code}"),
+            Err(e) => last = format!("{e:#}"),
+        }
+        std::thread::sleep(cfg.poll);
+    }
+    bail!("registering with {}: {last}", cfg.coordinator.url_for(""))
+}
+
+/// Execute one lease end to end: dwell (if configured), run the shard,
+/// pack + push the scratch cache, and report completion. Execution and
+/// publish errors are reported to the coordinator (which re-queues the
+/// shard); only transport-level failures bubble out.
+fn execute_lease(
+    cfg: &WorkerConfig,
+    worker_id: u64,
+    lease: &ShardLease,
+    exec: &ShardExec,
+) -> Result<()> {
+    let shard_dir = cfg
+        .scratch
+        .join(format!("job-{}-shard-{}", lease.job_id, lease.index));
+    let _ = std::fs::remove_dir_all(&shard_dir);
+    let cache_dir = cfg.scratch.join("cache");
+
+    // Keep-alive while we work, so shards longer than the lease
+    // timeout don't get re-queued under us.
+    let stop_hb = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let stop_hb = Arc::clone(&stop_hb);
+        let endpoint = cfg.coordinator.clone();
+        let interval = cfg.heartbeat;
+        let body = obj(vec![("worker_id", num(worker_id as f64))]).to_string();
+        std::thread::spawn(move || {
+            while !stop_hb.load(Ordering::SeqCst) {
+                let _ = endpoint.post("workers/heartbeat", body.as_bytes(), "application/json");
+                let mut slept = Duration::ZERO;
+                while slept < interval && !stop_hb.load(Ordering::SeqCst) {
+                    let step = Duration::from_millis(50).min(interval - slept);
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+            }
+        })
+    };
+    if !cfg.hold.is_zero() {
+        std::thread::sleep(cfg.hold);
+    }
+    let outcome: Result<Option<String>, String> = match exec(lease, &shard_dir, &cache_dir) {
+        Err(e) => Err(format!("{e:#}")),
+        Ok(()) => publish_shard(cfg, lease, &cache_dir)
+            .map_err(|e| format!("publishing shard artifact: {e:#}")),
+    };
+    stop_hb.store(true, Ordering::SeqCst);
+    let _ = hb.join();
+    let _ = std::fs::remove_dir_all(&shard_dir);
+
+    let mut fields = vec![
+        ("worker_id", num(worker_id as f64)),
+        ("job_id", num(lease.job_id as f64)),
+        ("shard", num(lease.index as f64)),
+    ];
+    match &outcome {
+        Ok(Some(id)) => fields.push(("artifact", s(id))),
+        Ok(None) => {}
+        Err(msg) => fields.push(("error", s(msg))),
+    }
+    let body = obj(fields).to_string();
+    let (code, _) = cfg
+        .coordinator
+        .post("workers/complete", body.as_bytes(), "application/json")
+        .context("reporting shard completion")?;
+    match &outcome {
+        Ok(art) => println!(
+            "imclim worker: shard {}/{} of job {} done ({})",
+            lease.index,
+            lease.total,
+            lease.job_id,
+            art.as_deref().unwrap_or("empty shard")
+        ),
+        Err(msg) => eprintln!(
+            "imclim worker: shard {}/{} of job {} failed: {msg}",
+            lease.index, lease.total, lease.job_id
+        ),
+    }
+    if !(200..300).contains(&code) {
+        // Reaped mid-shard and the shard re-leased elsewhere; the
+        // upload is ignored (content-addressed, so no harm done).
+        eprintln!("imclim worker: completion for shard {} not accepted (HTTP {code})", lease.index);
+    }
+    Ok(())
+}
+
+/// Pack the worker's whole scratch cache and push it to the lease's
+/// store on the coordinator. Packing the full cache (not just this
+/// shard's records) is deliberate: records are content-addressed, so
+/// extras merge as no-ops at worst and warm the coordinator's shared
+/// cache at best.
+fn publish_shard(cfg: &WorkerConfig, lease: &ShardLease, cache_dir: &Path) -> Result<Option<String>> {
+    if crate::engine::list_record_files(cache_dir)?.is_empty() {
+        return Ok(None);
+    }
+    let art_dir = cfg
+        .scratch
+        .join(format!("artifact-{}-{}", lease.job_id, lease.index));
+    let _ = std::fs::remove_dir_all(&art_dir);
+    let rep = pack(
+        cache_dir,
+        &art_dir,
+        &format!(
+            "worker={} job={} shard={}/{}",
+            cfg.name, lease.job_id, lease.index, lease.total
+        ),
+    )?;
+    let store = HttpStore::new(cfg.coordinator.with_base(&lease.store_path));
+    push(&art_dir, &store)?;
+    let _ = std::fs::remove_dir_all(&art_dir);
+    Ok(Some(rep.id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            verb: "sweep".into(),
+            options: BTreeMap::from([("n".into(), "8,12".into())]),
+            switches: vec!["no-cache".into()],
+        }
+    }
+
+    #[test]
+    fn lease_json_roundtrips() {
+        let lease = ShardLease {
+            job_id: 7,
+            index: 1,
+            total: 3,
+            spec: spec(),
+            store_path: shard_store_path(7, 1),
+        };
+        let text = lease_json(&lease).to_string();
+        let back = decode_lease(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.job_id, 7);
+        assert_eq!(back.index, 1);
+        assert_eq!(back.total, 3);
+        assert_eq!(back.store_path, "/fabric/jobs/7/shards/1");
+        assert_eq!(back.spec.verb, "sweep");
+        assert_eq!(back.spec.options["n"], "8,12");
+        assert_eq!(back.spec.switches, vec!["no-cache".to_string()]);
+        // out-of-range shards are rejected
+        let bad = text.replace("\"shard\":1", "\"shard\":9");
+        assert_ne!(bad, text, "compact JSON key not found");
+        assert!(decode_lease(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn sanitizes_fabric_store_paths() {
+        let root = Path::new("/srv/fabric");
+        let ok = sanitize_store_rel(root, "jobs/3/shards/0/artifacts/ab12/payload.tar.gz");
+        assert_eq!(
+            ok.unwrap(),
+            Path::new("/srv/fabric/jobs/3/shards/0/artifacts/ab12/payload.tar.gz")
+        );
+        for bad in [
+            "",
+            "jobs/../../../etc/passwd",
+            "jobs//x",
+            "jobs/./x",
+            "jobs/.hidden",
+            "jobs/a b",
+            "jobs/x\\y",
+            "/absolute",
+        ] {
+            assert!(sanitize_store_rel(root, bad).is_none(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn fabric_leases_requeues_and_reaps() {
+        let fx = Fabric::new(PathBuf::from("/tmp/unused"), Duration::from_millis(60));
+        assert_eq!(fx.live_workers(), 0);
+        let w1 = fx.register("alpha");
+        let w2 = fx.register("beta");
+        assert_eq!(fx.live_workers(), 2);
+        assert!(fx.heartbeat(w1));
+        assert!(!fx.heartbeat(999));
+
+        // No job yet: nothing to lease.
+        assert!(matches!(fx.lease(w1), LeaseReply::NoWork));
+        assert!(matches!(fx.lease(999), LeaseReply::UnknownWorker));
+
+        // Seed a 2-shard job directly (run_distributed drives this in
+        // production; here we poke the state machine).
+        {
+            let mut st = fx.state.lock().unwrap();
+            st.job = Some(DistJob {
+                id: 42,
+                spec: spec(),
+                slots: vec![Slot::new(), Slot::new()],
+            });
+        }
+        let LeaseReply::Lease(l1) = fx.lease(w1) else {
+            panic!("expected a lease");
+        };
+        assert_eq!((l1.job_id, l1.index, l1.total), (42, 0, 2));
+        assert_eq!(l1.store_path, "/fabric/jobs/42/shards/0");
+
+        // Completion with an error re-queues; with an artifact uploads.
+        assert_eq!(
+            fx.complete(w1, 42, 0, Err("boom".into())),
+            CompleteReply::Accepted
+        );
+        assert_eq!(fx.shard_counts(), (2, 0, 0));
+        let LeaseReply::Lease(l1b) = fx.lease(w1) else {
+            panic!("expected shard 0 back");
+        };
+        assert_eq!(l1b.index, 0);
+        assert_eq!(
+            fx.complete(w1, 42, 0, Ok(Some("abc123".into()))),
+            CompleteReply::Accepted
+        );
+        assert_eq!(fx.shard_counts(), (1, 1, 0));
+        // Stale completion for a shard not leased to the sender.
+        assert_eq!(
+            fx.complete(w2, 42, 0, Ok(None)),
+            CompleteReply::NotLeased
+        );
+
+        // w2 leases shard 1 then goes silent past the lease timeout:
+        // reaped, shard re-queued, and its next call must re-register.
+        let LeaseReply::Lease(l2) = fx.lease(w2) else {
+            panic!("expected a lease");
+        };
+        assert_eq!(l2.index, 1);
+        std::thread::sleep(Duration::from_millis(90));
+        fx.heartbeat(w1); // alpha's clock resets before the reap runs
+        assert_eq!(fx.live_workers(), 1); // beta is gone
+        let rows = fx.workers();
+        assert!(rows.iter().all(|r| r.name != "beta"));
+        assert!(matches!(fx.lease(w2), LeaseReply::UnknownWorker));
+        // shard 1 is pending again
+        let (pending, _, _) = fx.shard_counts();
+        assert!(pending >= 1);
+    }
+
+    #[test]
+    fn attempt_exhausted_shards_stop_going_to_workers() {
+        let fx = Fabric::new(PathBuf::from("/tmp/unused"), Duration::from_secs(60));
+        let w = fx.register("flaky");
+        {
+            let mut st = fx.state.lock().unwrap();
+            st.job = Some(DistJob {
+                id: 1,
+                spec: spec(),
+                slots: vec![Slot::new()],
+            });
+        }
+        for _ in 0..MAX_WORKER_ATTEMPTS {
+            let LeaseReply::Lease(l) = fx.lease(w) else {
+                panic!("expected a lease");
+            };
+            assert_eq!(
+                fx.complete(w, 1, l.index, Err("always fails".into())),
+                CompleteReply::Accepted
+            );
+        }
+        // The shard is pending but reserved for the local fallback now.
+        assert!(matches!(fx.lease(w), LeaseReply::NoWork));
+        assert_eq!(fx.shard_counts(), (1, 0, 0));
+    }
+}

@@ -191,6 +191,18 @@ pub static TRACE_SPANS_DROPPED: Counter = Counter::new(
     "imclim_trace_spans_dropped_total",
     "Trace spans dropped because the recorder slab was full",
 );
+pub static SHARD_LEASES: Counter = Counter::new(
+    "imclim_shard_leases_total",
+    "Job shards leased to remote workers",
+);
+pub static SHARD_COMPLETIONS: Counter = Counter::new(
+    "imclim_shard_completions_total",
+    "Job shards completed (worker upload or local fallback)",
+);
+pub static SHARD_REQUEUES: Counter = Counter::new(
+    "imclim_shard_requeues_total",
+    "Job shards re-queued after a worker died or reported failure",
+);
 
 pub static JOBS_QUEUED: Gauge = Gauge::new(
     "imclim_jobs_queued",
@@ -199,6 +211,10 @@ pub static JOBS_QUEUED: Gauge = Gauge::new(
 pub static JOBS_RUNNING: Gauge = Gauge::new(
     "imclim_jobs_running",
     "Serve jobs currently executing",
+);
+pub static WORKERS_REGISTERED: Gauge = Gauge::new(
+    "imclim_workers_registered",
+    "Remote workers currently registered with the serve daemon",
 );
 
 pub static CACHE_PROBE_SECONDS: Histogram = Histogram::new(
@@ -210,7 +226,7 @@ pub static MC_CHUNK_SECONDS: Histogram = Histogram::new(
     "Latency of individual Monte-Carlo trial chunks",
 );
 
-const COUNTERS: [&Counter; 8] = [
+const COUNTERS: [&Counter; 11] = [
     &CACHE_HITS,
     &CACHE_MISSES,
     &POINTS_COMPUTED,
@@ -219,9 +235,12 @@ const COUNTERS: [&Counter; 8] = [
     &ADAPTIVE_ROUNDS,
     &PROGRESS_EVENTS,
     &TRACE_SPANS_DROPPED,
+    &SHARD_LEASES,
+    &SHARD_COMPLETIONS,
+    &SHARD_REQUEUES,
 ];
 
-const GAUGES: [&Gauge; 2] = [&JOBS_QUEUED, &JOBS_RUNNING];
+const GAUGES: [&Gauge; 3] = [&JOBS_QUEUED, &JOBS_RUNNING, &WORKERS_REGISTERED];
 
 const HISTOGRAMS: [&Histogram; 2] = [&CACHE_PROBE_SECONDS, &MC_CHUNK_SECONDS];
 
@@ -314,6 +333,8 @@ mod tests {
             "imclim_mc_chunk_seconds",
             "imclim_cache_probe_seconds",
             "imclim_jobs_queued",
+            "imclim_workers_registered",
+            "imclim_shard_requeues_total",
         ] {
             assert!(
                 text.contains(&format!("# HELP {family} ")),

@@ -88,6 +88,23 @@ impl HttpEndpoint {
         format!("http://{}:{}{}/{rel}", self.host_display(), self.port, self.base)
     }
 
+    /// A sibling endpoint on the same host/port with a different base
+    /// path. This is how a worker turns its coordinator connection into
+    /// the per-shard artifact store a lease names (`/fabric/jobs/...`).
+    pub fn with_base(&self, base: &str) -> HttpEndpoint {
+        let trimmed = base.trim_end_matches('/');
+        let base = if trimmed.is_empty() || trimmed.starts_with('/') {
+            trimmed.to_string()
+        } else {
+            format!("/{trimmed}")
+        };
+        HttpEndpoint {
+            host: self.host.clone(),
+            port: self.port,
+            base,
+        }
+    }
+
     fn connect(&self) -> Result<TcpStream> {
         let stream = TcpStream::connect((self.host.as_str(), self.port))
             .with_context(|| format!("connecting to {}:{}", self.host, self.port))?;
@@ -503,32 +520,91 @@ pub struct HttpRequest {
     pub body: Vec<u8>,
 }
 
+/// Hard cap on request-line + header bytes; beyond this the request is
+/// rejected with 431 instead of buffering until the connection timeout.
+pub const MAX_HEADER_BYTES: usize = 64 * 1024;
+/// Hard cap on request body bytes (covers artifact payload uploads with
+/// room to spare); larger declared bodies are rejected with 413 before
+/// a single body byte is buffered.
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// Why reading a request failed. Transport failures close the
+/// connection silently; protocol violations carry the status the server
+/// should answer with before closing.
+#[derive(Debug)]
+pub enum RequestError {
+    /// I/O failure or client hang-up — nothing useful can be written back.
+    Io(anyhow::Error),
+    /// Protocol violation — answer `status` with `reason`, then close.
+    Rejected { status: u16, reason: String },
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Io(e) => write!(f, "{e:#}"),
+            RequestError::Rejected { status, reason } => write!(f, "{status}: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+fn reject(status: u16, reason: impl Into<String>) -> RequestError {
+    RequestError::Rejected {
+        status,
+        reason: reason.into(),
+    }
+}
+
 /// Read one HTTP/1.1 request from a stream: request line, headers
-/// (only `Content-Length` is interpreted), then the body.
-pub fn read_request(stream: &mut impl Read) -> Result<HttpRequest> {
+/// (only `Content-Length` is interpreted), then the body. Memory is
+/// bounded: headers beyond [`MAX_HEADER_BYTES`] are rejected with 431
+/// and bodies beyond [`MAX_BODY_BYTES`] with 413 — in both cases
+/// without buffering the excess. A `Content-Length` that does not
+/// parse is a 400 (never silently treated as an empty body), and
+/// `Transfer-Encoding` framing, which this server does not speak, is
+/// a 411 (chunked) or 501 (anything else).
+pub fn read_request(stream: &mut impl Read) -> Result<HttpRequest, RequestError> {
     let mut raw = Vec::new();
     let mut buf = [0u8; 8192];
     let header_end = loop {
         if let Some(i) = find_header_end(&raw) {
             break i;
         }
-        let n = stream.read(&mut buf)?;
+        if raw.len() > MAX_HEADER_BYTES {
+            return Err(reject(
+                431,
+                format!("request headers exceed {MAX_HEADER_BYTES} bytes"),
+            ));
+        }
+        let n = stream.read(&mut buf).map_err(|e| RequestError::Io(e.into()))?;
         if n == 0 {
-            if raw.is_empty() {
-                bail!("connection closed before a request");
-            }
-            bail!("connection closed mid-header");
+            let what = if raw.is_empty() { "before a request" } else { "mid-header" };
+            return Err(RequestError::Io(anyhow::anyhow!(
+                "connection closed {what}"
+            )));
         }
         raw.extend_from_slice(&buf[..n]);
     };
-    let head = std::str::from_utf8(&raw[..header_end]).context("non-UTF-8 request header")?;
+    if header_end > MAX_HEADER_BYTES {
+        return Err(reject(
+            431,
+            format!("request headers exceed {MAX_HEADER_BYTES} bytes"),
+        ));
+    }
+    let head = std::str::from_utf8(&raw[..header_end])
+        .map_err(|_| reject(400, "non-UTF-8 request header"))?;
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or("");
     let mut parts = request_line.split_whitespace();
-    let method = parts.next().context("empty request line")?.to_string();
+    let method = parts
+        .next()
+        .ok_or_else(|| reject(400, "empty request line"))?
+        .to_string();
     let path = parts
         .next()
-        .with_context(|| format!("request line '{request_line}' has no path"))?
+        .ok_or_else(|| reject(400, format!("request line '{request_line}' has no path")))?
         .to_string();
     let mut content_length = 0usize;
     for line in lines {
@@ -536,17 +612,40 @@ pub fn read_request(stream: &mut impl Read) -> Result<HttpRequest> {
             continue;
         };
         if name.eq_ignore_ascii_case("content-length") {
-            content_length = value.trim().parse().unwrap_or(0);
+            content_length = value.trim().parse().map_err(|_| {
+                reject(400, format!("malformed Content-Length '{}'", value.trim()))
+            })?;
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            // This server only understands Content-Length framing;
+            // parsing a framed body as raw bytes would corrupt it.
+            let enc = value.trim();
+            if enc.to_ascii_lowercase().contains("chunked") {
+                return Err(reject(
+                    411,
+                    "chunked request bodies are not supported; send Content-Length",
+                ));
+            }
+            return Err(reject(
+                501,
+                format!("Transfer-Encoding '{enc}' is not supported"),
+            ));
         }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(reject(
+            413,
+            format!("request body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+        ));
     }
     let mut body = raw[header_end + 4..].to_vec();
     while body.len() < content_length {
-        let n = stream.read(&mut buf)?;
-        ensure!(
-            n > 0,
-            "connection closed mid-body ({}/{content_length} bytes)",
-            body.len()
-        );
+        let n = stream.read(&mut buf).map_err(|e| RequestError::Io(e.into()))?;
+        if n == 0 {
+            return Err(RequestError::Io(anyhow::anyhow!(
+                "connection closed mid-body ({}/{content_length} bytes)",
+                body.len()
+            )));
+        }
         body.extend_from_slice(&buf[..n]);
     }
     body.truncate(content_length);
@@ -615,7 +714,11 @@ fn status_reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
+        411 => "Length Required",
+        413 => "Payload Too Large",
         429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        501 => "Not Implemented",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "",
@@ -773,6 +876,88 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
         assert!(text.contains("Content-Length: 11\r\n"), "{text}");
         assert!(text.ends_with("\r\n\r\nno such job"), "{text}");
+    }
+
+    #[test]
+    fn derives_sibling_endpoints_with_a_new_base() {
+        let e = HttpEndpoint::parse("http://127.0.0.1:7878").unwrap();
+        let s = e.with_base("/fabric/jobs/3/shards/0");
+        assert_eq!(s.host, "127.0.0.1");
+        assert_eq!(s.port, 7878);
+        assert_eq!(s.base, "/fabric/jobs/3/shards/0");
+        assert_eq!(
+            s.url_for("index.json"),
+            "http://127.0.0.1:7878/fabric/jobs/3/shards/0/index.json"
+        );
+        // trailing slashes and missing leading slashes are normalized
+        assert_eq!(e.with_base("fabric/x/").base, "/fabric/x");
+        assert_eq!(e.with_base("").base, "");
+    }
+
+    fn rejected_status(r: Result<HttpRequest, RequestError>) -> u16 {
+        match r {
+            Err(RequestError::Rejected { status, .. }) => status,
+            other => panic!("expected a protocol rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn caps_header_bytes_with_431() {
+        // a header that never terminates stops buffering at the cap
+        let mut big = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+        big.resize(MAX_HEADER_BYTES + 64, b'a');
+        let mut r: &[u8] = &big;
+        assert_eq!(rejected_status(read_request(&mut r)), 431);
+        // oversized but terminated headers are rejected too
+        let mut big = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+        big.resize(MAX_HEADER_BYTES + 64, b'a');
+        big.extend_from_slice(b"\r\n\r\n");
+        let mut r: &[u8] = &big;
+        assert_eq!(rejected_status(read_request(&mut r)), 431);
+    }
+
+    #[test]
+    fn rejects_malformed_content_length_with_400() {
+        // previously parsed as 0 and silently dropped the body
+        let mut r: &[u8] = b"POST /jobs HTTP/1.1\r\nContent-Length: banana\r\n\r\nbody";
+        assert_eq!(rejected_status(read_request(&mut r)), 400);
+        let mut r: &[u8] = b"POST /jobs HTTP/1.1\r\nContent-Length: -1\r\n\r\n";
+        assert_eq!(rejected_status(read_request(&mut r)), 400);
+        let mut r: &[u8] = b"POST /jobs HTTP/1.1\r\nContent-Length: 4 4\r\n\r\nbody";
+        assert_eq!(rejected_status(read_request(&mut r)), 400);
+    }
+
+    #[test]
+    fn rejects_transfer_encoding_framing() {
+        let mut r: &[u8] = b"POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                             4\r\nWiki\r\n0\r\n\r\n";
+        assert_eq!(rejected_status(read_request(&mut r)), 411);
+        let mut r: &[u8] = b"POST /jobs HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n";
+        assert_eq!(rejected_status(read_request(&mut r)), 501);
+    }
+
+    #[test]
+    fn caps_declared_body_bytes_with_413() {
+        // rejected from the declared length alone, before any body read
+        let head =
+            format!("PUT /fabric/x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let mut r: &[u8] = head.as_bytes();
+        assert_eq!(rejected_status(read_request(&mut r)), 413);
+        // a body exactly at the cap would be fine (declared length only
+        // — don't actually allocate 16 MiB in a unit test)
+        let mut r: &[u8] = b"POST /jobs HTTP/1.1\r\nContent-Length: 4\r\n\r\nbody";
+        assert!(read_request(&mut r).is_ok());
+    }
+
+    #[test]
+    fn hangups_are_io_errors_not_rejections() {
+        let mut empty: &[u8] = b"";
+        assert!(matches!(read_request(&mut empty), Err(RequestError::Io(_))));
+        let mut truncated: &[u8] = b"POST /jobs HTTP/1.1\r\nContent-Length: 9\r\n\r\nbo";
+        assert!(matches!(
+            read_request(&mut truncated),
+            Err(RequestError::Io(_))
+        ));
     }
 
     #[test]

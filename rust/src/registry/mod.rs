@@ -38,6 +38,6 @@ pub use artifact::{
     ARTIFACT_FILE, ARTIFACT_SCHEMA, PAYLOAD_FILE,
 };
 pub use store::{
-    list, open_store, pull, push, FileStore, IndexEntry, PullReport, PushReport, RegistryStore,
-    INDEX_FILE,
+    list, open_store, pull, push, FileStore, HttpStore, IndexEntry, PullReport, PushReport,
+    RegistryStore, INDEX_FILE,
 };

@@ -85,6 +85,15 @@ pub struct HttpStore {
     endpoint: HttpEndpoint,
 }
 
+impl HttpStore {
+    /// Point at an explicit endpoint (workers build these from a
+    /// coordinator connection plus a lease's store path; everyone else
+    /// goes through [`open_store`]).
+    pub fn new(endpoint: HttpEndpoint) -> Self {
+        HttpStore { endpoint }
+    }
+}
+
 impl RegistryStore for HttpStore {
     fn get(&self, rel: &str) -> Result<Option<Vec<u8>>> {
         self.endpoint.get(rel)
@@ -226,6 +235,14 @@ pub struct PushReport {
 /// artifact itself stays fetchable by id (`pull --id`), only
 /// `list`/pull-everything misses it — and repair is a re-push of the
 /// dropped artifact, which is cheap because the content blobs dedupe.
+///
+/// The worker fabric (`coordinator::remote`) obeys the same rule from
+/// the other side: shard leases live in one `imclim serve` process's
+/// memory, so there is exactly **one coordinator per shared cache** —
+/// it alone merges worker artifacts (each pushed to a private
+/// single-pusher `/fabric` store) into that cache. Standing up two
+/// coordinators over one cache directory is as unsupported as two
+/// concurrent pushers to one registry.
 pub fn push(artifact_dir: &Path, store: &dyn RegistryStore) -> Result<PushReport> {
     let (artifact, _) = load_verified(artifact_dir)
         .with_context(|| format!("verifying {} before push", artifact_dir.display()))?;

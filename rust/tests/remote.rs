@@ -1,0 +1,328 @@
+//! Remote worker fabric acceptance: `imclim worker` subprocesses
+//! attach to an in-process `imclim serve` daemon, lease deterministic
+//! shard slices of a submitted sweep, and publish results back as
+//! verified cache artifacts. The merged run must be byte-identical to
+//! the single-process CLI run — and stay that way when a worker is
+//! SIGKILLed mid-shard (its lease times out, the shard re-queues) or
+//! when the whole fleet dies (the coordinator falls back to local
+//! execution).
+//!
+//! Jobs sample process-global metrics, so the in-process daemon tests
+//! serialize on one mutex, same as `tests/serve.rs`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Stdio};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use imclim::cli::serve::{start_with, ServeHandle};
+use imclim::registry::http::HttpEndpoint;
+use imclim::util::json::Json;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+const GRID_POINTS: usize = 6; // arch qs × n {8,12,16} × b-adc {4,5}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("imclim-remote-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sweep_body() -> &'static str {
+    r#"{"cmd":"sweep","options":{"arch":"qs","n":"8,12,16","b-adc":"4,5",
+        "trials":"48","workers":"2"}}"#
+}
+
+/// The same grid through the CLI binary; returns sweep.csv bytes.
+fn cli_reference_csv(dir: &Path) -> Vec<u8> {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_imclim"))
+        .args([
+            "sweep", "--arch", "qs", "--n", "8,12,16", "--b-adc", "4,5", "--trials", "48",
+            "--workers", "2", "--out-dir",
+        ])
+        .arg(dir)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "reference sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::read(dir.join("sweep.csv")).unwrap()
+}
+
+fn daemon(name: &str, lease_timeout: Duration) -> (ServeHandle, HttpEndpoint, PathBuf) {
+    let out_dir = tmp_dir(name);
+    let handle = start_with("127.0.0.1:0", out_dir.clone(), 64, lease_timeout).unwrap();
+    let ep = HttpEndpoint::parse(&handle.base_url()).unwrap();
+    (handle, ep, out_dir)
+}
+
+/// Spawn an `imclim worker` subprocess. `hold_ms` is the chaos dwell
+/// between taking a lease and executing it — it makes "mid-shard"
+/// deterministic: a worker holding a lease with a long dwell provably
+/// has not finished it yet.
+fn spawn_worker(test: &str, url: &str, name: &str, hold_ms: u64) -> Child {
+    let scratch = tmp_dir(&format!("{test}-scratch-{name}"));
+    std::process::Command::new(env!("CARGO_BIN_EXE_imclim"))
+        .args([
+            "worker",
+            "--connect",
+            url,
+            "--name",
+            name,
+            "--poll-ms",
+            "50",
+            "--heartbeat-ms",
+            "200",
+            "--hold-ms",
+        ])
+        .arg(hold_ms.to_string())
+        .arg("--scratch")
+        .arg(&scratch)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap()
+}
+
+fn get_json(ep: &HttpEndpoint, rel: &str) -> Json {
+    let (st, bytes) = ep.get_raw(rel).unwrap();
+    assert_eq!(st, 200, "GET /{rel}");
+    Json::parse(&String::from_utf8_lossy(&bytes)).unwrap()
+}
+
+/// `(name, leased)` per registered worker.
+fn worker_rows(ep: &HttpEndpoint) -> Vec<(String, usize)> {
+    get_json(ep, "workers")
+        .get("workers")
+        .and_then(Json::as_arr)
+        .expect("workers array")
+        .iter()
+        .map(|w| {
+            (
+                w.get("name").and_then(|v| v.as_str()).unwrap().to_string(),
+                w.get("leased").and_then(Json::as_usize).unwrap(),
+            )
+        })
+        .collect()
+}
+
+fn wait_until<F: FnMut() -> bool>(what: &str, timeout: Duration, mut cond: F) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn submit(ep: &HttpEndpoint, body: &str) -> u64 {
+    let (status, bytes) = ep.post("jobs", body.as_bytes(), "application/json").unwrap();
+    let json = Json::parse(&String::from_utf8_lossy(&bytes)).unwrap_or(Json::Null);
+    assert_eq!(status, 202, "submission accepted: {json:?}");
+    json.get("id").and_then(Json::as_usize).expect("job id") as u64
+}
+
+fn wait_job(ep: &HttpEndpoint, id: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let json = get_json(ep, &format!("jobs/{id}"));
+        let state = json.get("state").and_then(|v| v.as_str()).unwrap().to_string();
+        if matches!(state.as_str(), "done" | "failed" | "canceled") {
+            return json;
+        }
+        assert!(Instant::now() < deadline, "job {id} stuck in '{state}'");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn metric(json: &Json, name: &str) -> usize {
+    json.get(name)
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("status JSON lacks '{name}': {json:?}"))
+}
+
+fn job_events(ep: &HttpEndpoint, id: u64) -> String {
+    let (st, bytes) = ep.get_raw(&format!("jobs/{id}/events")).unwrap();
+    assert_eq!(st, 200, "events for job {id}");
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(unix)]
+fn sigkill(child: &Child) {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGKILL: i32 = 9;
+    assert_eq!(unsafe { kill(child.id() as i32, SIGKILL) }, 0);
+}
+
+#[test]
+fn two_workers_compute_the_sweep_and_the_csv_is_cli_identical() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let reference = cli_reference_csv(&tmp_dir("two-cli-ref"));
+    let (handle, ep, out_dir) = daemon("two", Duration::from_secs(10));
+
+    let mut w1 = spawn_worker("two", &handle.base_url(), "alpha", 0);
+    let mut w2 = spawn_worker("two", &handle.base_url(), "beta", 0);
+    wait_until("both workers to register", Duration::from_secs(30), || {
+        worker_rows(&ep).len() == 2
+    });
+
+    let id = submit(&ep, sweep_body());
+    let status = wait_job(&ep, id);
+    assert_eq!(status.get("state").and_then(|v| v.as_str()), Some("done"));
+    // every Monte-Carlo trial ran in a worker process: the daemon's
+    // own pass over the merged cache is purely warm
+    assert_eq!(
+        metric(&status, "points_computed"),
+        0,
+        "coordinator computed nothing: {status:?}"
+    );
+    assert_eq!(metric(&status, "cache_hits"), GRID_POINTS, "{status:?}");
+
+    let (st, csv) = ep.get_raw(&format!("jobs/{id}/result")).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(csv, reference, "distributed CSV must match the CLI run byte-for-byte");
+
+    // the per-shard lifecycle is visible in the job's event stream
+    let events = job_events(&ep, id);
+    assert!(events.contains("\"shard_leased\""), "{events}");
+    assert!(events.contains("\"shard_completed\""), "{events}");
+
+    // worker gauge answers at scrape time
+    let (st, metrics) = ep.get_raw("metrics").unwrap();
+    assert_eq!(st, 200);
+    let metrics = String::from_utf8_lossy(&metrics).into_owned();
+    assert!(metrics.contains("imclim_workers_registered 2"), "{metrics}");
+
+    // cache records round-tripped through pack/push/pull verification:
+    // a CLI run over the daemon's cache is fully warm and identical
+    let warm_dir = tmp_dir("two-warm");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_imclim"))
+        .args([
+            "sweep", "--arch", "qs", "--n", "8,12,16", "--b-adc", "4,5", "--trials", "48",
+            "--workers", "2", "--cache-dir",
+        ])
+        .arg(out_dir.join("cache"))
+        .arg("--out-dir")
+        .arg(&warm_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("(6 cache hits, 0 computed)"),
+        "worker records serve the whole grid: {stdout}"
+    );
+    assert_eq!(std::fs::read(warm_dir.join("sweep.csv")).unwrap(), reference);
+
+    // draining the daemon sends the workers home with exit code 0
+    handle.shutdown();
+    assert!(w1.wait().unwrap().success(), "worker alpha exits 0");
+    assert!(w2.wait().unwrap().success(), "worker beta exits 0");
+}
+
+#[cfg(unix)]
+#[test]
+fn killing_a_worker_mid_shard_requeues_it_and_the_job_still_completes() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let reference = cli_reference_csv(&tmp_dir("kill-cli-ref"));
+    let (handle, ep, _out) = daemon("kill", Duration::from_secs(2));
+
+    // the victim dwells 60s on any lease it takes — far past the 2s
+    // lease timeout once its heartbeats stop; the survivor dwells 1.5s
+    // so the victim provably gets one of the two shards
+    let mut victim = spawn_worker("kill", &handle.base_url(), "victim", 60_000);
+    let mut survivor = spawn_worker("kill", &handle.base_url(), "survivor", 1_500);
+    wait_until("both workers to register", Duration::from_secs(30), || {
+        worker_rows(&ep).len() == 2
+    });
+
+    let id = submit(&ep, sweep_body());
+    wait_until("the victim to hold a lease", Duration::from_secs(30), || {
+        worker_rows(&ep)
+            .iter()
+            .any(|(name, leased)| name == "victim" && *leased >= 1)
+    });
+    sigkill(&victim);
+    let _ = victim.wait(); // reap the zombie; heartbeats are now gone
+
+    // the lease times out, the shard re-queues to the survivor, and the
+    // job completes with the exact single-process bytes
+    let status = wait_job(&ep, id);
+    assert_eq!(
+        status.get("state").and_then(|v| v.as_str()),
+        Some("done"),
+        "{status:?}"
+    );
+    let (st, csv) = ep.get_raw(&format!("jobs/{id}/result")).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(csv, reference, "worker loss must not change a single byte");
+
+    let events = job_events(&ep, id);
+    assert!(
+        events.contains("\"shard_requeued\""),
+        "the re-queue is visible in the job's event stream: {events}"
+    );
+    assert!(events.contains("victim"), "{events}");
+
+    let (st, metrics) = ep.get_raw("metrics").unwrap();
+    assert_eq!(st, 200);
+    let metrics = String::from_utf8_lossy(&metrics).into_owned();
+    let requeues: f64 = metrics
+        .lines()
+        .find_map(|l| l.strip_prefix("imclim_shard_requeues_total "))
+        .expect("requeue counter exported")
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(requeues >= 1.0, "{metrics}");
+
+    handle.shutdown();
+    assert!(survivor.wait().unwrap().success(), "survivor exits 0");
+}
+
+#[cfg(unix)]
+#[test]
+fn losing_the_whole_fleet_falls_back_to_local_execution() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let reference = cli_reference_csv(&tmp_dir("fleet-cli-ref"));
+    let (handle, ep, _out) = daemon("fleet", Duration::from_secs(1));
+
+    // one worker -> the job becomes one shard (the whole grid)
+    let mut only = spawn_worker("fleet", &handle.base_url(), "only", 60_000);
+    wait_until("the worker to register", Duration::from_secs(30), || {
+        worker_rows(&ep).len() == 1
+    });
+    let id = submit(&ep, sweep_body());
+    wait_until("the worker to hold the lease", Duration::from_secs(30), || {
+        worker_rows(&ep)
+            .iter()
+            .any(|(name, leased)| name == "only" && *leased >= 1)
+    });
+    sigkill(&only);
+    let _ = only.wait();
+
+    // nobody is left: the coordinator reaps the worker, re-queues the
+    // shard, and runs it itself
+    let status = wait_job(&ep, id);
+    assert_eq!(
+        status.get("state").and_then(|v| v.as_str()),
+        Some("done"),
+        "{status:?}"
+    );
+    assert_eq!(
+        metric(&status, "points_computed"),
+        GRID_POINTS,
+        "the whole grid was computed locally: {status:?}"
+    );
+    let (st, csv) = ep.get_raw(&format!("jobs/{id}/result")).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(csv, reference);
+    let events = job_events(&ep, id);
+    assert!(events.contains("\"shard_requeued\""), "{events}");
+
+    handle.shutdown();
+}

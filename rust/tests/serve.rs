@@ -272,6 +272,64 @@ fn mid_run_shutdown_drains_without_corrupting_the_shared_cache() {
     assert_eq!(std::fs::read(warm_dir.join("sweep.csv")).unwrap(), reference);
 }
 
+/// Write raw bytes at the daemon and return its full response text —
+/// the hostile-client path that never goes through our HTTP client.
+fn raw_request(ep: &HttpEndpoint, payload: &[u8]) -> String {
+    use std::io::{Read, Write};
+    let mut conn = std::net::TcpStream::connect((ep.host.as_str(), ep.port)).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    conn.write_all(payload).unwrap();
+    let _ = conn.shutdown(std::net::Shutdown::Write);
+    let mut buf = Vec::new();
+    conn.read_to_end(&mut buf).unwrap();
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+#[test]
+fn hostile_requests_get_4xx_answers_with_bounded_memory() {
+    use imclim::registry::http::{MAX_BODY_BYTES, MAX_HEADER_BYTES};
+
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (handle, ep, _out) = daemon("hostile");
+
+    // headers that never end stop buffering at the cap -> 431
+    let mut endless = b"GET /healthz HTTP/1.1\r\nX-Pad: ".to_vec();
+    endless.resize(MAX_HEADER_BYTES + 128, b'a');
+    let reply = raw_request(&ep, &endless);
+    assert!(reply.starts_with("HTTP/1.1 431 "), "{reply}");
+
+    // a malformed Content-Length used to silently parse as an empty
+    // body; now it is a 400
+    let reply = raw_request(
+        &ep,
+        b"POST /jobs HTTP/1.1\r\nContent-Length: banana\r\n\r\n{\"cmd\":\"sweep\"}",
+    );
+    assert!(reply.starts_with("HTTP/1.1 400 "), "{reply}");
+    assert!(reply.contains("Content-Length"), "{reply}");
+
+    // chunked request bodies would be misparsed as raw bytes -> 411
+    let reply = raw_request(
+        &ep,
+        b"POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nWiki\r\n0\r\n\r\n",
+    );
+    assert!(reply.starts_with("HTTP/1.1 411 "), "{reply}");
+
+    // a declared body over the cap is refused before any of it is
+    // buffered -> 413 (note: no body bytes are sent at all)
+    let huge = format!(
+        "POST /jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        MAX_BODY_BYTES + 1
+    );
+    let reply = raw_request(&ep, huge.as_bytes());
+    assert!(reply.starts_with("HTTP/1.1 413 "), "{reply}");
+
+    // well-formed traffic on the same daemon still works afterwards
+    let (st, body) = ep.get_raw("healthz").unwrap();
+    assert_eq!((st, body.as_slice()), (200, &b"ok\n"[..]));
+
+    handle.shutdown();
+}
+
 #[cfg(unix)]
 #[test]
 fn sigterm_drains_the_daemon_subprocess_and_it_exits_zero() {
